@@ -1,0 +1,41 @@
+//! Ablation: the **3-of-5 experiment selection rule** (paper §3.2).
+//!
+//! The paper picks (i) the most innovative, (ii) the highest-max, and
+//! (iii) the highest-min predicted experiment "to keep a broad range
+//! of alternative paths under consideration". Compared against pure
+//! exploitation (top-3 by max) and pure exploration (random 3).
+//!
+//! Run: `cargo bench --bench ablation_experiments`
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::util::bench::header;
+
+fn main() {
+    header("ablation — 3-of-5 experiment rule");
+    const SEEDS: u64 = 5;
+    const BUDGET: u64 = 100;
+    println!("{:32} {:>16} {:>12}", "rule", "mean best (us)", "worst (us)");
+    let mut results = Vec::new();
+    for (name, rule) in [
+        ("paper (innovative+max+min)", ExperimentRule::Paper),
+        ("top-3 by max (exploit)", ExperimentRule::TopMax),
+        ("random 3 (explore)", ExperimentRule::Random3),
+    ] {
+        let mut bests = Vec::new();
+        for seed in 0..SEEDS {
+            let mut cfg = RunConfig::default().with_seed(seed).with_budget(BUDGET);
+            cfg.experiment_rule = rule;
+            let mut run = ScientistRun::new(cfg).expect("setup");
+            bests.push(run.run_to_completion().expect("run").best_geomean_us);
+        }
+        let worst = bests.iter().cloned().fold(f64::MIN, f64::max);
+        println!("{:32} {:>16.1} {:>12.1}", name, geomean(&bests), worst);
+        results.push((name, geomean(&bests)));
+    }
+    let paper = results[0].1;
+    for (name, score) in &results[1..] {
+        println!("paper vs {name}: {:+.1}%", (score / paper - 1.0) * 100.0);
+    }
+}

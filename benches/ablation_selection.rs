@@ -1,0 +1,44 @@
+//! Ablation: the **Evolutionary Selector policy** (paper §3.1).
+//!
+//! The paper replaces mechanical selection with LLM judgement over the
+//! multi-objective situation. This bench compares that policy against
+//! random selection and greedy best-only selection at equal budget.
+//!
+//! Run: `cargo bench --bench ablation_selection`
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::util::bench::header;
+
+fn main() {
+    header("ablation — selection policy");
+    const SEEDS: u64 = 5;
+    const BUDGET: u64 = 100;
+    println!("{:28} {:>16} {:>12}", "policy", "mean best (us)", "worst (us)");
+    let mut results = Vec::new();
+    for (name, policy) in [
+        ("paper (LLM judgement)", SelectionPolicy::PaperLlm),
+        ("greedy best-only", SelectionPolicy::GreedyBest),
+        ("random", SelectionPolicy::Random),
+    ] {
+        let mut bests = Vec::new();
+        for seed in 0..SEEDS {
+            let mut cfg = RunConfig::default().with_seed(seed).with_budget(BUDGET);
+            cfg.selection_policy = policy;
+            let mut run = ScientistRun::new(cfg).expect("setup");
+            bests.push(run.run_to_completion().expect("run").best_geomean_us);
+        }
+        let worst = bests.iter().cloned().fold(f64::MIN, f64::max);
+        println!("{:28} {:>16.1} {:>12.1}", name, geomean(&bests), worst);
+        results.push((name, geomean(&bests)));
+    }
+    let paper = results[0].1;
+    for (name, score) in &results[1..] {
+        println!(
+            "paper vs {name}: {:+.1}% {}",
+            (score / paper - 1.0) * 100.0,
+            if *score >= paper { "(paper better or equal)" } else { "(ablation better)" }
+        );
+    }
+}

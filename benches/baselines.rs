@@ -1,0 +1,76 @@
+//! Bench: **scientist vs classic autotuners** at equal submission
+//! budget (paper §2 positions OpenTuner/Kernel-Tuner as narrower,
+//! complementary approaches over the same space).
+//!
+//! Run: `cargo bench --bench baselines`
+
+use gpu_kernel_scientist::baselines::{Annealer, GeneticAlgorithm, HillClimber, RandomSearch, Tuner};
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::eval::{EvalPlatform, PlatformConfig};
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::util::bench::header;
+
+fn main() {
+    header("baselines — scientist vs tuners at equal budget");
+    const SEEDS: u64 = 5;
+    const BUDGET: u64 = 120;
+    println!("{:24} {:>16} {:>12}", "strategy", "mean best (us)", "worst (us)");
+
+    let mut scientist = Vec::new();
+    for seed in 0..SEEDS {
+        let cfg = RunConfig::default().with_seed(seed).with_budget(BUDGET);
+        let mut run = ScientistRun::new(cfg).expect("setup");
+        scientist.push(run.run_to_completion().expect("run").best_geomean_us);
+    }
+    let worst = scientist.iter().cloned().fold(f64::MIN, f64::max);
+    println!(
+        "{:24} {:>16.1} {:>12.1}",
+        "scientist (paper)",
+        geomean(&scientist),
+        worst
+    );
+
+    let mut table: Vec<(&str, f64)> = vec![("scientist", geomean(&scientist))];
+    for which in ["random", "hillclimb", "anneal", "genetic"] {
+        let mut bests = Vec::new();
+        for seed in 0..SEEDS {
+            let mut platform = EvalPlatform::new(
+                SimBackend::new(seed),
+                PlatformConfig {
+                    submission_quota: Some(BUDGET),
+                    ..Default::default()
+                },
+            );
+            let out = match which {
+                "random" => RandomSearch { seed }.run(&mut platform, BUDGET),
+                "hillclimb" => HillClimber {
+                    seed,
+                    ..Default::default()
+                }
+                .run(&mut platform, BUDGET),
+                "anneal" => Annealer {
+                    seed,
+                    ..Default::default()
+                }
+                .run(&mut platform, BUDGET),
+                _ => GeneticAlgorithm {
+                    seed,
+                    ..Default::default()
+                }
+                .run(&mut platform, BUDGET),
+            };
+            bests.push(out.best_geomean_us);
+        }
+        let worst = bests.iter().cloned().fold(f64::MIN, f64::max);
+        println!("{:24} {:>16.1} {:>12.1}", which, geomean(&bests), worst);
+        table.push((which, geomean(&bests)));
+    }
+    for (name, score) in &table[1..] {
+        println!(
+            "scientist vs {:10}: {:+.1}%",
+            name,
+            (score / table[0].1 - 1.0) * 100.0
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench: the **Figure-1 loop's convergence series** — best leaderboard
+//! geomean vs submission count, the observable the paper's iterative
+//! process produces (§4.4 "Iterative Refinement as a Discovery
+//! Process"). Emits CSV + an ASCII curve for EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench convergence`
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::report::render_convergence;
+use gpu_kernel_scientist::util::bench::header;
+
+fn main() {
+    header("convergence — best-so-far vs sequential submissions");
+    for seed in 0..3u64 {
+        let cfg = RunConfig::default().with_seed(seed).with_budget(150);
+        let mut run = ScientistRun::new(cfg).expect("setup");
+        let outcome = run.run_to_completion().expect("run");
+        println!(
+            "{}",
+            render_convergence(&format!("seed {seed}"), &outcome.curve)
+        );
+        // milestone table: submissions needed to cross key thresholds
+        println!("  milestones (seed {seed}):");
+        for target in [850.0, 600.0, 450.0, 300.0, 200.0] {
+            match outcome.curve.first_reaching(target) {
+                Some(n) => println!("    <= {target:6.0} us after {n:4} submissions"),
+                None => println!("    <= {target:6.0} us: not reached"),
+            }
+        }
+        println!();
+    }
+}

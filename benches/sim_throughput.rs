@@ -1,0 +1,93 @@
+//! Perf bench: L3 hot-path throughput (DESIGN.md §Perf).
+//!
+//! Targets:
+//!   * simulator ≥ 100k genome-config estimates/s;
+//!   * agent stages well under 1 ms per loop iteration;
+//!   * the scientist loop's non-backend overhead negligible vs the
+//!     90 s/submission platform latency the paper lived with.
+//!
+//! Run: `cargo bench --bench sim_throughput`
+
+use std::time::Duration;
+
+use gpu_kernel_scientist::agents::{AgentSuite, Designer, Selector};
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::genome::seeds;
+use gpu_kernel_scientist::gpu::MI300;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::sim::estimate;
+use gpu_kernel_scientist::util::bench::{bench, header, report};
+use gpu_kernel_scientist::workload::FEEDBACK_CONFIGS;
+
+fn main() {
+    header("sim_throughput — L3 hot paths");
+    let budget = Duration::from_millis(400);
+
+    // 1) simulator estimate throughput
+    let genomes: Vec<_> = seeds::all_seeds().into_iter().map(|(_, g)| g).collect();
+    let mut i = 0usize;
+    let r = bench("sim::estimate (1 genome-config)", budget, || {
+        let g = &genomes[i % genomes.len()];
+        let cfg = &FEEDBACK_CONFIGS[i % FEEDBACK_CONFIGS.len()];
+        std::hint::black_box(estimate(&MI300, g, cfg).unwrap());
+        i += 1;
+    });
+    report(&r);
+    let per_s = r.throughput_per_s();
+    println!("  => {:.0}k estimates/s (target >= 100k)", per_s / 1e3);
+    assert!(per_s >= 100_000.0, "simulator below target: {per_s:.0}/s");
+
+    // 2) full platform submission (6 configs x 3 reps + gates)
+    let mut platform = gpu_kernel_scientist::eval::EvalPlatform::new(
+        SimBackend::new(1),
+        gpu_kernel_scientist::eval::PlatformConfig::default(),
+    );
+    let g = seeds::human_oracle();
+    let r = bench("platform.submit (full submission)", budget, || {
+        std::hint::black_box(platform.submit(&g));
+    });
+    report(&r);
+
+    // 3) agent stages on a realistic mid-run population
+    let mut run = ScientistRun::new(RunConfig::default().with_seed(9).with_budget(60))
+        .expect("setup");
+    run.run_to_completion().expect("run");
+    let pop = run.population.clone();
+    let mut suite = AgentSuite::paper(3);
+    let selector = Selector::new(SelectionPolicy::PaperLlm);
+    let r = bench("selector.select (60-member population)", budget, || {
+        std::hint::black_box(selector.select(&pop, &mut suite.llm));
+    });
+    report(&r);
+    let designer = Designer::default();
+    let base = pop.best().unwrap().clone();
+    let r = bench("designer.design (10 avenues -> 5 plans)", budget, || {
+        std::hint::black_box(designer.design(
+            &base.id,
+            &base.genome,
+            &pop,
+            &suite.knowledge,
+            &mut suite.llm,
+        ));
+    });
+    report(&r);
+
+    // 4) whole loop iteration overhead excluding backend: measured as
+    //    iteration time minus the 3 submissions' backend share —
+    //    approximated by timing an iteration (sim backend is ~us-fast,
+    //    so this IS the loop overhead).
+    let mut run2 = ScientistRun::new(
+        RunConfig::default().with_seed(11).with_budget(1_000_000),
+    )
+    .expect("setup");
+    let r = bench("scientist.run_iteration (3 submissions)", budget, || {
+        std::hint::black_box(run2.run_iteration());
+    });
+    report(&r);
+    assert!(
+        r.mean_ns < 5_000_000.0,
+        "loop iteration overhead must stay under 5 ms (got {})",
+        r.mean_ns
+    );
+    println!("\nsim_throughput targets: OK");
+}

@@ -1,0 +1,73 @@
+//! Bench: regenerate **Table 1** of the paper (AMD Developer Challenge
+//! summary results) — the headline evaluation artifact.
+//!
+//! Rows: PyTorch reference, Human 1st place, Naive HIP (canonical
+//! genomes on the simulated MI300), plus "This work" produced by an
+//! actual scientist run at the paper's sequential budget, over several
+//! seeds. Shape assertions (who wins, rough factors) run at the end.
+//!
+//! Run: `cargo bench --bench table1`
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::gpu::MI300;
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::report::{render_table, TableRow};
+use gpu_kernel_scientist::sim::calibration;
+use gpu_kernel_scientist::util::bench::header;
+
+fn main() {
+    header("table1 — AMD Developer Challenge summary results");
+    const SEEDS: u64 = 5;
+    const BUDGET: u64 = 120;
+
+    let mut this_work = Vec::new();
+    for seed in 0..SEEDS {
+        let cfg = RunConfig::default().with_seed(seed).with_budget(BUDGET);
+        let mut run = ScientistRun::new(cfg).expect("setup");
+        let outcome = run.run_to_completion().expect("run");
+        let lb = outcome.leaderboard_us.expect("leaderboard");
+        println!(
+            "  seed {seed}: best {} feedback {:.1} us, leaderboard {:.1} us, {} submissions",
+            outcome.best_id, outcome.best_geomean_us, lb, outcome.submissions
+        );
+        this_work.push(lb);
+    }
+    let this_us = geomean(&this_work);
+
+    let mut rows: Vec<TableRow> = calibration::table1_rows(&MI300)
+        .into_iter()
+        .filter(|(l, _, _)| !l.starts_with("This work"))
+        .map(|(label, paper, sim)| TableRow {
+            label: label.to_string(),
+            paper_us: Some(paper),
+            measured_us: sim,
+            comment: match label {
+                "PyTorch reference" => "uses library fp16".into(),
+                "Human 1st place" => "top-8 had access to actual MI300".into(),
+                _ => "unoptimized".into(),
+            },
+        })
+        .collect();
+    rows.push(TableRow {
+        label: "This work".into(),
+        paper_us: Some(450.0),
+        measured_us: this_us,
+        comment: format!("LLM-only, geomean of {SEEDS} seeds x {BUDGET} submissions"),
+    });
+    println!();
+    println!(
+        "{}",
+        render_table("Table 1 — AMD Developer Challenge summary results", &rows)
+    );
+
+    let lib = rows[0].measured_us;
+    let oracle = rows[1].measured_us;
+    let naive = rows[2].measured_us;
+    println!("shape checks (paper ratios in parens):");
+    println!("  naive/pytorch = {:5.1}x  (~5.9x)", naive / lib);
+    println!("  pytorch/this  = {:5.1}x  (~1.9x)", lib / this_us);
+    println!("  this/oracle   = {:5.2}x  (~4.3x)", this_us / oracle);
+    assert!(naive > lib && lib > this_us && oracle < this_us * 1.10);
+    println!("\ntable1 shape: OK");
+}

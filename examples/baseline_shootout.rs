@@ -1,0 +1,93 @@
+//! Scientist vs classic tuners at an equal submission budget.
+//!
+//! The paper argues (§2) that OpenTuner/Kernel-Tuner-style search is
+//! complementary but narrower than LLM-driven experimentation. This
+//! driver runs the scientist and three baseline tuners over the SAME
+//! genome space on the SAME simulated platform with the SAME budget.
+//!
+//! Run: `cargo run --release --example baseline_shootout [budget] [seeds]`
+
+use gpu_kernel_scientist::baselines::{Annealer, GeneticAlgorithm, HillClimber, RandomSearch, Tuner};
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::eval::{EvalPlatform, PlatformConfig};
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::prelude::*;
+
+fn main() {
+    let budget: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let n_seeds: u64 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+
+    println!("strategy shootout: budget {budget} submissions, {n_seeds} seeds\n");
+    println!("{:24} {:>14} {:>14}", "strategy", "mean best (us)", "worst (us)");
+
+    let mut rows: Vec<(&str, Vec<f64>)> = Vec::new();
+
+    let mut scientist = Vec::new();
+    for seed in 0..n_seeds {
+        let cfg = RunConfig::default().with_seed(seed).with_budget(budget);
+        let mut run = ScientistRun::new(cfg).expect("setup");
+        scientist.push(run.run_to_completion().expect("run").best_geomean_us);
+    }
+    rows.push(("scientist (paper)", scientist));
+
+    for which in ["random", "hillclimb", "anneal", "genetic"] {
+        let mut bests = Vec::new();
+        for seed in 0..n_seeds {
+            let mut platform = EvalPlatform::new(
+                SimBackend::new(seed),
+                PlatformConfig {
+                    submission_quota: Some(budget),
+                    ..Default::default()
+                },
+            );
+            let out = match which {
+                "random" => RandomSearch { seed }.run(&mut platform, budget),
+                "hillclimb" => HillClimber {
+                    seed,
+                    ..Default::default()
+                }
+                .run(&mut platform, budget),
+                "anneal" => Annealer {
+                    seed,
+                    ..Default::default()
+                }
+                .run(&mut platform, budget),
+                _ => GeneticAlgorithm {
+                    seed,
+                    ..Default::default()
+                }
+                .run(&mut platform, budget),
+            };
+            bests.push(out.best_geomean_us);
+        }
+        let name = match which {
+            "random" => "random search",
+            "hillclimb" => "hill climber",
+            "anneal" => "simulated annealing",
+            _ => "genetic algorithm (Evolver)",
+        };
+        rows.push((name, bests));
+    }
+
+    for (name, bests) in &rows {
+        let worst = bests.iter().cloned().fold(f64::MIN, f64::max);
+        println!("{:24} {:>14.1} {:>14.1}", name, geomean(bests), worst);
+    }
+
+    let scientist_mean = geomean(&rows[0].1);
+    for (name, bests) in rows.iter().skip(1) {
+        let m = geomean(bests);
+        println!(
+            "scientist vs {:20}: {:.2}x {}",
+            name,
+            (m / scientist_mean).max(scientist_mean / m),
+            if scientist_mean <= m { "faster" } else { "slower" }
+        );
+    }
+}

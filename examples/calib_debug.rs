@@ -1,0 +1,21 @@
+use gpu_kernel_scientist::genome::seeds;
+use gpu_kernel_scientist::gpu::MI300;
+use gpu_kernel_scientist::sim::{calibration, estimate};
+use gpu_kernel_scientist::workload::{GemmConfig, LEADERBOARD_SIZES};
+
+fn main() {
+    for (label, paper, sim) in calibration::table1_rows(&MI300) {
+        println!("{label:40} paper {paper:7.0}  sim {sim:9.1}");
+    }
+    println!();
+    for (name, g) in seeds::all_seeds() {
+        let cfg = GemmConfig::new(6144, 512, 4096);
+        let t = estimate(&MI300, &g, &cfg).unwrap();
+        println!("{name:20} {cfg}: total {:9.1}  comp {:8.1} (ldsx{:.2}) mem {:8.1} wb {:7.1} launch {:5.1} occ_w {:2} util {:.2}",
+            t.total_us, t.compute_us, t.lds_pressure, t.mem_us, t.writeback_us, t.launch_us, t.occupancy_waves, t.grid_utilization);
+        let big = LEADERBOARD_SIZES[14];
+        let t = estimate(&MI300, &g, &big).unwrap();
+        println!("{name:20} {big}: total {:9.1}  comp {:8.1} (ldsx{:.2}) mem {:8.1} wb {:7.1} launch {:5.1} occ_w {:2} util {:.2}",
+            t.total_us, t.compute_us, t.lds_pressure, t.mem_us, t.writeback_us, t.launch_us, t.occupancy_waves, t.grid_utilization);
+    }
+}

@@ -1,0 +1,19 @@
+use gpu_kernel_scientist::runtime::PjrtBackend;
+use gpu_kernel_scientist::workload::GemmConfig;
+use std::path::Path;
+
+fn main() {
+    let mut b = PjrtBackend::open(Path::new("artifacts")).unwrap();
+    b.inner_reps = 3;
+    let cfg = GemmConfig::new(256, 256, 256);
+    let ref_name = b.catalog().reference_for(&cfg).unwrap().name.clone();
+    let ref_us = b.time_entry(&ref_name, &cfg).unwrap();
+    println!("ref: {ref_us:.1} us");
+    for name in ["g128x256x128_fs_sc_ki_m256k256n256",
+                 "g256x256x128_fs_sc_ki_m256k256n256",
+                 "g256x256x256_fs_sc_ki_m256k256n256"] {
+        b.verify(name, &cfg).unwrap();
+        let us = b.time_entry(name, &cfg).unwrap();
+        println!("{name}: {us:.1} us ({:.2}x of ref)", ref_us / us);
+    }
+}

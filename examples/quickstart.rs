@@ -1,0 +1,63 @@
+//! Quickstart: one loop iteration, narrated.
+//!
+//! Shows the three agent stages exactly as the paper's appendices do:
+//! the selector's rationale (App. A.1), the designer's avenues + 5
+//! plans with performance/innovation estimates and the 3-of-5 choice
+//! (App. A.2), and the writer's kernel + self-report (App. A.3).
+//!
+//! Run: `cargo run --example quickstart`
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::genome::render;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::report;
+
+fn main() {
+    let cfg = RunConfig::default().with_seed(42).with_budget(30);
+    let mut run = ScientistRun::new(cfg).expect("run setup");
+
+    println!("== population after seeding (paper §3) ==");
+    for m in run.population.members() {
+        println!(
+            "  {}  {:60}  geomean {:8.1} us",
+            m.id,
+            m.experiment,
+            m.score().unwrap_or(f64::NAN)
+        );
+    }
+
+    // a couple of warmup iterations so lineage exists
+    for _ in 0..3 {
+        run.run_iteration();
+    }
+
+    println!("\n== one full iteration, narrated ==\n");
+    let log = run.run_iteration().expect("iteration");
+    println!("{}", report::render_iteration(log));
+
+    let base_id = log.selection.base_id.clone();
+    let submitted: Vec<String> = log.submitted_ids.clone();
+    let base = run.population.by_id(&base_id).unwrap().clone();
+    println!("== base kernel listing (genome rendered as HIP sketch) ==\n");
+    println!("{}", render::render_hip_sketch(&base.genome));
+
+    for id in &submitted {
+        let child = run.population.by_id(id).unwrap();
+        println!("== child {} ==", child.id);
+        println!("{}", child.report);
+        match child.score() {
+            Some(s) => println!("feedback geomean: {s:.1} us\n"),
+            None => println!("outcome: {:?}\n", child.outcome),
+        }
+    }
+
+    let outcome = run.run_to_completion().expect("completion");
+    println!(
+        "after {} submissions: best {} at {:.1} us (started from {:.1} us)",
+        outcome.submissions,
+        outcome.best_id,
+        outcome.best_geomean_us,
+        run.population.by_id("00001").unwrap().score().unwrap()
+    );
+    println!("convergence: {}", outcome.curve.ascii_sparkline(50));
+}

@@ -1,0 +1,152 @@
+"""AOT compile path: lower the L2 graph (per kernel variant) to HLO text.
+
+Emits ``artifacts/<name>.hlo.txt`` plus ``artifacts/catalog.json`` which
+the rust PJRT runtime (``rust/src/runtime``) reads to discover variants.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly.
+
+The catalog covers a *projection* of the full kernel genome (see
+DESIGN.md §2): tile sizes, scale fusion, accumulator placement, grid
+walk. Shapes are CPU-testbed scale (the real 6144x512x4096-class
+configs are simulator-only).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.kernels.fp8_gemm import GemmVariant
+from compile import model
+
+#: Testbed shapes (m, k, n). Small enough that the interpret-lowered
+#: grid while-loop stays fast on the CPU PJRT client, large enough that
+#: tile-size choices change the measured time.
+SHAPES: list[tuple[int, int, int]] = [
+    (256, 256, 256),
+    (512, 256, 256),
+    (256, 512, 512),
+]
+
+#: The genome projections compiled into the catalog. "naive" mirrors the
+#: paper's direct-translation seed (tiny tiles, no private accumulator,
+#: k-outermost walk); "evolved" mirrors the App. A.3 kernel structure.
+VARIANTS: list[GemmVariant] = [
+    # naive-translation seed: k-outermost, acc in output, unfused
+    GemmVariant(32, 32, 32, fuse_scales=False, acc_in_scratch=False,
+                k_innermost=False),
+    # intermediate points on the evolution path
+    GemmVariant(32, 32, 32, fuse_scales=True, acc_in_scratch=False,
+                k_innermost=True),
+    GemmVariant(64, 64, 32, fuse_scales=True, acc_in_scratch=True),
+    GemmVariant(64, 64, 64, fuse_scales=False, acc_in_scratch=True),
+    GemmVariant(64, 64, 64, fuse_scales=True, acc_in_scratch=True),
+    GemmVariant(128, 64, 64, fuse_scales=True, acc_in_scratch=True),
+    GemmVariant(64, 128, 64, fuse_scales=True, acc_in_scratch=True),
+    GemmVariant(128, 128, 64, fuse_scales=True, acc_in_scratch=True),
+    GemmVariant(128, 128, 128, fuse_scales=True, acc_in_scratch=True),
+    GemmVariant(128, 128, 256, fuse_scales=True, acc_in_scratch=True),
+    GemmVariant(256, 128, 64, fuse_scales=True, acc_in_scratch=True),
+    GemmVariant(128, 256, 128, fuse_scales=True, acc_in_scratch=True),
+    # Perf-pass variants (EXPERIMENTS.md §Perf, L1 iteration 1): on the
+    # CPU testbed the interpret-lowered grid becomes an XLA while-loop,
+    # so fewer/larger grid steps amortize loop overhead. The 256-block
+    # variants run the primary shape in a single grid step.
+    GemmVariant(256, 256, 128, fuse_scales=True, acc_in_scratch=True),
+    GemmVariant(256, 256, 256, fuse_scales=True, acc_in_scratch=True),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(variant: GemmVariant | None, m: int, k: int, n: int) -> str:
+    fn, specs = model.entry(variant, m, k, n)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _fits(variant: GemmVariant, m: int, k: int, n: int) -> bool:
+    try:
+        variant.validate(m, k, n)
+        return True
+    except ValueError:
+        return False
+
+
+def build_catalog(out_dir: pathlib.Path, shapes=None, variants=None,
+                  verbose: bool = True) -> dict:
+    shapes = shapes or SHAPES
+    variants = variants if variants is not None else VARIANTS
+    out_dir.mkdir(parents=True, exist_ok=True)
+    entries = []
+    for (m, k, n) in shapes:
+        # library reference path (the 'PyTorch reference' Table-1 row)
+        name = f"ref_m{m}k{k}n{n}"
+        text = lower_entry(None, m, k, n)
+        (out_dir / f"{name}.hlo.txt").write_text(text)
+        entries.append({
+            "name": name, "kind": "reference", "m": m, "k": k, "n": n,
+            "variant": None, "artifact": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+        if verbose:
+            print(f"  wrote {name} ({len(text)} chars)", file=sys.stderr)
+        for v in variants:
+            if not _fits(v, m, k, n):
+                continue
+            name = f"{v.name}_m{m}k{k}n{n}"
+            text = lower_entry(v, m, k, n)
+            (out_dir / f"{name}.hlo.txt").write_text(text)
+            entries.append({
+                "name": name, "kind": "pallas", "m": m, "k": k, "n": n,
+                "variant": dataclasses.asdict(v),
+                "vmem_bytes": v.vmem_bytes(),
+                "artifact": f"{name}.hlo.txt",
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            })
+            if verbose:
+                print(f"  wrote {name} ({len(text)} chars)", file=sys.stderr)
+    catalog = {"version": 1, "entries": entries}
+    (out_dir / "catalog.json").write_text(json.dumps(catalog, indent=2))
+    return catalog
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts/model.hlo.txt",
+                   help="sentinel artifact path; the catalog is written "
+                        "to its directory")
+    p.add_argument("--quick", action="store_true",
+                   help="single shape + 3 variants (CI smoke)")
+    args = p.parse_args()
+    out_dir = pathlib.Path(args.out).parent
+    shapes = SHAPES[:1] if args.quick else None
+    variants = VARIANTS[:3] if args.quick else None
+    catalog = build_catalog(out_dir, shapes=shapes, variants=variants)
+    # The Makefile sentinel: model.hlo.txt is the default evolved variant
+    # at the primary shape (also present in the catalog under its name).
+    m, k, n = SHAPES[0]
+    sentinel = lower_entry(GemmVariant(), m, k, n) \
+        if _fits(GemmVariant(), m, k, n) else lower_entry(None, m, k, n)
+    pathlib.Path(args.out).write_text(sentinel)
+    print(f"catalog: {len(catalog['entries'])} artifacts in {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

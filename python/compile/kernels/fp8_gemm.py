@@ -1,0 +1,219 @@
+"""Layer-1 Pallas kernel: block-tiled FP8 GEMM with fused block scaling.
+
+This is the competition kernel of the AMD Developer Challenge 2025 as
+described in the paper (App. A.3), adapted from MI300/HIP to TPU/Pallas
+idioms (see DESIGN.md §Hardware-Adaptation):
+
+  * MI300 LDS ping-pong tiles  ->  Pallas BlockSpec VMEM blocks; the
+    HBM<->VMEM pipeline is expressed by the (m, n, k) grid + index maps.
+  * MFMA 32x32x16 fp8 matrix core  ->  MXU matmul via ``jnp.dot`` with an
+    f32 ``preferred_element_type`` on fp8-cast inputs.
+  * fp8-e4m3 inputs, f32 accumulate, bf16 out  ->  identical dtype path.
+  * per-matrix scale application  ->  fused (or unfused) scaling of the
+    f32 accumulator before the bf16 cast.
+
+The kernel is *parameterized* — the genome axes the rust coordinator
+evolves (tile sizes, fused scaling, accumulator placement, grid walk)
+select a variant here; ``aot.py`` compiles a catalog of variants to HLO
+text that the rust PJRT runtime loads and times.
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel is lowered to plain HLO (the grid
+becomes an XLA while-loop). Numerics are identical to the TPU path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmVariant:
+    """A point in the (projected) kernel genome space.
+
+    Mirrors the rust ``genome::KernelGenome`` fields that survive the
+    projection onto what Pallas can express on this testbed. The rust
+    side carries the full genome (LDS padding, waves/block, writeback
+    strategy, ...) for the MI300 simulator backend.
+    """
+
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 64
+    #: apply the per-row/per-col scales inside the kernel epilogue
+    #: (fused) or as a separate jnp pass in the L2 graph (unfused).
+    fuse_scales: bool = True
+    #: carry the f32 accumulator in a VMEM scratch buffer across k-steps
+    #: (the LDS-resident accumulation of the paper's evolved kernel) vs.
+    #: accumulating into the output ref (the naive-translation shape).
+    acc_in_scratch: bool = True
+    #: k-innermost grid walk (finish an (m, n) tile's reduction before
+    #: moving on — accumulator locality) vs k-outermost (the naive walk
+    #: that revisits every output tile per k-step).
+    k_innermost: bool = True
+
+    @property
+    def name(self) -> str:
+        return (
+            f"g{self.block_m}x{self.block_n}x{self.block_k}"
+            f"_{'fs' if self.fuse_scales else 'us'}"
+            f"_{'sc' if self.acc_in_scratch else 'oa'}"
+            f"_{'ki' if self.k_innermost else 'ko'}"
+        )
+
+    def validate(self, m: int, k: int, n: int) -> None:
+        for dim, blk, label in (
+            (m, self.block_m, "m"),
+            (n, self.block_n, "n"),
+            (k, self.block_k, "k"),
+        ):
+            if dim % blk != 0:
+                raise ValueError(
+                    f"{label}={dim} not divisible by block_{label}={blk} "
+                    f"for variant {self.name}"
+                )
+            if blk < 8 or blk & (blk - 1):
+                raise ValueError(f"blocks must be pow2 >= 8, got {blk}")
+        if self.acc_in_scratch and not self.k_innermost:
+            raise ValueError(
+                "scratch accumulator requires the k-innermost walk "
+                "(a k-outermost walk clobbers the scratch between visits)"
+            )
+
+    def vmem_bytes(self) -> int:
+        """Static VMEM footprint of one grid step (A, B blocks fp8 +
+        scale slivers f32 + out block + f32 scratch accumulator).
+
+        Used by the AOT catalog metadata and checked against the 16 MiB
+        budget in DESIGN.md §Perf.
+        """
+        a = self.block_m * self.block_k  # fp8: 1 byte
+        b = self.block_k * self.block_n
+        scales = 4 * (self.block_m + self.block_n)
+        out_elt = 2 if self.fuse_scales else 4
+        out = self.block_m * self.block_n * out_elt
+        acc = self.block_m * self.block_n * 4 if self.acc_in_scratch else 0
+        return a + b + scales + out + acc
+
+
+def _kernel_scratch(nk: int, fuse_scales: bool,
+                    a_ref, b_ref, asc_ref, bsc_ref, o_ref, acc_ref):
+    """Grid body with an f32 VMEM scratch accumulator (the paper's
+    evolved-kernel structure: private accumulator, single epilogue)."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if fuse_scales:
+            acc = acc * asc_ref[...] * bsc_ref[...]
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _kernel_out_acc(nk: int, fuse_scales: bool, k_axis: int,
+                    a_ref, b_ref, asc_ref, bsc_ref, o_ref):
+    """Grid body accumulating into the output ref directly — the
+    naive-translation structure (no private accumulator, output tile
+    re-read/re-written every k step)."""
+    k_step = pl.program_id(k_axis)
+
+    @pl.when(k_step == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        if fuse_scales:
+            o_ref[...] = o_ref[...] * asc_ref[...] * bsc_ref[...]
+
+
+def fp8_gemm(a_q: jax.Array, b_q: jax.Array, a_scale: jax.Array,
+             b_scale: jax.Array, variant: GemmVariant = GemmVariant()):
+    """Block-scaled GEMM ``C = (deq(a_q) @ deq(b_q))`` as a Pallas call.
+
+    Args:
+      a_q:      fp8-e4m3 ``[M, K]`` quantized A.
+      b_q:      fp8-e4m3 ``[K, N]`` quantized B.
+      a_scale:  f32 ``[M, 1]`` per-row dequant scale of A.
+      b_scale:  f32 ``[1, N]`` per-col dequant scale of B.
+      variant:  kernel genome projection to compile.
+
+    Returns:
+      bf16 ``[M, N]`` (fused-scale variants) or f32 ``[M, N]`` raw
+      accumulator (unfused variants — the L2 graph applies scales and
+      the bf16 cast).
+    """
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, (a_q.shape, b_q.shape)
+    variant.validate(m, k, n)
+    nm, nn, nk = m // variant.block_m, n // variant.block_n, k // variant.block_k
+
+    if variant.k_innermost:
+        grid = (nm, nn, nk)
+        a_map = lambda i, j, s: (i, s)
+        b_map = lambda i, j, s: (s, j)
+        o_map = lambda i, j, s: (i, j)
+        sa_map = lambda i, j, s: (i, 0)
+        sb_map = lambda i, j, s: (0, j)
+        k_axis = 2
+    else:
+        grid = (nk, nm, nn)
+        a_map = lambda s, i, j: (i, s)
+        b_map = lambda s, i, j: (s, j)
+        o_map = lambda s, i, j: (i, j)
+        sa_map = lambda s, i, j: (i, 0)
+        sb_map = lambda s, i, j: (0, j)
+        k_axis = 0
+
+    in_specs = [
+        pl.BlockSpec((variant.block_m, variant.block_k), a_map),
+        pl.BlockSpec((variant.block_k, variant.block_n), b_map),
+        pl.BlockSpec((variant.block_m, 1), sa_map),
+        pl.BlockSpec((1, variant.block_n), sb_map),
+    ]
+    out_spec = pl.BlockSpec((variant.block_m, variant.block_n), o_map)
+
+    if variant.acc_in_scratch:
+        out_dtype = jnp.bfloat16 if variant.fuse_scales else jnp.float32
+        return pl.pallas_call(
+            functools.partial(_kernel_scratch, nk, variant.fuse_scales),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            scratch_shapes=[
+                pltpu.VMEM((variant.block_m, variant.block_n), jnp.float32)
+            ],
+            interpret=True,
+        )(a_q, b_q, a_scale, b_scale)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_out_acc, nk, variant.fuse_scales, k_axis),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a_q, b_q, a_scale, b_scale)
+    if variant.fuse_scales:
+        return out.astype(jnp.bfloat16)
+    return out

@@ -1,0 +1,64 @@
+"""Pure-jnp correctness oracle for the block-scaled FP8 GEMM.
+
+This is the quantization + GEMM semantics of the competition task (the
+"(provided) basic PyTorch implementation" of the paper's seed set),
+written in plain jnp with no Pallas. Every kernel variant must agree
+with this oracle (with a small tolerance: block-tiled accumulation
+reassociates the k-sum).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Largest magnitude representable in fp8-e4m3fn (OCP variant jax uses).
+FP8_E4M3_MAX = 448.0
+
+
+def quantize_rowwise(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric quantization of f32 ``[R, C]`` to fp8-e4m3.
+
+    Returns ``(x_q, scale)`` with ``scale`` of shape ``[R, 1]`` such that
+    ``deq(x_q) = x_q.astype(f32) * scale ~= x``.
+    """
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / FP8_E4M3_MAX
+    x_q = (x / scale).astype(jnp.float8_e4m3fn)
+    return x_q, scale.astype(jnp.float32)
+
+
+def quantize_colwise(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-column symmetric quantization of f32 ``[R, C]`` to fp8-e4m3.
+
+    Returns ``(x_q, scale)`` with ``scale`` of shape ``[1, C]``.
+    """
+    absmax = jnp.max(jnp.abs(x), axis=0, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / FP8_E4M3_MAX
+    x_q = (x / scale).astype(jnp.float8_e4m3fn)
+    return x_q, scale.astype(jnp.float32)
+
+
+def ref_gemm_quantized(a_q: jax.Array, b_q: jax.Array, a_scale: jax.Array,
+                       b_scale: jax.Array) -> jax.Array:
+    """Oracle on already-quantized inputs: fp8 -> f32 matmul -> scale ->
+    bf16. Mirrors the kernel's dtype path exactly (fp8 compute, f32
+    accumulate, bf16 out — the mixed-precision pattern of App. A.3)."""
+    acc = jnp.dot(a_q.astype(jnp.float32), b_q.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return (acc * a_scale * b_scale).astype(jnp.bfloat16)
+
+
+def ref_gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """End-to-end oracle on f32 inputs: quantize both operands, then
+    :func:`ref_gemm_quantized`. This is the task semantics the
+    competition's PyTorch reference implements."""
+    a_q, a_scale = quantize_rowwise(a)
+    b_q, b_scale = quantize_colwise(b)
+    return ref_gemm_quantized(a_q, b_q, a_scale, b_scale)
+
+
+def ref_gemm_exact(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Unquantized f32 GEMM — used to bound the quantization error of
+    the task semantics themselves in tests."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

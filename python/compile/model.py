@@ -1,0 +1,64 @@
+"""Layer-2 JAX model: the end-to-end competition computation.
+
+The full task graph: f32 operands -> per-row/col fp8 quantization ->
+Layer-1 Pallas block-scaled GEMM -> (scales + bf16 cast if the kernel
+variant did not fuse them) -> f32 boundary convert.
+
+The graph is lowered once by ``aot.py`` to HLO text per kernel variant;
+the rust coordinator (Layer 3) loads the artifacts via PJRT and times
+them as its *real* evaluation backend. Entry parameters and results are
+f32 so the rust ``xla`` crate only handles standard literals — the fp8
+and bf16 segments live entirely inside the HLO module.
+
+Python is never on the request path: this module is imported only by
+``aot.py`` and the pytest suite.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.fp8_gemm import GemmVariant, fp8_gemm
+
+
+def scaled_gemm(a: jax.Array, b: jax.Array,
+                variant: GemmVariant = GemmVariant()) -> jax.Array:
+    """Full task on f32 inputs, through the Pallas kernel.
+
+    Returns f32 ``[M, N]`` (bf16 result widened at the boundary).
+    """
+    a_q, a_scale = ref.quantize_rowwise(a)
+    b_q, b_scale = ref.quantize_colwise(b)
+    out = fp8_gemm(a_q, b_q, a_scale, b_scale, variant)
+    if not variant.fuse_scales:
+        # unfused variants return the raw f32 accumulator; apply the
+        # dequant scales and the bf16 cast here in the L2 graph.
+        out = (out * a_scale * b_scale).astype(jnp.bfloat16)
+    return out.astype(jnp.float32)
+
+
+def scaled_gemm_reference(a: jax.Array, b: jax.Array) -> jax.Array:
+    """The library path (no Pallas): the 'PyTorch reference' row of
+    Table 1, compiled to its own artifact so the rust side can time the
+    baseline through the identical runtime."""
+    return ref.ref_gemm(a, b).astype(jnp.float32)
+
+
+def entry(variant: GemmVariant | None, m: int, k: int, n: int):
+    """Build the jittable entry function + example shapes for AOT.
+
+    ``variant=None`` selects the library reference path.
+    """
+    a_spec = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+    if variant is None:
+        def fn(a, b):
+            return (scaled_gemm_reference(a, b),)
+    else:
+        def fn(a, b):
+            return (scaled_gemm(a, b, variant),)
+
+    return fn, (a_spec, b_spec)

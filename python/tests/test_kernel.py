@@ -1,0 +1,235 @@
+"""Kernel-vs-oracle correctness: the CORE build-time signal.
+
+Every Pallas variant must agree with the pure-jnp oracle on the same
+quantized inputs. Hypothesis sweeps shapes x variant axes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fp8_gemm import GemmVariant, fp8_gemm
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(shape, seed, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+def run_variant(v: GemmVariant, m: int, k: int, n: int, seed: int = 0,
+                scale: float = 1.0):
+    a = rand((m, k), seed, scale)
+    b = rand((k, n), seed + 1, scale)
+    a_q, a_s = ref.quantize_rowwise(a)
+    b_q, b_s = ref.quantize_colwise(b)
+    got = fp8_gemm(a_q, b_q, a_s, b_s, v)
+    if not v.fuse_scales:
+        got = (got * a_s * b_s).astype(jnp.bfloat16)
+    want = ref.ref_gemm_quantized(a_q, b_q, a_s, b_s)
+    return np.asarray(got, np.float32), np.asarray(want, np.float32)
+
+
+def assert_matches(got, want, k):
+    # block-tiled accumulation reassociates the k-sum; bf16 output has
+    # ~3 decimal digits. Tolerance scales with sqrt(k).
+    tol = 2e-2 * np.sqrt(k / 64.0) * np.maximum(np.abs(want).max(), 1.0)
+    np.testing.assert_allclose(got, want, atol=float(tol), rtol=2e-2)
+
+
+DEFAULT = GemmVariant()
+
+
+class TestDefaultVariant:
+    def test_square(self):
+        got, want = run_variant(DEFAULT, 128, 128, 128)
+        assert_matches(got, want, 128)
+
+    def test_rectangular(self):
+        got, want = run_variant(DEFAULT, 256, 64, 128)
+        assert_matches(got, want, 64)
+
+    def test_large_scale_inputs(self):
+        got, want = run_variant(DEFAULT, 128, 128, 128, scale=100.0)
+        assert_matches(got, want, 128)
+
+    def test_small_scale_inputs(self):
+        got, want = run_variant(DEFAULT, 128, 128, 128, scale=1e-3)
+        assert_matches(got, want, 128)
+
+    def test_output_dtype_is_bf16(self):
+        a = rand((128, 64), 0)
+        b = rand((64, 128), 1)
+        a_q, a_s = ref.quantize_rowwise(a)
+        b_q, b_s = ref.quantize_colwise(b)
+        out = fp8_gemm(a_q, b_q, a_s, b_s, GemmVariant(64, 64, 64))
+        assert out.dtype == jnp.bfloat16
+
+
+VARIANT_MATRIX = [
+    GemmVariant(32, 32, 32, fuse_scales=False, acc_in_scratch=False,
+                k_innermost=False),
+    GemmVariant(32, 32, 32, fuse_scales=True, acc_in_scratch=False,
+                k_innermost=True),
+    GemmVariant(64, 32, 32),
+    GemmVariant(32, 64, 32),
+    GemmVariant(32, 32, 64),
+    GemmVariant(64, 64, 64, fuse_scales=False),
+    GemmVariant(64, 64, 64, acc_in_scratch=False),
+    GemmVariant(128, 64, 32),
+]
+
+
+@pytest.mark.parametrize("v", VARIANT_MATRIX, ids=lambda v: v.name)
+def test_variant_matrix(v):
+    got, want = run_variant(v, 128, 128, 128, seed=7)
+    assert_matches(got, want, 128)
+
+
+class TestValidation:
+    def test_indivisible_m_rejected(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            GemmVariant(64, 32, 32).validate(100, 64, 64)
+
+    def test_non_pow2_block_rejected(self):
+        with pytest.raises(ValueError, match="pow2"):
+            GemmVariant(48, 32, 32).validate(96, 64, 64)
+
+    def test_tiny_block_rejected(self):
+        with pytest.raises(ValueError, match="pow2"):
+            GemmVariant(4, 32, 32).validate(64, 64, 64)
+
+    def test_scratch_requires_k_innermost(self):
+        with pytest.raises(ValueError, match="k-innermost"):
+            GemmVariant(32, 32, 32, acc_in_scratch=True,
+                        k_innermost=False).validate(64, 64, 64)
+
+    def test_vmem_bytes_monotone_in_blocks(self):
+        small = GemmVariant(32, 32, 32).vmem_bytes()
+        big = GemmVariant(128, 128, 64).vmem_bytes()
+        assert big > small
+
+    def test_vmem_under_budget(self):
+        # DESIGN.md §Perf: every catalog variant fits the 16 MiB budget.
+        from compile.aot import VARIANTS
+        for v in VARIANTS:
+            assert v.vmem_bytes() <= 16 * 2**20, v.name
+
+
+# ---------------------------------------------------------------- hypothesis
+
+pow2 = st.sampled_from([32, 64, 128])
+mult = st.integers(min_value=1, max_value=3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(bm=st.sampled_from([32, 64]), bn=st.sampled_from([32, 64]),
+       bk=st.sampled_from([32, 64]), mm=mult, nn=mult, kk=mult,
+       fuse=st.booleans(), scratch=st.booleans(),
+       seed=st.integers(0, 2**16))
+def test_hypothesis_shape_sweep(bm, bn, bk, mm, nn, kk, fuse, scratch, seed):
+    v = GemmVariant(bm, bn, bk, fuse_scales=fuse, acc_in_scratch=scratch,
+                    k_innermost=True)
+    m, n, k = bm * mm, bn * nn, bk * kk
+    got, want = run_variant(v, m, k, n, seed=seed)
+    assert_matches(got, want, k)
+
+
+@settings(max_examples=8, deadline=None)
+@given(scale=st.floats(min_value=1e-4, max_value=1e4),
+       seed=st.integers(0, 2**16))
+def test_hypothesis_dynamic_range(scale, seed):
+    """Scale sweeps exercise the per-row/col quantization path: the
+    dequantized kernel output must track the oracle at any input range."""
+    got, want = run_variant(DEFAULT, 128, 64, 128, seed=seed, scale=scale)
+    assert_matches(got, want, 64)
+
+
+class TestQuantization:
+    def test_rowwise_roundtrip(self):
+        x = rand((64, 32), 3, scale=10.0)
+        x_q, s = ref.quantize_rowwise(x)
+        deq = np.asarray(x_q, np.float32) * np.asarray(s)
+        np.testing.assert_allclose(deq, np.asarray(x), rtol=0.15, atol=0.2)
+
+    def test_colwise_roundtrip(self):
+        x = rand((32, 64), 4, scale=0.1)
+        x_q, s = ref.quantize_colwise(x)
+        deq = np.asarray(x_q, np.float32) * np.asarray(s)
+        np.testing.assert_allclose(deq, np.asarray(x), rtol=0.15, atol=0.01)
+
+    def test_scale_shapes(self):
+        x = rand((16, 8), 5)
+        _, sr = ref.quantize_rowwise(x)
+        _, sc = ref.quantize_colwise(x)
+        assert sr.shape == (16, 1) and sc.shape == (1, 8)
+
+    def test_quantized_rows_saturate_fp8_range(self):
+        x = rand((8, 128), 6, scale=50.0)
+        x_q, _ = ref.quantize_rowwise(x)
+        per_row_max = np.abs(np.asarray(x_q, np.float32)).max(axis=1)
+        assert (per_row_max > 0.9 * ref.FP8_E4M3_MAX).all()
+
+    def test_task_semantics_close_to_exact(self):
+        a, b = rand((64, 64), 7), rand((64, 64), 8)
+        approx = np.asarray(ref.ref_gemm(a, b), np.float32)
+        exact = np.asarray(ref.ref_gemm_exact(a, b))
+        # fp8 quantization error on a k=64 dot: a few percent.
+        err = np.abs(approx - exact).max() / (np.abs(exact).max() + 1e-9)
+        assert err < 0.12, err
+
+
+class TestEdgeCases:
+    def test_single_block_shape(self):
+        # degenerate grid: exactly one block in every dimension
+        v = GemmVariant(32, 32, 32)
+        got, want = run_variant(v, 32, 32, 32, seed=11)
+        assert_matches(got, want, 32)
+
+    def test_deep_k_reduction(self):
+        # many k-steps stress the accumulator carry
+        v = GemmVariant(32, 32, 32)
+        got, want = run_variant(v, 32, 512, 32, seed=12)
+        assert_matches(got, want, 512)
+
+    def test_wide_aspect_ratio(self):
+        v = GemmVariant(32, 64, 32)
+        got, want = run_variant(v, 32, 64, 512, seed=13)
+        assert_matches(got, want, 64)
+
+    def test_zero_inputs(self):
+        a_q = jnp.zeros((64, 64), jnp.float8_e4m3fn)
+        b_q = jnp.zeros((64, 64), jnp.float8_e4m3fn)
+        s1 = jnp.ones((64, 1), jnp.float32)
+        s2 = jnp.ones((1, 64), jnp.float32)
+        out = fp8_gemm(a_q, b_q, s1, s2, GemmVariant(32, 32, 32))
+        assert not np.asarray(out, np.float32).any()
+
+    def test_identity_like(self):
+        # A = diag-ish pattern quantizes exactly (powers of two)
+        a = jnp.eye(64, dtype=jnp.float32) * 2.0
+        b = jax.random.normal(jax.random.PRNGKey(5), (64, 64), jnp.float32)
+        a_q, a_s = ref.quantize_rowwise(a)
+        b_q, b_s = ref.quantize_colwise(b)
+        got = fp8_gemm(a_q, b_q, a_s, b_s, GemmVariant(32, 32, 32))
+        want = ref.ref_gemm_quantized(a_q, b_q, a_s, b_s)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=2e-2, atol=1e-2)
+
+    def test_perf_pass_variants_correct(self):
+        # the §Perf single-grid-step variants added to the catalog
+        for v in (GemmVariant(256, 256, 128), GemmVariant(256, 256, 256)):
+            got, want = run_variant(v, 256, 256, 256, seed=14)
+            assert_matches(got, want, 256)
+
+    def test_vmem_of_perf_variants_under_budget(self):
+        assert GemmVariant(256, 256, 256).vmem_bytes() <= 16 * 2**20

@@ -1,0 +1,101 @@
+"""L2 model graph + AOT catalog tests: shapes, lowering, catalog format."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+from compile.kernels.fp8_gemm import GemmVariant
+
+
+class TestModel:
+    def test_scaled_gemm_matches_reference_path(self):
+        key = jax.random.PRNGKey(0)
+        a = jax.random.normal(key, (128, 64), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (64, 128), jnp.float32)
+        got = np.asarray(model.scaled_gemm(a, b, GemmVariant(64, 64, 64)))
+        want = np.asarray(model.scaled_gemm_reference(a, b))
+        np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2
+                                   * max(1.0, float(np.abs(want).max())))
+
+    def test_unfused_variant_matches_fused(self):
+        a = jax.random.normal(jax.random.PRNGKey(2), (64, 64), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(3), (64, 64), jnp.float32)
+        fused = np.asarray(model.scaled_gemm(a, b, GemmVariant(32, 32, 32)))
+        unfused = np.asarray(model.scaled_gemm(
+            a, b, GemmVariant(32, 32, 32, fuse_scales=False)))
+        np.testing.assert_allclose(fused, unfused, rtol=1e-2, atol=1e-2
+                                   * max(1.0, float(np.abs(fused).max())))
+
+    def test_output_is_f32_at_boundary(self):
+        a = jnp.ones((32, 32), jnp.float32)
+        b = jnp.ones((32, 32), jnp.float32)
+        out = model.scaled_gemm(a, b, GemmVariant(32, 32, 32))
+        assert out.dtype == jnp.float32
+        assert model.scaled_gemm_reference(a, b).dtype == jnp.float32
+
+    def test_entry_reference_and_variant(self):
+        fn, specs = model.entry(None, 32, 32, 32)
+        assert specs[0].shape == (32, 32)
+        out = jax.eval_shape(fn, *specs)
+        assert out[0].shape == (32, 32) and out[0].dtype == jnp.float32
+        fn2, _ = model.entry(GemmVariant(32, 32, 32), 32, 32, 32)
+        out2 = jax.eval_shape(fn2, *specs)
+        assert out2[0].shape == (32, 32)
+
+
+class TestAot:
+    def test_lower_entry_produces_hlo_text(self):
+        text = aot.lower_entry(GemmVariant(32, 32, 32), 64, 32, 64)
+        assert text.startswith("HloModule")
+        assert "f8e4m3fn" in text  # the fp8 segment is inside the module
+        assert "bf16" in text      # ... and the bf16 epilogue
+
+    def test_lower_reference_entry(self):
+        text = aot.lower_entry(None, 64, 64, 64)
+        assert text.startswith("HloModule")
+        assert "f32[64,64]" in text
+
+    def test_catalog_build_quick(self, tmp_path):
+        cat = aot.build_catalog(tmp_path, shapes=[(64, 64, 64)],
+                                variants=[GemmVariant(32, 32, 32)],
+                                verbose=False)
+        assert len(cat["entries"]) == 2  # reference + 1 pallas variant
+        names = {e["name"] for e in cat["entries"]}
+        assert "ref_m64k64n64" in names
+        data = json.loads((tmp_path / "catalog.json").read_text())
+        assert data["version"] == 1
+        for e in data["entries"]:
+            p = tmp_path / e["artifact"]
+            assert p.exists() and p.read_text().startswith("HloModule")
+
+    def test_catalog_skips_nonfitting_variants(self, tmp_path):
+        cat = aot.build_catalog(tmp_path, shapes=[(64, 64, 64)],
+                                variants=[GemmVariant(128, 128, 128)],
+                                verbose=False)
+        kinds = [e["kind"] for e in cat["entries"]]
+        assert kinds == ["reference"]  # 128-block doesn't fit 64^3
+
+    def test_default_variant_fits_all_default_shapes(self):
+        for (m, k, n) in aot.SHAPES:
+            GemmVariant().validate(m, k, n)
+
+    def test_all_catalog_variants_valid_somewhere(self):
+        for v in aot.VARIANTS:
+            assert any(aot._fits(v, m, k, n) for (m, k, n) in aot.SHAPES), \
+                f"{v.name} fits no catalog shape"
+
+    def test_catalog_names_unique(self, tmp_path):
+        cat = aot.build_catalog(tmp_path, shapes=[(64, 64, 64), (128, 64, 64)],
+                                variants=[GemmVariant(32, 32, 32),
+                                          GemmVariant(64, 32, 32)],
+                                verbose=False)
+        names = [e["name"] for e in cat["entries"]]
+        assert len(names) == len(set(names))

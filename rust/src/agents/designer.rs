@@ -1,0 +1,371 @@
+//! Stage 2 — the LLM Experiment Designer (paper §3.2, App. A.2).
+//!
+//! From the Base code (genome) plus the knowledge base, produce:
+//!
+//! 1. **10 optimization avenues** — "intentionally longer than
+//!    required ... it increases the diversity of options";
+//! 2. **5 experiment plans**, each with a description, a rubric, a
+//!    predicted `performance: [lo, hi]` range, and an `innovation`
+//!    score;
+//! 3. the **3-of-5 choice** (without replacement): (i) the most
+//!    innovative, (ii) the highest *maximum* predicted performance,
+//!    (iii) the highest *minimum* predicted performance — "this helps
+//!    to keep a broad range of alternative paths under consideration".
+
+use super::knowledge::{Avenue, KnowledgeBase};
+use super::llm::SurrogateLlm;
+use crate::genome::{edit::GenomeEdit, KernelGenome};
+use crate::population::Population;
+
+/// One experiment plan (the YAML blocks of App. A.2).
+#[derive(Debug, Clone)]
+pub struct ExperimentPlan {
+    pub avenue: Avenue,
+    pub description: String,
+    /// The concrete rubric the writer must implement.
+    pub rubric: Vec<GenomeEdit>,
+    /// Rubric rendered as prose lines (for transcripts).
+    pub rubric_text: Vec<String>,
+    /// Predicted gain range, percent (`performance: [lo, hi]`).
+    pub performance: (f64, f64),
+    /// `innovation:` score, 0-100.
+    pub innovation: u8,
+}
+
+/// Designer output: the avenue list + the 5 plans.
+#[derive(Debug, Clone)]
+pub struct DesignOutput {
+    pub avenues: Vec<Avenue>,
+    pub plans: Vec<ExperimentPlan>,
+}
+
+/// Ablation axis: how 3 experiments are picked from the 5 plans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExperimentRule {
+    /// The paper's rule: most innovative, highest max, highest min.
+    Paper,
+    /// Top-3 by maximum predicted performance (pure exploitation).
+    TopMax,
+    /// Uniform random 3 (pure exploration).
+    Random3,
+}
+
+/// Stage-2 agent.
+#[derive(Debug, Clone)]
+pub struct Designer {
+    pub rule: ExperimentRule,
+    /// How many avenues to surface (paper: 10).
+    pub n_avenues: usize,
+    /// How many plans to draft (paper: 5).
+    pub n_plans: usize,
+    /// How many plans to run (paper: 3).
+    pub n_chosen: usize,
+}
+
+impl Default for Designer {
+    fn default() -> Self {
+        Designer {
+            rule: ExperimentRule::Paper,
+            n_avenues: 10,
+            n_plans: 5,
+            n_chosen: 3,
+        }
+    }
+}
+
+impl Designer {
+    pub fn with_rule(rule: ExperimentRule) -> Self {
+        Designer {
+            rule,
+            ..Default::default()
+        }
+    }
+
+    /// Produce avenues + plans for a base genome.
+    ///
+    /// Novelty shaping: avenues already attempted along the base's
+    /// lineage lose innovation points (the LLM sees the one-step
+    /// experiment analyses in context and avoids re-proposing stale
+    /// ideas); untried avenues gain a small bonus.
+    pub fn design(
+        &self,
+        base_id: &str,
+        base: &KernelGenome,
+        pop: &Population,
+        kb: &KnowledgeBase,
+        llm: &mut SurrogateLlm,
+    ) -> DesignOutput {
+        let mut available = kb.available_avenues(base);
+        // rank by perturbed prior mean gain, keep up to n_avenues
+        let mut scored: Vec<(Avenue, f64)> = available
+            .drain(..)
+            .map(|a| {
+                let (lo, hi) = a.prior_gain();
+                let wobble = llm.rng().range_f64(0.85, 1.15);
+                (a, (lo + hi) * 0.5 * wobble)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(self.n_avenues);
+        let avenues: Vec<Avenue> = scored.iter().map(|(a, _)| *a).collect();
+
+        // lineage history for novelty shaping
+        let tried: std::collections::HashSet<String> = pop
+            .ancestors(base_id)
+            .iter()
+            .copied()
+            .chain(pop.by_id(base_id))
+            .map(|m| m.experiment.clone())
+            .collect();
+
+        let mut plans = Vec::new();
+        let mut used = std::collections::HashSet::new();
+        // temperature-weighted draw of distinct avenues into plans
+        while plans.len() < self.n_plans && used.len() < avenues.len() {
+            let candidates: Vec<(Avenue, f64)> = avenues
+                .iter()
+                .filter(|a| !used.contains(*a))
+                .map(|a| {
+                    let (lo, hi) = a.prior_gain();
+                    (*a, (lo + hi) * 0.5 + a.innovation() as f64 * 0.3)
+                })
+                .collect();
+            if candidates.is_empty() {
+                break;
+            }
+            let avenue = candidates[llm.sample_weighted(&candidates)].0;
+            used.insert(avenue);
+            let rubric = avenue.instantiate(base, llm.rng());
+            if rubric.iter().all(|e| e.is_noop(base)) {
+                continue;
+            }
+            let mut innovation = llm.perturb_innovation(avenue.innovation());
+            let tried_before = tried.iter().any(|e| e.contains(avenue.name()));
+            if tried_before {
+                innovation = innovation.saturating_sub(25);
+            } else {
+                innovation = (innovation + 5).min(100);
+            }
+            let performance = llm.perturb_gain(avenue.prior_gain());
+            let rubric_text = rubric.iter().map(|e| e.describe()).collect();
+            plans.push(ExperimentPlan {
+                avenue,
+                description: format!(
+                    "{}: {} (expected from digested knowledge: {:?}%)",
+                    avenue.name(),
+                    rubric
+                        .iter()
+                        .map(|e| e.describe())
+                        .collect::<Vec<_>>()
+                        .join("; "),
+                    avenue.prior_gain()
+                ),
+                rubric,
+                rubric_text,
+                performance,
+                innovation,
+            });
+        }
+        DesignOutput { avenues, plans }
+    }
+
+    /// Apply the 3-of-5 selection rule; returns indices into `plans`.
+    pub fn choose(&self, plans: &[ExperimentPlan], llm: &mut SurrogateLlm) -> Vec<usize> {
+        let n = self.n_chosen.min(plans.len());
+        match self.rule {
+            ExperimentRule::Paper => {
+                let mut chosen: Vec<usize> = Vec::new();
+                let pick = |chosen: &Vec<usize>, key: &dyn Fn(&ExperimentPlan) -> f64| {
+                    plans
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| !chosen.contains(i))
+                        .max_by(|a, b| key(a.1).partial_cmp(&key(b.1)).unwrap())
+                        .map(|(i, _)| i)
+                };
+                // (i) most innovative
+                if let Some(i) = pick(&chosen, &|p| p.innovation as f64) {
+                    chosen.push(i);
+                }
+                // (ii) highest maximum performance
+                if chosen.len() < n {
+                    if let Some(i) = pick(&chosen, &|p| p.performance.1) {
+                        chosen.push(i);
+                    }
+                }
+                // (iii) highest minimum performance
+                if chosen.len() < n {
+                    if let Some(i) = pick(&chosen, &|p| p.performance.0) {
+                        chosen.push(i);
+                    }
+                }
+                chosen
+            }
+            ExperimentRule::TopMax => {
+                let mut idx: Vec<usize> = (0..plans.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    plans[b]
+                        .performance
+                        .1
+                        .partial_cmp(&plans[a].performance.1)
+                        .unwrap()
+                });
+                idx.truncate(n);
+                idx
+            }
+            ExperimentRule::Random3 => {
+                let mut idx: Vec<usize> = (0..plans.len()).collect();
+                llm.rng().shuffle(&mut idx);
+                idx.truncate(n);
+                idx
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::knowledge::KnowledgeBase;
+    use crate::agents::llm::LlmConfig;
+    use crate::genome::seeds;
+    use crate::workload::FEEDBACK_CONFIGS;
+
+    fn setup() -> (Population, KnowledgeBase, SurrogateLlm) {
+        (
+            Population::new(FEEDBACK_CONFIGS.to_vec()),
+            KnowledgeBase::full(),
+            SurrogateLlm::with_seed(11),
+        )
+    }
+
+    #[test]
+    fn produces_five_plans_for_naive_base() {
+        let (pop, kb, mut llm) = setup();
+        let d = Designer::default();
+        let out = d.design("00001", &seeds::naive_hip(), &pop, &kb, &mut llm);
+        assert!(out.avenues.len() >= 5, "avenues: {:?}", out.avenues);
+        assert_eq!(out.plans.len(), 5);
+        for p in &out.plans {
+            assert!(!p.rubric.is_empty());
+            assert!(p.performance.1 > p.performance.0);
+            assert!(p.innovation <= 100);
+            assert!(!p.description.is_empty());
+        }
+    }
+
+    #[test]
+    fn plans_use_distinct_avenues() {
+        let (pop, kb, mut llm) = setup();
+        let out =
+            Designer::default().design("00001", &seeds::naive_hip(), &pop, &kb, &mut llm);
+        let mut avs: Vec<Avenue> = out.plans.iter().map(|p| p.avenue).collect();
+        avs.sort_by_key(|a| format!("{a:?}"));
+        avs.dedup();
+        assert_eq!(avs.len(), out.plans.len());
+    }
+
+    #[test]
+    fn paper_rule_picks_innovative_max_min() {
+        let plans = vec![
+            plan(Avenue::TileSizeTuning, (1.0, 10.0), 20),
+            plan(Avenue::CooperativeStore, (5.0, 15.0), 60),
+            plan(Avenue::LdsConflictPadding, (15.0, 40.0), 85),
+            plan(Avenue::WiderVectorLoads, (2.0, 90.0), 30),
+            plan(Avenue::KLoopUnrolling, (25.0, 30.0), 10),
+        ];
+        let d = Designer::default();
+        let mut llm = SurrogateLlm::with_seed(1);
+        let chosen = d.choose(&plans, &mut llm);
+        // most innovative: idx 2 (85); highest max: idx 3 (90);
+        // highest min among remaining: idx 4 (25)
+        assert_eq!(chosen, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn paper_rule_without_replacement() {
+        // one plan dominates all three criteria; rule must still pick 3
+        let plans = vec![
+            plan(Avenue::LdsConflictPadding, (50.0, 100.0), 95),
+            plan(Avenue::TileSizeTuning, (1.0, 5.0), 10),
+            plan(Avenue::KLoopUnrolling, (2.0, 6.0), 20),
+            plan(Avenue::WiderVectorLoads, (3.0, 7.0), 30),
+            plan(Avenue::CooperativeStore, (4.0, 8.0), 40),
+        ];
+        let chosen = Designer::default().choose(&plans, &mut SurrogateLlm::with_seed(2));
+        assert_eq!(chosen.len(), 3);
+        let mut dedup = chosen.clone();
+        dedup.dedup();
+        assert_eq!(chosen, dedup);
+        assert_eq!(chosen[0], 0); // dominator taken once, by innovation
+    }
+
+    #[test]
+    fn topmax_rule_sorts_by_max() {
+        let plans = vec![
+            plan(Avenue::TileSizeTuning, (1.0, 10.0), 20),
+            plan(Avenue::CooperativeStore, (5.0, 95.0), 60),
+            plan(Avenue::LdsConflictPadding, (15.0, 40.0), 85),
+        ];
+        let d = Designer::with_rule(ExperimentRule::TopMax);
+        let chosen = d.choose(&plans, &mut SurrogateLlm::with_seed(3));
+        assert_eq!(chosen[0], 1);
+    }
+
+    #[test]
+    fn random3_is_seeded() {
+        let plans: Vec<ExperimentPlan> = (0..5)
+            .map(|i| plan(Avenue::TileSizeTuning, (1.0, 2.0 + i as f64), 10))
+            .collect();
+        let d = Designer::with_rule(ExperimentRule::Random3);
+        let a = d.choose(&plans, &mut SurrogateLlm::with_seed(4));
+        let b = d.choose(&plans, &mut SurrogateLlm::with_seed(4));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn lineage_repetition_lowers_innovation() {
+        let (mut pop, kb, _) = setup();
+        use crate::population::{EvalOutcome, Individual};
+        pop.add(Individual {
+            id: "00001".into(),
+            parents: vec![],
+            genome: seeds::mfma_seed(),
+            experiment: format!("{}: tried before", Avenue::DoubleBuffering.name()),
+            report: String::new(),
+            outcome: EvalOutcome::Timings(vec![100.0; 6]),
+        });
+        // Run many designs; plans on the tried avenue should carry
+        // lower innovation than its prior on average.
+        let d = Designer::default();
+        let mut llm = SurrogateLlm::new(5, LlmConfig::default());
+        let mut tried_scores = Vec::new();
+        for _ in 0..30 {
+            let out = d.design("00001", &seeds::mfma_seed(), &pop, &kb, &mut llm);
+            for p in out.plans {
+                if p.avenue == Avenue::DoubleBuffering {
+                    tried_scores.push(p.innovation as f64);
+                }
+            }
+        }
+        if !tried_scores.is_empty() {
+            let mean = tried_scores.iter().sum::<f64>() / tried_scores.len() as f64;
+            assert!(
+                mean < Avenue::DoubleBuffering.innovation() as f64 - 10.0,
+                "mean={mean}"
+            );
+        }
+    }
+
+    fn plan(avenue: Avenue, performance: (f64, f64), innovation: u8) -> ExperimentPlan {
+        ExperimentPlan {
+            avenue,
+            description: String::new(),
+            rubric: vec![],
+            rubric_text: vec![],
+            performance,
+            innovation,
+        }
+    }
+}

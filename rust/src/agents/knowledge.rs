@@ -1,0 +1,469 @@
+//! The knowledge base: the "findings" document and the avenue library.
+//!
+//! The paper bootstraps by (a) an LLM-driven hardware-probing phase
+//! whose conclusions are distilled into a *findings document* (§3,
+//! §4.3 — e.g. the MFMA memory-layout quirks of footnote 2), and (b)
+//! digesting external documents (rocWMMA docs, the AMD matrix-
+//! instruction calculator, CUDA blog posts by Boehm and Armbruster)
+//! into task-relevant optimization *avenues* (§3.2, App. A.2).
+//!
+//! Here a [`Finding`] gates avenues that require bootstrap knowledge
+//! (you cannot write an MFMA kernel before the probing phase revealed
+//! the intrinsic semantics), and each [`Avenue`] carries the digested
+//! prior — expected gain range + innovation score — the Experiment
+//! Designer samples from. The knowledge-ablation bench strips the
+//! library down to see how far the loop gets on generic GPU lore.
+
+use crate::genome::{
+    edit::GenomeEdit, ComputePath, GridMapping, KernelGenome, Precision, ScaleCache,
+    Swizzle, Writeback,
+};
+use crate::rng::Rng;
+
+/// Bootstrap findings (the distilled hardware-probing results).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Finding {
+    /// MFMA intrinsic semantics + fragment memory layout understood
+    /// (the paper's extended deep-dive, §3 and footnote 2).
+    MfmaSemantics,
+    /// The LDS re-purposing trick for scale caching verified safe
+    /// under double buffering (App. A.3).
+    LdsRepurposeTrick,
+    /// XOR-swizzle layouts verified against rocWMMA fragment loads.
+    SwizzleLayouts,
+}
+
+/// The findings document: which probes have been run and distilled.
+#[derive(Debug, Clone, Default)]
+pub struct FindingsDoc {
+    findings: Vec<Finding>,
+    /// Free-text digest entries (kept for report rendering).
+    pub digest: Vec<String>,
+}
+
+impl FindingsDoc {
+    /// The paper's starting state: the bootstrap deep-dive has already
+    /// produced the MFMA findings (it predates the evolutionary loop).
+    pub fn bootstrap() -> Self {
+        let mut doc = FindingsDoc::default();
+        doc.record(
+            Finding::MfmaSemantics,
+            "MFMA 32x32x16 fp8 intrinsics probed: fragment rows spread \
+             across wave quarters; accumulate in f32, cast bf16 on store.",
+        );
+        doc.record(
+            Finding::LdsRepurposeTrick,
+            "Consumed A/B LDS buffers may be overlaid with f32 scales \
+             once the pipeline stage has retired (requires ping-pong).",
+        );
+        doc.record(
+            Finding::SwizzleLayouts,
+            "XOR-swizzled LDS columns match rocwmma::load_matrix_sync \
+             expectations; do not combine with row padding.",
+        );
+        doc
+    }
+
+    pub fn record(&mut self, f: Finding, digest: &str) {
+        if !self.has(f) {
+            self.findings.push(f);
+        }
+        self.digest.push(digest.to_string());
+    }
+
+    pub fn has(&self, f: Finding) -> bool {
+        self.findings.contains(&f)
+    }
+}
+
+/// One optimization avenue — a digested, directed piece of knowledge
+/// the designer can turn into an experiment. Names mirror App. A.2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Avenue {
+    MatrixCoreAdoption,
+    PrecisionFp16Library,
+    LdsStagingAdoption,
+    DoubleBuffering,
+    LdsConflictPadding,
+    XorSwizzleLayout,
+    WiderVectorLoads,
+    IncreaseOccupancy,
+    CooperativeStore,
+    TileSizeTuning,
+    ScaleCacheLds,
+    AsyncScaleRepurpose,
+    KLoopUnrolling,
+    RegisterPressureRelief,
+    GridMappingSwizzle,
+    KInnermostFix,
+    AccumulatorInRegs,
+}
+
+impl Avenue {
+    pub const ALL: [Avenue; 17] = [
+        Avenue::MatrixCoreAdoption,
+        Avenue::PrecisionFp16Library,
+        Avenue::LdsStagingAdoption,
+        Avenue::DoubleBuffering,
+        Avenue::LdsConflictPadding,
+        Avenue::XorSwizzleLayout,
+        Avenue::WiderVectorLoads,
+        Avenue::IncreaseOccupancy,
+        Avenue::CooperativeStore,
+        Avenue::TileSizeTuning,
+        Avenue::ScaleCacheLds,
+        Avenue::AsyncScaleRepurpose,
+        Avenue::KLoopUnrolling,
+        Avenue::RegisterPressureRelief,
+        Avenue::GridMappingSwizzle,
+        Avenue::KInnermostFix,
+        Avenue::AccumulatorInRegs,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Avenue::MatrixCoreAdoption => "Adopt AMD Matrix Cores (MFMA fp8 path)",
+            Avenue::PrecisionFp16Library => "Move to packed fp16 vector math",
+            Avenue::LdsStagingAdoption => "Stage A/B tiles through LDS",
+            Avenue::DoubleBuffering => "Ping-pong LDS double buffering",
+            Avenue::LdsConflictPadding => "LDS bank conflict mitigation via row padding",
+            Avenue::XorSwizzleLayout => "Optimized LDS layout for rocWMMA (XOR swizzle)",
+            Avenue::WiderVectorLoads => "Wider vectorized global loads",
+            Avenue::IncreaseOccupancy => "Increase thread block occupancy",
+            Avenue::CooperativeStore => "Cooperative store to global C",
+            Avenue::TileSizeTuning => "Fine-tune tile sizes (TB_M, TB_N, TB_K)",
+            Avenue::ScaleCacheLds => "Optimize scale application loop (LDS cache)",
+            Avenue::AsyncScaleRepurpose => "Asynchronous scale loading via LDS re-purposing",
+            Avenue::KLoopUnrolling => "Unroll the k inner loop",
+            Avenue::RegisterPressureRelief => "Register pressure management",
+            Avenue::GridMappingSwizzle => "L2-friendly grid tile swizzling",
+            Avenue::KInnermostFix => "Restructure loop nest (k innermost)",
+            Avenue::AccumulatorInRegs => "Keep the accumulator in registers",
+        }
+    }
+
+    /// Digested prior: expected gain range in percent (what the LLM
+    /// writes as `performance: [lo, hi]` in App. A.2).
+    pub fn prior_gain(&self) -> (f64, f64) {
+        match self {
+            Avenue::MatrixCoreAdoption => (100.0, 400.0),
+            Avenue::PrecisionFp16Library => (40.0, 120.0),
+            Avenue::LdsStagingAdoption => (30.0, 120.0),
+            Avenue::DoubleBuffering => (10.0, 40.0),
+            Avenue::LdsConflictPadding => (15.0, 40.0), // A.2 experiment 1
+            Avenue::XorSwizzleLayout => (10.0, 35.0),
+            Avenue::WiderVectorLoads => (5.0, 25.0),
+            Avenue::IncreaseOccupancy => (5.0, 30.0),
+            Avenue::CooperativeStore => (5.0, 15.0), // A.2 experiment 2
+            Avenue::TileSizeTuning => (-10.0, 35.0),
+            Avenue::ScaleCacheLds => (3.0, 12.0),
+            Avenue::AsyncScaleRepurpose => (5.0, 20.0),
+            Avenue::KLoopUnrolling => (5.0, 20.0),
+            Avenue::RegisterPressureRelief => (0.0, 15.0),
+            Avenue::GridMappingSwizzle => (3.0, 18.0),
+            Avenue::KInnermostFix => (20.0, 60.0),
+            Avenue::AccumulatorInRegs => (30.0, 90.0),
+        }
+    }
+
+    /// Innovation score prior (App. A.2's `innovation:` field).
+    pub fn innovation(&self) -> u8 {
+        match self {
+            Avenue::MatrixCoreAdoption => 95,
+            Avenue::PrecisionFp16Library => 55,
+            Avenue::LdsStagingAdoption => 50,
+            Avenue::DoubleBuffering => 55,
+            Avenue::LdsConflictPadding => 85, // A.2 experiment 1
+            Avenue::XorSwizzleLayout => 70,
+            Avenue::WiderVectorLoads => 40,
+            Avenue::IncreaseOccupancy => 45,
+            Avenue::CooperativeStore => 60, // A.2 experiment 2
+            Avenue::TileSizeTuning => 30,
+            Avenue::ScaleCacheLds => 35,
+            Avenue::AsyncScaleRepurpose => 80,
+            Avenue::KLoopUnrolling => 25,
+            Avenue::RegisterPressureRelief => 45,
+            Avenue::GridMappingSwizzle => 65,
+            Avenue::KInnermostFix => 35,
+            Avenue::AccumulatorInRegs => 40,
+        }
+    }
+
+    /// Which finding (if any) must exist before this avenue can be
+    /// proposed — the bootstrap gating of §4.1/§4.3.
+    pub fn requires_finding(&self) -> Option<Finding> {
+        match self {
+            Avenue::MatrixCoreAdoption => Some(Finding::MfmaSemantics),
+            Avenue::AsyncScaleRepurpose => Some(Finding::LdsRepurposeTrick),
+            Avenue::XorSwizzleLayout => Some(Finding::SwizzleLayouts),
+            _ => None,
+        }
+    }
+
+    /// Is the avenue applicable to (would change) this genome?
+    pub fn applicable(&self, g: &KernelGenome) -> bool {
+        match self {
+            Avenue::MatrixCoreAdoption => g.compute != ComputePath::Mfma,
+            Avenue::PrecisionFp16Library => {
+                g.precision == Precision::Fp32 && g.compute != ComputePath::Mfma
+            }
+            Avenue::LdsStagingAdoption => !g.lds_staging,
+            Avenue::DoubleBuffering => g.lds_staging && !g.double_buffer,
+            Avenue::LdsConflictPadding => {
+                g.lds_staging && g.lds_pad == 0 && g.swizzle == Swizzle::None
+            }
+            Avenue::XorSwizzleLayout => g.lds_staging && g.swizzle == Swizzle::None,
+            Avenue::WiderVectorLoads => g.vector_width < 16,
+            Avenue::IncreaseOccupancy => g.waves_per_block < 8,
+            Avenue::CooperativeStore => {
+                g.writeback == Writeback::SingleWave && g.waves_per_block > 1
+            }
+            Avenue::TileSizeTuning => true,
+            Avenue::ScaleCacheLds => {
+                g.lds_staging && g.scale_cache == ScaleCache::GlobalReload
+            }
+            Avenue::AsyncScaleRepurpose => {
+                g.lds_staging && g.scale_cache != ScaleCache::LdsRepurposed
+            }
+            Avenue::KLoopUnrolling => g.unroll_k < 8,
+            Avenue::RegisterPressureRelief => g.vgprs_per_lane() > 256,
+            Avenue::GridMappingSwizzle => g.grid_mapping != GridMapping::TileSwizzled,
+            Avenue::KInnermostFix => !g.k_innermost,
+            Avenue::AccumulatorInRegs => !g.acc_in_regs,
+        }
+    }
+
+    /// Instantiate the avenue as a concrete rubric (edit list) for a
+    /// base genome. Randomness covers free parameters (which tile to
+    /// grow, how much padding, ...).
+    pub fn instantiate(&self, g: &KernelGenome, rng: &mut Rng) -> Vec<GenomeEdit> {
+        match self {
+            Avenue::MatrixCoreAdoption => vec![
+                GenomeEdit::SetCompute(ComputePath::Mfma),
+                GenomeEdit::SetPrecision(Precision::Fp8),
+                GenomeEdit::SetLdsStaging(true),
+            ],
+            Avenue::PrecisionFp16Library => vec![
+                GenomeEdit::SetPrecision(Precision::Fp16),
+                GenomeEdit::SetCompute(ComputePath::Vectorized),
+            ],
+            Avenue::LdsStagingAdoption => vec![GenomeEdit::SetLdsStaging(true)],
+            Avenue::DoubleBuffering => vec![GenomeEdit::SetDoubleBuffer(true)],
+            Avenue::LdsConflictPadding => {
+                let pad = *rng.choose(&[1u32, 2, 4]);
+                vec![GenomeEdit::SetLdsPad(pad)]
+            }
+            Avenue::XorSwizzleLayout => vec![
+                GenomeEdit::SetLdsPad(0),
+                GenomeEdit::SetSwizzle(Swizzle::Xor),
+            ],
+            Avenue::WiderVectorLoads => {
+                let next = match g.vector_width {
+                    1 => 4,
+                    2 => 8,
+                    4 => 16,
+                    _ => 16,
+                };
+                vec![GenomeEdit::SetVectorWidth(next)]
+            }
+            Avenue::IncreaseOccupancy => {
+                let next = (g.waves_per_block * 2).min(8);
+                vec![GenomeEdit::SetWavesPerBlock(next)]
+            }
+            Avenue::CooperativeStore => {
+                vec![GenomeEdit::SetWriteback(Writeback::Cooperative)]
+            }
+            Avenue::TileSizeTuning => {
+                let axis = rng.below(3);
+                let scale_up = rng.chance(0.6);
+                let next = |v: u32| -> u32 {
+                    if scale_up {
+                        (v * 2).min(256)
+                    } else {
+                        (v / 2).max(16)
+                    }
+                };
+                match axis {
+                    0 => vec![GenomeEdit::SetBlockM(next(g.block_m))],
+                    1 => vec![GenomeEdit::SetBlockN(next(g.block_n))],
+                    _ => vec![GenomeEdit::SetBlockK(next(g.block_k))],
+                }
+            }
+            Avenue::ScaleCacheLds => vec![GenomeEdit::SetScaleCache(ScaleCache::Lds)],
+            Avenue::AsyncScaleRepurpose => {
+                vec![GenomeEdit::SetScaleCache(ScaleCache::LdsRepurposed)]
+            }
+            Avenue::KLoopUnrolling => {
+                let next = (g.unroll_k * 2).min(8);
+                vec![GenomeEdit::SetUnrollK(next)]
+            }
+            Avenue::RegisterPressureRelief => {
+                if g.unroll_k > 1 && rng.chance(0.5) {
+                    vec![GenomeEdit::SetUnrollK(g.unroll_k / 2)]
+                } else if g.block_m >= g.block_n {
+                    vec![GenomeEdit::SetBlockM((g.block_m / 2).max(16))]
+                } else {
+                    vec![GenomeEdit::SetBlockN((g.block_n / 2).max(16))]
+                }
+            }
+            Avenue::GridMappingSwizzle => {
+                vec![GenomeEdit::SetGridMapping(GridMapping::TileSwizzled)]
+            }
+            Avenue::KInnermostFix => vec![GenomeEdit::SetKInnermost(true)],
+            Avenue::AccumulatorInRegs => vec![GenomeEdit::SetAccInRegs(true)],
+        }
+    }
+}
+
+/// Which slice of the avenue library the designer may draw on — the
+/// knowledge ablation axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnowledgeProfile {
+    /// Everything: bootstrap findings + digested external documents.
+    Full,
+    /// Only generic GPU lore (no MI300-specific digests: no MFMA
+    /// adoption, no scale re-purposing, no rocWMMA swizzle layouts).
+    GenericOnly,
+    /// Tile-size tuning only (the OpenTuner-style hyper-parameter view).
+    Minimal,
+}
+
+/// The knowledge base handed to the Experiment Designer.
+#[derive(Debug, Clone)]
+pub struct KnowledgeBase {
+    pub profile: KnowledgeProfile,
+    pub findings: FindingsDoc,
+}
+
+impl KnowledgeBase {
+    pub fn full() -> Self {
+        KnowledgeBase {
+            profile: KnowledgeProfile::Full,
+            findings: FindingsDoc::bootstrap(),
+        }
+    }
+
+    pub fn with_profile(profile: KnowledgeProfile) -> Self {
+        let findings = match profile {
+            KnowledgeProfile::Full => FindingsDoc::bootstrap(),
+            // generic/minimal profiles never ran the bootstrap probes
+            _ => FindingsDoc::default(),
+        };
+        KnowledgeBase { profile, findings }
+    }
+
+    /// Avenues available to the designer for a given base genome.
+    pub fn available_avenues(&self, g: &KernelGenome) -> Vec<Avenue> {
+        Avenue::ALL
+            .iter()
+            .copied()
+            .filter(|a| match self.profile {
+                KnowledgeProfile::Full => true,
+                KnowledgeProfile::GenericOnly => !matches!(
+                    a,
+                    Avenue::MatrixCoreAdoption
+                        | Avenue::AsyncScaleRepurpose
+                        | Avenue::XorSwizzleLayout
+                ),
+                KnowledgeProfile::Minimal => matches!(
+                    a,
+                    Avenue::TileSizeTuning
+                        | Avenue::KLoopUnrolling
+                        | Avenue::IncreaseOccupancy
+                ),
+            })
+            .filter(|a| {
+                a.requires_finding()
+                    .map(|f| self.findings.has(f))
+                    .unwrap_or(true)
+            })
+            .filter(|a| a.applicable(g))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+
+    #[test]
+    fn bootstrap_findings_present() {
+        let doc = FindingsDoc::bootstrap();
+        assert!(doc.has(Finding::MfmaSemantics));
+        assert!(doc.has(Finding::LdsRepurposeTrick));
+        assert_eq!(doc.digest.len(), 3);
+    }
+
+    #[test]
+    fn paper_experiment_priors_match_a2() {
+        // App. A.2: padding experiment performance [15, 40], innovation 85;
+        // cooperative store [5, 15], innovation 60.
+        assert_eq!(Avenue::LdsConflictPadding.prior_gain(), (15.0, 40.0));
+        assert_eq!(Avenue::LdsConflictPadding.innovation(), 85);
+        assert_eq!(Avenue::CooperativeStore.prior_gain(), (5.0, 15.0));
+        assert_eq!(Avenue::CooperativeStore.innovation(), 60);
+    }
+
+    #[test]
+    fn naive_genome_has_rich_avenue_set() {
+        let kb = KnowledgeBase::full();
+        let avenues = kb.available_avenues(&seeds::naive_hip());
+        assert!(avenues.len() >= 6, "got {avenues:?}");
+        assert!(avenues.contains(&Avenue::MatrixCoreAdoption));
+        assert!(avenues.contains(&Avenue::LdsStagingAdoption));
+        // staging-dependent avenues are not applicable yet
+        assert!(!avenues.contains(&Avenue::DoubleBuffering));
+    }
+
+    #[test]
+    fn oracle_genome_mostly_exhausted() {
+        let kb = KnowledgeBase::full();
+        let avenues = kb.available_avenues(&seeds::human_oracle());
+        // the tuned kernel only has generic tuning left
+        assert!(!avenues.contains(&Avenue::MatrixCoreAdoption));
+        assert!(!avenues.contains(&Avenue::CooperativeStore));
+        assert!(avenues.contains(&Avenue::TileSizeTuning));
+    }
+
+    #[test]
+    fn generic_profile_blocks_mfma() {
+        let kb = KnowledgeBase::with_profile(KnowledgeProfile::GenericOnly);
+        let avenues = kb.available_avenues(&seeds::naive_hip());
+        assert!(!avenues.contains(&Avenue::MatrixCoreAdoption));
+        assert!(avenues.contains(&Avenue::LdsStagingAdoption));
+    }
+
+    #[test]
+    fn minimal_profile_is_tuner_like() {
+        let kb = KnowledgeBase::with_profile(KnowledgeProfile::Minimal);
+        let avenues = kb.available_avenues(&seeds::mfma_seed());
+        for a in &avenues {
+            assert!(matches!(
+                a,
+                Avenue::TileSizeTuning | Avenue::KLoopUnrolling | Avenue::IncreaseOccupancy
+            ));
+        }
+    }
+
+    #[test]
+    fn instantiations_change_the_genome() {
+        let kb = KnowledgeBase::full();
+        let g = seeds::mfma_seed();
+        let mut rng = Rng::seed_from_u64(3);
+        for a in kb.available_avenues(&g) {
+            let edits = a.instantiate(&g, &mut rng);
+            assert!(!edits.is_empty(), "{a:?} produced no edits");
+            let child = crate::genome::edit::apply_edits(&g, &edits);
+            assert_ne!(child, g, "{a:?} was a no-op");
+        }
+    }
+
+    #[test]
+    fn finding_gate_blocks_ungated_probe() {
+        let mut kb = KnowledgeBase::full();
+        kb.findings = FindingsDoc::default(); // wipe the bootstrap
+        let avenues = kb.available_avenues(&seeds::naive_hip());
+        assert!(!avenues.contains(&Avenue::MatrixCoreAdoption));
+    }
+}

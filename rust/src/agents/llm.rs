@@ -1,0 +1,199 @@
+//! The LLM boundary: what a real frontier-model integration would
+//! implement, and the seeded surrogate that implements it here.
+//!
+//! The paper drives all three stages with Gemini 2.5 Pro/Flash. No LLM
+//! API is available in this reproduction environment, so the agents
+//! are *surrogates*: knowledge-driven stochastic models that produce
+//! the same structured artifacts (selection rationales, avenue lists,
+//! experiment plans with `performance: [lo, hi]` / `innovation:`
+//! estimates, kernel diffs, self-reports) through the same interfaces.
+//! The substitution argument is in DESIGN.md §2; the knobs below model
+//! the LLM-ness that matters to the *loop*:
+//!
+//! * `temperature` — decision stochasticity (sampling instead of
+//!   argmax in the selector/designer).
+//! * `estimate_sigma` — how noisy the designer's gain predictions are
+//!   relative to the avenue priors (LLMs "believe they can estimate
+//!   likely performance gains", App. A.2 — imperfectly).
+//! * `rubric_infidelity` — probability the writer quietly drops a
+//!   rubric line ("it was occasionally observed that the LLM decided
+//!   against actually following through with the whole experiment
+//!   rubric", §3.3).
+
+use crate::rng::Rng;
+
+/// Generation knobs for the surrogate (see module docs).
+#[derive(Debug, Clone)]
+pub struct LlmConfig {
+    pub temperature: f64,
+    pub estimate_sigma: f64,
+    pub rubric_infidelity: f64,
+}
+
+impl Default for LlmConfig {
+    fn default() -> Self {
+        LlmConfig {
+            temperature: 0.7,
+            estimate_sigma: 0.25,
+            rubric_infidelity: 0.08,
+        }
+    }
+}
+
+/// The surrogate "model": a seeded sampler shared by the three agents.
+/// A real integration would swap this for API calls while keeping the
+/// agent interfaces identical.
+#[derive(Debug, Clone)]
+pub struct SurrogateLlm {
+    pub config: LlmConfig,
+    rng: Rng,
+}
+
+impl SurrogateLlm {
+    pub fn new(seed: u64, config: LlmConfig) -> Self {
+        SurrogateLlm {
+            config,
+            rng: Rng::seed_from_u64(seed ^ 0x11a_facade),
+        }
+    }
+
+    pub fn with_seed(seed: u64) -> Self {
+        SurrogateLlm::new(seed, LlmConfig::default())
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Temperature-weighted choice over scored items (higher score =
+    /// more likely). At temperature 0 this is argmax.
+    pub fn sample_weighted<T>(&mut self, items: &[(T, f64)]) -> usize
+    where
+        T: Clone,
+    {
+        assert!(!items.is_empty());
+        if self.config.temperature <= 1e-9 {
+            return items
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+        }
+        // softmax over score / temperature
+        let t = self.config.temperature;
+        let max = items.iter().map(|(_, s)| *s).fold(f64::MIN, f64::max);
+        let weights: Vec<f64> = items.iter().map(|(_, s)| ((s - max) / t).exp()).collect();
+        let total: f64 = weights.iter().sum();
+        let mut draw = self.rng.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            draw -= w;
+            if draw <= 0.0 {
+                return i;
+            }
+        }
+        items.len() - 1
+    }
+
+    /// Perturb a prior gain estimate the way an LLM's stated range
+    /// wobbles around its prior knowledge.
+    pub fn perturb_gain(&mut self, (lo, hi): (f64, f64)) -> (f64, f64) {
+        let s = self.config.estimate_sigma;
+        let f_lo = self.rng.lognormal_factor(s);
+        let f_hi = self.rng.lognormal_factor(s);
+        let a = lo * f_lo;
+        let b = (hi * f_hi).max(a + 1.0);
+        // round to integers — the paper's outputs are integer percents
+        (a.round(), b.round())
+    }
+
+    /// Perturb an innovation score by a few points.
+    pub fn perturb_innovation(&mut self, base: u8) -> u8 {
+        let delta = (self.rng.normal() * 5.0).round() as i32;
+        (base as i32 + delta).clamp(0, 100) as u8
+    }
+
+    /// Whether the writer drops this rubric line (infidelity event).
+    pub fn drops_rubric_line(&mut self) -> bool {
+        self.rng.chance(self.config.rubric_infidelity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_temperature_is_argmax() {
+        let mut llm = SurrogateLlm::new(
+            1,
+            LlmConfig {
+                temperature: 0.0,
+                ..Default::default()
+            },
+        );
+        let items = vec![("a", 0.1), ("b", 0.9), ("c", 0.5)];
+        for _ in 0..10 {
+            assert_eq!(llm.sample_weighted(&items), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_explores() {
+        let mut llm = SurrogateLlm::new(
+            2,
+            LlmConfig {
+                temperature: 5.0,
+                ..Default::default()
+            },
+        );
+        let items = vec![("a", 0.1), ("b", 0.9), ("c", 0.5)];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[llm.sample_weighted(&items)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all options sampled at high T");
+    }
+
+    #[test]
+    fn perturbed_gain_stays_ordered() {
+        let mut llm = SurrogateLlm::with_seed(3);
+        for _ in 0..100 {
+            let (lo, hi) = llm.perturb_gain((15.0, 40.0));
+            assert!(hi > lo, "({lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn innovation_clamped() {
+        let mut llm = SurrogateLlm::with_seed(4);
+        for _ in 0..100 {
+            let i = llm.perturb_innovation(98);
+            assert!(i <= 100);
+        }
+    }
+
+    #[test]
+    fn infidelity_rate_roughly_matches() {
+        let mut llm = SurrogateLlm::new(
+            5,
+            LlmConfig {
+                rubric_infidelity: 0.2,
+                ..Default::default()
+            },
+        );
+        let drops = (0..10_000).filter(|_| llm.drops_rubric_line()).count();
+        let rate = drops as f64 / 10_000.0;
+        assert!((rate - 0.2).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn seeded_determinism() {
+        let mut a = SurrogateLlm::with_seed(9);
+        let mut b = SurrogateLlm::with_seed(9);
+        let items = vec![("x", 1.0), ("y", 2.0)];
+        for _ in 0..50 {
+            assert_eq!(a.sample_weighted(&items), b.sample_weighted(&items));
+        }
+    }
+}

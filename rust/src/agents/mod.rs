@@ -1,0 +1,92 @@
+//! The three LLM agent stages of the GPU Kernel Scientist (paper §3)
+//! and the knowledge base they share.
+//!
+//! * [`selector`] — Stage 1, the Evolutionary Selector (§3.1)
+//! * [`designer`] — Stage 2, the Experiment Designer (§3.2)
+//! * [`writer`]   — Stage 3, the Kernel Writer (§3.3)
+//! * [`knowledge`] — the findings doc + digested avenue library
+//! * [`llm`]      — the LLM boundary and its seeded surrogate
+//!
+//! All three stages draw their stochasticity from one [`SurrogateLlm`]
+//! instance so an entire scientist run replays from a single seed.
+
+pub mod designer;
+pub mod knowledge;
+pub mod llm;
+pub mod selector;
+pub mod writer;
+
+pub use designer::{DesignOutput, Designer, ExperimentPlan, ExperimentRule};
+pub use knowledge::{Avenue, Finding, FindingsDoc, KnowledgeBase, KnowledgeProfile};
+pub use llm::{LlmConfig, SurrogateLlm};
+pub use selector::{ReferencePolicy, Selection, SelectionPolicy, Selector};
+pub use writer::{KernelWrite, Writer};
+
+/// The full agent stack with its shared surrogate LLM.
+pub struct AgentSuite {
+    pub llm: SurrogateLlm,
+    pub selector: Selector,
+    pub designer: Designer,
+    pub writer: Writer,
+    pub knowledge: KnowledgeBase,
+}
+
+impl AgentSuite {
+    /// The paper's configuration: LLM-judgement selection, the 3-of-5
+    /// experiment rule, full knowledge base.
+    pub fn paper(seed: u64) -> Self {
+        AgentSuite {
+            llm: SurrogateLlm::with_seed(seed),
+            selector: Selector::new(SelectionPolicy::PaperLlm),
+            designer: Designer::default(),
+            writer: Writer::new(),
+            knowledge: KnowledgeBase::full(),
+        }
+    }
+
+    pub fn with_llm_config(mut self, config: LlmConfig) -> Self {
+        self.llm.config = config;
+        self
+    }
+
+    pub fn with_selection_policy(mut self, policy: SelectionPolicy) -> Self {
+        self.selector = Selector::new(policy);
+        self
+    }
+
+    pub fn with_experiment_rule(mut self, rule: ExperimentRule) -> Self {
+        self.designer = Designer::with_rule(rule);
+        self
+    }
+
+    pub fn with_knowledge(mut self, profile: KnowledgeProfile) -> Self {
+        self.knowledge = KnowledgeBase::with_profile(profile);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_suite_defaults() {
+        let s = AgentSuite::paper(1);
+        assert_eq!(s.selector.policy, SelectionPolicy::PaperLlm);
+        assert_eq!(s.designer.rule, ExperimentRule::Paper);
+        assert_eq!(s.designer.n_plans, 5);
+        assert_eq!(s.designer.n_chosen, 3);
+        assert_eq!(s.knowledge.profile, KnowledgeProfile::Full);
+    }
+
+    #[test]
+    fn builders_override() {
+        let s = AgentSuite::paper(1)
+            .with_selection_policy(SelectionPolicy::Random)
+            .with_experiment_rule(ExperimentRule::TopMax)
+            .with_knowledge(KnowledgeProfile::Minimal);
+        assert_eq!(s.selector.policy, SelectionPolicy::Random);
+        assert_eq!(s.designer.rule, ExperimentRule::TopMax);
+        assert_eq!(s.knowledge.profile, KnowledgeProfile::Minimal);
+    }
+}

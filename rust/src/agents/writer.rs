@@ -1,0 +1,417 @@
+//! Stage 3 — the LLM Kernel Writer (paper §3.3, App. A.3).
+//!
+//! "This stage lies at the heart of the GPU Kernel Scientist process."
+//! Given the Base code, the Reference code, and an experiment rubric,
+//! produce a new kernel plus a short self-report of which techniques
+//! were actually used — the paper notes the LLM "occasionally ...
+//! decided against actually following through with the whole
+//! experiment rubric", which we model as per-line infidelity.
+//!
+//! The surrogate writer:
+//! 1. applies each rubric edit (dropping lines with probability
+//!    `rubric_infidelity`, recorded in the report);
+//! 2. occasionally grafts one axis from the Reference (the paper
+//!    frames the LLM as a crossover operator over Base + Reference);
+//! 3. runs a *compile-repair loop*: the paper's writer almost always
+//!    produced code that compiles ("known-working code consistently
+//!    being present by construction"), so hard-invalid children are
+//!    repaired by targeted fixes, each recorded. Semantic hazards
+//!    (races) are NOT repaired — the writer cannot see them, only the
+//!    evaluation platform can (§3.4).
+
+use super::designer::ExperimentPlan;
+use super::llm::SurrogateLlm;
+use crate::genome::{
+    edit::{apply_edits, GenomeEdit},
+    render, Invalid, KernelGenome,
+};
+
+/// The writer's output: a kernel plus its self-report.
+#[derive(Debug, Clone)]
+pub struct KernelWrite {
+    pub genome: KernelGenome,
+    /// Rubric lines actually implemented.
+    pub applied: Vec<String>,
+    /// Rubric lines the writer decided against (infidelity).
+    pub skipped: Vec<String>,
+    /// Compile-repair actions taken.
+    pub repairs: Vec<String>,
+    /// Free-text report (goes into the one-step experiment analysis).
+    pub report: String,
+    /// Base -> child diff of the rendered kernel sketch.
+    pub diff: String,
+}
+
+/// Stage-3 agent.
+#[derive(Debug, Clone, Default)]
+pub struct Writer {
+    /// Probability of grafting one axis from the Reference kernel.
+    pub crossover_rate: f64,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer {
+            crossover_rate: 0.15,
+        }
+    }
+
+    /// Produce the child kernel for one experiment.
+    pub fn write(
+        &self,
+        base: &KernelGenome,
+        reference: &KernelGenome,
+        plan: &ExperimentPlan,
+        llm: &mut SurrogateLlm,
+    ) -> KernelWrite {
+        let mut applied = Vec::new();
+        let mut skipped = Vec::new();
+        let mut kept_edits: Vec<GenomeEdit> = Vec::new();
+        for edit in &plan.rubric {
+            if llm.drops_rubric_line() {
+                skipped.push(edit.describe());
+            } else {
+                applied.push(edit.describe());
+                kept_edits.push(edit.clone());
+            }
+        }
+        let mut child = apply_edits(base, &kept_edits);
+
+        // occasional crossover from the in-context Reference listing
+        if llm.rng().chance(self.crossover_rate) {
+            let grafted = graft_axis(&mut child, reference, llm);
+            if let Some(desc) = grafted {
+                applied.push(format!("adopted from reference: {desc}"));
+            }
+        }
+
+        // compile-repair loop
+        let mut repairs = Vec::new();
+        for _ in 0..8 {
+            match child.validate() {
+                Ok(()) => break,
+                Err(inv) => {
+                    let fix = repair_for(&inv, &child);
+                    match fix {
+                        Some((edit, why)) => {
+                            edit.apply(&mut child);
+                            repairs.push(why);
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+
+        let report = render_report(plan, &applied, &skipped, &repairs);
+        let diff = render::diff_sketches(base, &child);
+        KernelWrite {
+            genome: child,
+            applied,
+            skipped,
+            repairs,
+            report,
+            diff,
+        }
+    }
+}
+
+/// Graft one structural axis from the reference into the child
+/// (crossover), returning a description if something changed.
+fn graft_axis(
+    child: &mut KernelGenome,
+    reference: &KernelGenome,
+    llm: &mut SurrogateLlm,
+) -> Option<String> {
+    let choices: Vec<(&str, GenomeEdit)> = vec![
+        ("tile shape", GenomeEdit::SetBlockM(reference.block_m)),
+        ("tile shape", GenomeEdit::SetBlockN(reference.block_n)),
+        ("k depth", GenomeEdit::SetBlockK(reference.block_k)),
+        ("vector width", GenomeEdit::SetVectorWidth(reference.vector_width)),
+        ("wave count", GenomeEdit::SetWavesPerBlock(reference.waves_per_block)),
+        ("unroll", GenomeEdit::SetUnrollK(reference.unroll_k)),
+        ("grid mapping", GenomeEdit::SetGridMapping(reference.grid_mapping)),
+    ];
+    let idx = llm.rng().below(choices.len());
+    let (what, edit) = &choices[idx];
+    if edit.is_noop(child) {
+        return None;
+    }
+    edit.apply(child);
+    Some(format!("{what} ({})", edit.describe()))
+}
+
+/// Targeted fix for a hard-invalid child, mirroring what a competent
+/// code-writer does when the compiler rejects a configuration.
+fn repair_for(inv: &Invalid, g: &KernelGenome) -> Option<(GenomeEdit, String)> {
+    match inv {
+        Invalid::DoubleBufferWithoutStaging => Some((
+            GenomeEdit::SetLdsStaging(true),
+            "enabled LDS staging (double buffering requires it)".into(),
+        )),
+        Invalid::ScaleLdsWithoutStaging => Some((
+            GenomeEdit::SetLdsStaging(true),
+            "enabled LDS staging (LDS scale cache requires it)".into(),
+        )),
+        Invalid::SwizzleWithPadding => Some((
+            GenomeEdit::SetLdsPad(0),
+            "dropped row padding (conflicts with XOR swizzle)".into(),
+        )),
+        Invalid::MfmaRequiresLowPrecision => Some((
+            GenomeEdit::SetPrecision(crate::genome::Precision::Fp8),
+            "switched operands to fp8 (MFMA requires low precision)".into(),
+        )),
+        Invalid::LdsOverflow { .. } => {
+            // shrink the deepest LDS consumer
+            if g.block_k > 16 {
+                Some((
+                    GenomeEdit::SetBlockK(g.block_k / 2),
+                    format!("halved TB_K to {} (LDS overflow)", g.block_k / 2),
+                ))
+            } else if g.double_buffer {
+                Some((
+                    GenomeEdit::SetDoubleBuffer(false),
+                    "dropped double buffering (LDS overflow)".into(),
+                ))
+            } else if g.block_m >= g.block_n && g.block_m > 16 {
+                Some((
+                    GenomeEdit::SetBlockM(g.block_m / 2),
+                    format!("halved TB_M to {} (LDS overflow)", g.block_m / 2),
+                ))
+            } else if g.block_n > 16 {
+                Some((
+                    GenomeEdit::SetBlockN(g.block_n / 2),
+                    format!("halved TB_N to {} (LDS overflow)", g.block_n / 2),
+                ))
+            } else {
+                None
+            }
+        }
+        Invalid::RegisterOverflow { .. } => {
+            if g.unroll_k > 1 {
+                Some((
+                    GenomeEdit::SetUnrollK(g.unroll_k / 2),
+                    format!("reduced unroll to {} (VGPR pressure)", g.unroll_k / 2),
+                ))
+            } else if g.waves_per_block < 8 {
+                Some((
+                    GenomeEdit::SetWavesPerBlock(g.waves_per_block * 2),
+                    "spread accumulator across more waves (VGPR pressure)".into(),
+                ))
+            } else if g.block_m >= g.block_n && g.block_m > 16 {
+                Some((
+                    GenomeEdit::SetBlockM(g.block_m / 2),
+                    format!("halved TB_M to {} (VGPR pressure)", g.block_m / 2),
+                ))
+            } else if g.block_n > 16 {
+                Some((
+                    GenomeEdit::SetBlockN(g.block_n / 2),
+                    format!("halved TB_N to {} (VGPR pressure)", g.block_n / 2),
+                ))
+            } else {
+                None
+            }
+        }
+        Invalid::NonPow2Block(dim, _) | Invalid::BlockOutOfRange(dim, _) => {
+            let edit = match *dim {
+                "m" => GenomeEdit::SetBlockM(64),
+                "n" => GenomeEdit::SetBlockN(64),
+                _ => GenomeEdit::SetBlockK(64),
+            };
+            Some((edit, format!("reset block_{dim} to 64 (invalid size)")))
+        }
+        Invalid::BadUnroll(_) => Some((
+            GenomeEdit::SetUnrollK(2),
+            "reset unroll to 2 (invalid factor)".into(),
+        )),
+        Invalid::BadVectorWidth(_) => Some((
+            GenomeEdit::SetVectorWidth(4),
+            "reset vector width to 4 (invalid width)".into(),
+        )),
+        Invalid::BadWaves(_) | Invalid::TooManyLanes(_) => Some((
+            GenomeEdit::SetWavesPerBlock(4),
+            "reset waves/block to 4 (invalid launch shape)".into(),
+        )),
+    }
+}
+
+fn render_report(
+    plan: &ExperimentPlan,
+    applied: &[String],
+    skipped: &[String],
+    repairs: &[String],
+) -> String {
+    let mut s = format!("Experiment: {}\nTechniques applied:\n", plan.description);
+    for a in applied {
+        s.push_str(&format!("  - {a}\n"));
+    }
+    if !skipped.is_empty() {
+        s.push_str("Rubric lines NOT implemented (writer judgement):\n");
+        for k in skipped {
+            s.push_str(&format!("  - {k}\n"));
+        }
+    }
+    if !repairs.is_empty() {
+        s.push_str("Compile repairs:\n");
+        for r in repairs {
+            s.push_str(&format!("  - {r}\n"));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::designer::ExperimentPlan;
+    use crate::agents::knowledge::Avenue;
+    use crate::agents::llm::{LlmConfig, SurrogateLlm};
+    use crate::genome::{seeds, ComputePath, Precision};
+
+    fn plan(rubric: Vec<GenomeEdit>) -> ExperimentPlan {
+        ExperimentPlan {
+            avenue: Avenue::TileSizeTuning,
+            description: "test experiment".into(),
+            rubric_text: rubric.iter().map(|e| e.describe()).collect(),
+            rubric,
+            performance: (5.0, 15.0),
+            innovation: 50,
+        }
+    }
+
+    fn faithful_llm() -> SurrogateLlm {
+        SurrogateLlm::new(
+            1,
+            LlmConfig {
+                rubric_infidelity: 0.0,
+                temperature: 0.0,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn applies_rubric_faithfully_at_zero_infidelity() {
+        let w = Writer {
+            crossover_rate: 0.0,
+        };
+        let base = seeds::mfma_seed();
+        let p = plan(vec![GenomeEdit::SetBlockM(64), GenomeEdit::SetUnrollK(4)]);
+        let out = w.write(&base, &seeds::naive_hip(), &p, &mut faithful_llm());
+        assert_eq!(out.genome.block_m, 64);
+        assert_eq!(out.genome.unroll_k, 4);
+        assert_eq!(out.applied.len(), 2);
+        assert!(out.skipped.is_empty());
+        assert!(out.report.contains("Techniques applied"));
+        assert!(out.diff.contains("TB_M"));
+    }
+
+    #[test]
+    fn infidelity_skips_lines_and_reports_them() {
+        let w = Writer {
+            crossover_rate: 0.0,
+        };
+        let base = seeds::mfma_seed();
+        let p = plan(vec![GenomeEdit::SetBlockM(64)]);
+        let mut llm = SurrogateLlm::new(
+            3,
+            LlmConfig {
+                rubric_infidelity: 1.0,
+                ..Default::default()
+            },
+        );
+        let out = w.write(&base, &seeds::naive_hip(), &p, &mut llm);
+        assert_eq!(out.genome, base, "nothing applied");
+        assert_eq!(out.skipped.len(), 1);
+        assert!(out.report.contains("NOT implemented"));
+    }
+
+    #[test]
+    fn repairs_double_buffer_without_staging() {
+        let w = Writer {
+            crossover_rate: 0.0,
+        };
+        let base = seeds::naive_hip(); // no staging
+        let p = plan(vec![GenomeEdit::SetDoubleBuffer(true)]);
+        let out = w.write(&base, &seeds::naive_hip(), &p, &mut faithful_llm());
+        assert!(out.genome.validate().is_ok());
+        assert!(out.genome.lds_staging, "repair enabled staging");
+        assert!(!out.repairs.is_empty());
+        assert!(out.report.contains("Compile repairs"));
+    }
+
+    #[test]
+    fn repairs_lds_overflow_by_shrinking() {
+        let w = Writer {
+            crossover_rate: 0.0,
+        };
+        let base = seeds::human_oracle();
+        // grow k to 256: oracle 256x128 tiles fp8 double-buffered would
+        // need (256*256 + 256*128)*2 = 160 KiB LDS -> overflow
+        let p = plan(vec![GenomeEdit::SetBlockK(256)]);
+        let out = w.write(&base, &base, &p, &mut faithful_llm());
+        assert!(out.genome.validate().is_ok(), "{:?}", out.genome.validate());
+        assert!(!out.repairs.is_empty());
+    }
+
+    #[test]
+    fn repairs_mfma_precision() {
+        let w = Writer {
+            crossover_rate: 0.0,
+        };
+        let base = seeds::naive_hip();
+        let p = plan(vec![GenomeEdit::SetCompute(ComputePath::Mfma)]);
+        let out = w.write(&base, &base, &p, &mut faithful_llm());
+        assert!(out.genome.validate().is_ok());
+        assert_eq!(out.genome.precision, Precision::Fp8);
+    }
+
+    #[test]
+    fn hazards_are_not_repaired() {
+        // writer happily produces a racy kernel; only the platform
+        // will catch it (the paper's black-box constraint)
+        let w = Writer {
+            crossover_rate: 0.0,
+        };
+        let mut base = seeds::mfma_seed();
+        base.waves_per_block = 4;
+        base.acc_in_regs = false;
+        let p = plan(vec![GenomeEdit::SetWriteback(
+            crate::genome::Writeback::Cooperative,
+        )]);
+        let out = w.write(&base, &base, &p, &mut faithful_llm());
+        assert!(out.genome.validate().is_ok());
+        assert!(out.genome.correctness_hazard().is_some());
+    }
+
+    #[test]
+    fn crossover_grafts_reference_axis() {
+        let w = Writer {
+            crossover_rate: 1.0,
+        };
+        let base = seeds::mfma_seed();
+        let reference = seeds::human_oracle();
+        let mut llm = faithful_llm();
+        let mut grafted_any = false;
+        for _ in 0..20 {
+            let out = w.write(&base, &reference, &plan(vec![]), &mut llm);
+            if out.applied.iter().any(|a| a.contains("adopted from reference")) {
+                grafted_any = true;
+                assert_ne!(out.genome, base);
+                break;
+            }
+        }
+        assert!(grafted_any);
+    }
+
+    #[test]
+    fn writes_are_deterministic_per_seed() {
+        let w = Writer::new();
+        let base = seeds::mfma_seed();
+        let p = plan(vec![GenomeEdit::SetBlockN(64)]);
+        let a = w.write(&base, &seeds::human_oracle(), &p, &mut SurrogateLlm::with_seed(42));
+        let b = w.write(&base, &seeds::human_oracle(), &p, &mut SurrogateLlm::with_seed(42));
+        assert_eq!(a.genome, b.genome);
+        assert_eq!(a.report, b.report);
+    }
+}

@@ -1,0 +1,361 @@
+//! Baseline tuners: the comparison points the paper's related work
+//! implies (OpenTuner / Kernel-Tuner style search, §2) plus simple
+//! evolutionary controls. All operate on the *same* genome space,
+//! through the *same* evaluation platform, under the *same* submission
+//! budget — so the scientist-vs-tuner benches are apples-to-apples.
+
+pub mod genetic;
+
+pub use genetic::GeneticAlgorithm;
+
+use crate::eval::{EvalBackend, EvalPlatform};
+use crate::genome::{
+    edit::{self, GenomeEdit},
+    seeds, KernelGenome,
+};
+use crate::metrics::{geomean, ConvergenceCurve};
+use crate::population::EvalOutcome;
+use crate::rng::Rng;
+
+/// Outcome of a tuner run (mirrors `scientist::RunOutcome`).
+#[derive(Debug, Clone)]
+pub struct TunerOutcome {
+    pub name: &'static str,
+    pub best_geomean_us: f64,
+    pub best_genome: KernelGenome,
+    pub submissions: u64,
+    pub curve: ConvergenceCurve,
+}
+
+/// A search strategy over the genome space.
+pub trait Tuner {
+    fn name(&self) -> &'static str;
+
+    /// Run until `budget` submissions are spent on `platform`.
+    fn run<B: EvalBackend>(
+        &mut self,
+        platform: &mut EvalPlatform<B>,
+        budget: u64,
+    ) -> TunerOutcome
+    where
+        Self: Sized;
+}
+
+pub(crate) fn submit_scored<B: EvalBackend>(
+    platform: &mut EvalPlatform<B>,
+    g: &KernelGenome,
+    curve: &mut ConvergenceCurve,
+) -> Option<f64> {
+    let out = platform.submit(g);
+    let score = match &out {
+        EvalOutcome::Timings(ts) => Some(geomean(ts)),
+        _ => None,
+    };
+    if let Some(s) = score {
+        curve.record(platform.submissions() as usize, s);
+    } else if let Some(best) = curve.best() {
+        curve.record(platform.submissions() as usize, best);
+    }
+    score
+}
+
+/// Pure random search over valid genomes (mutation chains from seeds).
+pub struct RandomSearch {
+    pub seed: u64,
+}
+
+impl Tuner for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random-search"
+    }
+
+    fn run<B: EvalBackend>(
+        &mut self,
+        platform: &mut EvalPlatform<B>,
+        budget: u64,
+    ) -> TunerOutcome {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let mut curve = ConvergenceCurve::default();
+        let starts: Vec<KernelGenome> =
+            seeds::starting_population().into_iter().map(|(_, g)| g).collect();
+        let mut best: Option<(f64, KernelGenome)> = None;
+        while platform.submissions() < budget {
+            // random walk of 1-4 edits from a random seed
+            let mut g = starts[rng.below(starts.len())].clone();
+            let steps = 1 + rng.below(4);
+            for _ in 0..steps {
+                let e = GenomeEdit::random(&mut rng);
+                e.apply(&mut g);
+            }
+            if g.validate().is_err() {
+                continue; // don't waste a submission on known-invalid
+            }
+            if let Some(score) = submit_scored(platform, &g, &mut curve) {
+                if best.as_ref().map(|(b, _)| score < *b).unwrap_or(true) {
+                    best = Some((score, g));
+                }
+            }
+        }
+        let (score, genome) = best.unwrap_or_else(|| (f64::INFINITY, starts[0].clone()));
+        TunerOutcome {
+            name: self.name(),
+            best_geomean_us: score,
+            best_genome: genome,
+            submissions: platform.submissions(),
+            curve,
+        }
+    }
+}
+
+/// Greedy hill climber with random restarts on stall.
+pub struct HillClimber {
+    pub seed: u64,
+    /// Consecutive non-improving submissions before a restart.
+    pub patience: u32,
+}
+
+impl Default for HillClimber {
+    fn default() -> Self {
+        HillClimber { seed: 0, patience: 8 }
+    }
+}
+
+impl Tuner for HillClimber {
+    fn name(&self) -> &'static str {
+        "hill-climber"
+    }
+
+    fn run<B: EvalBackend>(
+        &mut self,
+        platform: &mut EvalPlatform<B>,
+        budget: u64,
+    ) -> TunerOutcome {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let mut curve = ConvergenceCurve::default();
+        let starts: Vec<KernelGenome> =
+            seeds::starting_population().into_iter().map(|(_, g)| g).collect();
+        let mut current = starts[rng.below(starts.len())].clone();
+        let mut current_score = f64::INFINITY;
+        let mut global_best: Option<(f64, KernelGenome)> = None;
+        let mut stall = 0;
+        while platform.submissions() < budget {
+            let neighbors = edit::valid_neighbors(&current);
+            if neighbors.is_empty() {
+                break;
+            }
+            let (_, candidate) = neighbors[rng.below(neighbors.len())].clone();
+            if let Some(score) = submit_scored(platform, &candidate, &mut curve) {
+                if score < current_score {
+                    current = candidate.clone();
+                    current_score = score;
+                    stall = 0;
+                } else {
+                    stall += 1;
+                }
+                if global_best.as_ref().map(|(b, _)| score < *b).unwrap_or(true) {
+                    global_best = Some((score, candidate));
+                }
+            } else {
+                stall += 1;
+            }
+            if stall >= self.patience {
+                current = starts[rng.below(starts.len())].clone();
+                current_score = f64::INFINITY;
+                stall = 0;
+            }
+        }
+        let (score, genome) =
+            global_best.unwrap_or_else(|| (f64::INFINITY, starts[0].clone()));
+        TunerOutcome {
+            name: self.name(),
+            best_geomean_us: score,
+            best_genome: genome,
+            submissions: platform.submissions(),
+            curve,
+        }
+    }
+}
+
+/// Simulated annealing (the OpenTuner-flavoured baseline).
+pub struct Annealer {
+    pub seed: u64,
+    pub t0: f64,
+    pub cooling: f64,
+}
+
+impl Default for Annealer {
+    fn default() -> Self {
+        Annealer {
+            seed: 0,
+            t0: 0.5,
+            cooling: 0.96,
+        }
+    }
+}
+
+impl Tuner for Annealer {
+    fn name(&self) -> &'static str {
+        "simulated-annealing"
+    }
+
+    fn run<B: EvalBackend>(
+        &mut self,
+        platform: &mut EvalPlatform<B>,
+        budget: u64,
+    ) -> TunerOutcome {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let mut curve = ConvergenceCurve::default();
+        let mut current = seeds::mfma_seed();
+        let mut current_score = f64::INFINITY;
+        let mut best: Option<(f64, KernelGenome)> = None;
+        let mut temp = self.t0;
+        while platform.submissions() < budget {
+            let neighbors = edit::valid_neighbors(&current);
+            if neighbors.is_empty() {
+                break;
+            }
+            let (_, candidate) = neighbors[rng.below(neighbors.len())].clone();
+            if let Some(score) = submit_scored(platform, &candidate, &mut curve) {
+                // accept better always; worse with exp(-delta / T) on
+                // relative (log) score
+                let accept = if score < current_score {
+                    true
+                } else {
+                    let delta = (score / current_score).ln();
+                    rng.f64() < (-delta / temp.max(1e-6)).exp()
+                };
+                if accept {
+                    current = candidate.clone();
+                    current_score = score;
+                }
+                if best.as_ref().map(|(b, _)| score < *b).unwrap_or(true) {
+                    best = Some((score, candidate));
+                }
+            }
+            temp *= self.cooling;
+        }
+        let (score, genome) = best.unwrap_or((f64::INFINITY, current));
+        TunerOutcome {
+            name: self.name(),
+            best_geomean_us: score,
+            best_genome: genome,
+            submissions: platform.submissions(),
+            curve,
+        }
+    }
+}
+
+/// Exhaustive directed search for the *oracle* bound — models the
+/// human expert with hardware access and unlimited local iteration.
+/// Uses the simulator's noiseless estimates directly (not platform
+/// submissions): the expert profiles locally.
+pub fn oracle_search(
+    arch: &crate::gpu::GpuArch,
+    configs: &[crate::workload::GemmConfig],
+    iterations: u32,
+    seed: u64,
+) -> (f64, KernelGenome) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let score = |g: &KernelGenome| -> Option<f64> {
+        if g.correctness_hazard().is_some() {
+            return None;
+        }
+        let ts: Option<Vec<f64>> = configs
+            .iter()
+            .map(|c| crate::sim::estimate(arch, g, c).ok().map(|t| t.total_us))
+            .collect();
+        ts.map(|v| geomean(&v))
+    };
+    let mut best = seeds::human_oracle();
+    let mut best_score = score(&best).expect("oracle seed scores");
+    for _ in 0..iterations {
+        let neighbors = edit::valid_neighbors(&best);
+        let mut improved = false;
+        for (_, cand) in &neighbors {
+            if let Some(s) = score(cand) {
+                if s < best_score {
+                    best = cand.clone();
+                    best_score = s;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            // random kick to escape local optimum
+            let (_, cand) = neighbors[rng.below(neighbors.len())].clone();
+            if let Some(s) = score(&cand) {
+                if s < best_score * 1.02 {
+                    best = cand;
+                    best_score = s.min(best_score);
+                }
+            }
+        }
+    }
+    (best_score, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::PlatformConfig;
+    use crate::gpu::MI300;
+    use crate::sim::SimBackend;
+    use crate::workload::LEADERBOARD_SIZES;
+
+    fn platform(seed: u64) -> EvalPlatform<SimBackend> {
+        EvalPlatform::new(SimBackend::new(seed), PlatformConfig::default())
+    }
+
+    #[test]
+    fn random_search_respects_budget_and_improves() {
+        let mut p = platform(1);
+        let out = RandomSearch { seed: 1 }.run(&mut p, 40);
+        assert!(out.submissions <= 40);
+        assert!(out.best_geomean_us.is_finite());
+        assert!(out.best_genome.validate().is_ok());
+    }
+
+    #[test]
+    fn hill_climber_runs() {
+        let mut p = platform(2);
+        let out = HillClimber::default().run(&mut p, 40);
+        assert!(out.submissions <= 40);
+        assert!(out.best_geomean_us.is_finite());
+        assert!(!out.curve.points.is_empty());
+    }
+
+    #[test]
+    fn annealer_runs() {
+        let mut p = platform(3);
+        let out = Annealer::default().run(&mut p, 40);
+        assert!(out.submissions <= 40);
+        assert!(out.best_geomean_us.is_finite());
+    }
+
+    #[test]
+    fn tuners_are_reproducible() {
+        let a = RandomSearch { seed: 7 }.run(&mut platform(9), 25);
+        let b = RandomSearch { seed: 7 }.run(&mut platform(9), 25);
+        assert_eq!(a.best_geomean_us, b.best_geomean_us);
+        assert_eq!(a.best_genome, b.best_genome);
+    }
+
+    #[test]
+    fn oracle_search_at_least_matches_seed() {
+        let seed_score = {
+            let ts: Vec<f64> = LEADERBOARD_SIZES
+                .iter()
+                .map(|c| {
+                    crate::sim::estimate(&MI300, &seeds::human_oracle(), c)
+                        .unwrap()
+                        .total_us
+                })
+                .collect();
+            geomean(&ts)
+        };
+        let (score, genome) = oracle_search(&MI300, &LEADERBOARD_SIZES, 5, 1);
+        assert!(score <= seed_score * 1.0001);
+        assert!(genome.validate().is_ok());
+        assert!(genome.correctness_hazard().is_none());
+    }
+}

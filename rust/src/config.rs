@@ -1,0 +1,234 @@
+//! Run configuration: every knob of the scientist loop, with a small
+//! TOML-subset loader for config files (offline build — no toml crate;
+//! the subset covers flat `key = value` pairs and `[section]` headers,
+//! which is all our config files use).
+
+use crate::agents::{ExperimentRule, KnowledgeProfile, LlmConfig, SelectionPolicy};
+
+/// Full configuration of a scientist run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Master seed: agents, simulator noise, everything.
+    pub seed: u64,
+    /// Total submission budget (the competition quota). The paper's
+    /// sequential good-citizen mode processed roughly this many.
+    pub max_submissions: u64,
+    /// Timing repetitions per config on the platform.
+    pub reps_per_config: u32,
+    /// Submission lanes (1 = the paper's sequential mode).
+    pub eval_parallelism: u32,
+    /// Simulator measurement noise (lognormal sigma).
+    pub noise_sigma: f64,
+    pub selection_policy: SelectionPolicy,
+    pub experiment_rule: ExperimentRule,
+    pub knowledge: KnowledgeProfile,
+    pub llm: LlmConfig,
+    /// Re-derive the findings document by probing the platform before
+    /// the loop (costs submissions), instead of assuming the paper's
+    /// distilled bootstrap findings.
+    pub bootstrap_probing: bool,
+    /// Include the Matrix-Core seed kernel (§3). The MFMA seed is
+    /// itself a product of the bootstrap deep-dive; the no-bootstrap
+    /// counterfactual drops it along with the findings.
+    pub include_mfma_seed: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            seed: 0,
+            max_submissions: 120,
+            reps_per_config: 3,
+            eval_parallelism: 1,
+            noise_sigma: 0.02,
+            selection_policy: SelectionPolicy::PaperLlm,
+            experiment_rule: ExperimentRule::Paper,
+            knowledge: KnowledgeProfile::Full,
+            llm: LlmConfig::default(),
+            bootstrap_probing: false,
+            include_mfma_seed: true,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_budget(mut self, max_submissions: u64) -> Self {
+        self.max_submissions = max_submissions;
+        self
+    }
+
+    /// Parse from the TOML subset (see module docs). Unknown keys are
+    /// errors — config typos should not fail silently.
+    pub fn from_toml(text: &str) -> Result<RunConfig, String> {
+        let mut cfg = RunConfig::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                if !matches!(section.as_str(), "run" | "platform" | "agents" | "llm") {
+                    return Err(format!("line {}: unknown section [{section}]", lineno + 1));
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let value = value.trim().trim_matches('"');
+            let qualified = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.set(&qualified, value)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        }
+        Ok(cfg)
+    }
+
+    fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_u64 =
+            |v: &str| v.parse::<u64>().map_err(|_| format!("bad integer '{v}'"));
+        let parse_f64 =
+            |v: &str| v.parse::<f64>().map_err(|_| format!("bad float '{v}'"));
+        match key {
+            "run.seed" | "seed" => self.seed = parse_u64(value)?,
+            "run.max_submissions" | "max_submissions" => {
+                self.max_submissions = parse_u64(value)?
+            }
+            "platform.reps_per_config" => self.reps_per_config = parse_u64(value)? as u32,
+            "platform.parallelism" => self.eval_parallelism = parse_u64(value)? as u32,
+            "platform.noise_sigma" => self.noise_sigma = parse_f64(value)?,
+            "agents.selection_policy" => {
+                self.selection_policy = match value {
+                    "paper" => SelectionPolicy::PaperLlm,
+                    "random" => SelectionPolicy::Random,
+                    "greedy" => SelectionPolicy::GreedyBest,
+                    _ => return Err(format!("bad selection_policy '{value}'")),
+                }
+            }
+            "agents.experiment_rule" => {
+                self.experiment_rule = match value {
+                    "paper" => ExperimentRule::Paper,
+                    "top_max" => ExperimentRule::TopMax,
+                    "random3" => ExperimentRule::Random3,
+                    _ => return Err(format!("bad experiment_rule '{value}'")),
+                }
+            }
+            "agents.bootstrap_probing" => {
+                self.bootstrap_probing = match value {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(format!("bad bootstrap_probing '{value}'")),
+                }
+            }
+            "agents.knowledge" => {
+                self.knowledge = match value {
+                    "full" => KnowledgeProfile::Full,
+                    "generic" => KnowledgeProfile::GenericOnly,
+                    "minimal" => KnowledgeProfile::Minimal,
+                    _ => return Err(format!("bad knowledge '{value}'")),
+                }
+            }
+            "llm.temperature" => self.llm.temperature = parse_f64(value)?,
+            "llm.estimate_sigma" => self.llm.estimate_sigma = parse_f64(value)?,
+            "llm.rubric_infidelity" => self.llm.rubric_infidelity = parse_f64(value)?,
+            _ => return Err(format!("unknown key '{key}'")),
+        }
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: '#' outside quotes starts a comment (our values never
+    // contain '#')
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_setup() {
+        let c = RunConfig::default();
+        assert_eq!(c.eval_parallelism, 1, "sequential good-citizen mode");
+        assert_eq!(c.selection_policy, SelectionPolicy::PaperLlm);
+        assert_eq!(c.experiment_rule, ExperimentRule::Paper);
+        assert_eq!(c.knowledge, KnowledgeProfile::Full);
+    }
+
+    #[test]
+    fn toml_full_document() {
+        let text = r#"
+# scientist run config
+[run]
+seed = 7
+max_submissions = 50
+
+[platform]
+reps_per_config = 5
+parallelism = 3
+noise_sigma = 0.05
+
+[agents]
+selection_policy = "greedy"
+experiment_rule = "top_max"
+knowledge = "generic"
+
+[llm]
+temperature = 1.2
+estimate_sigma = 0.4
+rubric_infidelity = 0.2
+"#;
+        let c = RunConfig::from_toml(text).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.max_submissions, 50);
+        assert_eq!(c.reps_per_config, 5);
+        assert_eq!(c.eval_parallelism, 3);
+        assert_eq!(c.noise_sigma, 0.05);
+        assert_eq!(c.selection_policy, SelectionPolicy::GreedyBest);
+        assert_eq!(c.experiment_rule, ExperimentRule::TopMax);
+        assert_eq!(c.knowledge, KnowledgeProfile::GenericOnly);
+        assert_eq!(c.llm.temperature, 1.2);
+        assert_eq!(c.llm.rubric_infidelity, 0.2);
+    }
+
+    #[test]
+    fn toml_partial_keeps_defaults() {
+        let c = RunConfig::from_toml("[run]\nseed = 3\n").unwrap();
+        assert_eq!(c.seed, 3);
+        assert_eq!(c.max_submissions, RunConfig::default().max_submissions);
+    }
+
+    #[test]
+    fn toml_unknown_key_rejected() {
+        assert!(RunConfig::from_toml("[run]\nspeed = 3\n").is_err());
+        assert!(RunConfig::from_toml("[warp]\nseed = 3\n").is_err());
+    }
+
+    #[test]
+    fn toml_bad_values_rejected() {
+        assert!(RunConfig::from_toml("[run]\nseed = fast\n").is_err());
+        assert!(RunConfig::from_toml("[agents]\nknowledge = \"psychic\"\n").is_err());
+    }
+
+    #[test]
+    fn builders() {
+        let c = RunConfig::default().with_seed(9).with_budget(10);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.max_submissions, 10);
+    }
+}

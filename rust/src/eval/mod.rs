@@ -1,0 +1,132 @@
+//! The kernel testing & evaluation platform — the competition-server
+//! substrate (paper §3.4).
+//!
+//! Submissions are processed **sequentially** (the paper's
+//! "good-citizen" rule, which it also names as the system's main
+//! bottleneck, §5.1). Each submission passes a compile gate, a
+//! correctness gate, then is timed on the feedback suite. The platform
+//! keeps a full submission log and a simulated wall clock so the
+//! parallelism ablation can compare sequential vs parallel submission
+//! at a fixed wall-clock budget.
+
+pub mod platform;
+pub mod verifier;
+
+use crate::genome::KernelGenome;
+use crate::workload::GemmConfig;
+
+pub use platform::{EvalPlatform, PlatformConfig, SubmissionRecord};
+pub use verifier::{TolerancePolicy, Verdict};
+
+/// Why a submission failed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EvalError {
+    /// The kernel does not compile / launch (reported instantly).
+    Compile(String),
+    /// The kernel ran but produced wrong results on the verifier.
+    Incorrect(String),
+    /// The backend cannot evaluate this genome/config (PJRT backend
+    /// only covers the compiled catalog projection).
+    Unsupported(String),
+}
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvalError::Compile(m) => write!(f, "compile failure: {m}"),
+            EvalError::Incorrect(m) => write!(f, "incorrect result: {m}"),
+            EvalError::Unsupported(m) => write!(f, "unsupported: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
+
+/// A timing backend: something that can check and time one kernel on
+/// one config. Implemented by the MI300 simulator ([`crate::sim::SimBackend`])
+/// and the PJRT artifact runtime ([`crate::runtime::PjrtBackend`]).
+pub trait EvalBackend {
+    /// Human-readable backend name (for logs/reports).
+    fn name(&self) -> &str;
+
+    /// Compile + correctness gates. `Ok(())` means the kernel may be
+    /// timed. Called once per submission, before any timing.
+    fn check(&mut self, genome: &KernelGenome) -> Result<(), EvalError>;
+
+    /// One end-to-end timing measurement, microseconds.
+    fn measure(&mut self, genome: &KernelGenome, cfg: &GemmConfig) -> Result<f64, EvalError>;
+
+    /// Simulated seconds one (check + 6-config timing) submission
+    /// occupies the platform — drives the wall-clock ablation. The
+    /// default approximates the competition's queue+run latency.
+    fn submission_cost_s(&self) -> f64 {
+        90.0
+    }
+}
+
+impl EvalBackend for crate::sim::SimBackend {
+    fn name(&self) -> &str {
+        "mi300-sim"
+    }
+
+    fn check(&mut self, genome: &KernelGenome) -> Result<(), EvalError> {
+        genome
+            .validate()
+            .map_err(|e| EvalError::Compile(e.to_string()))?;
+        // numerical verification against the reference, modeled by the
+        // tolerance policy + per-hazard error distributions
+        match verifier::verify(
+            &verifier::TolerancePolicy::default(),
+            genome,
+            &crate::workload::FEEDBACK_CONFIGS,
+        ) {
+            verifier::Verdict::Pass => Ok(()),
+            verifier::Verdict::Fail { reason, .. } => Err(EvalError::Incorrect(reason)),
+        }
+    }
+
+    fn measure(&mut self, genome: &KernelGenome, cfg: &GemmConfig) -> Result<f64, EvalError> {
+        crate::sim::SimBackend::measure(self, genome, cfg)
+            .map_err(|e| EvalError::Compile(e.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{seeds, KernelGenome, Writeback};
+    use crate::sim::SimBackend;
+    use crate::workload::FEEDBACK_CONFIGS;
+
+    #[test]
+    fn sim_backend_checks_validity() {
+        let mut b = SimBackend::new(1);
+        assert!(b.check(&seeds::human_oracle()).is_ok());
+        let invalid = KernelGenome {
+            block_m: 48,
+            ..seeds::naive_hip()
+        };
+        assert!(matches!(b.check(&invalid), Err(EvalError::Compile(_))));
+    }
+
+    #[test]
+    fn sim_backend_catches_races() {
+        let mut b = SimBackend::new(1);
+        let racy = KernelGenome {
+            waves_per_block: 4,
+            acc_in_regs: false,
+            writeback: Writeback::Cooperative,
+            ..seeds::mfma_seed()
+        };
+        assert!(matches!(b.check(&racy), Err(EvalError::Incorrect(_))));
+    }
+
+    #[test]
+    fn sim_backend_measures_through_trait() {
+        let mut b = SimBackend::new(1);
+        let t =
+            EvalBackend::measure(&mut b, &seeds::human_oracle(), &FEEDBACK_CONFIGS[0]).unwrap();
+        assert!(t > 0.0);
+        assert_eq!(b.name(), "mi300-sim");
+    }
+}

@@ -1,0 +1,401 @@
+//! Genome edit operators — the unit of change an experiment rubric
+//! prescribes and the Kernel Writer applies.
+//!
+//! An experiment plan (paper §3.2) is a description plus a rubric of
+//! concrete changes; in this reproduction a rubric is a list of
+//! [`GenomeEdit`]s. The baseline tuners (`baselines/`) share the same
+//! operators, so the scientist-vs-tuner comparison is apples-to-apples
+//! over an identical search space.
+
+use super::*;
+use crate::rng::Rng;
+
+/// Identifies one evolvable axis of the genome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Param {
+    BlockM,
+    BlockN,
+    BlockK,
+    Compute,
+    Precision,
+    UnrollK,
+    LdsStaging,
+    DoubleBuffer,
+    LdsPad,
+    Swizzle,
+    VectorWidth,
+    WavesPerBlock,
+    Writeback,
+    ScaleCache,
+    GridMapping,
+    AccInRegs,
+    KInnermost,
+}
+
+impl Param {
+    pub const ALL: [Param; 17] = [
+        Param::BlockM,
+        Param::BlockN,
+        Param::BlockK,
+        Param::Compute,
+        Param::Precision,
+        Param::UnrollK,
+        Param::LdsStaging,
+        Param::DoubleBuffer,
+        Param::LdsPad,
+        Param::Swizzle,
+        Param::VectorWidth,
+        Param::WavesPerBlock,
+        Param::Writeback,
+        Param::ScaleCache,
+        Param::GridMapping,
+        Param::AccInRegs,
+        Param::KInnermost,
+    ];
+}
+
+/// One concrete change to a genome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GenomeEdit {
+    SetBlockM(u32),
+    SetBlockN(u32),
+    SetBlockK(u32),
+    SetCompute(ComputePath),
+    SetPrecision(Precision),
+    SetUnrollK(u32),
+    SetLdsStaging(bool),
+    SetDoubleBuffer(bool),
+    SetLdsPad(u32),
+    SetSwizzle(Swizzle),
+    SetVectorWidth(u32),
+    SetWavesPerBlock(u32),
+    SetWriteback(Writeback),
+    SetScaleCache(ScaleCache),
+    SetGridMapping(GridMapping),
+    SetAccInRegs(bool),
+    SetKInnermost(bool),
+}
+
+impl GenomeEdit {
+    /// Apply the edit in place.
+    pub fn apply(&self, g: &mut KernelGenome) {
+        match *self {
+            GenomeEdit::SetBlockM(v) => g.block_m = v,
+            GenomeEdit::SetBlockN(v) => g.block_n = v,
+            GenomeEdit::SetBlockK(v) => g.block_k = v,
+            GenomeEdit::SetCompute(v) => g.compute = v,
+            GenomeEdit::SetPrecision(v) => g.precision = v,
+            GenomeEdit::SetUnrollK(v) => g.unroll_k = v,
+            GenomeEdit::SetLdsStaging(v) => g.lds_staging = v,
+            GenomeEdit::SetDoubleBuffer(v) => g.double_buffer = v,
+            GenomeEdit::SetLdsPad(v) => g.lds_pad = v,
+            GenomeEdit::SetSwizzle(v) => g.swizzle = v,
+            GenomeEdit::SetVectorWidth(v) => g.vector_width = v,
+            GenomeEdit::SetWavesPerBlock(v) => g.waves_per_block = v,
+            GenomeEdit::SetWriteback(v) => g.writeback = v,
+            GenomeEdit::SetScaleCache(v) => g.scale_cache = v,
+            GenomeEdit::SetGridMapping(v) => g.grid_mapping = v,
+            GenomeEdit::SetAccInRegs(v) => g.acc_in_regs = v,
+            GenomeEdit::SetKInnermost(v) => g.k_innermost = v,
+        }
+    }
+
+    /// Which axis this edit touches.
+    pub fn param(&self) -> Param {
+        match self {
+            GenomeEdit::SetBlockM(_) => Param::BlockM,
+            GenomeEdit::SetBlockN(_) => Param::BlockN,
+            GenomeEdit::SetBlockK(_) => Param::BlockK,
+            GenomeEdit::SetCompute(_) => Param::Compute,
+            GenomeEdit::SetPrecision(_) => Param::Precision,
+            GenomeEdit::SetUnrollK(_) => Param::UnrollK,
+            GenomeEdit::SetLdsStaging(_) => Param::LdsStaging,
+            GenomeEdit::SetDoubleBuffer(_) => Param::DoubleBuffer,
+            GenomeEdit::SetLdsPad(_) => Param::LdsPad,
+            GenomeEdit::SetSwizzle(_) => Param::Swizzle,
+            GenomeEdit::SetVectorWidth(_) => Param::VectorWidth,
+            GenomeEdit::SetWavesPerBlock(_) => Param::WavesPerBlock,
+            GenomeEdit::SetWriteback(_) => Param::Writeback,
+            GenomeEdit::SetScaleCache(_) => Param::ScaleCache,
+            GenomeEdit::SetGridMapping(_) => Param::GridMapping,
+            GenomeEdit::SetAccInRegs(_) => Param::AccInRegs,
+            GenomeEdit::SetKInnermost(_) => Param::KInnermost,
+        }
+    }
+
+    /// Whether applying this edit would change `g` at all.
+    pub fn is_noop(&self, g: &KernelGenome) -> bool {
+        let mut copy = g.clone();
+        self.apply(&mut copy);
+        copy == *g
+    }
+
+    /// Human-readable description (used in rubrics and writer reports).
+    pub fn describe(&self) -> String {
+        match self {
+            GenomeEdit::SetBlockM(v) => format!("set TB_M tile to {v}"),
+            GenomeEdit::SetBlockN(v) => format!("set TB_N tile to {v}"),
+            GenomeEdit::SetBlockK(v) => format!("set TB_K tile to {v}"),
+            GenomeEdit::SetCompute(v) => format!("switch compute path to {v:?}"),
+            GenomeEdit::SetPrecision(v) => format!("switch numeric path to {v:?}"),
+            GenomeEdit::SetUnrollK(v) => format!("unroll the k-loop {v}x"),
+            GenomeEdit::SetLdsStaging(true) => "stage A/B tiles through LDS".into(),
+            GenomeEdit::SetLdsStaging(false) => "load A/B directly from global".into(),
+            GenomeEdit::SetDoubleBuffer(true) => {
+                "add ping-pong LDS double buffering".into()
+            }
+            GenomeEdit::SetDoubleBuffer(false) => "drop to single LDS buffer".into(),
+            GenomeEdit::SetLdsPad(v) => format!("pad LDS rows by {v} elements"),
+            GenomeEdit::SetSwizzle(v) => format!("set LDS swizzle to {v:?}"),
+            GenomeEdit::SetVectorWidth(v) => {
+                format!("use {v}-byte vectorized global loads")
+            }
+            GenomeEdit::SetWavesPerBlock(v) => format!("run {v} waves per block"),
+            GenomeEdit::SetWriteback(v) => format!("use {v:?} writeback"),
+            GenomeEdit::SetScaleCache(v) => format!("cache scales via {v:?}"),
+            GenomeEdit::SetGridMapping(v) => format!("map grid {v:?}"),
+            GenomeEdit::SetAccInRegs(true) => "keep accumulator in registers".into(),
+            GenomeEdit::SetAccInRegs(false) => {
+                "accumulate via global read-modify-write".into()
+            }
+            GenomeEdit::SetKInnermost(true) => "make k the innermost loop".into(),
+            GenomeEdit::SetKInnermost(false) => "hoist k to the outer loop".into(),
+        }
+    }
+
+    /// All candidate values on one axis (the discretized search space).
+    pub fn candidates(param: Param) -> Vec<GenomeEdit> {
+        let pow2 = [16u32, 32, 64, 128, 256];
+        match param {
+            Param::BlockM => pow2.iter().map(|&v| GenomeEdit::SetBlockM(v)).collect(),
+            Param::BlockN => pow2.iter().map(|&v| GenomeEdit::SetBlockN(v)).collect(),
+            Param::BlockK => pow2.iter().map(|&v| GenomeEdit::SetBlockK(v)).collect(),
+            Param::Compute => vec![
+                GenomeEdit::SetCompute(ComputePath::Scalar),
+                GenomeEdit::SetCompute(ComputePath::Vectorized),
+                GenomeEdit::SetCompute(ComputePath::Mfma),
+            ],
+            Param::Precision => vec![
+                GenomeEdit::SetPrecision(Precision::Fp32),
+                GenomeEdit::SetPrecision(Precision::Fp16),
+                GenomeEdit::SetPrecision(Precision::Fp8),
+            ],
+            Param::UnrollK => [1u32, 2, 4, 8]
+                .iter()
+                .map(|&v| GenomeEdit::SetUnrollK(v))
+                .collect(),
+            Param::LdsStaging => vec![
+                GenomeEdit::SetLdsStaging(false),
+                GenomeEdit::SetLdsStaging(true),
+            ],
+            Param::DoubleBuffer => vec![
+                GenomeEdit::SetDoubleBuffer(false),
+                GenomeEdit::SetDoubleBuffer(true),
+            ],
+            Param::LdsPad => [0u32, 1, 2, 4, 8]
+                .iter()
+                .map(|&v| GenomeEdit::SetLdsPad(v))
+                .collect(),
+            Param::Swizzle => vec![
+                GenomeEdit::SetSwizzle(Swizzle::None),
+                GenomeEdit::SetSwizzle(Swizzle::Xor),
+            ],
+            Param::VectorWidth => [1u32, 2, 4, 8, 16]
+                .iter()
+                .map(|&v| GenomeEdit::SetVectorWidth(v))
+                .collect(),
+            Param::WavesPerBlock => [1u32, 2, 4, 8]
+                .iter()
+                .map(|&v| GenomeEdit::SetWavesPerBlock(v))
+                .collect(),
+            Param::Writeback => vec![
+                GenomeEdit::SetWriteback(Writeback::SingleWave),
+                GenomeEdit::SetWriteback(Writeback::Cooperative),
+            ],
+            Param::ScaleCache => vec![
+                GenomeEdit::SetScaleCache(ScaleCache::GlobalReload),
+                GenomeEdit::SetScaleCache(ScaleCache::Lds),
+                GenomeEdit::SetScaleCache(ScaleCache::LdsRepurposed),
+            ],
+            Param::GridMapping => vec![
+                GenomeEdit::SetGridMapping(GridMapping::RowMajor),
+                GenomeEdit::SetGridMapping(GridMapping::ColMajor),
+                GenomeEdit::SetGridMapping(GridMapping::TileSwizzled),
+            ],
+            Param::AccInRegs => vec![
+                GenomeEdit::SetAccInRegs(false),
+                GenomeEdit::SetAccInRegs(true),
+            ],
+            Param::KInnermost => vec![
+                GenomeEdit::SetKInnermost(false),
+                GenomeEdit::SetKInnermost(true),
+            ],
+        }
+    }
+
+    /// A uniformly random edit (baseline tuners' mutation operator).
+    pub fn random(rng: &mut Rng) -> GenomeEdit {
+        let param = *rng.choose(&Param::ALL);
+        let cands = GenomeEdit::candidates(param);
+        cands[rng.below(cands.len())].clone()
+    }
+}
+
+/// Apply a rubric (edit list) to a base genome, returning the child.
+/// Invalid children are *not* repaired here — the Writer owns repair
+/// policy, the tuners own rejection policy.
+pub fn apply_edits(base: &KernelGenome, edits: &[GenomeEdit]) -> KernelGenome {
+    let mut g = base.clone();
+    for e in edits {
+        e.apply(&mut g);
+    }
+    g
+}
+
+/// All single-edit neighbours of a genome that change it and validate
+/// (the hill-climber's move set).
+pub fn valid_neighbors(g: &KernelGenome) -> Vec<(GenomeEdit, KernelGenome)> {
+    let mut out = Vec::new();
+    for p in Param::ALL {
+        for e in GenomeEdit::candidates(p) {
+            if e.is_noop(g) {
+                continue;
+            }
+            let child = apply_edits(g, std::slice::from_ref(&e));
+            if child.validate().is_ok() {
+                out.push((e, child));
+            }
+        }
+    }
+    out
+}
+
+/// Uniform crossover: each axis from one parent or the other. The
+/// paper frames the LLM as the crossover operator (it sees Base and
+/// Reference); this is the corresponding mechanical operator used by
+/// baseline tuners and as a fallback in the writer.
+pub fn crossover(a: &KernelGenome, b: &KernelGenome, rng: &mut Rng) -> KernelGenome {
+    let mut g = a.clone();
+    if rng.chance(0.5) {
+        g.block_m = b.block_m;
+    }
+    if rng.chance(0.5) {
+        g.block_n = b.block_n;
+    }
+    if rng.chance(0.5) {
+        g.block_k = b.block_k;
+    }
+    if rng.chance(0.5) {
+        g.compute = b.compute;
+        g.precision = b.precision; // coupled: compute path implies dtype family
+    }
+    if rng.chance(0.5) {
+        g.unroll_k = b.unroll_k;
+    }
+    if rng.chance(0.5) {
+        g.lds_staging = b.lds_staging;
+        g.double_buffer = b.double_buffer;
+        g.scale_cache = b.scale_cache;
+    }
+    if rng.chance(0.5) {
+        g.lds_pad = b.lds_pad;
+        g.swizzle = b.swizzle;
+    }
+    if rng.chance(0.5) {
+        g.vector_width = b.vector_width;
+    }
+    if rng.chance(0.5) {
+        g.waves_per_block = b.waves_per_block;
+        g.writeback = b.writeback;
+        g.acc_in_regs = b.acc_in_regs;
+    }
+    if rng.chance(0.5) {
+        g.grid_mapping = b.grid_mapping;
+    }
+    if rng.chance(0.5) {
+        g.k_innermost = b.k_innermost;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+
+    #[test]
+    fn apply_single_edit() {
+        let base = seeds::naive_hip();
+        let child = apply_edits(&base, &[GenomeEdit::SetBlockM(64)]);
+        assert_eq!(child.block_m, 64);
+        assert_eq!(child.block_n, base.block_n);
+    }
+
+    #[test]
+    fn edits_cover_all_params() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for p in Param::ALL {
+            for e in GenomeEdit::candidates(p) {
+                assert_eq!(e.param(), p);
+                seen.insert(p);
+            }
+        }
+        assert_eq!(seen.len(), Param::ALL.len());
+    }
+
+    #[test]
+    fn noop_detection() {
+        let g = seeds::naive_hip();
+        assert!(GenomeEdit::SetBlockM(g.block_m).is_noop(&g));
+        assert!(!GenomeEdit::SetBlockM(g.block_m * 2).is_noop(&g));
+    }
+
+    #[test]
+    fn neighbors_are_valid_and_distinct() {
+        let g = seeds::mfma_seed();
+        let ns = valid_neighbors(&g);
+        assert!(ns.len() > 20, "expected a rich neighbourhood, got {}", ns.len());
+        for (_, child) in &ns {
+            assert!(child.validate().is_ok());
+            assert_ne!(child, &g);
+        }
+    }
+
+    #[test]
+    fn random_edit_deterministic_per_seed() {
+        let mut r1 = Rng::seed_from_u64(5);
+        let mut r2 = Rng::seed_from_u64(5);
+        for _ in 0..50 {
+            assert_eq!(GenomeEdit::random(&mut r1), GenomeEdit::random(&mut r2));
+        }
+    }
+
+    #[test]
+    fn crossover_mixes_parents() {
+        let a = seeds::naive_hip();
+        let b = seeds::human_oracle();
+        let mut rng = Rng::seed_from_u64(3);
+        let mut saw_a = false;
+        let mut saw_b = false;
+        for _ in 0..50 {
+            let c = crossover(&a, &b, &mut rng);
+            if c.block_m == a.block_m {
+                saw_a = true;
+            }
+            if c.block_m == b.block_m {
+                saw_b = true;
+            }
+        }
+        assert!(saw_a && saw_b);
+    }
+
+    #[test]
+    fn describe_is_nonempty_for_all() {
+        for p in Param::ALL {
+            for e in GenomeEdit::candidates(p) {
+                assert!(!e.describe().is_empty());
+            }
+        }
+    }
+}

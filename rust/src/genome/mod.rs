@@ -1,0 +1,541 @@
+//! The kernel genome: a typed parameterization of the FP8 block-scaled
+//! GEMM kernel design space.
+//!
+//! The paper evolves free-form HIP source; the features its evolved
+//! kernels actually vary (App. A.3's breakdown + the avenue list in
+//! App. A.2) are exactly the axes encoded here: tile sizes, compute
+//! path (scalar vs vectorized vs Matrix Core), LDS staging / ping-pong
+//! double buffering / padding / swizzling, global-load vector width,
+//! waves per block, writeback strategy, scale caching, grid mapping,
+//! and precision path. A genome is "the code listing" in this
+//! reproduction (see `DESIGN.md` §2 for the substitution argument);
+//! [`render`] pretty-prints it in a HIP-like sketch so agent prompts
+//! and reports stay human-readable.
+//!
+//! Hard validity (would not compile / exceeds hardware limits) lives in
+//! [`KernelGenome::validate`]; *semantic* correctness hazards (races
+//! the evaluation platform catches at runtime, like multi-wave
+//! read-modify-write to global C) are modeled in
+//! [`KernelGenome::correctness_hazard`] — the scientist only learns
+//! about those from failed submissions, as in the paper.
+
+pub mod edit;
+pub mod persist;
+pub mod render;
+pub mod seeds;
+
+
+pub use edit::{GenomeEdit, Param};
+
+/// Compute inner-loop implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComputePath {
+    /// Straight-line scalar FMAs (the naive HIP translation).
+    Scalar,
+    /// Packed vector FMAs (e.g. `v_dot2`/f32 vector ops).
+    Vectorized,
+    /// MFMA Matrix Core ops (32x32x16 fp8) — the rocWMMA path.
+    Mfma,
+}
+
+/// Numeric path through the kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// f32 in, f32 math (naive translation; no quantization win).
+    Fp32,
+    /// fp16 library-style path (what `torch.matmul` uses on MI300).
+    Fp16,
+    /// fp8-e4m3 in, f32 accumulate, bf16 out — the competition task's
+    /// intended fast path (App. A.3 "mixed-precision arithmetic").
+    Fp8,
+}
+
+/// How the final C tile reaches global memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Writeback {
+    /// Only wave 0 stores the block's tile (App. A.3: avoids
+    /// cross-wave write conflicts, at the cost of idle waves).
+    SingleWave,
+    /// All waves cooperate in the store (the A.2 experiment-2 rubric);
+    /// requires a private accumulator to be race-free.
+    Cooperative,
+}
+
+/// Where per-row/col dequant scales are kept.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScaleCache {
+    /// Re-read from global memory every time they're needed.
+    GlobalReload,
+    /// Dedicated LDS buffer (costs LDS capacity -> occupancy).
+    Lds,
+    /// Re-purpose the already-consumed A/B LDS tiles for the scales
+    /// (App. A.3 "LDS re-purposing for scale caching": zero extra LDS).
+    LdsRepurposed,
+}
+
+/// LDS address swizzling for bank-conflict avoidance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Swizzle {
+    None,
+    /// XOR-swizzle of the LDS column index.
+    Xor,
+}
+
+/// Workgroup-to-output-tile mapping over the grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GridMapping {
+    RowMajor,
+    ColMajor,
+    /// Block-swizzled mapping that improves L2 reuse across
+    /// neighbouring workgroups.
+    TileSwizzled,
+}
+
+/// A complete kernel configuration — one individual in the population.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelGenome {
+    /// Output tile height per workgroup (pow2, 16..=256).
+    pub block_m: u32,
+    /// Output tile width per workgroup (pow2, 16..=256).
+    pub block_n: u32,
+    /// Reduction-step depth per LDS stage (pow2, 16..=256).
+    pub block_k: u32,
+    pub compute: ComputePath,
+    pub precision: Precision,
+    /// Inner k-loop unroll factor (1, 2, 4, 8).
+    pub unroll_k: u32,
+    /// Stage A/B tiles in LDS (vs. direct-from-global loads).
+    pub lds_staging: bool,
+    /// Ping-pong double buffering of the LDS tiles (needs staging).
+    pub double_buffer: bool,
+    /// Extra padding elements per LDS row (bank-conflict mitigation).
+    pub lds_pad: u32,
+    pub swizzle: Swizzle,
+    /// Global-load width in bytes per lane (1, 2, 4, 8, 16).
+    pub vector_width: u32,
+    /// Waves (64 lanes each) per workgroup: 1, 2, 4, 8.
+    pub waves_per_block: u32,
+    pub writeback: Writeback,
+    pub scale_cache: ScaleCache,
+    pub grid_mapping: GridMapping,
+    /// Keep the accumulator in private registers (vs re-reading C).
+    pub acc_in_regs: bool,
+    /// Finish a tile's k-reduction before moving on (loop order).
+    pub k_innermost: bool,
+    /// Hand-scheduled MFMA assembly (software-pipelined dual-issue at
+    /// the ISA level). **Not reachable by the scientist or any tuner**:
+    /// there is no `GenomeEdit` for this axis and no avenue proposes
+    /// it — it models what the competition's top humans extracted with
+    /// actual-MI300 access, ISA docs, and profiling (Table 1 comment:
+    /// "top-8 had access to actual MI300"). Only the human-oracle
+    /// genome sets it. See DESIGN.md §2.
+    pub isa_scheduling: bool,
+}
+
+impl Default for KernelGenome {
+    /// The default is the *naive HIP translation* seed — evolution
+    /// starts from the bottom, as in the paper.
+    fn default() -> Self {
+        seeds::naive_hip()
+    }
+}
+
+/// MI300-class hardware limits the genome must respect (`gpu::MI300`
+/// holds the performance-model constants; these are the hard caps).
+pub mod limits {
+    /// LDS bytes per workgroup.
+    pub const LDS_BYTES: u32 = 64 * 1024;
+    /// VGPR budget per lane (f32 registers).
+    pub const VGPRS_PER_LANE: u32 = 512;
+    /// Lanes per wave.
+    pub const WAVE_SIZE: u32 = 64;
+    /// Max lanes per workgroup.
+    pub const MAX_BLOCK_LANES: u32 = 1024;
+}
+
+/// Why a genome is rejected before it ever runs ("does not compile /
+/// launch"). The evaluation platform reports these immediately, unlike
+/// [`Hazard`]s which surface as wrong results.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Invalid {
+    NonPow2Block(&'static str, u32),
+    BlockOutOfRange(&'static str, u32),
+    LdsOverflow { need: u32, have: u32 },
+    RegisterOverflow { need: u32, have: u32 },
+    TooManyLanes(u32),
+    BadUnroll(u32),
+    BadVectorWidth(u32),
+    BadWaves(u32),
+    DoubleBufferWithoutStaging,
+    ScaleLdsWithoutStaging,
+    SwizzleWithPadding,
+    MfmaRequiresLowPrecision,
+}
+
+impl std::fmt::Display for Invalid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Invalid::NonPow2Block(d, v) => write!(f, "block_{d}={v} is not a power of two"),
+            Invalid::BlockOutOfRange(d, v) => write!(f, "block_{d}={v} outside [16, 256]"),
+            Invalid::LdsOverflow { need, have } => {
+                write!(f, "LDS overflow: need {need} B > {have} B per workgroup")
+            }
+            Invalid::RegisterOverflow { need, have } => {
+                write!(f, "VGPR overflow: need {need} > {have} per lane")
+            }
+            Invalid::TooManyLanes(n) => write!(f, "{n} lanes exceeds workgroup limit"),
+            Invalid::BadUnroll(u) => write!(f, "unroll_k={u} not in {{1,2,4,8}}"),
+            Invalid::BadVectorWidth(w) => write!(f, "vector_width={w} not in {{1,2,4,8,16}}"),
+            Invalid::BadWaves(w) => write!(f, "waves_per_block={w} not in {{1,2,4,8}}"),
+            Invalid::DoubleBufferWithoutStaging => {
+                write!(f, "double buffering requires LDS staging")
+            }
+            Invalid::ScaleLdsWithoutStaging => {
+                write!(f, "LDS scale caching requires LDS staging")
+            }
+            Invalid::SwizzleWithPadding => {
+                write!(f, "XOR swizzle and row padding are mutually exclusive")
+            }
+            Invalid::MfmaRequiresLowPrecision => {
+                write!(f, "MFMA path requires fp8/fp16 operands")
+            }
+        }
+    }
+}
+
+/// A *semantic* defect: the kernel launches but produces wrong numbers.
+/// These are only discoverable through the evaluation platform's
+/// correctness gate — exactly the black-box constraint of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hazard {
+    /// Multiple waves read-modify-write the same C tile without a
+    /// private accumulator (the race App. A.3's single-wave writeback
+    /// exists to avoid).
+    MultiWaveAccumulationRace,
+    /// Scales read from re-purposed LDS before the A/B data there was
+    /// consumed — needs double buffering to be safe.
+    ScaleRepurposeOverlap,
+}
+
+impl KernelGenome {
+    fn lds_tile_bytes(&self) -> u32 {
+        if !self.lds_staging {
+            return 0;
+        }
+        let elt = match self.precision {
+            Precision::Fp32 => 4,
+            Precision::Fp16 => 2,
+            Precision::Fp8 => 1,
+        };
+        let pad = self.lds_pad * elt;
+        let a = self.block_m * (self.block_k * elt + pad);
+        let b = self.block_k * (self.block_n * elt + pad);
+        let bufs = if self.double_buffer { 2 } else { 1 };
+        let scales = match self.scale_cache {
+            ScaleCache::Lds => (self.block_m + self.block_n) * 4,
+            _ => 0,
+        };
+        (a + b) * bufs + scales
+    }
+
+    /// Estimated f32-register pressure per lane: accumulator fragment +
+    /// staging buffers + unroll temporaries.
+    pub fn vgprs_per_lane(&self) -> u32 {
+        let lanes = self.waves_per_block * limits::WAVE_SIZE;
+        let acc = if self.acc_in_regs {
+            // Each lane holds its slice of the block_m x block_n f32
+            // accumulator. With MFMA the fragment is spread over the
+            // wave; scalar paths need the same count of live values.
+            (self.block_m * self.block_n).div_ceil(lanes)
+        } else {
+            4
+        };
+        let staging = if self.lds_staging { 8 } else { 16 };
+        let unroll_tmp = 4 * self.unroll_k;
+        let vec_tmp = self.vector_width.div_ceil(4) * 2;
+        acc + staging + unroll_tmp + vec_tmp + 24 // ABI/addressing overhead
+    }
+
+    /// Hard validity: does this genome compile and launch at all?
+    pub fn validate(&self) -> Result<(), Invalid> {
+        for (name, v) in [("m", self.block_m), ("n", self.block_n), ("k", self.block_k)] {
+            if !v.is_power_of_two() {
+                return Err(Invalid::NonPow2Block(
+                    match name {
+                        "m" => "m",
+                        "n" => "n",
+                        _ => "k",
+                    },
+                    v,
+                ));
+            }
+            if !(16..=256).contains(&v) {
+                return Err(Invalid::BlockOutOfRange(
+                    match name {
+                        "m" => "m",
+                        "n" => "n",
+                        _ => "k",
+                    },
+                    v,
+                ));
+            }
+        }
+        if ![1, 2, 4, 8].contains(&self.unroll_k) {
+            return Err(Invalid::BadUnroll(self.unroll_k));
+        }
+        if ![1, 2, 4, 8, 16].contains(&self.vector_width) {
+            return Err(Invalid::BadVectorWidth(self.vector_width));
+        }
+        if ![1, 2, 4, 8].contains(&self.waves_per_block) {
+            return Err(Invalid::BadWaves(self.waves_per_block));
+        }
+        let lanes = self.waves_per_block * limits::WAVE_SIZE;
+        if lanes > limits::MAX_BLOCK_LANES {
+            return Err(Invalid::TooManyLanes(lanes));
+        }
+        if self.double_buffer && !self.lds_staging {
+            return Err(Invalid::DoubleBufferWithoutStaging);
+        }
+        if matches!(self.scale_cache, ScaleCache::Lds | ScaleCache::LdsRepurposed)
+            && !self.lds_staging
+        {
+            return Err(Invalid::ScaleLdsWithoutStaging);
+        }
+        if self.swizzle == Swizzle::Xor && self.lds_pad > 0 {
+            return Err(Invalid::SwizzleWithPadding);
+        }
+        if self.compute == ComputePath::Mfma && self.precision == Precision::Fp32 {
+            return Err(Invalid::MfmaRequiresLowPrecision);
+        }
+        let lds = self.lds_tile_bytes();
+        if lds > limits::LDS_BYTES {
+            return Err(Invalid::LdsOverflow {
+                need: lds,
+                have: limits::LDS_BYTES,
+            });
+        }
+        let vgprs = self.vgprs_per_lane();
+        if vgprs > limits::VGPRS_PER_LANE {
+            return Err(Invalid::RegisterOverflow {
+                need: vgprs,
+                have: limits::VGPRS_PER_LANE,
+            });
+        }
+        Ok(())
+    }
+
+    /// Semantic correctness hazard, if any. `None` means the kernel
+    /// produces correct results.
+    pub fn correctness_hazard(&self) -> Option<Hazard> {
+        if self.waves_per_block > 1
+            && !self.acc_in_regs
+            && self.writeback == Writeback::Cooperative
+        {
+            return Some(Hazard::MultiWaveAccumulationRace);
+        }
+        if self.scale_cache == ScaleCache::LdsRepurposed && !self.double_buffer {
+            return Some(Hazard::ScaleRepurposeOverlap);
+        }
+        None
+    }
+
+    /// Total LDS bytes consumed per workgroup (0 without staging).
+    pub fn lds_bytes(&self) -> u32 {
+        self.lds_tile_bytes()
+    }
+
+    /// A short, stable fingerprint used for deduplication.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{}x{}x{}-{:?}-{:?}-u{}-s{}{}p{}-{:?}-v{}-w{}-{:?}-{:?}-{:?}-a{}-k{}",
+            self.block_m,
+            self.block_n,
+            self.block_k,
+            self.compute,
+            self.precision,
+            self.unroll_k,
+            self.lds_staging as u8,
+            self.double_buffer as u8,
+            self.lds_pad,
+            self.swizzle,
+            self.vector_width,
+            self.waves_per_block,
+            self.writeback,
+            self.scale_cache,
+            self.grid_mapping,
+            self.acc_in_regs as u8,
+            (self.k_innermost as u8) + 2 * (self.isa_scheduling as u8),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_are_valid() {
+        for (name, g) in seeds::all_seeds() {
+            assert!(g.validate().is_ok(), "{name}: {:?}", g.validate());
+        }
+    }
+
+    #[test]
+    fn seeds_are_correct() {
+        for (name, g) in seeds::all_seeds() {
+            assert!(g.correctness_hazard().is_none(), "{name} has a hazard");
+        }
+    }
+
+    #[test]
+    fn naive_is_default() {
+        assert_eq!(KernelGenome::default(), seeds::naive_hip());
+    }
+
+    #[test]
+    fn non_pow2_block_rejected() {
+        let g = KernelGenome {
+            block_m: 48,
+            ..seeds::naive_hip()
+        };
+        assert!(matches!(g.validate(), Err(Invalid::NonPow2Block("m", 48))));
+    }
+
+    #[test]
+    fn block_range_enforced() {
+        let g = KernelGenome {
+            block_n: 512,
+            ..seeds::naive_hip()
+        };
+        assert!(matches!(g.validate(), Err(Invalid::BlockOutOfRange("n", 512))));
+        let g = KernelGenome {
+            block_k: 8,
+            ..seeds::naive_hip()
+        };
+        assert!(matches!(g.validate(), Err(Invalid::BlockOutOfRange("k", 8))));
+    }
+
+    #[test]
+    fn lds_overflow_detected() {
+        let g = KernelGenome {
+            block_m: 256,
+            block_n: 256,
+            block_k: 256,
+            lds_staging: true,
+            double_buffer: true,
+            precision: Precision::Fp32,
+            compute: ComputePath::Vectorized,
+            acc_in_regs: false,
+            writeback: Writeback::SingleWave,
+            waves_per_block: 8,
+            ..seeds::naive_hip()
+        };
+        assert!(matches!(g.validate(), Err(Invalid::LdsOverflow { .. })));
+    }
+
+    #[test]
+    fn register_overflow_detected() {
+        let g = KernelGenome {
+            block_m: 256,
+            block_n: 256,
+            block_k: 16,
+            waves_per_block: 1,
+            acc_in_regs: true,
+            lds_staging: false,
+            double_buffer: false,
+            scale_cache: ScaleCache::GlobalReload,
+            ..seeds::naive_hip()
+        };
+        // 256*256/64 = 1024 accumulator registers per lane >> 512.
+        assert!(matches!(g.validate(), Err(Invalid::RegisterOverflow { .. })));
+    }
+
+    #[test]
+    fn double_buffer_needs_staging() {
+        let g = KernelGenome {
+            lds_staging: false,
+            double_buffer: true,
+            scale_cache: ScaleCache::GlobalReload,
+            ..seeds::naive_hip()
+        };
+        assert_eq!(g.validate(), Err(Invalid::DoubleBufferWithoutStaging));
+    }
+
+    #[test]
+    fn mfma_needs_low_precision() {
+        let g = KernelGenome {
+            compute: ComputePath::Mfma,
+            precision: Precision::Fp32,
+            ..seeds::mfma_seed()
+        };
+        assert_eq!(g.validate(), Err(Invalid::MfmaRequiresLowPrecision));
+    }
+
+    #[test]
+    fn swizzle_pad_exclusive() {
+        let g = KernelGenome {
+            swizzle: Swizzle::Xor,
+            lds_pad: 4,
+            ..seeds::human_oracle()
+        };
+        assert_eq!(g.validate(), Err(Invalid::SwizzleWithPadding));
+    }
+
+    #[test]
+    fn multiwave_race_detected() {
+        let g = KernelGenome {
+            waves_per_block: 4,
+            acc_in_regs: false,
+            writeback: Writeback::Cooperative,
+            ..seeds::mfma_seed()
+        };
+        assert_eq!(
+            g.correctness_hazard(),
+            Some(Hazard::MultiWaveAccumulationRace)
+        );
+    }
+
+    #[test]
+    fn scale_repurpose_needs_double_buffer() {
+        let g = KernelGenome {
+            lds_staging: true,
+            double_buffer: false,
+            scale_cache: ScaleCache::LdsRepurposed,
+            ..seeds::mfma_seed()
+        };
+        assert_eq!(g.correctness_hazard(), Some(Hazard::ScaleRepurposeOverlap));
+    }
+
+    #[test]
+    fn lds_bytes_double_buffer_doubles_tiles() {
+        let base = KernelGenome {
+            lds_staging: true,
+            double_buffer: false,
+            lds_pad: 0,
+            scale_cache: ScaleCache::GlobalReload,
+            ..seeds::mfma_seed()
+        };
+        let db = KernelGenome {
+            double_buffer: true,
+            ..base.clone()
+        };
+        assert_eq!(db.lds_bytes(), base.lds_bytes() * 2);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes() {
+        let a = seeds::naive_hip();
+        let b = seeds::human_oracle();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), seeds::naive_hip().fingerprint());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = seeds::human_oracle();
+        let s = g.to_json().to_string();
+        let back =
+            KernelGenome::from_json(&crate::util::json::parse(&s).unwrap()).unwrap();
+        assert_eq!(g, back);
+    }
+}

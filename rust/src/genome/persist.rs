@@ -1,0 +1,137 @@
+//! JSON (de)serialization for genomes — used by population persistence
+//! and by the PJRT artifact catalog (whose `variant` objects are the
+//! python `GemmVariant` projection of these genomes).
+
+use super::*;
+use crate::util::json::Json;
+
+fn enum_str<T: std::fmt::Debug>(v: &T) -> Json {
+    Json::Str(format!("{v:?}"))
+}
+
+impl KernelGenome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("block_m", Json::Num(self.block_m as f64)),
+            ("block_n", Json::Num(self.block_n as f64)),
+            ("block_k", Json::Num(self.block_k as f64)),
+            ("compute", enum_str(&self.compute)),
+            ("precision", enum_str(&self.precision)),
+            ("unroll_k", Json::Num(self.unroll_k as f64)),
+            ("lds_staging", Json::Bool(self.lds_staging)),
+            ("double_buffer", Json::Bool(self.double_buffer)),
+            ("lds_pad", Json::Num(self.lds_pad as f64)),
+            ("swizzle", enum_str(&self.swizzle)),
+            ("vector_width", Json::Num(self.vector_width as f64)),
+            ("waves_per_block", Json::Num(self.waves_per_block as f64)),
+            ("writeback", enum_str(&self.writeback)),
+            ("scale_cache", enum_str(&self.scale_cache)),
+            ("grid_mapping", enum_str(&self.grid_mapping)),
+            ("acc_in_regs", Json::Bool(self.acc_in_regs)),
+            ("k_innermost", Json::Bool(self.k_innermost)),
+            ("isa_scheduling", Json::Bool(self.isa_scheduling)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<KernelGenome, String> {
+        let u32_field = |k: &str| -> Result<u32, String> {
+            v.get(k)
+                .and_then(|x| x.as_u64())
+                .map(|x| x as u32)
+                .ok_or_else(|| format!("missing/invalid field {k}"))
+        };
+        let bool_field = |k: &str| -> Result<bool, String> {
+            v.get(k)
+                .and_then(|x| x.as_bool())
+                .ok_or_else(|| format!("missing/invalid field {k}"))
+        };
+        let str_field = |k: &str| -> Result<&str, String> {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| format!("missing/invalid field {k}"))
+        };
+        Ok(KernelGenome {
+            block_m: u32_field("block_m")?,
+            block_n: u32_field("block_n")?,
+            block_k: u32_field("block_k")?,
+            compute: match str_field("compute")? {
+                "Scalar" => ComputePath::Scalar,
+                "Vectorized" => ComputePath::Vectorized,
+                "Mfma" => ComputePath::Mfma,
+                other => return Err(format!("bad compute '{other}'")),
+            },
+            precision: match str_field("precision")? {
+                "Fp32" => Precision::Fp32,
+                "Fp16" => Precision::Fp16,
+                "Fp8" => Precision::Fp8,
+                other => return Err(format!("bad precision '{other}'")),
+            },
+            unroll_k: u32_field("unroll_k")?,
+            lds_staging: bool_field("lds_staging")?,
+            double_buffer: bool_field("double_buffer")?,
+            lds_pad: u32_field("lds_pad")?,
+            swizzle: match str_field("swizzle")? {
+                "None" => Swizzle::None,
+                "Xor" => Swizzle::Xor,
+                other => return Err(format!("bad swizzle '{other}'")),
+            },
+            vector_width: u32_field("vector_width")?,
+            waves_per_block: u32_field("waves_per_block")?,
+            writeback: match str_field("writeback")? {
+                "SingleWave" => Writeback::SingleWave,
+                "Cooperative" => Writeback::Cooperative,
+                other => return Err(format!("bad writeback '{other}'")),
+            },
+            scale_cache: match str_field("scale_cache")? {
+                "GlobalReload" => ScaleCache::GlobalReload,
+                "Lds" => ScaleCache::Lds,
+                "LdsRepurposed" => ScaleCache::LdsRepurposed,
+                other => return Err(format!("bad scale_cache '{other}'")),
+            },
+            grid_mapping: match str_field("grid_mapping")? {
+                "RowMajor" => GridMapping::RowMajor,
+                "ColMajor" => GridMapping::ColMajor,
+                "TileSwizzled" => GridMapping::TileSwizzled,
+                other => return Err(format!("bad grid_mapping '{other}'")),
+            },
+            acc_in_regs: bool_field("acc_in_regs")?,
+            k_innermost: bool_field("k_innermost")?,
+            // absent in older ledgers: default false (LLM-reachable space)
+            isa_scheduling: v
+                .get("isa_scheduling")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn json_roundtrip_all_seeds() {
+        for (name, g) in seeds::all_seeds() {
+            let s = g.to_json().to_string();
+            let back = KernelGenome::from_json(&json::parse(&s).unwrap()).unwrap();
+            assert_eq!(g, back, "{name}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_missing_field() {
+        let v = json::parse(r#"{"block_m": 32}"#).unwrap();
+        assert!(KernelGenome::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_bad_enum() {
+        let mut j = seeds::naive_hip().to_json();
+        if let Json::Obj(ref mut m) = j {
+            m.insert("compute".into(), Json::Str("Quantum".into()));
+        }
+        let err = KernelGenome::from_json(&j).unwrap_err();
+        assert!(err.contains("Quantum"));
+    }
+}

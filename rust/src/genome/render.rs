@@ -1,0 +1,178 @@
+//! Render a genome as a HIP-like kernel sketch — "the code listing".
+//!
+//! The paper's agents exchange *source code*; our agents exchange
+//! genomes, but their prompts, rationales, and writer reports embed
+//! this rendering so run transcripts read like the paper's appendices.
+
+use super::*;
+
+/// A short, diff-friendly, HIP-flavoured sketch of the kernel a genome
+/// describes. Deterministic: equal genomes render identically.
+pub fn render_hip_sketch(g: &KernelGenome) -> String {
+    let mut s = String::new();
+    let elt = match g.precision {
+        Precision::Fp32 => "float",
+        Precision::Fp16 => "__half",
+        Precision::Fp8 => "__hip_fp8_e4m3_fnuz",
+    };
+    let lanes = g.waves_per_block * limits::WAVE_SIZE;
+    s.push_str(&format!(
+        "// fingerprint: {}\n#define TB_M {}\n#define TB_N {}\n#define TB_K {}\n",
+        g.fingerprint(),
+        g.block_m,
+        g.block_n,
+        g.block_k
+    ));
+    s.push_str(&format!(
+        "#define TBLOCK_X_DIM {}u  // {} wave(s)\n",
+        lanes, g.waves_per_block
+    ));
+    s.push_str(&format!(
+        "__global__ void scaled_gemm_kernel(const {elt}* A, const {elt}* B,\n\
+         \x20                                  const float* a_scale, const float* b_scale,\n\
+         \x20                                  __hip_bfloat16* C, int M, int K, int N) {{\n"
+    ));
+    if g.lds_staging {
+        let bufs = if g.double_buffer { "_ping, _pong" } else { "" };
+        let pad = if g.lds_pad > 0 {
+            format!(" + {}", g.lds_pad)
+        } else {
+            String::new()
+        };
+        s.push_str(&format!(
+            "  __shared__ {elt} lds_a{bufs}[TB_M][TB_K{pad}];\n\
+             \x20 __shared__ {elt} lds_b{bufs}[TB_K][TB_N{pad}];\n"
+        ));
+        if g.swizzle == Swizzle::Xor {
+            s.push_str("  // XOR-swizzled LDS column indexing\n");
+        }
+    } else {
+        s.push_str("  // no LDS staging: operands read directly from global\n");
+    }
+    match g.scale_cache {
+        ScaleCache::GlobalReload => {
+            s.push_str("  // scales re-read from global memory per tile\n")
+        }
+        ScaleCache::Lds => s.push_str("  __shared__ float lds_scales[TB_M + TB_N];\n"),
+        ScaleCache::LdsRepurposed => s.push_str(
+            "  // scales overlaid on consumed A/B LDS buffers (cast fp8*->float*)\n",
+        ),
+    }
+    if g.acc_in_regs {
+        s.push_str("  float acc[TB_M * TB_N / TBLOCK_X_DIM] = {0.f};\n");
+    } else {
+        s.push_str("  // accumulate via global C read-modify-write\n");
+    }
+    let loop_order = if g.k_innermost {
+        "for (k_tile inner)"
+    } else {
+        "for (k_tile OUTER)"
+    };
+    s.push_str(&format!(
+        "  {loop_order} {{  // unroll {}x, {}-byte vector loads\n",
+        g.unroll_k, g.vector_width
+    ));
+    if g.double_buffer {
+        s.push_str("    // ping-pong: load next tile while computing current\n");
+    }
+    match g.compute {
+        ComputePath::Scalar => s.push_str("    acc[..] += (float)a * (float)b;  // scalar FMA\n"),
+        ComputePath::Vectorized => {
+            s.push_str("    acc[..] += packed_fma(a_vec, b_vec);  // vector FMA\n")
+        }
+        ComputePath::Mfma => {
+            if g.isa_scheduling {
+                s.push_str(
+                    "    // hand-scheduled MFMA assembly (software-pipelined dual issue)\n",
+                );
+            }
+            s.push_str(
+                "    rocwmma::mma_sync(acc_frag, a_frag, b_frag, acc_frag);  // MFMA 32x32x16\n",
+            )
+        }
+    }
+    if g.lds_staging {
+        s.push_str("    __syncthreads();\n");
+    }
+    s.push_str("  }\n");
+    match g.writeback {
+        Writeback::SingleWave => s.push_str(
+            "  if (wave_id_in_block == 0) store_tile(C, acc, a_scale, b_scale);\n",
+        ),
+        Writeback::Cooperative => {
+            s.push_str("  cooperative_store_tile(C, acc, a_scale, b_scale);  // all waves\n")
+        }
+    }
+    s.push_str(&format!(
+        "}}\n// grid mapping: {:?}; launch {}x{} output tiles\n",
+        g.grid_mapping, g.block_m, g.block_n
+    ));
+    s
+}
+
+/// Line-level diff between two renderings (the writer's "diff through
+/// which the output HIP code is produced").
+pub fn diff_sketches(base: &KernelGenome, child: &KernelGenome) -> String {
+    let a = render_hip_sketch(base);
+    let b = render_hip_sketch(child);
+    let a_lines: Vec<&str> = a.lines().collect();
+    let b_lines: Vec<&str> = b.lines().collect();
+    let mut out = String::new();
+    let max = a_lines.len().max(b_lines.len());
+    for i in 0..max {
+        let la = a_lines.get(i).copied().unwrap_or("");
+        let lb = b_lines.get(i).copied().unwrap_or("");
+        if la != lb {
+            if !la.is_empty() {
+                out.push_str(&format!("- {la}\n"));
+            }
+            if !lb.is_empty() {
+                out.push_str(&format!("+ {lb}\n"));
+            }
+        }
+    }
+    if out.is_empty() {
+        out.push_str("(no structural change)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+
+    #[test]
+    fn render_is_deterministic() {
+        let g = seeds::human_oracle();
+        assert_eq!(render_hip_sketch(&g), render_hip_sketch(&g));
+    }
+
+    #[test]
+    fn render_reflects_features() {
+        let s = render_hip_sketch(&seeds::human_oracle());
+        assert!(s.contains("rocwmma::mma_sync"));
+        assert!(s.contains("_ping, _pong"));
+        assert!(s.contains("cooperative_store_tile"));
+        assert!(s.contains("__hip_fp8_e4m3_fnuz"));
+        let n = render_hip_sketch(&seeds::naive_hip());
+        assert!(n.contains("scalar FMA"));
+        assert!(n.contains("no LDS staging"));
+    }
+
+    #[test]
+    fn diff_empty_for_identical() {
+        let g = seeds::mfma_seed();
+        assert_eq!(diff_sketches(&g, &g), "(no structural change)\n");
+    }
+
+    #[test]
+    fn diff_marks_changes() {
+        let base = seeds::mfma_seed();
+        let mut child = base.clone();
+        child.block_m = 64;
+        let d = diff_sketches(&base, &child);
+        assert!(d.contains("- #define TB_M 32"));
+        assert!(d.contains("+ #define TB_M 64"));
+    }
+}

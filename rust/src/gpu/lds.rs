@@ -1,0 +1,127 @@
+//! LDS (Local Data Share) bank-conflict and pressure model.
+//!
+//! CDNA3 LDS has 32 banks of 4 bytes. Row-major tiles whose row pitch
+//! is a multiple of the bank stride serialize column accesses — the
+//! classic conflict the paper's designer repeatedly targets ("LDS Bank
+//! Conflict Mitigation for A/B Data: analyze and re-pad shared
+//! memory...", App. A.2). The two standard cures, row padding and
+//! XOR swizzling, are genome axes.
+
+use crate::genome::{ComputePath, KernelGenome, Swizzle};
+
+/// Number of LDS banks (4-byte wide each).
+pub const NUM_BANKS: u32 = 32;
+
+/// Average access serialization factor (1.0 = conflict-free; N = every
+/// access N-way serialized).
+pub fn conflict_factor(g: &KernelGenome) -> f64 {
+    if !g.lds_staging {
+        return 1.0; // no LDS use at all
+    }
+    if g.swizzle == Swizzle::Xor {
+        // XOR swizzle fully de-conflicts strided column walks.
+        return 1.0;
+    }
+    let elt = crate::gpu::GpuArch::operand_elt_bytes(g);
+    // Row pitch in bytes, including padding.
+    let pitch = (g.block_k + g.lds_pad) * elt;
+    // Column walk stride in banks; pitch that is a multiple of the full
+    // bank span (128 B) lands every row on the same bank.
+    let span = NUM_BANKS * 4;
+    let rem = pitch % span;
+    if rem == 0 {
+        // Worst case: ways limited by wavefront quarter (16-lane phase).
+        4.0
+    } else if rem % 64 == 0 {
+        2.0
+    } else if rem % 32 == 0 {
+        1.5
+    } else {
+        // Odd/unaligned pitch: effectively conflict-free, tiny cost for
+        // the wasted padding bandwidth.
+        1.0 + (g.lds_pad as f64 / g.block_k as f64) * 0.5
+    }
+}
+
+/// Fraction of compute time spent waiting on LDS ports if the compute
+/// pipe were never starved — the "LDS pressure" multiplier. Matrix
+/// fragments amortize LDS reads across a whole wave; scalar paths
+/// re-read per lane.
+pub fn pressure(g: &KernelGenome) -> f64 {
+    if !g.lds_staging {
+        return 0.0;
+    }
+    let path = match g.compute {
+        ComputePath::Mfma => 0.25,
+        ComputePath::Vectorized => 0.5,
+        ComputePath::Scalar => 1.0,
+    };
+    path * conflict_factor(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{seeds, KernelGenome};
+
+    fn staged(block_k: u32, lds_pad: u32, swizzle: Swizzle) -> KernelGenome {
+        KernelGenome {
+            block_k,
+            lds_pad,
+            swizzle,
+            lds_staging: true,
+            ..seeds::mfma_seed()
+        }
+    }
+
+    #[test]
+    fn unpadded_pow2_pitch_conflicts() {
+        // fp8, block_k=128 -> pitch 128 B = full bank span -> 4-way.
+        let g = staged(128, 0, Swizzle::None);
+        assert_eq!(conflict_factor(&g), 4.0);
+    }
+
+    #[test]
+    fn padding_removes_conflicts() {
+        let bad = staged(128, 0, Swizzle::None);
+        let padded = staged(128, 4, Swizzle::None);
+        assert!(conflict_factor(&padded) < conflict_factor(&bad));
+        assert!(conflict_factor(&padded) < 1.1);
+    }
+
+    #[test]
+    fn swizzle_removes_conflicts() {
+        let g = staged(128, 0, Swizzle::Xor);
+        assert_eq!(conflict_factor(&g), 1.0);
+    }
+
+    #[test]
+    fn no_staging_no_pressure() {
+        let g = seeds::naive_hip();
+        assert_eq!(pressure(&g), 0.0);
+        assert_eq!(conflict_factor(&g), 1.0);
+    }
+
+    #[test]
+    fn mfma_amortizes_lds_reads() {
+        let mfma = staged(64, 4, Swizzle::None);
+        let scalar = KernelGenome {
+            compute: ComputePath::Scalar,
+            precision: crate::genome::Precision::Fp32,
+            ..staged(64, 4, Swizzle::None)
+        };
+        assert!(pressure(&mfma) < pressure(&scalar));
+    }
+
+    #[test]
+    fn fp16_half_pitch_conflicts_differ() {
+        // fp16 (2B): block_k=64 -> pitch 128 B -> 4-way conflicts.
+        let mut g = staged(64, 0, Swizzle::None);
+        g.precision = crate::genome::Precision::Fp16;
+        assert_eq!(conflict_factor(&g), 4.0);
+        // block_k=32 -> pitch 64 -> rem 64 -> 2-way
+        let mut g2 = staged(32, 0, Swizzle::None);
+        g2.precision = crate::genome::Precision::Fp16;
+        assert_eq!(conflict_factor(&g2), 2.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Global-memory system model: HBM + infinity-cache traffic for the
+//! tiled GEMM, load coalescing, and writeback efficiency.
+//!
+//! The block-tiled GEMM's DRAM traffic is the textbook expression:
+//! every A tile is re-read once per column of output tiles and every B
+//! tile once per row, so traffic shrinks with larger block_n/block_m —
+//! that is what makes tile-size experiments matter. The MI300's large
+//! infinity cache absorbs part of the re-read traffic; the grid
+//! mapping decides how much locality neighbouring workgroups share
+//! (the paper avenue "Padding Global Memory Inputs / L2-friendly
+//! mappings").
+
+use super::GpuArch;
+use crate::genome::{GridMapping, KernelGenome, ScaleCache, Writeback};
+use crate::workload::GemmConfig;
+
+/// Coalescing efficiency of global loads by per-lane vector width.
+pub fn coalescing_efficiency(vector_width: u32) -> f64 {
+    match vector_width {
+        1 => 0.25,
+        2 => 0.45,
+        4 => 0.70,
+        8 => 0.90,
+        _ => 1.0, // 16-byte dwordx4
+    }
+}
+
+/// Fraction of operand re-read traffic served by the infinity cache
+/// rather than HBM, per grid mapping.
+pub fn l2_hit_fraction(g: &KernelGenome, cfg: &GemmConfig, arch: &GpuArch) -> f64 {
+    // Working set of one "row" of output tiles: the A stripe plus all
+    // B tiles it touches. If it fits in L2, re-reads hit.
+    let elt = GpuArch::operand_elt_bytes(g) as f64;
+    let a_stripe = g.block_m as f64 * cfg.k as f64 * elt;
+    let b_full = cfg.k as f64 * cfg.n as f64 * elt;
+    let ws_mib = (a_stripe + b_full) / (1024.0 * 1024.0);
+    let base = if ws_mib <= arch.l2_mib { 0.85 } else { arch.l2_mib / ws_mib * 0.85 };
+    match g.grid_mapping {
+        GridMapping::RowMajor => base,
+        GridMapping::ColMajor => base * 0.92,
+        GridMapping::TileSwizzled => (base * 1.15).min(0.95),
+    }
+}
+
+/// Total operand bytes that leave HBM (after cache), one kernel run.
+pub fn hbm_operand_traffic(g: &KernelGenome, cfg: &GemmConfig, arch: &GpuArch) -> f64 {
+    let elt = GpuArch::operand_elt_bytes(g) as f64;
+    let (m, k, n) = (cfg.m as f64, cfg.k as f64, cfg.n as f64);
+    let tiles_n = (cfg.n / g.block_n).max(1) as f64;
+    let tiles_m = (cfg.m / g.block_m).max(1) as f64;
+    // Tiled re-read traffic (LDS staging makes each element of a tile
+    // loaded exactly once per owning workgroup).
+    let mut a_traffic = m * k * elt * tiles_n;
+    let mut b_traffic = k * n * elt * tiles_m;
+    if !g.lds_staging {
+        // Without staging each lane re-fetches operands itself; caches
+        // absorb some but redundancy is large.
+        a_traffic *= 2.0;
+        b_traffic *= 2.0;
+    }
+    let hit = l2_hit_fraction(g, cfg, arch);
+    // Cold capacity misses: each matrix must leave HBM at least once.
+    let cold = (m * k + k * n) * elt;
+    ((a_traffic + b_traffic) * (1.0 - hit)).max(cold)
+}
+
+/// Scale-vector traffic (per-row A scales + per-col B scales, f32).
+pub fn scale_traffic(g: &KernelGenome, cfg: &GemmConfig) -> f64 {
+    let per_tile = (g.block_m + g.block_n) as f64 * 4.0;
+    let tiles = (cfg.m / g.block_m).max(1) as f64 * (cfg.n / g.block_n).max(1) as f64;
+    match g.scale_cache {
+        // Re-read on every k-step of every tile: pure waste.
+        ScaleCache::GlobalReload => {
+            let k_steps = (cfg.k / g.block_k).max(1) as f64;
+            per_tile * tiles * k_steps
+        }
+        // Loaded once per tile into (dedicated or re-purposed) LDS.
+        ScaleCache::Lds | ScaleCache::LdsRepurposed => per_tile * tiles,
+    }
+}
+
+/// Output writeback time, microseconds. Single-wave writeback leaves
+/// (waves-1)/waves of the block's store bandwidth idle (App. A.3
+/// trades this for race-freedom; the A.2 experiment makes it
+/// cooperative).
+pub fn writeback_us(g: &KernelGenome, cfg: &GemmConfig, arch: &GpuArch) -> f64 {
+    let bytes = cfg.output_bytes();
+    let eff = match g.writeback {
+        Writeback::Cooperative => 0.95,
+        Writeback::SingleWave => 0.95 / g.waves_per_block as f64,
+    };
+    bytes / (arch.hbm_tbps * 1e6 * eff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{seeds, KernelGenome};
+    use crate::gpu::MI300;
+
+    const CFG: GemmConfig = GemmConfig::new(4096, 1024, 4096);
+
+    #[test]
+    fn coalescing_monotone() {
+        let widths = [1, 2, 4, 8, 16];
+        for w in widths.windows(2) {
+            assert!(coalescing_efficiency(w[0]) < coalescing_efficiency(w[1]));
+        }
+    }
+
+    #[test]
+    fn bigger_tiles_less_traffic() {
+        let small = KernelGenome {
+            block_m: 32,
+            block_n: 32,
+            ..seeds::human_oracle()
+        };
+        let big = KernelGenome {
+            block_m: 256,
+            block_n: 128,
+            ..seeds::human_oracle()
+        };
+        assert!(
+            hbm_operand_traffic(&big, &CFG, &MI300)
+                < hbm_operand_traffic(&small, &CFG, &MI300)
+        );
+    }
+
+    #[test]
+    fn no_staging_multiplies_traffic() {
+        let staged = seeds::mfma_seed();
+        let unstaged = KernelGenome {
+            lds_staging: false,
+            double_buffer: false,
+            scale_cache: ScaleCache::GlobalReload,
+            ..staged.clone()
+        };
+        assert!(
+            hbm_operand_traffic(&unstaged, &CFG, &MI300)
+                >= 1.9 * hbm_operand_traffic(&staged, &CFG, &MI300)
+        );
+    }
+
+    #[test]
+    fn traffic_at_least_cold_misses() {
+        let g = seeds::human_oracle();
+        let elt = GpuArch::operand_elt_bytes(&g) as f64;
+        let cold = (CFG.m as f64 * CFG.k as f64 + CFG.k as f64 * CFG.n as f64) * elt;
+        assert!(hbm_operand_traffic(&g, &CFG, &MI300) >= cold);
+    }
+
+    #[test]
+    fn tile_swizzle_improves_l2() {
+        let row = KernelGenome {
+            grid_mapping: GridMapping::RowMajor,
+            ..seeds::human_oracle()
+        };
+        let swz = KernelGenome {
+            grid_mapping: GridMapping::TileSwizzled,
+            ..seeds::human_oracle()
+        };
+        assert!(l2_hit_fraction(&swz, &CFG, &MI300) > l2_hit_fraction(&row, &CFG, &MI300));
+    }
+
+    #[test]
+    fn scale_reload_costs_more() {
+        let reload = KernelGenome {
+            scale_cache: ScaleCache::GlobalReload,
+            ..seeds::human_oracle()
+        };
+        let cached = KernelGenome {
+            scale_cache: ScaleCache::LdsRepurposed,
+            ..seeds::human_oracle()
+        };
+        assert!(scale_traffic(&reload, &CFG) > scale_traffic(&cached, &CFG));
+    }
+
+    #[test]
+    fn single_wave_writeback_slower() {
+        let single = KernelGenome {
+            writeback: Writeback::SingleWave,
+            waves_per_block: 4,
+            ..seeds::human_oracle()
+        };
+        let coop = KernelGenome {
+            writeback: Writeback::Cooperative,
+            waves_per_block: 4,
+            ..seeds::human_oracle()
+        };
+        assert!(writeback_us(&single, &CFG, &MI300) > writeback_us(&coop, &CFG, &MI300));
+    }
+}

@@ -1,0 +1,155 @@
+//! Matrix-core (MFMA) pipe model: tile-shape alignment and inner-loop
+//! pipelining efficiency.
+//!
+//! CDNA3's fp8 MFMA primitive is 32x32x16 (the shape the paper's
+//! evolved kernel configures, App. A.3). Block tiles that are not
+//! multiples of the primitive waste lanes; shallow k-loop unrolling
+//! starves the pipe between dependent MFMAs; extreme unrolling burns
+//! registers. The paper's avenue list targets exactly these knobs
+//! ("Fine-tune Tile Sizes (TB_M, TB_N, TB_K)", "Register Pressure
+//! Management").
+
+use crate::genome::{ComputePath, KernelGenome};
+
+/// MFMA primitive shape for fp8/fp16 on this architecture.
+pub const MFMA_M: u32 = 32;
+pub const MFMA_N: u32 = 32;
+pub const MFMA_K: u32 = 16;
+
+/// Fraction of matrix-pipe peak reachable with the genome's tile
+/// shape: penalty when tiles don't wrap the primitive evenly.
+pub fn tile_alignment_efficiency(g: &KernelGenome) -> f64 {
+    if g.compute != ComputePath::Mfma {
+        return 1.0; // vector/scalar paths have no fragment constraint
+    }
+    let mut eff = 1.0;
+    if g.block_m % MFMA_M != 0 {
+        eff *= 0.55;
+    }
+    if g.block_n % MFMA_N != 0 {
+        eff *= 0.55;
+    }
+    if g.block_k % MFMA_K != 0 {
+        eff *= 0.70;
+    }
+    // Very small tiles can't fill the fragment pipeline.
+    if g.block_m * g.block_n < MFMA_M * MFMA_N * 4 {
+        eff *= 0.80;
+    }
+    eff
+}
+
+/// Inner-loop issue efficiency from k-unrolling: dependent MFMAs stall
+/// the pipe at unroll 1; unroll 4 keeps it full; unroll 8 starts to
+/// thrash registers/instruction cache.
+pub fn unroll_efficiency(g: &KernelGenome) -> f64 {
+    match g.unroll_k {
+        1 => 0.70,
+        2 => 0.85,
+        4 => 0.96,
+        _ => 0.90, // 8
+    }
+}
+
+/// Loop-order efficiency: hoisting k to the outer loop forces the
+/// accumulator to make round-trips (or C to be re-read), costing both
+/// pipes; the k-innermost order is the natural GEMM structure.
+pub fn loop_order_efficiency(g: &KernelGenome) -> f64 {
+    if g.k_innermost {
+        1.0
+    } else {
+        0.72
+    }
+}
+
+/// Accumulator-placement efficiency: read-modify-write accumulation
+/// through memory pays latency every k step.
+pub fn accumulator_efficiency(g: &KernelGenome) -> f64 {
+    if g.acc_in_regs {
+        1.0
+    } else {
+        0.45
+    }
+}
+
+/// Compiler-scheduled vs hand-scheduled MFMA issue: without ISA-level
+/// software pipelining, dependent MFMA chains and VALU/MFMA co-issue
+/// hazards cap the matrix pipe well below peak. The competition's top
+/// human kernels recovered this with hand-written assembly — a
+/// technique that needs hardware access + ISA docs, so it sits outside
+/// the scientist-reachable genome space (`isa_scheduling` has no edit
+/// operator; only the human-oracle seed carries it).
+pub fn issue_scheduling_efficiency(g: &KernelGenome) -> f64 {
+    if g.compute != ComputePath::Mfma || g.isa_scheduling {
+        1.0
+    } else {
+        0.22
+    }
+}
+
+/// Combined compute-pipe efficiency (excluding occupancy effects,
+/// which `occupancy::compute_issue_efficiency` owns).
+pub fn pipe_efficiency(g: &KernelGenome) -> f64 {
+    tile_alignment_efficiency(g)
+        * unroll_efficiency(g)
+        * loop_order_efficiency(g)
+        * accumulator_efficiency(g)
+        * issue_scheduling_efficiency(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{seeds, KernelGenome};
+
+    #[test]
+    fn oracle_tiles_fully_aligned() {
+        assert_eq!(tile_alignment_efficiency(&seeds::human_oracle()), 1.0);
+    }
+
+    #[test]
+    fn misaligned_tiles_penalized() {
+        let g = KernelGenome {
+            block_m: 16, // not a multiple of MFMA_M=32
+            ..seeds::mfma_seed()
+        };
+        assert!(tile_alignment_efficiency(&g) < 0.6);
+    }
+
+    #[test]
+    fn non_mfma_unaffected_by_alignment() {
+        let g = KernelGenome {
+            block_m: 16,
+            ..seeds::naive_hip()
+        };
+        assert_eq!(tile_alignment_efficiency(&g), 1.0);
+    }
+
+    #[test]
+    fn unroll_sweet_spot_at_four() {
+        let mk = |u: u32| KernelGenome {
+            unroll_k: u,
+            ..seeds::mfma_seed()
+        };
+        assert!(unroll_efficiency(&mk(4)) > unroll_efficiency(&mk(1)));
+        assert!(unroll_efficiency(&mk(4)) > unroll_efficiency(&mk(8)));
+    }
+
+    #[test]
+    fn k_outer_penalized() {
+        let inner = seeds::mfma_seed();
+        let outer = KernelGenome {
+            k_innermost: false,
+            ..inner.clone()
+        };
+        assert!(loop_order_efficiency(&outer) < loop_order_efficiency(&inner));
+    }
+
+    #[test]
+    fn pipe_efficiency_in_unit_interval() {
+        for (_, g) in seeds::all_seeds() {
+            let e = pipe_efficiency(&g);
+            assert!(e > 0.0 && e <= 1.0, "{e}");
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! MI300-class (CDNA3-like) GPU architecture model.
+//!
+//! The paper's evaluation platform runs on real MI300 hardware that we
+//! do not have; this module is the mechanistic model underneath the
+//! timing simulator (`sim/`). It is **not** a cycle-accurate CDNA3
+//! simulator — it is the same class of model a kernel engineer uses on
+//! paper: peak pipes, bandwidths, occupancy limits, bank-conflict
+//! multipliers — with constants close to public MI300X figures.
+//! `sim::calibration` pins the end-to-end outputs to Table-1
+//! magnitudes; the *relative* responses to genome changes are what the
+//! scientist loop observes, and those come from the structure here.
+
+pub mod lds;
+pub mod memory;
+pub mod mfma;
+pub mod occupancy;
+
+use crate::genome::KernelGenome;
+
+/// Architecture constants (MI300X-flavoured).
+#[derive(Debug, Clone)]
+pub struct GpuArch {
+    pub name: &'static str,
+    /// Compute units.
+    pub num_cus: u32,
+    /// Shader clock, GHz.
+    pub clock_ghz: f64,
+    /// Peak matrix-pipe throughput, TFLOP/s, by operand precision.
+    pub mfma_fp8_tflops: f64,
+    pub mfma_fp16_tflops: f64,
+    /// Peak vector-pipe throughput, TFLOP/s.
+    pub vector_fp32_tflops: f64,
+    /// Effective scalar-issue throughput, TFLOP/s (un-vectorized FMAs).
+    pub scalar_tflops: f64,
+    /// HBM bandwidth, TB/s.
+    pub hbm_tbps: f64,
+    /// Infinity-cache / L2 bandwidth, TB/s (serves re-reads).
+    pub l2_tbps: f64,
+    /// L2 / infinity cache capacity, MiB.
+    pub l2_mib: f64,
+    /// Aggregate LDS bandwidth, TB/s.
+    pub lds_tbps: f64,
+    /// LDS bytes per workgroup.
+    pub lds_bytes: u32,
+    /// Wave slots per CU (resident waves for latency hiding).
+    pub wave_slots_per_cu: u32,
+    /// VGPRs per lane.
+    pub vgprs_per_lane: u32,
+    /// Kernel launch overhead, microseconds.
+    pub launch_overhead_us: f64,
+    /// Workgroup dispatch rate, workgroups per microsecond.
+    pub dispatch_rate_per_us: f64,
+}
+
+/// The default MI300X-like target.
+pub const MI300: GpuArch = GpuArch {
+    name: "mi300-sim",
+    num_cus: 304,
+    clock_ghz: 2.1,
+    mfma_fp8_tflops: 2614.0,
+    mfma_fp16_tflops: 1307.0,
+    vector_fp32_tflops: 163.4,
+    scalar_tflops: 55.0,
+    hbm_tbps: 5.3,
+    l2_tbps: 17.0,
+    l2_mib: 256.0,
+    lds_tbps: 130.0,
+    lds_bytes: 64 * 1024,
+    wave_slots_per_cu: 32,
+    vgprs_per_lane: 512,
+    launch_overhead_us: 4.0,
+    dispatch_rate_per_us: 128.0,
+};
+
+impl GpuArch {
+    /// Peak TFLOP/s for a genome's compute+precision path.
+    pub fn peak_tflops(&self, g: &KernelGenome) -> f64 {
+        use crate::genome::{ComputePath, Precision};
+        match (g.compute, g.precision) {
+            (ComputePath::Mfma, Precision::Fp8) => self.mfma_fp8_tflops,
+            (ComputePath::Mfma, Precision::Fp16) => self.mfma_fp16_tflops,
+            // MFMA+fp32 is rejected by validation; unreachable in sim.
+            (ComputePath::Mfma, Precision::Fp32) => self.vector_fp32_tflops,
+            (ComputePath::Vectorized, Precision::Fp32) => self.vector_fp32_tflops,
+            // packed fp16/fp8 vector ops double f32 vector rate
+            (ComputePath::Vectorized, _) => self.vector_fp32_tflops * 1.3,
+            (ComputePath::Scalar, _) => self.scalar_tflops,
+        }
+    }
+
+    /// Bytes per operand element for a precision path.
+    pub fn operand_elt_bytes(g: &KernelGenome) -> u32 {
+        use crate::genome::Precision;
+        match g.precision {
+            Precision::Fp32 => 4,
+            Precision::Fp16 => 2,
+            Precision::Fp8 => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+
+    #[test]
+    fn mi300_constants_sane() {
+        assert!(MI300.mfma_fp8_tflops > MI300.mfma_fp16_tflops);
+        assert!(MI300.mfma_fp16_tflops > MI300.vector_fp32_tflops);
+        assert!(MI300.vector_fp32_tflops > MI300.scalar_tflops);
+        assert!(MI300.l2_tbps > MI300.hbm_tbps);
+        assert!(MI300.lds_tbps > MI300.l2_tbps);
+    }
+
+    #[test]
+    fn peak_ranking_matches_paths() {
+        let oracle = seeds::human_oracle(); // MFMA fp8
+        let naive = seeds::naive_hip(); // scalar f32
+        let lib = seeds::pytorch_reference(); // vectorized fp16
+        let p_oracle = MI300.peak_tflops(&oracle);
+        let p_lib = MI300.peak_tflops(&lib);
+        let p_naive = MI300.peak_tflops(&naive);
+        assert!(p_oracle > p_lib && p_lib > p_naive);
+    }
+
+    #[test]
+    fn elt_bytes() {
+        assert_eq!(GpuArch::operand_elt_bytes(&seeds::naive_hip()), 4);
+        assert_eq!(GpuArch::operand_elt_bytes(&seeds::human_oracle()), 1);
+        assert_eq!(GpuArch::operand_elt_bytes(&seeds::pytorch_reference()), 2);
+    }
+}

@@ -1,0 +1,163 @@
+//! Workgroup occupancy: how many waves a CU can keep resident for a
+//! given genome, and the latency-hiding efficiency that follows.
+//!
+//! Mirrors the standard CDNA occupancy calculation: residency is the
+//! min over LDS-capacity, VGPR-budget, and wave-slot limits. The
+//! paper's Experiment Designer proposes occupancy experiments
+//! ("Increase Thread Block Occupancy: explore larger TBLOCK_X_DIM
+//! values", App. A.2) — this model is what makes those experiments
+//! *mean* something in the simulator.
+
+use super::GpuArch;
+use crate::genome::KernelGenome;
+
+/// Occupancy summary for one genome on one architecture.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Occupancy {
+    /// Co-resident workgroups per CU.
+    pub workgroups_per_cu: u32,
+    /// Resident waves per CU (workgroups x waves/block, capped).
+    pub waves_per_cu: u32,
+    /// Which resource bound: "lds" | "vgpr" | "slots".
+    pub limiter: &'static str,
+}
+
+/// Compute occupancy for a genome.
+pub fn occupancy(arch: &GpuArch, g: &KernelGenome) -> Occupancy {
+    let lds = g.lds_bytes();
+    let by_lds = if lds == 0 {
+        u32::MAX
+    } else {
+        arch.lds_bytes / lds.max(1)
+    };
+    let vgprs = g.vgprs_per_lane().max(1);
+    let by_vgpr = arch.vgprs_per_lane / vgprs;
+    let by_slots = arch.wave_slots_per_cu / g.waves_per_block;
+    let wg = by_lds.min(by_vgpr).min(by_slots).max(0);
+    let limiter = if wg == by_lds && lds > 0 {
+        "lds"
+    } else if wg == by_vgpr {
+        "vgpr"
+    } else {
+        "slots"
+    };
+    let wg = wg.min(16); // hardware workgroup-residency cap
+    let waves = (wg * g.waves_per_block).min(arch.wave_slots_per_cu);
+    Occupancy {
+        workgroups_per_cu: wg,
+        waves_per_cu: waves,
+        limiter,
+    }
+}
+
+/// Memory-latency-hiding efficiency from resident waves: one wave
+/// hides almost nothing; ~16 waves hide essentially all HBM latency.
+pub fn memory_latency_efficiency(occ: &Occupancy) -> f64 {
+    let w = occ.waves_per_cu as f64;
+    (0.30 + 0.70 * (w / 16.0).min(1.0)).min(1.0)
+}
+
+/// Compute-issue efficiency from resident waves: the matrix/vector
+/// pipes need ~4 waves to stay fed through LDS/issue stalls.
+pub fn compute_issue_efficiency(occ: &Occupancy) -> f64 {
+    let w = occ.waves_per_cu as f64;
+    (0.55 + 0.45 * (w / 4.0).min(1.0)).min(1.0)
+}
+
+/// Grid-level utilization: fraction of CUs doing useful work, with a
+/// tail-quantization penalty when the workgroup count barely exceeds a
+/// multiple of the machine width.
+pub fn grid_utilization(arch: &GpuArch, occ: &Occupancy, total_workgroups: u64) -> f64 {
+    let width = (arch.num_cus as u64 * occ.workgroups_per_cu.max(1) as u64).max(1);
+    if total_workgroups == 0 {
+        return 1.0;
+    }
+    if total_workgroups < width {
+        return total_workgroups as f64 / width as f64;
+    }
+    let full_rounds = total_workgroups / width;
+    let tail = total_workgroups % width;
+    let rounds = full_rounds as f64 + if tail > 0 { tail as f64 / width as f64 } else { 0.0 };
+    let ceil_rounds = full_rounds as f64 + if tail > 0 { 1.0 } else { 0.0 };
+    rounds / ceil_rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{seeds, KernelGenome, ScaleCache};
+    use crate::gpu::MI300;
+
+    #[test]
+    fn naive_kernel_not_lds_limited() {
+        let occ = occupancy(&MI300, &seeds::naive_hip());
+        assert_ne!(occ.limiter, "lds");
+        assert!(occ.workgroups_per_cu >= 1);
+    }
+
+    #[test]
+    fn bigger_lds_reduces_workgroups() {
+        let single = KernelGenome {
+            double_buffer: false,
+            scale_cache: ScaleCache::GlobalReload,
+            ..seeds::human_oracle()
+        };
+        let double = KernelGenome {
+            double_buffer: true,
+            ..single.clone()
+        };
+        let o1 = occupancy(&MI300, &single);
+        let o2 = occupancy(&MI300, &double);
+        assert!(o2.workgroups_per_cu <= o1.workgroups_per_cu);
+    }
+
+    #[test]
+    fn more_waves_hide_more_latency() {
+        let low = Occupancy {
+            workgroups_per_cu: 1,
+            waves_per_cu: 1,
+            limiter: "slots",
+        };
+        let high = Occupancy {
+            workgroups_per_cu: 4,
+            waves_per_cu: 16,
+            limiter: "slots",
+        };
+        assert!(memory_latency_efficiency(&high) > memory_latency_efficiency(&low));
+        assert!(compute_issue_efficiency(&high) > compute_issue_efficiency(&low));
+        assert!(memory_latency_efficiency(&high) <= 1.0);
+    }
+
+    #[test]
+    fn grid_utilization_small_grid_penalized() {
+        let occ = Occupancy {
+            workgroups_per_cu: 2,
+            waves_per_cu: 8,
+            limiter: "slots",
+        };
+        let small = grid_utilization(&MI300, &occ, 100);
+        let large = grid_utilization(&MI300, &occ, 1_000_000);
+        assert!(small < 0.25);
+        assert!(large > 0.99);
+    }
+
+    #[test]
+    fn grid_utilization_tail_quantization() {
+        let occ = Occupancy {
+            workgroups_per_cu: 1,
+            waves_per_cu: 4,
+            limiter: "slots",
+        };
+        // exactly one round vs one round + 1 workgroup
+        let exact = grid_utilization(&MI300, &occ, MI300.num_cus as u64);
+        let tail = grid_utilization(&MI300, &occ, MI300.num_cus as u64 + 1);
+        assert!((exact - 1.0).abs() < 1e-9);
+        assert!(tail < exact);
+    }
+
+    #[test]
+    fn occupancy_deterministic() {
+        let g = seeds::mfma_seed();
+        assert_eq!(occupancy(&MI300, &g), occupancy(&MI300, &g));
+    }
+}

@@ -1,0 +1,246 @@
+//! `kernel-scientist` — the leader entrypoint.
+//!
+//! Subcommands:
+//!   run         run the scientist loop on the simulated MI300 platform
+//!   table1      regenerate the paper's Table 1 comparison
+//!   leaderboard score the canonical genomes on the 18-size suite
+//!   baseline    run a baseline tuner (random | hillclimb | anneal)
+//!   inspect     print a genome's HIP-like sketch + simulator breakdown
+//!   eval-pjrt   check + time the compiled artifact catalog over PJRT
+//!
+//! Arguments use `--key value` pairs (offline build: no clap; parsing
+//! is in-tree).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use gpu_kernel_scientist::baselines::{Annealer, HillClimber, RandomSearch, Tuner};
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::eval::{EvalPlatform, PlatformConfig};
+use gpu_kernel_scientist::genome::seeds;
+use gpu_kernel_scientist::gpu::MI300;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::report;
+use gpu_kernel_scientist::runtime::PjrtBackend;
+use gpu_kernel_scientist::sim::calibration;
+use gpu_kernel_scientist::{genome::render, sim};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let value = args.get(i + 1).cloned().unwrap_or_default();
+            map.insert(key.to_string(), value);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn load_config(flags: &HashMap<String, String>) -> Result<RunConfig, String> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            RunConfig::from_toml(&text)?
+        }
+        None => RunConfig::default(),
+    };
+    if let Some(seed) = flags.get("seed") {
+        cfg.seed = seed.parse().map_err(|_| "bad --seed")?;
+    }
+    if let Some(budget) = flags.get("budget") {
+        cfg.max_submissions = budget.parse().map_err(|_| "bad --budget")?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = load_config(flags)?;
+    println!(
+        "scientist run: seed={} budget={} backend=mi300-sim",
+        cfg.seed, cfg.max_submissions
+    );
+    let mut run = ScientistRun::new(cfg)?;
+    let outcome = run.run_to_completion()?;
+    for log in &run.logs {
+        println!("{}", report::render_iteration(log));
+    }
+    println!(
+        "\nbest kernel {}: feedback geomean {:.1} us (leaderboard {:.1} us) \
+         after {} submissions ({:.0} simulated-minutes of platform time)",
+        outcome.best_id,
+        outcome.best_geomean_us,
+        outcome.leaderboard_us.unwrap_or(f64::NAN),
+        outcome.submissions,
+        outcome.wall_clock_s / 60.0
+    );
+    println!("{}", report::render_convergence("scientist", &outcome.curve));
+    if flags.contains_key("lineage") {
+        println!("== lineage ==\n{}", report::lineage::render_tree(&run.population));
+    }
+    let d = report::lineage::diversity(&run.population);
+    println!(
+        "population diversity: {:.0}% unique, mean pairwise distance {:.1} axes, \
+         {} axes explored, max lineage depth {}",
+        d.unique_fraction * 100.0,
+        d.mean_hamming,
+        d.axes_explored,
+        d.max_depth
+    );
+    if let Some(path) = flags.get("save-population") {
+        run.population
+            .save(Path::new(path))
+            .map_err(|e| e.to_string())?;
+        println!("population saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = load_config(flags)?;
+    let mut rows: Vec<report::TableRow> = calibration::table1_rows(&MI300)
+        .into_iter()
+        .filter(|(l, _, _)| !l.starts_with("This work"))
+        .map(|(label, paper, sim)| report::TableRow {
+            label: label.to_string(),
+            paper_us: Some(paper),
+            measured_us: sim,
+            comment: "canonical genome on mi300-sim".into(),
+        })
+        .collect();
+    println!("running the scientist loop for the 'This work' row...");
+    let mut run = ScientistRun::new(cfg)?;
+    let outcome = run.run_to_completion()?;
+    rows.push(report::TableRow {
+        label: "This work (scientist run)".into(),
+        paper_us: Some(450.0),
+        measured_us: outcome.leaderboard_us.unwrap_or(outcome.best_geomean_us),
+        comment: format!("LLM-only, {} submissions", outcome.submissions),
+    });
+    println!(
+        "{}",
+        report::render_table("Table 1 — AMD Developer Challenge summary", &rows)
+    );
+    Ok(())
+}
+
+fn cmd_leaderboard() -> Result<(), String> {
+    println!("18-size leaderboard geomeans (noiseless mi300-sim):");
+    for (name, g) in seeds::all_seeds() {
+        let score = calibration::leaderboard_geomean(&MI300, &g);
+        println!("  {name:20} {score:10.1} us");
+    }
+    Ok(())
+}
+
+fn cmd_baseline(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = load_config(flags)?;
+    let which = flags.get("tuner").map(String::as_str).unwrap_or("random");
+    let mut platform = EvalPlatform::new(
+        SimBackend::new(cfg.seed).with_noise(cfg.noise_sigma),
+        PlatformConfig::default(),
+    );
+    let outcome = match which {
+        "random" => RandomSearch { seed: cfg.seed }.run(&mut platform, cfg.max_submissions),
+        "hillclimb" => HillClimber {
+            seed: cfg.seed,
+            ..Default::default()
+        }
+        .run(&mut platform, cfg.max_submissions),
+        "anneal" => Annealer {
+            seed: cfg.seed,
+            ..Default::default()
+        }
+        .run(&mut platform, cfg.max_submissions),
+        other => return Err(format!("unknown --tuner '{other}'")),
+    };
+    println!(
+        "{}: best {:.1} us in {} submissions",
+        outcome.name, outcome.best_geomean_us, outcome.submissions
+    );
+    println!("{}", report::render_convergence(outcome.name, &outcome.curve));
+    Ok(())
+}
+
+fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), String> {
+    let which = flags
+        .get("seed-kernel")
+        .map(String::as_str)
+        .unwrap_or("mfma-seed");
+    let genome = seeds::all_seeds()
+        .into_iter()
+        .find(|(n, _)| *n == which)
+        .map(|(_, g)| g)
+        .ok_or_else(|| format!("unknown seed kernel '{which}'"))?;
+    println!("{}", render::render_hip_sketch(&genome));
+    println!("simulator breakdown on the feedback configs:");
+    for cfg in gpu_kernel_scientist::workload::FEEDBACK_CONFIGS {
+        let t = sim::estimate(&MI300, &genome, &cfg).map_err(|e| e.to_string())?;
+        println!(
+            "  {cfg}: {:9.1} us (compute {:8.1}, mem {:8.1}, wb {:6.1}, eff {:.3})",
+            t.total_us, t.compute_us, t.mem_us, t.writeback_us, t.compute_efficiency
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval_pjrt(flags: &HashMap<String, String>) -> Result<(), String> {
+    let dir = flags
+        .get("artifacts")
+        .map(String::as_str)
+        .unwrap_or("artifacts");
+    let mut backend = PjrtBackend::open(Path::new(dir)).map_err(|e| e.to_string())?;
+    let shapes = backend.shapes();
+    println!(
+        "catalog: {} entries over {} shapes",
+        backend.catalog().entries.len(),
+        shapes.len()
+    );
+    for cfg in &shapes {
+        let names: Vec<String> = backend
+            .catalog()
+            .variants_for(cfg)
+            .iter()
+            .map(|e| e.name.clone())
+            .collect();
+        for name in names {
+            match backend.verify(&name, cfg) {
+                Ok(()) => {
+                    let us = backend.time_entry(&name, cfg).map_err(|e| e.to_string())?;
+                    println!("  {name:45} OK   {us:10.1} us");
+                }
+                Err(e) => println!("  {name:45} FAIL {e}"),
+            }
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    let result = match cmd {
+        "run" => cmd_run(&flags),
+        "table1" => cmd_table1(&flags),
+        "leaderboard" => cmd_leaderboard(),
+        "baseline" => cmd_baseline(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "eval-pjrt" => cmd_eval_pjrt(&flags),
+        _ => {
+            eprintln!(
+                "usage: kernel-scientist <run|table1|leaderboard|baseline|inspect|eval-pjrt> [--lineage true] \
+                 [--seed N] [--budget N] [--config file.toml] [--tuner random|hillclimb|anneal] \
+                 [--seed-kernel name] [--artifacts dir] [--save-population file.jsonl]"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Statistics used across the platform: geometric mean (the
+//! competition's leaderboard metric), summary stats, and convergence
+//! tracking for the Figure-1 loop.
+
+
+/// Geometric mean — the leaderboard aggregation (§4.5). Panics on an
+/// empty slice; non-positive entries are clamped to a tiny epsilon
+/// (timings are always positive in practice).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "geomean of empty slice");
+    let log_sum: f64 = xs.iter().map(|&x| x.max(1e-12).ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// One point on a convergence curve: best leaderboard geomean after
+/// each evaluated submission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvergencePoint {
+    pub submission: usize,
+    pub best_geomean_us: f64,
+}
+
+/// Running best-so-far tracker producing the Figure-1 convergence
+/// series the benches emit.
+#[derive(Debug, Clone, Default)]
+pub struct ConvergenceCurve {
+    pub points: Vec<ConvergencePoint>,
+}
+
+impl ConvergenceCurve {
+    pub fn record(&mut self, submission: usize, geomean_us: f64) {
+        let best = self
+            .points
+            .last()
+            .map(|p| p.best_geomean_us.min(geomean_us))
+            .unwrap_or(geomean_us);
+        self.points.push(ConvergencePoint {
+            submission,
+            best_geomean_us: best,
+        });
+    }
+
+    pub fn best(&self) -> Option<f64> {
+        self.points.last().map(|p| p.best_geomean_us)
+    }
+
+    /// First submission index reaching `target_us`, if any.
+    pub fn first_reaching(&self, target_us: f64) -> Option<usize> {
+        self.points
+            .iter()
+            .find(|p| p.best_geomean_us <= target_us)
+            .map(|p| p.submission)
+    }
+
+    /// CSV rendering (`submission,best_geomean_us`).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("submission,best_geomean_us\n");
+        for p in &self.points {
+            s.push_str(&format!("{},{:.3}\n", p.submission, p.best_geomean_us));
+        }
+        s
+    }
+
+    /// Compact ASCII sparkline of best-so-far (log scale).
+    pub fn ascii_sparkline(&self, width: usize) -> String {
+        if self.points.is_empty() {
+            return String::new();
+        }
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let vals: Vec<f64> = self.points.iter().map(|p| p.best_geomean_us.ln()).collect();
+        let (lo, hi) = vals
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        let span = (hi - lo).max(1e-9);
+        let step = (vals.len() as f64 / width as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < vals.len() && out.chars().count() < width {
+            let v = vals[i as usize];
+            let idx = (((v - lo) / span) * 7.0).round() as usize;
+            out.push(BARS[idx.min(7)]);
+            i += step;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert!((geomean(&[5.0]) - 5.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_dominated_by_log_scale() {
+        // geometric mean is robust to one huge outlier vs arithmetic
+        let g = geomean(&[10.0, 10.0, 10.0, 10_000.0]);
+        let m = mean(&[10.0, 10.0, 10.0, 10_000.0]);
+        assert!(g < m / 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn geomean_empty_panics() {
+        geomean(&[]);
+    }
+
+    #[test]
+    fn stddev_and_percentile() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((mean(&xs) - 3.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.5811388).abs() < 1e-6);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 3.0).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn convergence_monotone_nonincreasing() {
+        let mut c = ConvergenceCurve::default();
+        for (i, t) in [500.0, 400.0, 450.0, 300.0, 350.0].iter().enumerate() {
+            c.record(i, *t);
+        }
+        let bests: Vec<f64> = c.points.iter().map(|p| p.best_geomean_us).collect();
+        assert_eq!(bests, vec![500.0, 400.0, 400.0, 300.0, 300.0]);
+        assert_eq!(c.best(), Some(300.0));
+        assert_eq!(c.first_reaching(400.0), Some(1));
+        assert_eq!(c.first_reaching(100.0), None);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut c = ConvergenceCurve::default();
+        c.record(0, 123.456);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("submission,best_geomean_us\n"));
+        assert!(csv.contains("0,123.456"));
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let mut c = ConvergenceCurve::default();
+        for i in 0..100 {
+            c.record(i, 5000.0 / (1.0 + i as f64));
+        }
+        let s = c.ascii_sparkline(40);
+        assert!(!s.is_empty());
+        assert!(s.chars().count() <= 40);
+    }
+}

@@ -1,0 +1,407 @@
+//! The kernel population: every submitted individual, its lineage, and
+//! its benchmark results.
+//!
+//! The paper's Evolutionary Selector sees "the members of the
+//! population ... identified by an ID, and the IDs of each of their
+//! 'parents' ..., as well as the benchmark results for 6 specified
+//! MxKxN input configurations" (§3.1). This module is exactly that
+//! ledger, plus lineage queries (ancestors, divergence points,
+//! per-config winners) and JSONL persistence so a run can resume.
+
+use crate::genome::KernelGenome;
+use crate::metrics::geomean;
+use crate::util::json::{self, Json};
+use crate::workload::GemmConfig;
+
+/// Outcome of one submission, as the platform reported it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EvalOutcome {
+    /// Correct kernel with per-config timings (microseconds), in the
+    /// feedback suite's config order.
+    Timings(Vec<f64>),
+    /// Rejected before running (compile/launch failure) with reason.
+    CompileFailure(String),
+    /// Ran but produced wrong results.
+    IncorrectResult(String),
+}
+
+impl EvalOutcome {
+    pub fn timings(&self) -> Option<&[f64]> {
+        match self {
+            EvalOutcome::Timings(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn is_success(&self) -> bool {
+        matches!(self, EvalOutcome::Timings(_))
+    }
+}
+
+/// One member of the population.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Individual {
+    /// Zero-padded sequential id ("00001"), as in App. A.1.
+    pub id: String,
+    /// Parent ids: `[base]` or `[base, reference]`; empty for seeds.
+    pub parents: Vec<String>,
+    pub genome: KernelGenome,
+    /// The experiment description that led to this kernel (seeds carry
+    /// their provenance instead).
+    pub experiment: String,
+    /// The Kernel Writer's self-report of techniques actually applied.
+    pub report: String,
+    pub outcome: EvalOutcome,
+}
+
+impl Individual {
+    /// Geomean of the feedback timings (None for failed submissions).
+    pub fn score(&self) -> Option<f64> {
+        self.outcome.timings().map(geomean)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let outcome = match &self.outcome {
+            EvalOutcome::Timings(t) => Json::obj(vec![
+                ("kind", Json::Str("timings".into())),
+                ("us", Json::Arr(t.iter().map(|&x| Json::Num(x)).collect())),
+            ]),
+            EvalOutcome::CompileFailure(msg) => Json::obj(vec![
+                ("kind", Json::Str("compile_failure".into())),
+                ("msg", Json::Str(msg.clone())),
+            ]),
+            EvalOutcome::IncorrectResult(msg) => Json::obj(vec![
+                ("kind", Json::Str("incorrect_result".into())),
+                ("msg", Json::Str(msg.clone())),
+            ]),
+        };
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            (
+                "parents",
+                Json::Arr(self.parents.iter().map(|p| Json::Str(p.clone())).collect()),
+            ),
+            ("genome", self.genome.to_json()),
+            ("experiment", Json::Str(self.experiment.clone())),
+            ("report", Json::Str(self.report.clone())),
+            ("outcome", outcome),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Individual, String> {
+        let id = v
+            .get("id")
+            .and_then(|x| x.as_str())
+            .ok_or("missing id")?
+            .to_string();
+        let parents = v
+            .get("parents")
+            .and_then(|x| x.as_arr())
+            .ok_or("missing parents")?
+            .iter()
+            .map(|p| p.as_str().map(String::from).ok_or("bad parent id"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let genome = KernelGenome::from_json(v.get("genome").ok_or("missing genome")?)?;
+        let experiment = v
+            .get("experiment")
+            .and_then(|x| x.as_str())
+            .unwrap_or("")
+            .to_string();
+        let report = v
+            .get("report")
+            .and_then(|x| x.as_str())
+            .unwrap_or("")
+            .to_string();
+        let o = v.get("outcome").ok_or("missing outcome")?;
+        let outcome = match o.get("kind").and_then(|x| x.as_str()) {
+            Some("timings") => EvalOutcome::Timings(
+                o.get("us")
+                    .and_then(|x| x.as_arr())
+                    .ok_or("missing us")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or("bad timing"))
+                    .collect::<Result<Vec<_>, _>>()?,
+            ),
+            Some("compile_failure") => EvalOutcome::CompileFailure(
+                o.get("msg").and_then(|x| x.as_str()).unwrap_or("").into(),
+            ),
+            Some("incorrect_result") => EvalOutcome::IncorrectResult(
+                o.get("msg").and_then(|x| x.as_str()).unwrap_or("").into(),
+            ),
+            _ => return Err("bad outcome kind".into()),
+        };
+        Ok(Individual {
+            id,
+            parents,
+            genome,
+            experiment,
+            report,
+            outcome,
+        })
+    }
+}
+
+/// The growing list of kernels (paper Fig. 1, right side).
+#[derive(Debug, Clone, Default)]
+pub struct Population {
+    members: Vec<Individual>,
+    /// The feedback configs the timing vectors are indexed by.
+    pub feedback_configs: Vec<GemmConfig>,
+    /// Fingerprint cache: set of genome fingerprints present, so the
+    /// writer's duplicate check is O(1) instead of re-rendering every
+    /// member's fingerprint per probe (perf pass, EXPERIMENTS.md §Perf).
+    fingerprints: std::collections::HashSet<String>,
+}
+
+impl Population {
+    pub fn new(feedback_configs: Vec<GemmConfig>) -> Self {
+        Population {
+            members: Vec::new(),
+            feedback_configs,
+            fingerprints: std::collections::HashSet::new(),
+        }
+    }
+
+    /// Next sequential id ("00001", "00002", ...).
+    pub fn next_id(&self) -> String {
+        format!("{:05}", self.members.len() + 1)
+    }
+
+    pub fn add(&mut self, ind: Individual) {
+        debug_assert!(self.by_id(&ind.id).is_none(), "duplicate id {}", ind.id);
+        self.fingerprints.insert(ind.genome.fingerprint());
+        self.members.push(ind);
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn members(&self) -> &[Individual] {
+        &self.members
+    }
+
+    pub fn by_id(&self, id: &str) -> Option<&Individual> {
+        self.members.iter().find(|m| m.id == id)
+    }
+
+    /// All members with successful timings.
+    pub fn successful(&self) -> Vec<&Individual> {
+        self.members.iter().filter(|m| m.outcome.is_success()).collect()
+    }
+
+    /// Best (lowest feedback geomean) successful member.
+    pub fn best(&self) -> Option<&Individual> {
+        self.successful()
+            .into_iter()
+            .min_by(|a, b| a.score().partial_cmp(&b.score()).unwrap())
+    }
+
+    /// Per-config winners: for each feedback config index, the id of
+    /// the member with the lowest timing there.
+    pub fn config_winners(&self) -> Vec<Option<String>> {
+        let n = self.feedback_configs.len();
+        let mut winners: Vec<Option<(String, f64)>> = vec![None; n];
+        for m in self.successful() {
+            if let Some(ts) = m.outcome.timings() {
+                for (i, &t) in ts.iter().enumerate().take(n) {
+                    if winners[i].as_ref().map(|(_, best)| t < *best).unwrap_or(true) {
+                        winners[i] = Some((m.id.clone(), t));
+                    }
+                }
+            }
+        }
+        winners.into_iter().map(|w| w.map(|(id, _)| id)).collect()
+    }
+
+    /// Ancestor chain of `id` (nearest first), following first parents.
+    pub fn ancestors(&self, id: &str) -> Vec<&Individual> {
+        let mut out: Vec<&Individual> = Vec::new();
+        let mut cur = self.by_id(id);
+        while let Some(ind) = cur {
+            if let Some(parent_id) = ind.parents.first() {
+                cur = self.by_id(parent_id);
+                if let Some(p) = cur {
+                    if out.iter().any(|x| x.id == p.id) {
+                        break; // cycle guard
+                    }
+                    out.push(p);
+                }
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Nearest common ancestor of two members, if any.
+    pub fn common_ancestor(&self, a: &str, b: &str) -> Option<&Individual> {
+        let anc_a: Vec<&Individual> = self.ancestors(a);
+        let anc_b: std::collections::HashSet<&str> =
+            self.ancestors(b).iter().map(|m| m.id.as_str()).collect();
+        anc_a.into_iter().find(|m| anc_b.contains(m.id.as_str()))
+    }
+
+    /// Members whose genome fingerprint matches (dedup check). The
+    /// common (negative) case is O(1) via the fingerprint cache.
+    pub fn find_duplicate(&self, g: &KernelGenome) -> Option<&Individual> {
+        let fp = g.fingerprint();
+        if !self.fingerprints.contains(&fp) {
+            return None;
+        }
+        self.members.iter().find(|m| m.genome.fingerprint() == fp)
+    }
+
+    /// Serialize to JSONL (one member per line, append-friendly).
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::new();
+        for m in &self.members {
+            s.push_str(&m.to_json().to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Load from JSONL produced by [`Population::to_jsonl`].
+    pub fn from_jsonl(
+        text: &str,
+        feedback_configs: Vec<GemmConfig>,
+    ) -> Result<Population, String> {
+        let mut pop = Population::new(feedback_configs);
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+            pop.add(Individual::from_json(&v)?);
+        }
+        Ok(pop)
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+
+    /// Load from a file.
+    pub fn load(
+        path: &std::path::Path,
+        feedback_configs: Vec<GemmConfig>,
+    ) -> Result<Population, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Population::from_jsonl(&text, feedback_configs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+    use crate::workload::FEEDBACK_CONFIGS;
+
+    fn ind(id: &str, parents: &[&str], score_base: f64) -> Individual {
+        Individual {
+            id: id.into(),
+            parents: parents.iter().map(|s| s.to_string()).collect(),
+            genome: seeds::mfma_seed(),
+            experiment: format!("exp-{id}"),
+            report: String::new(),
+            outcome: EvalOutcome::Timings(vec![score_base; 6]),
+        }
+    }
+
+    fn pop() -> Population {
+        let mut p = Population::new(FEEDBACK_CONFIGS.to_vec());
+        p.add(ind("00001", &[], 1000.0));
+        p.add(ind("00002", &["00001"], 800.0));
+        p.add(ind("00003", &["00001"], 900.0));
+        p.add(ind("00004", &["00002"], 600.0));
+        p
+    }
+
+    #[test]
+    fn ids_sequential() {
+        let p = pop();
+        assert_eq!(p.next_id(), "00005");
+    }
+
+    #[test]
+    fn best_is_lowest_geomean() {
+        let p = pop();
+        assert_eq!(p.best().unwrap().id, "00004");
+    }
+
+    #[test]
+    fn failed_members_excluded_from_best() {
+        let mut p = pop();
+        let mut bad = ind("00005", &["00004"], 1.0);
+        bad.outcome = EvalOutcome::IncorrectResult("race".into());
+        p.add(bad);
+        assert_eq!(p.best().unwrap().id, "00004");
+        assert_eq!(p.successful().len(), 4);
+    }
+
+    #[test]
+    fn ancestors_follow_base_parent() {
+        let p = pop();
+        let chain: Vec<&str> = p.ancestors("00004").iter().map(|m| m.id.as_str()).collect();
+        assert_eq!(chain, vec!["00002", "00001"]);
+    }
+
+    #[test]
+    fn common_ancestor_of_divergent_branches() {
+        let p = pop();
+        // 00004 descends from 00002; 00003 descends from 00001 directly
+        let ca = p.common_ancestor("00004", "00003").unwrap();
+        assert_eq!(ca.id, "00001");
+    }
+
+    #[test]
+    fn config_winners_tracks_per_config() {
+        let mut p = Population::new(FEEDBACK_CONFIGS.to_vec());
+        let mut a = ind("00001", &[], 100.0);
+        a.outcome = EvalOutcome::Timings(vec![100.0, 100.0, 100.0, 100.0, 100.0, 100.0]);
+        let mut b = ind("00002", &[], 100.0);
+        // b is better only on config 2
+        b.outcome = EvalOutcome::Timings(vec![150.0, 150.0, 50.0, 150.0, 150.0, 150.0]);
+        p.add(a);
+        p.add(b);
+        let winners = p.config_winners();
+        assert_eq!(winners[0].as_deref(), Some("00001"));
+        assert_eq!(winners[2].as_deref(), Some("00002"));
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let p = pop();
+        let text = p.to_jsonl();
+        let back = Population::from_jsonl(&text, FEEDBACK_CONFIGS.to_vec()).unwrap();
+        assert_eq!(back.len(), p.len());
+        assert_eq!(back.best().unwrap().id, "00004");
+        assert_eq!(back.by_id("00003").unwrap().experiment, "exp-00003");
+    }
+
+    #[test]
+    fn jsonl_roundtrip_failures() {
+        let mut p = Population::new(FEEDBACK_CONFIGS.to_vec());
+        let mut bad = ind("00001", &[], 1.0);
+        bad.outcome = EvalOutcome::CompileFailure("LDS overflow".into());
+        p.add(bad);
+        let back = Population::from_jsonl(&p.to_jsonl(), FEEDBACK_CONFIGS.to_vec()).unwrap();
+        assert!(matches!(
+            back.by_id("00001").unwrap().outcome,
+            EvalOutcome::CompileFailure(_)
+        ));
+    }
+
+    #[test]
+    fn duplicate_detection() {
+        let p = pop();
+        assert!(p.find_duplicate(&seeds::mfma_seed()).is_some());
+        assert!(p.find_duplicate(&seeds::human_oracle()).is_none());
+    }
+}

@@ -1,0 +1,141 @@
+//! Report rendering: Table-1 style comparisons, convergence curves,
+//! run transcripts (the App.-A.1/A.2-style YAML blocks), and roofline
+//! accounting for EXPERIMENTS.md.
+
+pub mod lineage;
+
+use crate::metrics::ConvergenceCurve;
+use crate::scientist::IterationLog;
+
+/// One row of a Table-1-style comparison.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub label: String,
+    pub paper_us: Option<f64>,
+    pub measured_us: f64,
+    pub comment: String,
+}
+
+/// Render a markdown table of comparison rows.
+pub fn render_table(title: &str, rows: &[TableRow]) -> String {
+    let mut s = format!("### {title}\n\n");
+    s.push_str("| Implementation | Paper (us) | Measured (us) | Comment |\n");
+    s.push_str("|---|---|---|---|\n");
+    for r in rows {
+        let paper = r
+            .paper_us
+            .map(|p| format!("{p:.0}"))
+            .unwrap_or_else(|| "-".into());
+        s.push_str(&format!(
+            "| {} | {} | {:.1} | {} |\n",
+            r.label, paper, r.measured_us, r.comment
+        ));
+    }
+    s
+}
+
+/// Render a convergence curve as CSV + sparkline + summary lines.
+pub fn render_convergence(name: &str, curve: &ConvergenceCurve) -> String {
+    let mut s = format!("### Convergence: {name}\n\n");
+    if let Some(best) = curve.best() {
+        s.push_str(&format!(
+            "best geomean: {best:.1} us after {} scored submissions\n",
+            curve.points.len()
+        ));
+    }
+    s.push_str(&format!("trend: {}\n\n", curve.ascii_sparkline(60)));
+    s.push_str("```csv\n");
+    s.push_str(&curve.to_csv());
+    s.push_str("```\n");
+    s
+}
+
+/// Render one iteration's transcript in the paper's appendix style.
+pub fn render_iteration(log: &IterationLog) -> String {
+    let mut s = format!("--- iteration {} ---\n", log.iteration);
+    s.push_str(&format!(
+        "basis_code: \"{}\"\nbasis_reference: \"{}\"\nrationale: >\n  {}\n",
+        log.selection.base_id,
+        log.selection.reference_id,
+        log.selection.rationale.replace('\n', "\n  ")
+    ));
+    s.push_str("avenues:\n");
+    for a in &log.avenue_names {
+        s.push_str(&format!("  - {a}\n"));
+    }
+    s.push_str("chosen_experiments:\n");
+    for e in &log.chosen_experiments {
+        s.push_str(&format!("  - {e}\n"));
+    }
+    s.push_str(&format!("submitted: {:?}\n", log.submitted_ids));
+    s
+}
+
+/// Speedup helper for report prose.
+pub fn speedup(baseline_us: f64, measured_us: f64) -> f64 {
+    baseline_us / measured_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::{Selection, SelectionPolicy, Selector};
+    use crate::metrics::ConvergenceCurve;
+
+    #[test]
+    fn table_renders_markdown() {
+        let rows = vec![
+            TableRow {
+                label: "PyTorch reference".into(),
+                paper_us: Some(850.0),
+                measured_us: 840.0,
+                comment: "library fp16".into(),
+            },
+            TableRow {
+                label: "This work".into(),
+                paper_us: None,
+                measured_us: 300.0,
+                comment: "LLM-only".into(),
+            },
+        ];
+        let s = render_table("Table 1", &rows);
+        assert!(s.contains("| PyTorch reference | 850 | 840.0 | library fp16 |"));
+        assert!(s.contains("| This work | - | 300.0 | LLM-only |"));
+    }
+
+    #[test]
+    fn convergence_renders() {
+        let mut c = ConvergenceCurve::default();
+        c.record(1, 500.0);
+        c.record(2, 400.0);
+        let s = render_convergence("test", &c);
+        assert!(s.contains("best geomean: 400.0 us"));
+        assert!(s.contains("submission,best_geomean_us"));
+    }
+
+    #[test]
+    fn iteration_transcript_has_paper_fields() {
+        let _ = Selector::new(SelectionPolicy::PaperLlm); // shape check only
+        let log = IterationLog {
+            iteration: 3,
+            selection: Selection {
+                base_id: "00052".into(),
+                reference_id: "00046".into(),
+                policy: None,
+                rationale: "Run 00052 is selected as the basis code...".into(),
+            },
+            avenue_names: vec!["LDS Bank Conflict Mitigation".into()],
+            chosen_experiments: vec!["pad LDS rows".into()],
+            submitted_ids: vec!["00053".into()],
+        };
+        let s = render_iteration(&log);
+        assert!(s.contains("basis_code: \"00052\""));
+        assert!(s.contains("basis_reference: \"00046\""));
+        assert!(s.contains("rationale: >"));
+    }
+
+    #[test]
+    fn speedup_math() {
+        assert_eq!(speedup(850.0, 425.0), 2.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Lineage-tree rendering and population-diversity metrics.
+//!
+//! The paper's population is a growing phylogeny of kernels (Fig. 1);
+//! its App.-A.1 rationales reason about divergent branches and common
+//! ancestors. This module renders that phylogeny as an ASCII tree for
+//! run reports and computes the diversity statistics the ablation
+//! benches report (how much of the genome space a strategy actually
+//! explored).
+
+use std::collections::HashMap;
+
+use crate::genome::{edit::Param, KernelGenome};
+use crate::population::Population;
+
+/// Render the population as an ASCII forest (seeds are roots). Members
+/// are annotated with their feedback geomean (or failure kind).
+pub fn render_tree(pop: &Population) -> String {
+    // children indexed by base parent
+    let mut children: HashMap<&str, Vec<&str>> = HashMap::new();
+    let mut roots: Vec<&str> = Vec::new();
+    for m in pop.members() {
+        match m.parents.first() {
+            Some(p) => children.entry(p.as_str()).or_default().push(&m.id),
+            None => roots.push(&m.id),
+        }
+    }
+    let mut out = String::new();
+    for root in roots {
+        render_node(pop, &children, root, "", true, true, &mut out);
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn render_node(
+    pop: &Population,
+    children: &HashMap<&str, Vec<&str>>,
+    id: &str,
+    prefix: &str,
+    last: bool,
+    is_root: bool,
+    out: &mut String,
+) {
+    let m = match pop.by_id(id) {
+        Some(m) => m,
+        None => return,
+    };
+    let connector = if is_root {
+        ""
+    } else if last {
+        "└── "
+    } else {
+        "├── "
+    };
+    let score = match m.score() {
+        Some(s) => format!("{s:9.1} us"),
+        None => match &m.outcome {
+            crate::population::EvalOutcome::CompileFailure(_) => "  (compile)".into(),
+            crate::population::EvalOutcome::IncorrectResult(_) => "(incorrect)".into(),
+            _ => "        ?".into(),
+        },
+    };
+    let label: String = m.experiment.chars().take(48).collect();
+    out.push_str(&format!("{prefix}{connector}{id} {score}  {label}\n"));
+    if let Some(kids) = children.get(id) {
+        let child_prefix = if is_root {
+            String::new()
+        } else if last {
+            format!("{prefix}    ")
+        } else {
+            format!("{prefix}│   ")
+        };
+        let n = kids.len();
+        for (i, kid) in kids.iter().enumerate() {
+            render_node(pop, children, kid, &child_prefix, i + 1 == n, false, out);
+        }
+    }
+}
+
+/// Diversity statistics over the successful members' genomes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiversityStats {
+    /// Distinct genome fingerprints / successful members.
+    pub unique_fraction: f64,
+    /// Mean pairwise Hamming distance over the 17 genome axes.
+    pub mean_hamming: f64,
+    /// Number of axes on which at least two distinct values appear.
+    pub axes_explored: usize,
+    /// Maximum root-to-leaf depth of the lineage forest.
+    pub max_depth: usize,
+}
+
+fn axis_values(g: &KernelGenome) -> [String; 17] {
+    [
+        g.block_m.to_string(),
+        g.block_n.to_string(),
+        g.block_k.to_string(),
+        format!("{:?}", g.compute),
+        format!("{:?}", g.precision),
+        g.unroll_k.to_string(),
+        g.lds_staging.to_string(),
+        g.double_buffer.to_string(),
+        g.lds_pad.to_string(),
+        format!("{:?}", g.swizzle),
+        g.vector_width.to_string(),
+        g.waves_per_block.to_string(),
+        format!("{:?}", g.writeback),
+        format!("{:?}", g.scale_cache),
+        format!("{:?}", g.grid_mapping),
+        g.acc_in_regs.to_string(),
+        g.k_innermost.to_string(),
+    ]
+}
+
+/// Compute diversity statistics.
+pub fn diversity(pop: &Population) -> DiversityStats {
+    let ok = pop.successful();
+    if ok.is_empty() {
+        return DiversityStats {
+            unique_fraction: 0.0,
+            mean_hamming: 0.0,
+            axes_explored: 0,
+            max_depth: 0,
+        };
+    }
+    let genomes: Vec<[String; 17]> = ok.iter().map(|m| axis_values(&m.genome)).collect();
+    // unique fraction
+    let mut fps: Vec<String> = ok.iter().map(|m| m.genome.fingerprint()).collect();
+    fps.sort();
+    fps.dedup();
+    let unique_fraction = fps.len() as f64 / ok.len() as f64;
+    // mean pairwise hamming (sampled cap to stay O(n^2) small)
+    let mut total = 0.0;
+    let mut pairs = 0.0;
+    for i in 0..genomes.len() {
+        for j in (i + 1)..genomes.len() {
+            let d = genomes[i]
+                .iter()
+                .zip(genomes[j].iter())
+                .filter(|(a, b)| a != b)
+                .count();
+            total += d as f64;
+            pairs += 1.0;
+        }
+    }
+    let mean_hamming = if pairs > 0.0 { total / pairs } else { 0.0 };
+    // axes explored
+    let mut axes_explored = 0;
+    for axis in 0..Param::ALL.len() {
+        let mut vals: Vec<&String> = genomes.iter().map(|g| &g[axis]).collect();
+        vals.sort();
+        vals.dedup();
+        if vals.len() > 1 {
+            axes_explored += 1;
+        }
+    }
+    // max lineage depth
+    let max_depth = pop
+        .members()
+        .iter()
+        .map(|m| pop.ancestors(&m.id).len())
+        .max()
+        .unwrap_or(0);
+    DiversityStats {
+        unique_fraction,
+        mean_hamming,
+        axes_explored,
+        max_depth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+    use crate::population::{EvalOutcome, Individual};
+    use crate::workload::FEEDBACK_CONFIGS;
+
+    fn ind(id: &str, parents: &[&str], g: KernelGenome, t: f64) -> Individual {
+        Individual {
+            id: id.into(),
+            parents: parents.iter().map(|s| s.to_string()).collect(),
+            genome: g,
+            experiment: format!("exp {id}"),
+            report: String::new(),
+            outcome: EvalOutcome::Timings(vec![t; 6]),
+        }
+    }
+
+    fn pop() -> Population {
+        let mut p = Population::new(FEEDBACK_CONFIGS.to_vec());
+        p.add(ind("00001", &[], seeds::naive_hip(), 5000.0));
+        p.add(ind("00002", &["00001"], seeds::mfma_seed(), 400.0));
+        p.add(ind("00003", &["00001"], seeds::pytorch_reference(), 850.0));
+        p.add(ind("00004", &["00002", "00003"], seeds::paper_evolved(), 300.0));
+        p
+    }
+
+    #[test]
+    fn tree_renders_forest() {
+        let t = render_tree(&pop());
+        assert!(t.contains("00001"));
+        assert!(t.contains("├── 00002") || t.contains("└── 00002"));
+        assert!(t.contains("└── 00004") || t.contains("├── 00004"));
+        assert!(t.contains("5000.0 us"));
+    }
+
+    #[test]
+    fn tree_marks_failures() {
+        let mut p = pop();
+        let mut bad = ind("00005", &["00004"], seeds::mfma_seed(), 1.0);
+        bad.outcome = EvalOutcome::IncorrectResult("race".into());
+        p.add(bad);
+        let t = render_tree(&p);
+        assert!(t.contains("(incorrect)"));
+    }
+
+    #[test]
+    fn diversity_on_distinct_population() {
+        let d = diversity(&pop());
+        assert_eq!(d.unique_fraction, 1.0);
+        assert!(d.mean_hamming > 3.0, "{d:?}");
+        assert!(d.axes_explored >= 6);
+        assert_eq!(d.max_depth, 2); // 00004 -> 00002 -> 00001
+    }
+
+    #[test]
+    fn diversity_on_clones_is_zero_hamming() {
+        let mut p = Population::new(FEEDBACK_CONFIGS.to_vec());
+        p.add(ind("00001", &[], seeds::mfma_seed(), 100.0));
+        p.add(ind("00002", &["00001"], seeds::mfma_seed(), 100.0));
+        let d = diversity(&p);
+        assert_eq!(d.mean_hamming, 0.0);
+        assert_eq!(d.axes_explored, 0);
+        assert!(d.unique_fraction < 1.0);
+    }
+
+    #[test]
+    fn empty_population_safe() {
+        let p = Population::new(FEEDBACK_CONFIGS.to_vec());
+        assert_eq!(diversity(&p).axes_explored, 0);
+        assert_eq!(render_tree(&p), "");
+    }
+}

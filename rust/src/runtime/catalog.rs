@@ -1,0 +1,329 @@
+//! The AOT artifact catalog: `artifacts/catalog.json` parsing and the
+//! genome -> compiled-variant projection.
+//!
+//! The python side (`python/compile/aot.py`) writes one entry per
+//! (variant, shape): the HLO text file name, the `GemmVariant` fields,
+//! and the VMEM footprint estimate. The rust side never re-derives
+//! variant semantics — the catalog is the single source of truth for
+//! what was compiled.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::genome::{KernelGenome, ScaleCache};
+use crate::util::json;
+use crate::workload::GemmConfig;
+
+/// One compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CatalogEntry {
+    pub name: String,
+    /// "reference" (library path) or "pallas" (kernel variant).
+    pub kind: String,
+    pub cfg: GemmConfig,
+    /// Pallas variant parameters (None for reference entries).
+    pub variant: Option<VariantParams>,
+    /// VMEM footprint estimate from the python layer (bytes).
+    pub vmem_bytes: Option<u64>,
+    /// HLO text file name, relative to the artifact dir.
+    pub artifact: String,
+}
+
+/// The python `GemmVariant` fields (the genome projection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VariantParams {
+    pub block_m: u32,
+    pub block_n: u32,
+    pub block_k: u32,
+    pub fuse_scales: bool,
+    pub acc_in_scratch: bool,
+    pub k_innermost: bool,
+}
+
+/// The structural key a genome projects onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VariantKey {
+    pub block_m: u32,
+    pub block_n: u32,
+    pub block_k: u32,
+    pub fuse_scales: bool,
+    pub acc_in_scratch: bool,
+    pub k_innermost: bool,
+}
+
+impl VariantKey {
+    /// Project a full genome onto the Pallas-expressible axes:
+    /// * tile sizes map directly;
+    /// * fused scaling corresponds to any cached-scale epilogue
+    ///   (`ScaleCache::Lds`/`LdsRepurposed`), unfused to global reload;
+    /// * the scratch accumulator corresponds to `acc_in_regs`;
+    /// * loop order maps directly.
+    pub fn from_genome(g: &KernelGenome) -> VariantKey {
+        VariantKey {
+            block_m: g.block_m,
+            block_n: g.block_n,
+            block_k: g.block_k,
+            fuse_scales: g.scale_cache != ScaleCache::GlobalReload,
+            acc_in_scratch: g.acc_in_regs,
+            k_innermost: g.k_innermost,
+        }
+    }
+
+    fn matches(&self, v: &VariantParams) -> bool {
+        self.block_m == v.block_m
+            && self.block_n == v.block_n
+            && self.block_k == v.block_k
+            && self.fuse_scales == v.fuse_scales
+            && self.acc_in_scratch == v.acc_in_scratch
+            && self.k_innermost == v.k_innermost
+    }
+
+    /// Log-space tile distance (for nearest-variant fallback).
+    fn tile_distance(&self, v: &VariantParams) -> f64 {
+        let d = |a: u32, b: u32| ((a as f64).ln() - (b as f64).ln()).abs();
+        d(self.block_m, v.block_m) + d(self.block_n, v.block_n) + d(self.block_k, v.block_k)
+            + if self.fuse_scales != v.fuse_scales { 0.1 } else { 0.0 }
+            + if self.acc_in_scratch != v.acc_in_scratch { 0.1 } else { 0.0 }
+            + if self.k_innermost != v.k_innermost { 0.1 } else { 0.0 }
+    }
+}
+
+/// The parsed catalog.
+#[derive(Debug, Clone, Default)]
+pub struct Catalog {
+    pub entries: Vec<CatalogEntry>,
+}
+
+impl Catalog {
+    pub fn parse(text: &str) -> Result<Catalog, String> {
+        let doc = json::parse(text).map_err(|e| e.to_string())?;
+        let version = doc.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+        if version != 1 {
+            return Err(format!("unsupported catalog version {version}"));
+        }
+        let mut entries = Vec::new();
+        for e in doc
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing entries")?
+        {
+            let get_str = |k: &str| {
+                e.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(String::from)
+                    .ok_or_else(|| format!("entry missing {k}"))
+            };
+            let get_u32 = |k: &str| {
+                e.get(k)
+                    .and_then(|v| v.as_u64())
+                    .map(|v| v as u32)
+                    .ok_or_else(|| format!("entry missing {k}"))
+            };
+            let variant = match e.get("variant") {
+                Some(v) if !v.is_null() => {
+                    let vb = |k: &str| {
+                        v.get(k)
+                            .and_then(|x| x.as_bool())
+                            .ok_or_else(|| format!("variant missing {k}"))
+                    };
+                    let vu = |k: &str| {
+                        v.get(k)
+                            .and_then(|x| x.as_u64())
+                            .map(|x| x as u32)
+                            .ok_or_else(|| format!("variant missing {k}"))
+                    };
+                    Some(VariantParams {
+                        block_m: vu("block_m")?,
+                        block_n: vu("block_n")?,
+                        block_k: vu("block_k")?,
+                        fuse_scales: vb("fuse_scales")?,
+                        acc_in_scratch: vb("acc_in_scratch")?,
+                        k_innermost: vb("k_innermost")?,
+                    })
+                }
+                _ => None,
+            };
+            entries.push(CatalogEntry {
+                name: get_str("name")?,
+                kind: get_str("kind")?,
+                cfg: GemmConfig::new(get_u32("m")?, get_u32("k")?, get_u32("n")?),
+                variant,
+                vmem_bytes: e.get("vmem_bytes").and_then(|v| v.as_u64()),
+                artifact: get_str("artifact")?,
+            });
+        }
+        Ok(Catalog { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Catalog, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Catalog::parse(&text)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&CatalogEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Distinct shapes covered by the catalog.
+    pub fn shapes(&self) -> Vec<GemmConfig> {
+        let set: BTreeSet<(u32, u32, u32)> = self
+            .entries
+            .iter()
+            .map(|e| (e.cfg.m, e.cfg.k, e.cfg.n))
+            .collect();
+        set.into_iter()
+            .map(|(m, k, n)| GemmConfig::new(m, k, n))
+            .collect()
+    }
+
+    /// The reference (library) artifact for a shape.
+    pub fn reference_for(&self, cfg: &GemmConfig) -> Option<&CatalogEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == "reference" && e.cfg == *cfg)
+    }
+
+    /// All pallas variants for a shape.
+    pub fn variants_for(&self, cfg: &GemmConfig) -> Vec<&CatalogEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "pallas" && e.cfg == *cfg)
+            .collect()
+    }
+
+    /// Find the compiled variant for a projection key at a shape:
+    /// exact match first, then the nearest compiled tile configuration
+    /// (the CPU testbed quantizes tile sizes to the compiled set —
+    /// documented in DESIGN.md §2).
+    pub fn lookup(&self, key: &VariantKey, cfg: &GemmConfig) -> Option<&CatalogEntry> {
+        let variants = self.variants_for(cfg);
+        if variants.is_empty() {
+            return None;
+        }
+        if let Some(exact) = variants
+            .iter()
+            .find(|e| e.variant.map(|v| key.matches(&v)).unwrap_or(false))
+        {
+            return Some(exact);
+        }
+        variants
+            .into_iter()
+            .min_by(|a, b| {
+                let da = key.tile_distance(&a.variant.unwrap());
+                let db = key.tile_distance(&b.variant.unwrap());
+                da.partial_cmp(&db).unwrap()
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "entries": [
+            {"name": "ref_m256k256n256", "kind": "reference",
+             "m": 256, "k": 256, "n": 256, "variant": null,
+             "artifact": "ref_m256k256n256.hlo.txt", "sha256": "x"},
+            {"name": "g64x64x64_fs_sc_ki_m256k256n256", "kind": "pallas",
+             "m": 256, "k": 256, "n": 256,
+             "variant": {"block_m": 64, "block_n": 64, "block_k": 64,
+                          "fuse_scales": true, "acc_in_scratch": true,
+                          "k_innermost": true},
+             "vmem_bytes": 41472,
+             "artifact": "g64.hlo.txt", "sha256": "y"},
+            {"name": "g128x128x64_fs_sc_ki_m256k256n256", "kind": "pallas",
+             "m": 256, "k": 256, "n": 256,
+             "variant": {"block_m": 128, "block_n": 128, "block_k": 64,
+                          "fuse_scales": true, "acc_in_scratch": true,
+                          "k_innermost": true},
+             "vmem_bytes": 115200,
+             "artifact": "g128.hlo.txt", "sha256": "z"}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let c = Catalog::parse(SAMPLE).unwrap();
+        assert_eq!(c.entries.len(), 3);
+        assert_eq!(c.shapes(), vec![GemmConfig::new(256, 256, 256)]);
+        let cfg = GemmConfig::new(256, 256, 256);
+        assert!(c.reference_for(&cfg).is_some());
+        assert_eq!(c.variants_for(&cfg).len(), 2);
+        assert_eq!(
+            c.by_name("g64x64x64_fs_sc_ki_m256k256n256")
+                .unwrap()
+                .vmem_bytes,
+            Some(41472)
+        );
+    }
+
+    #[test]
+    fn exact_lookup() {
+        let c = Catalog::parse(SAMPLE).unwrap();
+        let key = VariantKey {
+            block_m: 128,
+            block_n: 128,
+            block_k: 64,
+            fuse_scales: true,
+            acc_in_scratch: true,
+            k_innermost: true,
+        };
+        let hit = c.lookup(&key, &GemmConfig::new(256, 256, 256)).unwrap();
+        assert_eq!(hit.name, "g128x128x64_fs_sc_ki_m256k256n256");
+    }
+
+    #[test]
+    fn nearest_lookup_quantizes_tiles() {
+        let c = Catalog::parse(SAMPLE).unwrap();
+        let key = VariantKey {
+            block_m: 32, // not compiled; nearest is 64
+            block_n: 64,
+            block_k: 64,
+            fuse_scales: true,
+            acc_in_scratch: true,
+            k_innermost: true,
+        };
+        let hit = c.lookup(&key, &GemmConfig::new(256, 256, 256)).unwrap();
+        assert_eq!(hit.name, "g64x64x64_fs_sc_ki_m256k256n256");
+    }
+
+    #[test]
+    fn lookup_missing_shape_is_none() {
+        let c = Catalog::parse(SAMPLE).unwrap();
+        let key = VariantKey::from_genome(&seeds::human_oracle());
+        assert!(c.lookup(&key, &GemmConfig::new(512, 512, 512)).is_none());
+    }
+
+    #[test]
+    fn genome_projection_maps_scale_cache() {
+        let mut g = seeds::human_oracle();
+        g.scale_cache = ScaleCache::GlobalReload;
+        assert!(!VariantKey::from_genome(&g).fuse_scales);
+        g.scale_cache = ScaleCache::LdsRepurposed;
+        assert!(VariantKey::from_genome(&g).fuse_scales);
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        assert!(Catalog::parse(r#"{"version": 2, "entries": []}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_catalog_if_present() {
+        // integration-flavoured: only runs when `make artifacts` has run
+        let path = std::path::Path::new("artifacts/catalog.json");
+        if path.exists() {
+            let c = Catalog::load(path).unwrap();
+            assert!(c.entries.len() >= 10);
+            assert!(!c.shapes().is_empty());
+            for s in c.shapes() {
+                assert!(c.reference_for(&s).is_some(), "no reference for {s}");
+                assert!(!c.variants_for(&s).is_empty());
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! In-tree benchmark harness (offline build — no criterion).
+//!
+//! The `benches/*.rs` targets are `harness = false` binaries; they use
+//! this module for criterion-flavoured measurement and reporting:
+//! warmup, repeated timed samples, mean ± stddev, and a compact table.
+//! Paper-reproduction benches additionally print the markdown tables /
+//! CSV series that EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Measure a closure: warmup, then timed samples until `budget` or
+/// `max_samples`.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..3 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && samples.len() < 10_000 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n;
+    BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        stddev_ns: var.sqrt(),
+        samples: samples.len(),
+    }
+}
+
+/// Print a result criterion-style.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:40} time: [{} ± {}]  ({} samples, {:.0}/s)",
+        r.name,
+        super::timer::fmt_ns(r.mean_ns),
+        super::timer::fmt_ns(r.stddev_ns),
+        r.samples,
+        r.throughput_per_s()
+    );
+}
+
+/// Header line for a bench binary.
+pub fn header(title: &str) {
+    println!("\n=== bench: {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.samples > 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.throughput_per_s() > 0.0);
+    }
+}

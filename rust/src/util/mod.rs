@@ -1,0 +1,7 @@
+//! Dependency-free utilities: this build is fully offline (only the
+//! `xla` PJRT crate tree is vendored), so JSON, timing helpers, and the
+//! bench harness live in-tree.
+
+pub mod bench;
+pub mod json;
+pub mod timer;

@@ -1,0 +1,87 @@
+//! Wall-clock timing helpers shared by the CLI, examples, and the
+//! in-tree bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning (result, elapsed).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// Run a closure repeatedly until `min_time` has elapsed (and at least
+/// `min_iters` times), returning per-iteration statistics in
+/// nanoseconds: (mean, stddev, iters).
+pub fn measure_ns(
+    min_time: Duration,
+    min_iters: u64,
+    mut f: impl FnMut(),
+) -> (f64, f64, u64) {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while start.elapsed() < min_time || iters < min_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        iters += 1;
+        if iters > 10_000_000 {
+            break;
+        }
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples
+        .iter()
+        .map(|s| (s - mean) * (s - mean))
+        .sum::<f64>()
+        / samples.len() as f64;
+    (mean, var.sqrt(), iters)
+}
+
+/// Format a nanosecond count human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, d) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn measure_ns_runs_min_iters() {
+        let mut count = 0u64;
+        let (_, _, iters) = measure_ns(Duration::from_millis(1), 10, || {
+            count += 1;
+        });
+        assert!(iters >= 10);
+        assert!(count >= iters); // warmup included
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("us"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,100 @@
+//! PJRT integration: load the AOT artifact catalog, verify kernel
+//! variants against the compiled reference path, time them, and drive
+//! the scientist loop over real compiled kernels.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass
+//! trivially, with a note) when the catalog is absent so `cargo test`
+//! works on a fresh checkout.
+
+use std::path::Path;
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::eval::{EvalBackend, EvalPlatform, PlatformConfig};
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::runtime::PjrtBackend;
+use gpu_kernel_scientist::workload::GemmConfig;
+
+fn open_backend() -> Option<PjrtBackend> {
+    let dir = Path::new("artifacts");
+    if !dir.join("catalog.json").exists() {
+        eprintln!("SKIP: artifacts/catalog.json missing (run `make artifacts`)");
+        return None;
+    }
+    let mut b = PjrtBackend::open(dir).expect("backend open");
+    b.inner_reps = 1;
+    Some(b)
+}
+
+const CFG: GemmConfig = GemmConfig::new(256, 256, 256);
+
+#[test]
+fn catalog_covers_testbed_shapes() {
+    let Some(backend) = open_backend() else { return };
+    let shapes = backend.shapes();
+    assert!(shapes.contains(&CFG), "shapes: {shapes:?}");
+    assert!(backend.catalog().reference_for(&CFG).is_some());
+    assert!(backend.catalog().variants_for(&CFG).len() >= 5);
+}
+
+#[test]
+fn default_variant_verifies_and_times() {
+    let Some(mut backend) = open_backend() else { return };
+    // the python default GemmVariant(128,128,64,fused,scratch,ki)
+    let name = "g128x128x64_fs_sc_ki_m256k256n256";
+    backend.verify(name, &CFG).expect("numerics match reference");
+    let us = backend.time_entry(name, &CFG).expect("timing");
+    assert!(us > 0.0 && us < 60_000_000.0);
+}
+
+#[test]
+fn naive_structure_slower_than_evolved_structure() {
+    // The paper's seed ordering holds on the real backend too: the
+    // naive-translation variant (tiny tiles, k-outermost, no scratch
+    // accumulator) is far slower than the evolved structure.
+    let Some(mut backend) = open_backend() else { return };
+    let naive = backend
+        .time_entry("g32x32x32_us_oa_ko_m256k256n256", &CFG)
+        .expect("naive timing");
+    let evolved = backend
+        .time_entry("g128x128x64_fs_sc_ki_m256k256n256", &CFG)
+        .expect("evolved timing");
+    assert!(
+        naive > 2.0 * evolved,
+        "naive {naive:.0} us vs evolved {evolved:.0} us"
+    );
+}
+
+#[test]
+fn genome_projection_times_through_eval_backend_trait() {
+    let Some(mut backend) = open_backend() else { return };
+    let g = seeds::human_oracle(); // projects to a large-tile variant
+    let us = EvalBackend::measure(&mut backend, &g, &CFG).expect("measure");
+    assert!(us > 0.0);
+    // check() runs the correctness gate on the smallest shape
+    EvalBackend::check(&mut backend, &g).expect("check");
+}
+
+#[test]
+fn scientist_loop_runs_over_pjrt() {
+    let Some(backend) = open_backend() else { return };
+    let platform = EvalPlatform::new(
+        backend,
+        PlatformConfig {
+            reps_per_config: 1,
+            parallelism: 1,
+            submission_quota: Some(8),
+        },
+    )
+    .with_feedback_suite(BenchmarkSuite {
+        name: "pjrt-primary".into(),
+        configs: vec![CFG],
+    });
+    let cfg = RunConfig::default().with_seed(3).with_budget(8);
+    let mut run = ScientistRun::with_platform(cfg, platform).expect("setup");
+    let outcome = run.run_to_completion().expect("run");
+    assert!(outcome.submissions <= 8);
+    assert!(outcome.best_geomean_us.is_finite());
+    assert!(outcome.best_geomean_us > 0.0);
+    // the loop produced at least one non-seed individual
+    assert!(run.population.len() > 3);
+}

@@ -1,0 +1,269 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! Offline build: no proptest crate, so properties are checked with an
+//! in-tree generator (seeded `Rng`) over many random cases — same
+//! spirit: random genomes/edits/populations, invariant assertions.
+
+use gpu_kernel_scientist::agents::{Designer, SurrogateLlm};
+use gpu_kernel_scientist::genome::{
+    edit::{self, GenomeEdit},
+    seeds, KernelGenome,
+};
+use gpu_kernel_scientist::gpu::{occupancy, MI300};
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::rng::Rng;
+use gpu_kernel_scientist::sim;
+use gpu_kernel_scientist::workload::GemmConfig;
+
+const CASES: usize = 300;
+
+/// Random (possibly invalid) genome via an edit walk from a seed.
+fn random_genome(rng: &mut Rng) -> KernelGenome {
+    let starts = seeds::all_seeds();
+    let mut g = starts[rng.below(starts.len())].1.clone();
+    for _ in 0..rng.below(8) {
+        GenomeEdit::random(rng).apply(&mut g);
+    }
+    g
+}
+
+fn random_config(rng: &mut Rng) -> GemmConfig {
+    let dims = [512u32, 1024, 2048, 4096, 6144, 8192];
+    GemmConfig::new(
+        dims[rng.below(dims.len())],
+        dims[rng.below(4)],
+        dims[rng.below(dims.len())],
+    )
+}
+
+#[test]
+fn prop_valid_genomes_always_time_positive_finite() {
+    let mut rng = Rng::seed_from_u64(100);
+    let mut checked = 0;
+    for _ in 0..CASES {
+        let g = random_genome(&mut rng);
+        if g.validate().is_err() {
+            continue;
+        }
+        let cfg = random_config(&mut rng);
+        let t = sim::estimate(&MI300, &g, &cfg).expect("valid genome must time");
+        assert!(t.total_us.is_finite() && t.total_us > 0.0, "{g:?} {cfg}");
+        assert!(t.compute_us > 0.0 && t.mem_us >= 0.0 && t.writeback_us > 0.0);
+        assert!(t.grid_utilization > 0.0 && t.grid_utilization <= 1.0);
+        checked += 1;
+    }
+    assert!(checked > CASES / 4, "too few valid cases: {checked}");
+}
+
+#[test]
+fn prop_estimate_is_pure() {
+    let mut rng = Rng::seed_from_u64(101);
+    for _ in 0..CASES {
+        let g = random_genome(&mut rng);
+        if g.validate().is_err() {
+            continue;
+        }
+        let cfg = random_config(&mut rng);
+        assert_eq!(
+            sim::estimate(&MI300, &g, &cfg),
+            sim::estimate(&MI300, &g, &cfg)
+        );
+    }
+}
+
+#[test]
+fn prop_timing_monotone_in_problem_size() {
+    // growing any one dimension (same genome) never speeds the kernel
+    // up by more than the noise-free model's tail-quantization wiggle
+    let mut rng = Rng::seed_from_u64(102);
+    for _ in 0..CASES {
+        let g = random_genome(&mut rng);
+        if g.validate().is_err() {
+            continue;
+        }
+        let cfg = random_config(&mut rng);
+        let big = GemmConfig::new(cfg.m * 2, cfg.k, cfg.n);
+        let t1 = sim::estimate(&MI300, &g, &cfg).unwrap().total_us;
+        let t2 = sim::estimate(&MI300, &g, &big).unwrap().total_us;
+        assert!(
+            t2 > t1 * 0.95,
+            "{g:?}: m {}->{} went {t1} -> {t2}",
+            cfg.m,
+            big.m
+        );
+    }
+}
+
+#[test]
+fn prop_edits_preserve_representability() {
+    // every edit application keeps all fields inside the candidate sets
+    let mut rng = Rng::seed_from_u64(103);
+    for _ in 0..CASES {
+        let mut g = seeds::mfma_seed();
+        for _ in 0..12 {
+            GenomeEdit::random(&mut rng).apply(&mut g);
+        }
+        // all block values from the candidate lattice
+        for v in [g.block_m, g.block_n, g.block_k] {
+            assert!([16, 32, 64, 128, 256].contains(&v), "{v}");
+        }
+        assert!([1, 2, 4, 8].contains(&g.unroll_k));
+        assert!([1, 2, 4, 8, 16].contains(&g.vector_width));
+        assert!([1, 2, 4, 8].contains(&g.waves_per_block));
+        assert!(g.lds_pad <= 8);
+    }
+}
+
+#[test]
+fn prop_valid_neighbors_are_valid_and_single_axis() {
+    let mut rng = Rng::seed_from_u64(104);
+    for _ in 0..60 {
+        let g = random_genome(&mut rng);
+        if g.validate().is_err() {
+            continue;
+        }
+        for (e, child) in edit::valid_neighbors(&g) {
+            assert!(child.validate().is_ok());
+            // applying the edit to the parent reproduces the child
+            let again = edit::apply_edits(&g, &[e]);
+            assert_eq!(again, child);
+        }
+    }
+}
+
+#[test]
+fn prop_occupancy_bounded() {
+    let mut rng = Rng::seed_from_u64(105);
+    for _ in 0..CASES {
+        let g = random_genome(&mut rng);
+        if g.validate().is_err() {
+            continue;
+        }
+        let occ = occupancy::occupancy(&MI300, &g);
+        assert!(occ.waves_per_cu >= 1 || occ.workgroups_per_cu == 0);
+        assert!(occ.waves_per_cu <= MI300.wave_slots_per_cu);
+        assert!(occ.workgroups_per_cu <= 16);
+    }
+}
+
+#[test]
+fn prop_geomean_between_min_max() {
+    let mut rng = Rng::seed_from_u64(106);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(12);
+        let xs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 1e6)).collect();
+        let g = geomean(&xs);
+        let lo = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let hi = xs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(g >= lo * 0.999999 && g <= hi * 1.000001);
+    }
+}
+
+#[test]
+fn prop_designer_choice_always_distinct_and_bounded() {
+    use gpu_kernel_scientist::agents::knowledge::KnowledgeBase;
+    use gpu_kernel_scientist::population::Population;
+    use gpu_kernel_scientist::workload::FEEDBACK_CONFIGS;
+    let mut rng = Rng::seed_from_u64(107);
+    let pop = Population::new(FEEDBACK_CONFIGS.to_vec());
+    let kb = KnowledgeBase::full();
+    let designer = Designer::default();
+    for i in 0..60 {
+        let g = random_genome(&mut rng);
+        if g.validate().is_err() {
+            continue;
+        }
+        let mut llm = SurrogateLlm::with_seed(i);
+        let out = designer.design("00001", &g, &pop, &kb, &mut llm);
+        assert!(out.plans.len() <= 5);
+        assert!(out.avenues.len() <= 10);
+        let chosen = designer.choose(&out.plans, &mut llm);
+        assert!(chosen.len() <= 3);
+        let mut d = chosen.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), chosen.len(), "duplicate chosen indices");
+        for i in chosen {
+            assert!(i < out.plans.len());
+        }
+    }
+}
+
+#[test]
+fn prop_writer_output_always_reported() {
+    use gpu_kernel_scientist::agents::{ExperimentPlan, Writer};
+    use gpu_kernel_scientist::agents::knowledge::Avenue;
+    let mut rng = Rng::seed_from_u64(108);
+    let writer = Writer::new();
+    for i in 0..CASES {
+        let base = {
+            let g = random_genome(&mut rng);
+            if g.validate().is_err() {
+                continue;
+            }
+            g
+        };
+        let reference = seeds::human_oracle();
+        let rubric: Vec<GenomeEdit> =
+            (0..1 + rng.below(3)).map(|_| GenomeEdit::random(&mut rng)).collect();
+        let plan = ExperimentPlan {
+            avenue: Avenue::TileSizeTuning,
+            description: "prop".into(),
+            rubric_text: rubric.iter().map(|e| e.describe()).collect(),
+            rubric,
+            performance: (1.0, 10.0),
+            innovation: 50,
+        };
+        let mut llm = SurrogateLlm::with_seed(i as u64);
+        let out = writer.write(&base, &reference, &plan, &mut llm);
+        // every rubric line is accounted for: applied or skipped
+        assert_eq!(
+            out.applied
+                .iter()
+                .filter(|a| !a.starts_with("adopted from reference"))
+                .count()
+                + out.skipped.len(),
+            plan.rubric.len()
+        );
+        // writer reports always mention the experiment
+        assert!(out.report.contains("Experiment:"));
+    }
+}
+
+#[test]
+fn prop_population_jsonl_roundtrip_random() {
+    use gpu_kernel_scientist::population::{EvalOutcome, Individual, Population};
+    use gpu_kernel_scientist::workload::FEEDBACK_CONFIGS;
+    let mut rng = Rng::seed_from_u64(109);
+    for case in 0..40 {
+        let mut pop = Population::new(FEEDBACK_CONFIGS.to_vec());
+        let n = 1 + rng.below(20);
+        for i in 0..n {
+            let id = format!("{:05}", i + 1);
+            let parents = if i == 0 {
+                vec![]
+            } else {
+                vec![format!("{:05}", 1 + rng.below(i))]
+            };
+            let outcome = match rng.below(3) {
+                0 => EvalOutcome::Timings((0..6).map(|_| rng.range_f64(50.0, 9000.0)).collect()),
+                1 => EvalOutcome::CompileFailure(format!("err \"quoted\" {case}")),
+                _ => EvalOutcome::IncorrectResult("race\ncondition".into()),
+            };
+            pop.add(Individual {
+                id,
+                parents,
+                genome: random_genome(&mut rng),
+                experiment: format!("exp\t{i}"),
+                report: "multi\nline".into(),
+                outcome,
+            });
+        }
+        let text = pop.to_jsonl();
+        let back = Population::from_jsonl(&text, FEEDBACK_CONFIGS.to_vec()).unwrap();
+        assert_eq!(back.len(), pop.len());
+        for (a, b) in pop.members().iter().zip(back.members()) {
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! End-to-end integration tests over the simulated evaluation platform:
+//! whole scientist runs, persistence, and the Table-1 shape assertions.
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::gpu::MI300;
+use gpu_kernel_scientist::population::Population;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::sim::calibration::leaderboard_geomean;
+
+fn run_with(seed: u64, budget: u64) -> (ScientistRun<SimBackend>, RunOutcome) {
+    let cfg = RunConfig::default().with_seed(seed).with_budget(budget);
+    let mut run = ScientistRun::new(cfg).expect("setup");
+    let outcome = run.run_to_completion().expect("run");
+    (run, outcome)
+}
+
+#[test]
+fn full_run_reproduces_table1_shape() {
+    let (_, outcome) = run_with(0, 120);
+    let lib = leaderboard_geomean(&MI300, &seeds::pytorch_reference());
+    let naive = leaderboard_geomean(&MI300, &seeds::naive_hip());
+    let oracle = leaderboard_geomean(&MI300, &seeds::human_oracle());
+    let this_work = outcome.leaderboard_us.expect("leaderboard score");
+    // Table 1 ordering: naive > pytorch > this work > human oracle
+    assert!(naive > lib);
+    assert!(
+        this_work < lib,
+        "scientist ({this_work:.0} us) must beat the library ({lib:.0} us)"
+    );
+    assert!(
+        oracle < this_work * 1.10,
+        "oracle ({oracle:.0} us) should stay ahead of or match the loop ({this_work:.0} us)"
+    );
+    // rough factor: the loop lands well below 1x library but the paper's
+    // system does NOT reach the human-expert bound
+    assert!(lib / this_work >= 1.2, "expected >=1.2x over library");
+}
+
+#[test]
+fn population_ledger_is_consistent() {
+    let (run, outcome) = run_with(1, 60);
+    let pop = &run.population;
+    assert_eq!(outcome.submissions as usize, pop.len());
+    // ids are sequential and parents resolve
+    for (i, m) in pop.members().iter().enumerate() {
+        assert_eq!(m.id, format!("{:05}", i + 1));
+        for p in &m.parents {
+            assert!(pop.by_id(p).is_some(), "dangling parent {p}");
+        }
+    }
+    // the first three are the paper's seeds
+    assert!(pop.by_id("00001").unwrap().experiment.contains("pytorch-reference"));
+    assert!(pop.by_id("00002").unwrap().experiment.contains("naive-hip"));
+    assert!(pop.by_id("00003").unwrap().experiment.contains("mfma-seed"));
+    // every non-seed has both a base and a reference parent
+    for m in pop.members().iter().skip(3) {
+        assert_eq!(m.parents.len(), 2, "{} parents: {:?}", m.id, m.parents);
+    }
+}
+
+#[test]
+fn population_persists_and_resumes() {
+    let (run, _) = run_with(2, 40);
+    let path = std::env::temp_dir().join(format!(
+        "gks_pop_{}_{}.jsonl",
+        std::process::id(),
+        2
+    ));
+    run.population.save(&path).expect("save");
+    let loaded =
+        Population::load(&path, run.population.feedback_configs.clone()).expect("load");
+    assert_eq!(loaded.len(), run.population.len());
+    assert_eq!(
+        loaded.best().map(|b| b.id.clone()),
+        run.population.best().map(|b| b.id.clone())
+    );
+    // lineage queries still work after the round-trip
+    let best_id = loaded.best().unwrap().id.clone();
+    assert!(!loaded.ancestors(&best_id).is_empty());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn submission_log_matches_population() {
+    let (run, _) = run_with(3, 30);
+    let log = run.platform.log();
+    assert_eq!(log.len(), run.population.len());
+    for (rec, member) in log.iter().zip(run.population.members()) {
+        assert_eq!(rec.outcome, member.outcome);
+    }
+    // simulated wall clock advanced strictly sequentially
+    let mut last = 0.0;
+    for rec in log {
+        assert!(rec.completed_at_s > last);
+        last = rec.completed_at_s;
+    }
+}
+
+#[test]
+fn failed_submissions_recorded_not_fatal() {
+    // with a hot/high-infidelity LLM some submissions fail; the loop
+    // must keep going and still improve
+    let mut cfg = RunConfig::default().with_seed(4).with_budget(80);
+    cfg.llm.rubric_infidelity = 0.3;
+    cfg.llm.temperature = 2.0;
+    let mut run = ScientistRun::new(cfg).expect("setup");
+    let outcome = run.run_to_completion().expect("run");
+    assert!(outcome.best_geomean_us.is_finite());
+    // likely at least one incorrect/compile-failure individual exists
+    let failures = run
+        .population
+        .members()
+        .iter()
+        .filter(|m| !m.outcome.is_success())
+        .count();
+    // don't hard-require failures (seeded), but the ledger must account
+    // for every submission either way
+    assert_eq!(
+        run.platform.submissions() as usize,
+        run.population.len(),
+        "failures={failures}"
+    );
+}
+
+#[test]
+fn knowledge_ablation_degrades_result() {
+    let full = {
+        let (_, o) = run_with(5, 80);
+        o.best_geomean_us
+    };
+    let minimal = {
+        let mut cfg = RunConfig::default().with_seed(5).with_budget(80);
+        cfg.knowledge = KnowledgeProfile::Minimal;
+        let mut run = ScientistRun::new(cfg).expect("setup");
+        run.run_to_completion().expect("run").best_geomean_us
+    };
+    assert!(
+        full < minimal,
+        "full knowledge ({full:.0} us) should beat minimal ({minimal:.0} us)"
+    );
+}
+
+#[test]
+fn parallel_lanes_cut_wall_clock_not_quality() {
+    let (_, seq) = run_with(6, 60);
+    let mut cfg = RunConfig::default().with_seed(6).with_budget(60);
+    cfg.eval_parallelism = 3;
+    let mut run = ScientistRun::new(cfg).expect("setup");
+    let par = run.run_to_completion().expect("run");
+    assert!(par.wall_clock_s < seq.wall_clock_s * 0.5);
+}
+
+#[test]
+fn bootstrap_probing_derives_findings_and_still_wins() {
+    let mut cfg = RunConfig::default().with_seed(7).with_budget(90);
+    cfg.bootstrap_probing = true;
+    let mut run = ScientistRun::new(cfg).expect("setup");
+    // the three probes + three seeds are in the ledger
+    assert_eq!(run.population.len(), 6);
+    assert!(run
+        .population
+        .by_id("00001")
+        .unwrap()
+        .experiment
+        .contains("bootstrap probe"));
+    // the negative probe is recorded as an incorrect result
+    let probe3 = run.population.by_id("00003").unwrap();
+    assert!(!probe3.outcome.is_success(), "{:?}", probe3.outcome);
+    let outcome = run.run_to_completion().expect("run");
+    let lib = leaderboard_geomean(&MI300, &seeds::pytorch_reference());
+    assert!(outcome.leaderboard_us.unwrap() < lib);
+}
+
+#[test]
+fn config_files_in_repo_parse() {
+    for f in ["configs/paper.toml", "configs/bootstrap.toml"] {
+        let text = std::fs::read_to_string(f).expect(f);
+        let cfg = RunConfig::from_toml(&text).expect(f);
+        assert_eq!(cfg.max_submissions, 120);
+    }
+}
+
+#[test]
+fn lineage_tree_of_real_run_is_consistent() {
+    use gpu_kernel_scientist::report::lineage;
+    let (run, _) = run_with(8, 50);
+    let tree = lineage::render_tree(&run.population);
+    // every member id appears exactly once in the tree
+    for m in run.population.members() {
+        assert_eq!(
+            tree.matches(&m.id).count(),
+            1,
+            "{} appears wrong number of times",
+            m.id
+        );
+    }
+    let d = lineage::diversity(&run.population);
+    assert!(d.axes_explored >= 3);
+    assert!(d.max_depth >= 1);
+}
