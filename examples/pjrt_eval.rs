@@ -70,6 +70,7 @@ fn main() {
             reps_per_config: 1,
             parallelism: 1,
             submission_quota: Some(budget),
+            ..Default::default()
         },
     )
     .with_feedback_suite(BenchmarkSuite {

@@ -7,14 +7,20 @@
 //! design, no rationales. Comparing it against the scientist at equal
 //! submission budget quantifies what the paper's "science" layer adds
 //! over plain evolution with the same operators.
+//!
+//! Each generation is evaluated as ONE batch through the platform's
+//! multi-lane executor ([`EvalPlatform::submit_batch`]) — the same
+//! machinery the scientist's step (4) uses — so the GA benefits from
+//! both real submission lanes and the eval-result cache (re-derived
+//! duplicate children are free).
 
-use super::{submit_scored, Tuner, TunerOutcome};
-use crate::eval::{EvalBackend, EvalPlatform};
+use super::{Tuner, TunerOutcome};
+use crate::eval::{BatchResult, EvalBackend, EvalPlatform};
 use crate::genome::{
     edit::{crossover, GenomeEdit},
     seeds, KernelGenome,
 };
-use crate::metrics::ConvergenceCurve;
+use crate::metrics::{geomean, ConvergenceCurve};
 use crate::rng::Rng;
 
 /// GA hyper-parameters.
@@ -46,6 +52,60 @@ struct Scored {
     score: f64,
 }
 
+/// Fold one batch of executor results into (curve, best) and return
+/// the scored generation members, preserving the per-submission curve
+/// semantics via each result's log index (cache hits update `best`
+/// but, having consumed no submission, add no curve point).
+fn fold_batch(
+    genomes: &[KernelGenome],
+    results: &[BatchResult],
+    curve: &mut ConvergenceCurve,
+    best: &mut Option<(f64, KernelGenome)>,
+) -> Vec<Scored> {
+    let mut scored = Vec::with_capacity(results.len());
+    for (g, r) in genomes.iter().zip(results) {
+        let s = match r.outcome.timings() {
+            Some(ts) => geomean(ts),
+            None => f64::INFINITY,
+        };
+        if let Some(index) = r.submission_index {
+            let at = (index + 1) as usize;
+            if s.is_finite() {
+                curve.record(at, s);
+            } else if let Some(b) = curve.best() {
+                curve.record(at, b);
+            }
+        }
+        if s.is_finite() && best.as_ref().map(|(b, _)| s < *b).unwrap_or(true) {
+            *best = Some((s, g.clone()));
+        }
+        scored.push(Scored {
+            genome: g.clone(),
+            score: s,
+        });
+    }
+    scored
+}
+
+/// Plan-time budget guard: cached children are free, uncached ones
+/// reserve one submission each. Returns whether the child fits.
+fn plan_room<B: EvalBackend>(
+    platform: &EvalPlatform<B>,
+    budget: u64,
+    planned: &mut u64,
+    g: &KernelGenome,
+) -> bool {
+    if platform.cached_outcome(g).is_some() {
+        return true;
+    }
+    let remaining = budget.saturating_sub(platform.submissions());
+    if *planned >= remaining {
+        return false;
+    }
+    *planned += 1;
+    true
+}
+
 impl GeneticAlgorithm {
     fn tournament<'a>(&self, pop: &'a [Scored], rng: &mut Rng) -> &'a Scored {
         let mut best: Option<&Scored> = None;
@@ -70,7 +130,7 @@ impl Tuner for GeneticAlgorithm {
         "genetic-algorithm"
     }
 
-    fn run<B: EvalBackend>(
+    fn run<B: EvalBackend + Send>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,
@@ -79,36 +139,34 @@ impl Tuner for GeneticAlgorithm {
         let mut curve = ConvergenceCurve::default();
         let mut best: Option<(f64, KernelGenome)> = None;
 
-        let score_and_track =
-            |g: &KernelGenome,
-             platform: &mut EvalPlatform<B>,
-             curve: &mut ConvergenceCurve,
-             best: &mut Option<(f64, KernelGenome)>| {
-                let s = submit_scored(platform, g, curve).unwrap_or(f64::INFINITY);
-                if s.is_finite() && best.as_ref().map(|(b, _)| s < *b).unwrap_or(true) {
-                    *best = Some((s, g.clone()));
-                }
-                s
-            };
-
-        // generation 0: seeds + mutated copies
+        // generation 0: seeds + mutated copies, one batch
         let starts: Vec<KernelGenome> =
             seeds::starting_population().into_iter().map(|(_, g)| g).collect();
-        let mut population: Vec<Scored> = Vec::new();
-        while population.len() < self.population_size && platform.submissions() < budget {
-            let mut g = starts[population.len() % starts.len()].clone();
-            if population.len() >= starts.len() {
+        let mut gen0: Vec<KernelGenome> = Vec::new();
+        let mut planned = 0u64;
+        let mut attempts = 0;
+        while gen0.len() < self.population_size && attempts < self.population_size * 50 {
+            attempts += 1;
+            let mut g = starts[gen0.len() % starts.len()].clone();
+            if gen0.len() >= starts.len() {
                 self.mutate(&mut g, &mut rng);
                 if g.validate().is_err() {
                     continue;
                 }
             }
-            let score = score_and_track(&g, platform, &mut curve, &mut best);
-            population.push(Scored { genome: g, score });
+            if !plan_room(platform, budget, &mut planned, &g) {
+                break;
+            }
+            gen0.push(g);
         }
+        let results = platform.submit_batch(&gen0);
+        gen0.truncate(results.len());
+        let mut population = fold_batch(&gen0, &results, &mut curve, &mut best);
 
-        // generations
-        while platform.submissions() < budget && !population.is_empty() {
+        // generations: plan children, evaluate each generation as a batch
+        let mut stagnant = 0u32;
+        while platform.submissions() < budget && !population.is_empty() && stagnant < 16 {
+            let before = platform.submissions();
             let mut next: Vec<Scored> = Vec::new();
             // elitism: carry over the best without re-evaluation
             let mut sorted = population.clone();
@@ -116,9 +174,10 @@ impl Tuner for GeneticAlgorithm {
             for e in sorted.iter().take(self.elitism) {
                 next.push(e.clone());
             }
+            let mut children: Vec<KernelGenome> = Vec::new();
+            let mut planned = 0u64;
             let mut attempts = 0;
-            while next.len() < self.population_size
-                && platform.submissions() < budget
+            while next.len() + children.len() < self.population_size
                 && attempts < self.population_size * 20
             {
                 attempts += 1;
@@ -129,13 +188,22 @@ impl Tuner for GeneticAlgorithm {
                 if child.validate().is_err() {
                     continue;
                 }
-                let score = score_and_track(&child, platform, &mut curve, &mut best);
-                next.push(Scored {
-                    genome: child,
-                    score,
-                });
+                if !plan_room(platform, budget, &mut planned, &child) {
+                    break;
+                }
+                children.push(child);
             }
+            let results = platform.submit_batch(&children);
+            children.truncate(results.len());
+            next.extend(fold_batch(&children, &results, &mut curve, &mut best));
             population = next;
+            // a fully-cached generation consumes no budget; bail out if
+            // the search keeps treading water instead of spinning
+            if platform.submissions() == before {
+                stagnant += 1;
+            } else {
+                stagnant = 0;
+            }
         }
 
         let (score, genome) =

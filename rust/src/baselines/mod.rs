@@ -27,12 +27,14 @@ pub struct TunerOutcome {
     pub curve: ConvergenceCurve,
 }
 
-/// A search strategy over the genome space.
+/// A search strategy over the genome space. `B: Send` because tuners
+/// may evaluate candidate generations through the platform's
+/// multi-lane batch executor (the genetic baseline does).
 pub trait Tuner {
     fn name(&self) -> &'static str;
 
     /// Run until `budget` submissions are spent on `platform`.
-    fn run<B: EvalBackend>(
+    fn run<B: EvalBackend + Send>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,
@@ -69,7 +71,7 @@ impl Tuner for RandomSearch {
         "random-search"
     }
 
-    fn run<B: EvalBackend>(
+    fn run<B: EvalBackend + Send>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,
@@ -125,7 +127,7 @@ impl Tuner for HillClimber {
         "hill-climber"
     }
 
-    fn run<B: EvalBackend>(
+    fn run<B: EvalBackend + Send>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,
@@ -198,7 +200,7 @@ impl Tuner for Annealer {
         "simulated-annealing"
     }
 
-    fn run<B: EvalBackend>(
+    fn run<B: EvalBackend + Send>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,

@@ -15,8 +15,14 @@ pub struct RunConfig {
     pub max_submissions: u64,
     /// Timing repetitions per config on the platform.
     pub reps_per_config: u32,
-    /// Submission lanes (1 = the paper's sequential mode).
+    /// Submission lanes (1 = the paper's sequential mode). Above 1,
+    /// each iteration's children are evaluated concurrently on real
+    /// executor threads (paper §5.1's counterfactual).
     pub eval_parallelism: u32,
+    /// Serve duplicate genomes from the platform's eval-result cache
+    /// (keyed by genome content hash) without consuming submission
+    /// quota or platform time.
+    pub eval_cache: bool,
     /// Simulator measurement noise (lognormal sigma).
     pub noise_sigma: f64,
     pub selection_policy: SelectionPolicy,
@@ -40,6 +46,7 @@ impl Default for RunConfig {
             max_submissions: 120,
             reps_per_config: 3,
             eval_parallelism: 1,
+            eval_cache: true,
             noise_sigma: 0.02,
             selection_policy: SelectionPolicy::PaperLlm,
             experiment_rule: ExperimentRule::Paper,
@@ -107,6 +114,13 @@ impl RunConfig {
             }
             "platform.reps_per_config" => self.reps_per_config = parse_u64(value)? as u32,
             "platform.parallelism" => self.eval_parallelism = parse_u64(value)? as u32,
+            "platform.cache" => {
+                self.eval_cache = match value {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(format!("bad cache '{value}'")),
+                }
+            }
             "platform.noise_sigma" => self.noise_sigma = parse_f64(value)?,
             "agents.selection_policy" => {
                 self.selection_policy = match value {
@@ -165,9 +179,17 @@ mod tests {
     fn default_is_paper_setup() {
         let c = RunConfig::default();
         assert_eq!(c.eval_parallelism, 1, "sequential good-citizen mode");
+        assert!(c.eval_cache, "duplicate submissions are free by default");
         assert_eq!(c.selection_policy, SelectionPolicy::PaperLlm);
         assert_eq!(c.experiment_rule, ExperimentRule::Paper);
         assert_eq!(c.knowledge, KnowledgeProfile::Full);
+    }
+
+    #[test]
+    fn toml_platform_cache_knob() {
+        let c = RunConfig::from_toml("[platform]\ncache = false\n").unwrap();
+        assert!(!c.eval_cache);
+        assert!(RunConfig::from_toml("[platform]\ncache = maybe\n").is_err());
     }
 
     #[test]

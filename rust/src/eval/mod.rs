@@ -1,21 +1,29 @@
 //! The kernel testing & evaluation platform — the competition-server
 //! substrate (paper §3.4).
 //!
-//! Submissions are processed **sequentially** (the paper's
+//! By default submissions are processed **sequentially** (the paper's
 //! "good-citizen" rule, which it also names as the system's main
 //! bottleneck, §5.1). Each submission passes a compile gate, a
 //! correctness gate, then is timed on the feedback suite. The platform
 //! keeps a full submission log and a simulated wall clock so the
 //! parallelism ablation can compare sequential vs parallel submission
 //! at a fixed wall-clock budget.
+//!
+//! With `parallelism > 1`, batches submitted through
+//! [`EvalPlatform::submit_batch`] run on *real* worker threads via
+//! [`executor`], one independently-forked backend per lane, and a
+//! genome-fingerprint [`executor::EvalCache`] makes duplicate
+//! submissions free (DESIGN.md §3).
 
+pub mod executor;
 pub mod platform;
 pub mod verifier;
 
 use crate::genome::KernelGenome;
 use crate::workload::GemmConfig;
 
-pub use platform::{EvalPlatform, PlatformConfig, SubmissionRecord};
+pub use executor::{evaluate_one, run_batch, EvalCache};
+pub use platform::{BatchResult, EvalPlatform, PlatformConfig, SubmissionRecord};
 pub use verifier::{TolerancePolicy, Verdict};
 
 /// Why a submission failed.
@@ -62,6 +70,20 @@ pub trait EvalBackend {
     fn submission_cost_s(&self) -> f64 {
         90.0
     }
+
+    /// Create an independent backend for one parallel submission lane
+    /// (the executor asks once per lane per batch). `None` — the
+    /// default — means the backend cannot be forked and batches fall
+    /// back to in-order sequential evaluation; the platform still does
+    /// multi-lane wall-clock accounting. Forked lanes must be
+    /// deterministic functions of `(self, lane)` so multi-lane runs
+    /// replay from a seed (see `executor` module docs).
+    fn fork_lane(&mut self, _lane: u64) -> Option<Self>
+    where
+        Self: Sized,
+    {
+        None
+    }
 }
 
 impl EvalBackend for crate::sim::SimBackend {
@@ -88,6 +110,10 @@ impl EvalBackend for crate::sim::SimBackend {
     fn measure(&mut self, genome: &KernelGenome, cfg: &GemmConfig) -> Result<f64, EvalError> {
         crate::sim::SimBackend::measure(self, genome, cfg)
             .map_err(|e| EvalError::Compile(e.to_string()))
+    }
+
+    fn fork_lane(&mut self, lane: u64) -> Option<Self> {
+        Some(crate::sim::SimBackend::lane_clone(self, lane))
     }
 }
 

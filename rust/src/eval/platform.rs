@@ -1,6 +1,11 @@
-//! The submission platform: sequential queue, gates, timing runs,
-//! leaderboard scoring, and the simulated wall clock.
+//! The submission platform: submission queue, gates, timing runs,
+//! leaderboard scoring, the simulated wall clock, and (since the
+//! executor refactor, DESIGN.md §3) genuinely concurrent batch
+//! submission plus the genome-fingerprint result cache.
 
+use std::collections::HashMap;
+
+use super::executor::{self, EvalCache};
 use super::{EvalBackend, EvalError};
 use crate::genome::KernelGenome;
 use crate::metrics::geomean;
@@ -14,10 +19,15 @@ pub struct PlatformConfig {
     /// standard benchmark practice).
     pub reps_per_config: u32,
     /// Concurrent submission lanes. The paper runs 1 ("good citizen");
-    /// the §5.1 ablation raises it.
+    /// the §5.1 ablation raises it. Batches submitted through
+    /// [`EvalPlatform::submit_batch`] run on this many real worker
+    /// threads when the backend supports lane forking.
     pub parallelism: u32,
     /// Hard cap on total submissions (competition quota), if any.
     pub submission_quota: Option<u64>,
+    /// Serve duplicate genomes from the eval-result cache on the batch
+    /// path (free: no quota, no platform time, no backend run).
+    pub cache_results: bool,
 }
 
 impl Default for PlatformConfig {
@@ -26,6 +36,7 @@ impl Default for PlatformConfig {
             reps_per_config: 3,
             parallelism: 1,
             submission_quota: None,
+            cache_results: true,
         }
     }
 }
@@ -39,6 +50,19 @@ pub struct SubmissionRecord {
     pub outcome: EvalOutcome,
 }
 
+/// Per-genome result of a [`EvalPlatform::submit_batch`] call, in
+/// submission order.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    pub outcome: EvalOutcome,
+    /// Served from the eval cache: no quota, no platform time consumed.
+    pub cached: bool,
+    /// Index in the submission log (`None` for cache hits).
+    pub submission_index: Option<u64>,
+    /// Simulated wall-clock time at which the result became available.
+    pub completed_at_s: f64,
+}
+
 /// The evaluation platform wrapping a backend.
 pub struct EvalPlatform<B: EvalBackend> {
     backend: B,
@@ -47,19 +71,25 @@ pub struct EvalPlatform<B: EvalBackend> {
     log: Vec<SubmissionRecord>,
     /// Simulated wall clock, seconds. With `parallelism` lanes, each
     /// lane is a virtual worker; the clock advances to the earliest
-    /// free lane at submit time.
+    /// free lane at submit time. Batch submissions assign lanes in
+    /// submission order with equal per-submission cost, which matches
+    /// the executor's static round-robin thread partition.
     lane_busy_until: Vec<f64>,
+    /// Eval-result cache keyed by genome fingerprint (DESIGN.md §3).
+    cache: EvalCache,
 }
 
 impl<B: EvalBackend> EvalPlatform<B> {
     pub fn new(backend: B, config: PlatformConfig) -> Self {
         let lanes = config.parallelism.max(1) as usize;
+        let cache = EvalCache::new(config.cache_results);
         EvalPlatform {
             backend,
             config,
             feedback_suite: BenchmarkSuite::feedback(),
             log: Vec::new(),
             lane_busy_until: vec![0.0; lanes],
+            cache,
         }
     }
 
@@ -98,15 +128,124 @@ impl<B: EvalBackend> EvalPlatform<B> {
     /// Submit one kernel: gates, then `reps_per_config` timing reps on
     /// each feedback config (minimum reported). Advances the simulated
     /// clock on the earliest-free lane — the sequential default means
-    /// strictly serialized submissions, as in the paper.
+    /// strictly serialized submissions, as in the paper. Always runs
+    /// the backend (the cache only *serves* on the batch path, but
+    /// results recorded here do populate it).
     pub fn submit(&mut self, genome: &KernelGenome) -> EvalOutcome {
         assert!(
             !self.quota_exhausted(),
             "platform quota exhausted ({} submissions)",
             self.submissions()
         );
-        let outcome = self.run_gates_and_time(genome);
-        // clock accounting
+        let outcome = executor::evaluate_one(
+            &mut self.backend,
+            &self.feedback_suite,
+            self.config.reps_per_config,
+            genome,
+        );
+        self.cache.insert(genome.fingerprint(), outcome.clone());
+        self.account_submission(outcome.clone());
+        outcome
+    }
+
+    /// Submit a batch of kernels. Cache hits are served for free (no
+    /// quota, no platform time) — including duplicates *within* the
+    /// batch, whose later occurrences alias the first occurrence's
+    /// result. The misses run concurrently on `parallelism` executor
+    /// lanes and are then committed to the log, quota, and lane clocks
+    /// **in submission order**, exactly as if each had gone through
+    /// [`EvalPlatform::submit`] in turn. If the quota runs out
+    /// mid-batch, processing stops at the first entry the quota cannot
+    /// cover and the rest are dropped — even entries that would have
+    /// been free — so the returned vector is always a prefix-aligned
+    /// result per input; callers that must not lose work pre-truncate
+    /// to their remaining budget.
+    pub fn submit_batch(&mut self, genomes: &[KernelGenome]) -> Vec<BatchResult>
+    where
+        B: Send,
+    {
+        enum Slot {
+            Cached(EvalOutcome),
+            Run(usize),
+            /// Duplicate (within this batch) of planned job `j`.
+            Alias(usize),
+        }
+        let remaining = match self.config.submission_quota {
+            Some(q) => q.saturating_sub(self.submissions()),
+            None => u64::MAX,
+        };
+        let mut slots: Vec<Slot> = Vec::with_capacity(genomes.len());
+        let mut jobs: Vec<KernelGenome> = Vec::new();
+        let mut planned_fps: HashMap<String, usize> = HashMap::new();
+        for genome in genomes {
+            let fp = genome.fingerprint();
+            if let Some(hit) = self.cache.lookup(&fp) {
+                slots.push(Slot::Cached(hit));
+                continue;
+            }
+            if self.cache.enabled() {
+                if let Some(&j) = planned_fps.get(&fp) {
+                    slots.push(Slot::Alias(j));
+                    continue;
+                }
+            }
+            if (jobs.len() as u64) >= remaining {
+                break; // quota exhausted: truncate the batch here
+            }
+            slots.push(Slot::Run(jobs.len()));
+            planned_fps.insert(fp, jobs.len());
+            jobs.push(genome.clone());
+        }
+        let outcomes = executor::run_batch(
+            &mut self.backend,
+            &self.feedback_suite,
+            self.config.reps_per_config,
+            &jobs,
+            self.config.parallelism,
+        );
+        let mut results = Vec::with_capacity(slots.len());
+        for slot in slots {
+            match slot {
+                Slot::Cached(outcome) => results.push(BatchResult {
+                    outcome,
+                    cached: true,
+                    submission_index: None,
+                    completed_at_s: self.wall_clock_s(),
+                }),
+                Slot::Alias(j) => {
+                    // By commit order the aliased job has already been
+                    // committed and cached; the lookup also counts the
+                    // hit in the cache stats.
+                    let outcome = self
+                        .cache
+                        .lookup(&jobs[j].fingerprint())
+                        .unwrap_or_else(|| outcomes[j].clone());
+                    results.push(BatchResult {
+                        outcome,
+                        cached: true,
+                        submission_index: None,
+                        completed_at_s: self.wall_clock_s(),
+                    });
+                }
+                Slot::Run(j) => {
+                    let outcome = outcomes[j].clone();
+                    self.cache.insert(jobs[j].fingerprint(), outcome.clone());
+                    let (index, completed_at_s) = self.account_submission(outcome.clone());
+                    results.push(BatchResult {
+                        outcome,
+                        cached: false,
+                        submission_index: Some(index),
+                        completed_at_s,
+                    });
+                }
+            }
+        }
+        results
+    }
+
+    /// Record one completed submission: quota, earliest-free-lane wall
+    /// clock, and the log line. Returns (log index, completion time).
+    fn account_submission(&mut self, outcome: EvalOutcome) -> (u64, f64) {
         let cost = self.backend.submission_cost_s();
         let lane = self
             .lane_busy_until
@@ -117,42 +256,24 @@ impl<B: EvalBackend> EvalPlatform<B> {
             .unwrap_or(0);
         self.lane_busy_until[lane] += cost;
         let completed_at_s = self.lane_busy_until[lane];
+        let index = self.log.len() as u64;
         self.log.push(SubmissionRecord {
-            index: self.log.len() as u64,
+            index,
             completed_at_s,
-            outcome: outcome.clone(),
+            outcome,
         });
-        outcome
+        (index, completed_at_s)
     }
 
-    fn run_gates_and_time(&mut self, genome: &KernelGenome) -> EvalOutcome {
-        if let Err(e) = self.backend.check(genome) {
-            return match e {
-                EvalError::Compile(m) | EvalError::Unsupported(m) => {
-                    EvalOutcome::CompileFailure(m)
-                }
-                EvalError::Incorrect(m) => EvalOutcome::IncorrectResult(m),
-            };
-        }
-        let mut timings = Vec::with_capacity(self.feedback_suite.configs.len());
-        for cfg in self.feedback_suite.configs.clone() {
-            let mut best = f64::INFINITY;
-            for _ in 0..self.config.reps_per_config.max(1) {
-                match self.backend.measure(genome, &cfg) {
-                    Ok(t) => best = best.min(t),
-                    Err(e) => {
-                        return match e {
-                            EvalError::Incorrect(m) => EvalOutcome::IncorrectResult(m),
-                            EvalError::Compile(m) | EvalError::Unsupported(m) => {
-                                EvalOutcome::CompileFailure(m)
-                            }
-                        }
-                    }
-                }
-            }
-            timings.push(best);
-        }
-        EvalOutcome::Timings(timings)
+    /// Read-only cache probe (planning aid for batch callers: a cached
+    /// genome will not consume quota). Does not count toward stats.
+    pub fn cached_outcome(&self, genome: &KernelGenome) -> Option<EvalOutcome> {
+        self.cache.peek(&genome.fingerprint()).cloned()
+    }
+
+    /// (hits, misses) of counted cache lookups on the batch path.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
     }
 
     /// Final leaderboard score: geomean over a (typically 18-size)
@@ -273,6 +394,117 @@ mod tests {
         );
         p.submit(&seeds::mfma_seed());
         p.submit(&seeds::mfma_seed());
+    }
+
+    #[test]
+    fn batch_matches_sequential_at_one_lane() {
+        let jobs: Vec<KernelGenome> =
+            crate::genome::edit::valid_neighbors(&seeds::mfma_seed())
+                .into_iter()
+                .take(5)
+                .map(|(_, g)| g)
+                .collect();
+        let mut seq = EvalPlatform::new(SimBackend::new(4), PlatformConfig::default());
+        let expected: Vec<EvalOutcome> = jobs.iter().map(|g| seq.submit(g)).collect();
+        let mut bat = EvalPlatform::new(SimBackend::new(4), PlatformConfig::default());
+        let results = bat.submit_batch(&jobs);
+        assert_eq!(results.len(), jobs.len());
+        for (i, (r, e)) in results.iter().zip(&expected).enumerate() {
+            assert!(!r.cached);
+            assert_eq!(r.submission_index, Some(i as u64));
+            assert_eq!(&r.outcome, e, "job {i}");
+        }
+        assert_eq!(bat.wall_clock_s(), seq.wall_clock_s());
+        assert_eq!(bat.submissions(), seq.submissions());
+    }
+
+    #[test]
+    fn batch_cache_hit_is_free() {
+        let mut p = EvalPlatform::new(
+            SimBackend::new(2),
+            PlatformConfig {
+                submission_quota: Some(2),
+                ..Default::default()
+            },
+        );
+        let g = seeds::mfma_seed();
+        let first = p.submit_batch(std::slice::from_ref(&g));
+        assert!(!first[0].cached);
+        assert_eq!(p.submissions(), 1);
+        let clock = p.wall_clock_s();
+        let second = p.submit_batch(std::slice::from_ref(&g));
+        assert!(second[0].cached);
+        assert_eq!(second[0].outcome, first[0].outcome, "identical EvalOutcome");
+        assert_eq!(second[0].submission_index, None);
+        assert_eq!(p.submissions(), 1, "cache hit consumes no quota");
+        assert_eq!(p.wall_clock_s(), clock, "cache hit consumes no platform time");
+        assert_eq!(p.cache_stats().0, 1);
+    }
+
+    #[test]
+    fn in_batch_duplicates_are_served_once() {
+        let mut p = EvalPlatform::new(SimBackend::new(12), PlatformConfig::default());
+        let g = seeds::mfma_seed();
+        let other = seeds::human_oracle();
+        let batch = vec![g.clone(), other.clone(), g.clone()];
+        let results = p.submit_batch(&batch);
+        assert_eq!(results.len(), 3);
+        assert!(!results[0].cached && !results[1].cached);
+        assert!(results[2].cached, "second occurrence aliases the first");
+        assert_eq!(results[2].outcome, results[0].outcome);
+        assert_eq!(results[2].submission_index, None);
+        assert_eq!(p.submissions(), 2, "the duplicate consumed no quota");
+        assert_eq!(p.cache_stats().0, 1, "alias counted as a cache hit");
+        // with the cache disabled, in-batch duplicates evaluate twice
+        let mut raw = EvalPlatform::new(
+            SimBackend::new(12),
+            PlatformConfig {
+                cache_results: false,
+                ..Default::default()
+            },
+        );
+        let results = raw.submit_batch(&batch);
+        assert_eq!(results.len(), 3);
+        assert!(results.iter().all(|r| !r.cached));
+        assert_eq!(raw.submissions(), 3);
+    }
+
+    #[test]
+    fn batch_truncates_at_quota() {
+        let jobs: Vec<KernelGenome> =
+            crate::genome::edit::valid_neighbors(&seeds::human_oracle())
+                .into_iter()
+                .take(4)
+                .map(|(_, g)| g)
+                .collect();
+        let mut p = EvalPlatform::new(
+            SimBackend::new(3),
+            PlatformConfig {
+                submission_quota: Some(2),
+                ..Default::default()
+            },
+        );
+        let results = p.submit_batch(&jobs);
+        assert_eq!(results.len(), 2);
+        assert_eq!(p.submissions(), 2);
+        assert!(p.quota_exhausted());
+    }
+
+    #[test]
+    fn cache_disabled_reevaluates() {
+        let mut p = EvalPlatform::new(
+            SimBackend::new(6),
+            PlatformConfig {
+                cache_results: false,
+                ..Default::default()
+            },
+        );
+        let g = seeds::mfma_seed();
+        let a = p.submit_batch(std::slice::from_ref(&g));
+        let b = p.submit_batch(std::slice::from_ref(&g));
+        assert!(!a[0].cached && !b[0].cached);
+        assert_eq!(p.submissions(), 2);
+        assert!(p.cached_outcome(&g).is_none());
     }
 
     #[test]

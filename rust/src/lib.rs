@@ -20,7 +20,8 @@
 //!          │                      → pick 3 (innov/max/min)│
 //!   (3) Kernel Writer (×3)     → new kernels + reports    │
 //!          │                                              │
-//!   (4) Sequential evaluation  → correctness + 6 timings ─┘
+//!   (4) Batched evaluation     → correctness + 6 timings ─┘
+//!       (multi-lane executor)
 //! ```
 //!
 //! This crate is Layer 3: the coordinator that owns the loop, the
@@ -31,6 +32,14 @@
 //! Layers 2/1 are the JAX model + Pallas kernel compiled ahead of time
 //! to HLO artifacts which [`runtime`] loads and times over PJRT — the
 //! *real* evaluation backend proving the stack composes.
+//!
+//! Step (4) runs each iteration's children as one batch through the
+//! platform's multi-lane executor ([`eval::executor`], `DESIGN.md`
+//! §3): with the paper's 1-lane good-citizen default the batch is
+//! bit-identical to sequential submission, while higher lane counts
+//! evaluate on real worker threads with an eval-result cache making
+//! duplicate genomes free. See `README.md` for the crate layout, the
+//! tier-1 verify command, and how to run every bench and example.
 //!
 //! ## Quick start
 //!

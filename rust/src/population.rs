@@ -246,6 +246,13 @@ impl Population {
         anc_a.into_iter().find(|m| anc_b.contains(m.id.as_str()))
     }
 
+    /// O(1) duplicate probe by precomputed fingerprint — the batch
+    /// planner's form of [`Population::find_duplicate`] (it already
+    /// holds the fingerprint and only needs a yes/no).
+    pub fn contains_fingerprint(&self, fingerprint: &str) -> bool {
+        self.fingerprints.contains(fingerprint)
+    }
+
     /// Members whose genome fingerprint matches (dedup check). The
     /// common (negative) case is O(1) via the fingerprint cache.
     pub fn find_duplicate(&self, g: &KernelGenome) -> Option<&Individual> {
@@ -403,5 +410,7 @@ mod tests {
         let p = pop();
         assert!(p.find_duplicate(&seeds::mfma_seed()).is_some());
         assert!(p.find_duplicate(&seeds::human_oracle()).is_none());
+        assert!(p.contains_fingerprint(&seeds::mfma_seed().fingerprint()));
+        assert!(!p.contains_fingerprint(&seeds::human_oracle().fingerprint()));
     }
 }

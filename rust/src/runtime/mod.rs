@@ -2,10 +2,16 @@
 //!
 //! `make artifacts` has the build-time python layer lower every kernel
 //! variant (L1 Pallas fp8 GEMM inside the L2 JAX graph) to HLO text
-//! plus a `catalog.json`. This module loads those artifacts with the
-//! `xla` crate (PJRT C API, CPU plugin), compiles them once, and then
-//! checks + times them from the rust hot path — python is never
+//! plus a `catalog.json`. This module loads those artifacts over the
+//! `xla` PJRT surface (C API, CPU plugin), compiles them once, and
+//! then checks + times them from the rust hot path — python is never
 //! involved at runtime.
+//!
+//! The offline workspace cannot vendor the real `xla` crate, so the
+//! `xla::` paths below resolve to the API-identical in-tree
+//! [`xla_shim`] (see its docs and DESIGN.md §5 for the swap-back
+//! instructions); `PjrtBackend::open` then reports PJRT as
+//! unavailable and the PJRT integration tests skip.
 //!
 //! [`PjrtBackend`] implements [`crate::eval::EvalBackend`], so the
 //! identical scientist loop that drives the MI300 simulator can drive
@@ -16,6 +22,9 @@
 //! simulated MI300 (see DESIGN.md §2).
 
 pub mod catalog;
+pub mod xla_shim;
+
+use self::xla_shim as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -1,0 +1,154 @@
+//! In-tree stand-in for the `xla` crate's PJRT surface (DESIGN.md §5).
+//!
+//! The offline workspace cannot vendor the real `xla` crate, so this
+//! module mirrors the exact API slice [`super::PjrtBackend`] uses —
+//! same type names, same signatures — behind `use self::xla_shim as
+//! xla` in `runtime::mod`. Every entry point compiles; at runtime the
+//! first call `PjrtBackend::open` makes ([`PjRtClient::cpu`]) returns
+//! a clear "PJRT unavailable" error, which the backend surfaces as
+//! `EvalError::Unsupported`. The PJRT integration tests already skip
+//! when `artifacts/` is absent, so `cargo test` stays green on a fresh
+//! checkout.
+//!
+//! To run real compiled artifacts: add the `xla` dependency to
+//! `rust/Cargo.toml`, delete this module, and drop the alias — no call
+//! site changes.
+
+use std::fmt;
+
+/// Error type mirroring the crate's (call sites only format it).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT unavailable: this offline build ships the in-tree xla shim; \
+         add the real `xla` crate to rust/Cargo.toml to load compiled artifacts"
+            .into(),
+    ))
+}
+
+/// Host literal (dense array) stand-in.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module stand-in.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// Computation wrapper stand-in.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer stand-in.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable stand-in.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Clone>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client stand-in: construction fails with the shim notice.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_shim() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla shim"), "{err}");
+    }
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert_eq!(l.reshape(&[3, 2]).unwrap().dims(), &[3, 2]);
+    }
+}

@@ -6,9 +6,17 @@
 //!   (1) Evolutionary Selector  -> Base + Reference (+ rationale)
 //!   (2) Experiment Designer    -> 10 avenues -> 5 plans -> pick 3
 //!   (3) Kernel Writer x3       -> children (+ self-reports)
-//!   (4) submit each child SEQUENTIALLY to the evaluation platform
-//!       -> correctness + 6-config timings -> back into the population
+//!   (4) submit the iteration's children AS A BATCH to the evaluation
+//!       platform's multi-lane executor -> correctness + 6-config
+//!       timings -> back into the population
 //! ```
+//!
+//! With `eval_parallelism = 1` (the paper's good-citizen default) the
+//! batch degenerates to exactly the sequential submission path: the
+//! same writer-RNG and backend-RNG call sequences, hence the same
+//! population trajectory bit-for-bit (see `tests/executor.rs`). Higher
+//! lane counts run the children on real worker threads (paper §5.1's
+//! counterfactual; DESIGN.md §3).
 //!
 //! Everything the agents see flows through the population ledger —
 //! they never touch the simulator's internals, matching the paper's
@@ -70,14 +78,17 @@ impl ScientistRun<SimBackend> {
                 reps_per_config: config.reps_per_config,
                 parallelism: config.eval_parallelism,
                 submission_quota: Some(config.max_submissions),
+                cache_results: config.eval_cache,
             },
         );
         Self::with_platform(config, platform)
     }
 }
 
-impl<B: EvalBackend> ScientistRun<B> {
+impl<B: EvalBackend + Send> ScientistRun<B> {
     /// Construct over an arbitrary backend (the PJRT example uses this).
+    /// `Send` is required because step (4) submits each iteration's
+    /// children as a batch through the multi-lane executor.
     pub fn with_platform(
         config: RunConfig,
         platform: EvalPlatform<B>,
@@ -113,12 +124,16 @@ impl<B: EvalBackend> ScientistRun<B> {
                     .get(run.population.len())
                     .map(|r| r.outcome.clone())
                     .unwrap_or(EvalOutcome::CompileFailure("missing log".into()));
+                // probe i's result arrived with submission i+1 (the
+                // log index it was fetched from, 1-based)
+                let submitted_at = run.population.len() as u64 + 1;
                 run.record_individual(
                     vec![],
                     genome,
                     label.clone(),
                     format!("hardware probe ({label})"),
                     outcome,
+                    submitted_at,
                 );
             }
         }
@@ -136,17 +151,24 @@ impl<B: EvalBackend> ScientistRun<B> {
                 return Err("quota exhausted while seeding".into());
             }
             let outcome = self.platform.submit(&genome);
+            let submitted_at = self.platform.submissions();
             self.record_individual(
                 vec![],
                 genome,
                 format!("seed kernel: {name}"),
                 format!("provided seed ({name})"),
                 outcome,
+                submitted_at,
             );
         }
         Ok(())
     }
 
+    /// Add one evaluated kernel to the ledger. `submitted_at` is the
+    /// 1-based submission count at which its results became available —
+    /// explicit (rather than read from the platform) so batch
+    /// submissions attribute each child to its own submission index on
+    /// the convergence curve.
     fn record_individual(
         &mut self,
         parents: Vec<String>,
@@ -154,14 +176,14 @@ impl<B: EvalBackend> ScientistRun<B> {
         experiment: String,
         report: String,
         outcome: EvalOutcome,
+        submitted_at: u64,
     ) -> String {
         let id = self.population.next_id();
         if let Some(ts) = outcome.timings() {
             self.curve
-                .record(self.platform.submissions() as usize, crate::metrics::geomean(ts));
+                .record(submitted_at as usize, crate::metrics::geomean(ts));
         } else if let Some(best) = self.curve.best() {
-            self.curve
-                .record(self.platform.submissions() as usize, best);
+            self.curve.record(submitted_at as usize, best);
         }
         self.population.add(Individual {
             id: id.clone(),
@@ -182,8 +204,8 @@ impl<B: EvalBackend> ScientistRun<B> {
     }
 
     /// Run one full loop iteration (select -> design -> 3x write ->
-    /// sequential submits). Returns `None` when out of budget or when
-    /// selection is impossible.
+    /// one batched submit through the multi-lane executor). Returns
+    /// `None` when out of budget or when selection is impossible.
     pub fn run_iteration(&mut self) -> Option<&IterationLog> {
         if self.budget_left() == 0 {
             return None;
@@ -210,11 +232,19 @@ impl<B: EvalBackend> ScientistRun<B> {
         }
         let chosen = self.agents.designer.choose(&design.plans, &mut self.agents.llm);
 
-        // Stage 3 — Kernel Writer x chosen, then sequential submission
+        // Stage 3 — Kernel Writer x chosen. Children are collected
+        // first, then submitted as ONE batch through the platform's
+        // multi-lane executor (step 4). The planning loop mirrors the
+        // old sequential path exactly: writes happen while (virtual)
+        // budget remains, and each non-duplicate child reserves one
+        // submission — so at parallelism=1 the writer-RNG and
+        // backend-RNG call sequences are unchanged.
         let mut submitted_ids = Vec::new();
         let mut chosen_experiments = Vec::new();
+        let mut batch: Vec<crate::genome::KernelGenome> = Vec::new();
+        let mut pending: Vec<(String, crate::agents::KernelWrite)> = Vec::new();
         for idx in &chosen {
-            if self.budget_left() == 0 {
+            if (batch.len() as u64) >= self.budget_left() {
                 break;
             }
             let plan = &design.plans[*idx];
@@ -226,17 +256,30 @@ impl<B: EvalBackend> ScientistRun<B> {
                 &mut self.agents.llm,
             );
             // duplicate kernels are pointless submissions; the paper's
-            // population ids are unique code versions. Skip exact dups.
-            if self.population.find_duplicate(&write.genome).is_some() {
+            // population ids are unique code versions. Skip exact dups
+            // (against the ledger and within this batch).
+            let fp = write.genome.fingerprint();
+            if self.population.contains_fingerprint(&fp)
+                || batch.iter().any(|g| g.fingerprint() == fp)
+            {
                 continue;
             }
-            let outcome = self.platform.submit(&write.genome);
+            batch.push(write.genome.clone());
+            pending.push((plan.description.clone(), write));
+        }
+        let results = self.platform.submit_batch(&batch);
+        for ((description, write), result) in pending.into_iter().zip(results) {
+            let submitted_at = result
+                .submission_index
+                .map(|i| i + 1)
+                .unwrap_or_else(|| self.platform.submissions());
             let id = self.record_individual(
                 vec![base.id.clone(), reference.id.clone()],
                 write.genome,
-                plan.description.clone(),
+                description,
                 write.report,
-                outcome,
+                result.outcome,
+                submitted_at,
             );
             submitted_ids.push(id);
         }

@@ -120,6 +120,9 @@ pub struct SimBackend {
     pub noise_sigma: f64,
     rng: Rng,
     measurements: u64,
+    /// The construction seed, kept so parallel lane backends can derive
+    /// decorrelated-but-deterministic noise streams (`lane_clone`).
+    seed: u64,
 }
 
 impl SimBackend {
@@ -129,6 +132,28 @@ impl SimBackend {
             noise_sigma: 0.02,
             rng: Rng::seed_from_u64(seed ^ 0x51b7_ca11),
             measurements: 0,
+            seed,
+        }
+    }
+
+    /// An independent submission-lane backend: same architecture and
+    /// noise model, with a noise stream forked deterministically from
+    /// this backend's stream and the lane id. Models one of several
+    /// identical competition servers, each with its own measurement
+    /// jitter. Forking consumes one draw of the parent stream, so
+    /// successive batches get fresh (yet seed-reproducible) lane
+    /// noise; the sequential parallelism=1 path never forks, keeping
+    /// it bit-identical to plain sequential submission.
+    pub fn lane_clone(&mut self, lane: u64) -> SimBackend {
+        let lane_seed = self
+            .seed
+            .wrapping_add((lane + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        SimBackend {
+            arch: self.arch.clone(),
+            noise_sigma: self.noise_sigma,
+            rng: self.rng.fork(lane),
+            measurements: 0,
+            seed: lane_seed,
         }
     }
 
@@ -241,6 +266,32 @@ mod tests {
         assert_ne!(m1, m3, "repeat measurements jitter");
         let clean = estimate(&MI300, &g, &CFG).unwrap().total_us;
         assert!((m1 / clean - 1.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn lane_clones_are_deterministic_and_decorrelated() {
+        let g = seeds::mfma_seed();
+        // identical parent state => identical forks, per lane
+        let mut p1 = SimBackend::new(7);
+        let mut p2 = SimBackend::new(7);
+        let ma1 = p1.lane_clone(0).measure(&g, &CFG).unwrap();
+        let ma2 = p2.lane_clone(0).measure(&g, &CFG).unwrap();
+        assert_eq!(ma1, ma2, "same parent state + lane => same stream");
+        // different lanes jitter independently
+        let mut p3 = SimBackend::new(7);
+        let mut lane0 = p3.lane_clone(0);
+        let mut lane1 = p3.lane_clone(1);
+        assert_ne!(
+            lane0.measure(&g, &CFG).unwrap(),
+            lane1.measure(&g, &CFG).unwrap(),
+            "lanes are decorrelated"
+        );
+        // forking consumes the parent stream, so a second batch's
+        // forks get fresh noise
+        let mut p4 = SimBackend::new(7);
+        let first = p4.lane_clone(0).measure(&g, &CFG).unwrap();
+        let second = p4.lane_clone(0).measure(&g, &CFG).unwrap();
+        assert_ne!(first, second, "successive forks advance the parent");
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Integration tests for the multi-lane evaluation executor and the
+//! eval-result cache (DESIGN.md §3):
+//!
+//! * parallelism = 1 reproduces the exact sequential submission path —
+//!   same outcomes, same wall clock, same population trajectory;
+//! * parallelism = N preserves submission-order accounting (log
+//!   indices, lane clocks) and stays deterministic per seed;
+//! * the genome-hash cache returns identical `EvalOutcome`s without
+//!   consuming submission quota or platform time.
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::eval::{EvalPlatform, PlatformConfig};
+use gpu_kernel_scientist::genome::{edit, KernelGenome};
+use gpu_kernel_scientist::prelude::*;
+
+fn distinct_genomes(n: usize) -> Vec<KernelGenome> {
+    let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for base in [
+        seeds::mfma_seed(),
+        seeds::human_oracle(),
+        seeds::pytorch_reference(),
+    ] {
+        for (_, g) in edit::valid_neighbors(&base) {
+            if seen.insert(g.fingerprint()) {
+                out.push(g);
+            }
+            if out.len() == n {
+                return out;
+            }
+        }
+    }
+    panic!("not enough distinct genomes for the test");
+}
+
+#[test]
+fn single_lane_batch_is_bit_identical_to_sequential_submits() {
+    let jobs = distinct_genomes(8);
+    let mut seq = EvalPlatform::new(SimBackend::new(9), PlatformConfig::default());
+    let expected: Vec<_> = jobs.iter().map(|g| seq.submit(g)).collect();
+
+    let mut bat = EvalPlatform::new(SimBackend::new(9), PlatformConfig::default());
+    let results = bat.submit_batch(&jobs);
+
+    assert_eq!(results.len(), jobs.len());
+    for (i, (r, e)) in results.iter().zip(&expected).enumerate() {
+        assert_eq!(&r.outcome, e, "outcome {i} must match the sequential path");
+        assert_eq!(r.submission_index, Some(i as u64));
+        assert!(!r.cached);
+    }
+    assert_eq!(bat.wall_clock_s(), seq.wall_clock_s());
+    assert_eq!(bat.submissions(), seq.submissions());
+    let seq_times: Vec<f64> = seq.log().iter().map(|r| r.completed_at_s).collect();
+    let bat_times: Vec<f64> = bat.log().iter().map(|r| r.completed_at_s).collect();
+    assert_eq!(seq_times, bat_times);
+}
+
+#[test]
+fn scientist_trajectory_at_parallelism_one_is_deterministic_and_cache_neutral() {
+    let run_once = |eval_cache: bool| {
+        let mut cfg = RunConfig::default().with_seed(13).with_budget(40);
+        cfg.eval_cache = eval_cache;
+        let mut run = ScientistRun::new(cfg).expect("setup");
+        let outcome = run.run_to_completion().expect("run");
+        let trajectory: Vec<(String, String)> = run
+            .population
+            .members()
+            .iter()
+            .map(|m| (m.genome.fingerprint(), format!("{:?}", m.outcome)))
+            .collect();
+        (outcome, trajectory)
+    };
+    let (o1, t1) = run_once(true);
+    let (o2, t2) = run_once(true);
+    let (o3, t3) = run_once(false);
+    assert_eq!(t1, t2, "same seed, same sequential trajectory");
+    assert_eq!(o1.best_id, o2.best_id);
+    assert_eq!(o1.best_geomean_us, o2.best_geomean_us);
+    // the scientist dedups before submitting, so the cache must be
+    // invisible to the trajectory
+    assert_eq!(t1, t3, "cache on/off must not change the trajectory");
+    assert_eq!(o1.best_geomean_us, o3.best_geomean_us);
+}
+
+#[test]
+fn parallel_batch_preserves_submission_order_accounting() {
+    let jobs = distinct_genomes(9);
+    let mut p = EvalPlatform::new(
+        SimBackend::new(21),
+        PlatformConfig {
+            parallelism: 3,
+            ..Default::default()
+        },
+    );
+    let results = p.submit_batch(&jobs);
+    assert_eq!(results.len(), 9);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(
+            r.submission_index,
+            Some(i as u64),
+            "log order == submission order"
+        );
+        // earliest-free-lane accounting with equal 90 s costs: jobs
+        // 0..2 finish at 90 s, 3..5 at 180 s, 6..8 at 270 s
+        let expected = 90.0 * ((i / 3) + 1) as f64;
+        assert!(
+            (r.completed_at_s - expected).abs() < 1e-9,
+            "job {i}: completed at {} expected {expected}",
+            r.completed_at_s
+        );
+    }
+    assert_eq!(p.submissions(), 9);
+    assert!((p.wall_clock_s() - 270.0).abs() < 1e-9);
+    // the platform log is ordered by submission index, not by which
+    // lane thread finished first
+    for (i, rec) in p.log().iter().enumerate() {
+        assert_eq!(rec.index, i as u64);
+    }
+}
+
+#[test]
+fn parallel_batches_are_deterministic_per_seed() {
+    let jobs = distinct_genomes(10);
+    let run = || {
+        let mut p = EvalPlatform::new(
+            SimBackend::new(33),
+            PlatformConfig {
+                parallelism: 4,
+                ..Default::default()
+            },
+        );
+        p.submit_batch(&jobs)
+            .into_iter()
+            .map(|r| r.outcome)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run(), "static lane partition is schedule-independent");
+}
+
+#[test]
+fn cache_returns_identical_outcomes_without_consuming_quota() {
+    let jobs = distinct_genomes(3);
+    let mut p = EvalPlatform::new(
+        SimBackend::new(5),
+        PlatformConfig {
+            submission_quota: Some(3),
+            ..Default::default()
+        },
+    );
+    let first = p.submit_batch(&jobs[..2]);
+    assert_eq!(p.submissions(), 2);
+    let clock = p.wall_clock_s();
+
+    // resubmit the same two (now cached) plus one new genome
+    let mixed = vec![jobs[1].clone(), jobs[0].clone(), jobs[2].clone()];
+    let second = p.submit_batch(&mixed);
+    assert_eq!(second.len(), 3);
+    assert!(second[0].cached && second[1].cached && !second[2].cached);
+    assert_eq!(second[0].outcome, first[1].outcome, "identical EvalOutcome");
+    assert_eq!(second[1].outcome, first[0].outcome, "identical EvalOutcome");
+    assert_eq!(
+        p.submissions(),
+        3,
+        "cache hits consume no submission quota"
+    );
+    assert_eq!(p.cache_stats().0, 2, "two counted cache hits");
+    assert!(
+        p.wall_clock_s() > clock,
+        "only the uncached genome consumed platform time"
+    );
+    assert!((p.wall_clock_s() - clock - 90.0).abs() < 1e-9);
+    // quota is now exhausted, but cached genomes can still be served
+    assert!(p.quota_exhausted());
+    let third = p.submit_batch(&jobs[..1]);
+    assert_eq!(third.len(), 1);
+    assert!(third[0].cached);
+}
+
+#[test]
+fn multi_lane_scientist_run_is_reproducible() {
+    let run = || {
+        let mut cfg = RunConfig::default().with_seed(4).with_budget(36);
+        cfg.eval_parallelism = 3;
+        let mut r = ScientistRun::new(cfg).expect("setup");
+        let o = r.run_to_completion().expect("run");
+        (o.best_id.clone(), o.best_geomean_us, o.submissions)
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn genetic_baseline_runs_through_the_batch_executor() {
+    use gpu_kernel_scientist::baselines::{GeneticAlgorithm, Tuner};
+    let mut p = EvalPlatform::new(
+        SimBackend::new(8),
+        PlatformConfig {
+            parallelism: 3,
+            submission_quota: Some(60),
+            ..Default::default()
+        },
+    );
+    let out = GeneticAlgorithm {
+        seed: 8,
+        ..Default::default()
+    }
+    .run(&mut p, 60);
+    assert!(out.submissions <= 60);
+    assert!(out.best_geomean_us.is_finite());
+    // three lanes: the same submission count takes a third of the
+    // simulated platform time (± one partially-filled round)
+    let rounds = (out.submissions as f64 / 3.0).ceil();
+    assert!(p.wall_clock_s() <= rounds * 90.0 + 1e-9);
+}

@@ -83,6 +83,7 @@ fn scientist_loop_runs_over_pjrt() {
             reps_per_config: 1,
             parallelism: 1,
             submission_quota: Some(8),
+            ..Default::default()
         },
     )
     .with_feedback_suite(BenchmarkSuite {
