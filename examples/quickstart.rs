@@ -6,6 +6,10 @@
 //! (App. A.2), and the writer's kernel + self-report (App. A.3).
 //!
 //! Run: `cargo run --example quickstart`
+//!
+//! The loop is workload-generic; pass any registry key to watch it
+//! optimize a different kernel family (the CI smoke matrix runs all):
+//! `cargo run --example quickstart -- --workload row-softmax`
 
 use gpu_kernel_scientist::config::RunConfig;
 use gpu_kernel_scientist::genome::render;
@@ -13,10 +17,21 @@ use gpu_kernel_scientist::prelude::*;
 use gpu_kernel_scientist::report;
 
 fn main() {
-    let cfg = RunConfig::default().with_seed(42).with_budget(30);
+    let args: Vec<String> = std::env::args().collect();
+    let workload = args
+        .iter()
+        .position(|a| a == "--workload")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or(gpu_kernel_scientist::workload::DEFAULT_WORKLOAD);
+    let cfg = RunConfig::default()
+        .with_seed(42)
+        .with_budget(30)
+        .with_workload(workload);
     let mut run = ScientistRun::new(cfg).expect("run setup");
 
-    println!("== population after seeding (paper §3) ==");
+    println!("== workload: {} ==", run.workload.description());
+    println!("\n== population after seeding (paper §3) ==");
     for m in run.population.members() {
         println!(
             "  {}  {:60}  geomean {:8.1} us",

@@ -14,11 +14,11 @@
 //! both real submission lanes and the eval-result cache (re-derived
 //! duplicate children are free).
 
-use super::{Tuner, TunerOutcome};
+use super::{workload_starts, Tuner, TunerOutcome};
 use crate::eval::{BatchResult, EvalBackend, EvalPlatform};
 use crate::genome::{
     edit::{crossover, GenomeEdit},
-    seeds, KernelGenome,
+    KernelGenome,
 };
 use crate::metrics::{geomean, ConvergenceCurve};
 use crate::rng::Rng;
@@ -139,9 +139,8 @@ impl Tuner for GeneticAlgorithm {
         let mut curve = ConvergenceCurve::default();
         let mut best: Option<(f64, KernelGenome)> = None;
 
-        // generation 0: seeds + mutated copies, one batch
-        let starts: Vec<KernelGenome> =
-            seeds::starting_population().into_iter().map(|(_, g)| g).collect();
+        // generation 0: the workload's seeds + mutated copies, one batch
+        let starts = workload_starts(platform);
         let mut gen0: Vec<KernelGenome> = Vec::new();
         let mut planned = 0u64;
         let mut attempts = 0;
@@ -206,8 +205,10 @@ impl Tuner for GeneticAlgorithm {
             }
         }
 
-        let (score, genome) =
-            best.unwrap_or_else(|| (f64::INFINITY, seeds::mfma_seed()));
+        // all-failures fallback: the family's bootstrap fast-path seed
+        // (listed last — fp8's mfma-seed, exactly as before the registry)
+        let (score, genome) = best
+            .unwrap_or_else(|| (f64::INFINITY, starts.last().expect("workload has seeds").clone()));
         TunerOutcome {
             name: self.name(),
             best_geomean_us: score,
@@ -251,6 +252,26 @@ mod tests {
         .run(&mut p, 100);
         // gen-0 includes the naive seed (~6000 us); GA must do better
         assert!(out.best_geomean_us < 1000.0, "{}", out.best_geomean_us);
+    }
+
+    #[test]
+    fn ga_is_workload_generic() {
+        // the GA pulls its generation-0 seeds from the platform's
+        // workload, so it tunes any registered family
+        let w = crate::workload::lookup("row-softmax").unwrap();
+        let mut p = EvalPlatform::new(
+            SimBackend::new(4).with_workload(w.clone()),
+            PlatformConfig::default(),
+        )
+        .with_feedback_suite(w.feedback_suite());
+        let out = GeneticAlgorithm {
+            seed: 4,
+            ..Default::default()
+        }
+        .run(&mut p, 30);
+        assert!(out.submissions <= 30);
+        assert!(out.best_geomean_us.is_finite());
+        assert!(out.best_genome.validate().is_ok());
     }
 
     #[test]

@@ -16,6 +16,21 @@ use crate::genome::{
 use crate::metrics::{geomean, ConvergenceCurve};
 use crate::population::EvalOutcome;
 use crate::rng::Rng;
+use crate::workload::Workload;
+
+/// The seed genomes a tuner starts from: the platform workload's
+/// starting population (tuners are workload-generic, like the
+/// scientist).
+pub(crate) fn workload_starts<B: EvalBackend>(
+    platform: &EvalPlatform<B>,
+) -> Vec<KernelGenome> {
+    platform
+        .workload()
+        .starting_population()
+        .into_iter()
+        .map(|(_, g)| g)
+        .collect()
+}
 
 /// Outcome of a tuner run (mirrors `scientist::RunOutcome`).
 #[derive(Debug, Clone)]
@@ -78,8 +93,7 @@ impl Tuner for RandomSearch {
     ) -> TunerOutcome {
         let mut rng = Rng::seed_from_u64(self.seed);
         let mut curve = ConvergenceCurve::default();
-        let starts: Vec<KernelGenome> =
-            seeds::starting_population().into_iter().map(|(_, g)| g).collect();
+        let starts = workload_starts(platform);
         let mut best: Option<(f64, KernelGenome)> = None;
         while platform.submissions() < budget {
             // random walk of 1-4 edits from a random seed
@@ -134,8 +148,7 @@ impl Tuner for HillClimber {
     ) -> TunerOutcome {
         let mut rng = Rng::seed_from_u64(self.seed);
         let mut curve = ConvergenceCurve::default();
-        let starts: Vec<KernelGenome> =
-            seeds::starting_population().into_iter().map(|(_, g)| g).collect();
+        let starts = workload_starts(platform);
         let mut current = starts[rng.below(starts.len())].clone();
         let mut current_score = f64::INFINITY;
         let mut global_best: Option<(f64, KernelGenome)> = None;
@@ -207,7 +220,11 @@ impl Tuner for Annealer {
     ) -> TunerOutcome {
         let mut rng = Rng::seed_from_u64(self.seed);
         let mut curve = ConvergenceCurve::default();
-        let mut current = seeds::mfma_seed();
+        // the workload's fast-path bootstrap seed (listed last; the fp8
+        // family's mfma-seed, exactly as before the registry)
+        let mut current = workload_starts(platform)
+            .pop()
+            .expect("workload has seeds");
         let mut current_score = f64::INFINITY;
         let mut best: Option<(f64, KernelGenome)> = None;
         let mut temp = self.t0;

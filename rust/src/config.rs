@@ -8,6 +8,9 @@ use crate::agents::{ExperimentRule, KnowledgeProfile, LlmConfig, SelectionPolicy
 /// Full configuration of a scientist run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Registry key of the workload to optimize (`workload::lookup`);
+    /// the paper's fp8 GEMM by default.
+    pub workload: String,
     /// Master seed: agents, simulator noise, everything.
     pub seed: u64,
     /// Total submission budget (the competition quota). The paper's
@@ -42,6 +45,7 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
+            workload: crate::workload::DEFAULT_WORKLOAD.to_string(),
             seed: 0,
             max_submissions: 120,
             reps_per_config: 3,
@@ -61,6 +65,12 @@ impl Default for RunConfig {
 impl RunConfig {
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Target a different registered workload (see `workload::registry`).
+    pub fn with_workload(mut self, name: &str) -> Self {
+        self.workload = name.to_string();
         self
     }
 
@@ -108,6 +118,17 @@ impl RunConfig {
         let parse_f64 =
             |v: &str| v.parse::<f64>().map_err(|_| format!("bad float '{v}'"));
         match key {
+            "run.workload" | "workload" => {
+                if crate::workload::lookup(value).is_none() {
+                    let known: Vec<&str> =
+                        crate::workload::registry().iter().map(|w| w.name()).collect();
+                    return Err(format!(
+                        "unknown workload '{value}' (registered: {})",
+                        known.join(", ")
+                    ));
+                }
+                self.workload = value.to_string();
+            }
             "run.seed" | "seed" => self.seed = parse_u64(value)?,
             "run.max_submissions" | "max_submissions" => {
                 self.max_submissions = parse_u64(value)?
@@ -178,6 +199,7 @@ mod tests {
     #[test]
     fn default_is_paper_setup() {
         let c = RunConfig::default();
+        assert_eq!(c.workload, "fp8-gemm", "the paper's task is the default");
         assert_eq!(c.eval_parallelism, 1, "sequential good-citizen mode");
         assert!(c.eval_cache, "duplicate submissions are free by default");
         assert_eq!(c.selection_policy, SelectionPolicy::PaperLlm);
@@ -233,6 +255,24 @@ rubric_infidelity = 0.2
         let c = RunConfig::from_toml("[run]\nseed = 3\n").unwrap();
         assert_eq!(c.seed, 3);
         assert_eq!(c.max_submissions, RunConfig::default().max_submissions);
+    }
+
+    #[test]
+    fn toml_workload_key() {
+        let c = RunConfig::from_toml("[run]\nworkload = \"row-softmax\"\n").unwrap();
+        assert_eq!(c.workload, "row-softmax");
+        let c = RunConfig::from_toml("workload = \"bf16-gemm\"\n").unwrap();
+        assert_eq!(c.workload, "bf16-gemm");
+        // unknown workloads fail fast with the registry listing
+        let err = RunConfig::from_toml("[run]\nworkload = \"tf32-gemm\"\n").unwrap_err();
+        assert!(err.contains("unknown workload"), "{err}");
+        assert!(err.contains("fp8-gemm"), "{err}");
+    }
+
+    #[test]
+    fn builder_sets_workload() {
+        let c = RunConfig::default().with_workload("row-softmax");
+        assert_eq!(c.workload, "row-softmax");
     }
 
     #[test]

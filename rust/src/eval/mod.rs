@@ -20,7 +20,7 @@ pub mod platform;
 pub mod verifier;
 
 use crate::genome::KernelGenome;
-use crate::workload::GemmConfig;
+use crate::workload::{GemmConfig, Workload};
 
 pub use executor::{evaluate_one, run_batch, EvalCache};
 pub use platform::{BatchResult, EvalPlatform, PlatformConfig, SubmissionRecord};
@@ -71,6 +71,14 @@ pub trait EvalBackend {
         90.0
     }
 
+    /// The workload this backend evaluates. The default is the paper's
+    /// fp8 GEMM — backends that don't know better (the PJRT runtime
+    /// serves the compiled fp8 catalog) inherit it; the simulator
+    /// reports whichever registered workload it carries.
+    fn workload(&self) -> std::sync::Arc<dyn crate::workload::Workload> {
+        crate::workload::default_workload()
+    }
+
     /// Create an independent backend for one parallel submission lane
     /// (the executor asks once per lane per batch). `None` — the
     /// default — means the backend cannot be forked and batches fall
@@ -95,12 +103,15 @@ impl EvalBackend for crate::sim::SimBackend {
         genome
             .validate()
             .map_err(|e| EvalError::Compile(e.to_string()))?;
+        let workload = self.workload().clone();
+        // workload family gate (e.g. no fp8 operands on a bf16 task)
+        workload.admits(genome).map_err(EvalError::Compile)?;
         // numerical verification against the reference, modeled by the
-        // tolerance policy + per-hazard error distributions
+        // workload's tolerance policy + per-hazard error distributions
         match verifier::verify(
-            &verifier::TolerancePolicy::default(),
+            &workload.tolerance(),
             genome,
-            &crate::workload::FEEDBACK_CONFIGS,
+            &workload.feedback_suite().configs,
         ) {
             verifier::Verdict::Pass => Ok(()),
             verifier::Verdict::Fail { reason, .. } => Err(EvalError::Incorrect(reason)),
@@ -114,6 +125,10 @@ impl EvalBackend for crate::sim::SimBackend {
 
     fn fork_lane(&mut self, lane: u64) -> Option<Self> {
         Some(crate::sim::SimBackend::lane_clone(self, lane))
+    }
+
+    fn workload(&self) -> std::sync::Arc<dyn crate::workload::Workload> {
+        crate::sim::SimBackend::workload(self).clone()
     }
 }
 
@@ -145,6 +160,23 @@ mod tests {
             ..seeds::mfma_seed()
         };
         assert!(matches!(b.check(&racy), Err(EvalError::Incorrect(_))));
+    }
+
+    #[test]
+    fn sim_backend_check_enforces_the_workload_family_gate() {
+        // the bf16 family rejects fp8 genomes at the compile gate; the
+        // same genome passes on the default (fp8) workload
+        let mut fp8 = SimBackend::new(1);
+        assert!(fp8.check(&seeds::mfma_seed()).is_ok());
+        let mut bf16 = SimBackend::new(1)
+            .with_workload(crate::workload::lookup("bf16-gemm").unwrap());
+        assert!(matches!(
+            bf16.check(&seeds::mfma_seed()),
+            Err(EvalError::Compile(_))
+        ));
+        assert!(bf16
+            .check(&crate::workload::bf16_gemm::library_seed())
+            .is_ok());
     }
 
     #[test]

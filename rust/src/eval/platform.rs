@@ -104,6 +104,13 @@ impl<B: EvalBackend> EvalPlatform<B> {
         self.backend.name().to_string()
     }
 
+    /// The workload the backend evaluates (seed genomes, suites — see
+    /// [`crate::workload::Workload`]). Tuners use this to stay
+    /// workload-generic.
+    pub fn workload(&self) -> std::sync::Arc<dyn crate::workload::Workload> {
+        self.backend.workload()
+    }
+
     pub fn submissions(&self) -> u64 {
         self.log.len() as u64
     }
@@ -179,18 +186,29 @@ impl<B: EvalBackend> EvalPlatform<B> {
         let mut planned_fps: HashMap<String, usize> = HashMap::new();
         for genome in genomes {
             let fp = genome.fingerprint();
-            if let Some(hit) = self.cache.lookup(&fp) {
-                slots.push(Slot::Cached(hit));
-                continue;
-            }
+            // Counted-stats invariant: every *processed* entry (one
+            // that yields a result) contributes exactly one counted
+            // lookup — in-batch duplicates count theirs as the hit at
+            // result assembly, and the entry that triggers quota
+            // truncation counts nothing — so with the cache enabled,
+            // hits + misses == results returned by this path.
             if self.cache.enabled() {
                 if let Some(&j) = planned_fps.get(&fp) {
                     slots.push(Slot::Alias(j));
                     continue;
                 }
+                if self.cache.peek(&fp).is_some() {
+                    let hit = self.cache.lookup(&fp).expect("peeked entry present");
+                    slots.push(Slot::Cached(hit));
+                    continue;
+                }
             }
             if (jobs.len() as u64) >= remaining {
-                break; // quota exhausted: truncate the batch here
+                break; // quota exhausted: truncate the batch here, uncounted
+            }
+            if self.cache.enabled() {
+                let miss = self.cache.lookup(&fp); // counted miss
+                debug_assert!(miss.is_none());
             }
             slots.push(Slot::Run(jobs.len()));
             planned_fps.insert(fp, jobs.len());

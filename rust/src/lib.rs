@@ -41,6 +41,14 @@
 //! duplicate genomes free. See `README.md` for the crate layout, the
 //! tier-1 verify command, and how to run every bench and example.
 //!
+//! The loop is **workload-generic**: every scenario-specific piece —
+//! benchmark suites, seed genomes, verifier tolerance, the analytic
+//! cost model — lives behind the [`workload::Workload`] trait, and
+//! [`workload::registry`] ships three families (the paper's fp8 GEMM,
+//! a bf16 inference GEMM, and a bandwidth-bound fused row-softmax).
+//! [`scientist::campaign`] runs several workloads concurrently, each
+//! over its own multi-lane platform and eval cache.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -63,10 +71,15 @@ pub mod population;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod test_support;
 pub mod util;
 pub mod scientist;
 pub mod sim;
 pub mod workload;
+
+/// Plural alias for the workload registry module (`workloads::registry()`
+/// reads naturally at call sites).
+pub use crate::workload as workloads;
 
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
@@ -77,7 +90,8 @@ pub mod prelude {
     pub use crate::genome::{seeds, KernelGenome};
     pub use crate::metrics::geomean;
     pub use crate::population::{Individual, Population};
+    pub use crate::scientist::campaign::{run_campaign, CampaignConfig, CampaignOutcome};
     pub use crate::scientist::{RunOutcome, ScientistRun};
     pub use crate::sim::SimBackend;
-    pub use crate::workload::{GemmConfig, BenchmarkSuite};
+    pub use crate::workload::{registry, BenchmarkSuite, GemmConfig, Workload};
 }

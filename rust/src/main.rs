@@ -2,11 +2,17 @@
 //!
 //! Subcommands:
 //!   run         run the scientist loop on the simulated MI300 platform
+//!   campaign    run several workloads' loops concurrently
+//!   workloads   list the workload registry
 //!   table1      regenerate the paper's Table 1 comparison
 //!   leaderboard score the canonical genomes on the 18-size suite
 //!   baseline    run a baseline tuner (random | hillclimb | anneal)
 //!   inspect     print a genome's HIP-like sketch + simulator breakdown
 //!   eval-pjrt   check + time the compiled artifact catalog over PJRT
+//!
+//! `run`, `campaign`, `baseline`, and `inspect` accept `--workload
+//! <name>` (any registry key from `workloads`); the default is the
+//! paper's fp8 GEMM.
 //!
 //! Arguments use `--key value` pairs (offline build: no clap; parsing
 //! is in-tree).
@@ -23,7 +29,7 @@ use gpu_kernel_scientist::prelude::*;
 use gpu_kernel_scientist::report;
 use gpu_kernel_scientist::runtime::PjrtBackend;
 use gpu_kernel_scientist::sim::calibration;
-use gpu_kernel_scientist::{genome::render, sim};
+use gpu_kernel_scientist::genome::render;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut map = HashMap::new();
@@ -54,14 +60,22 @@ fn load_config(flags: &HashMap<String, String>) -> Result<RunConfig, String> {
     if let Some(budget) = flags.get("budget") {
         cfg.max_submissions = budget.parse().map_err(|_| "bad --budget")?;
     }
+    if let Some(workload) = flags.get("workload") {
+        if gpu_kernel_scientist::workload::lookup(workload).is_none() {
+            return Err(format!(
+                "unknown --workload '{workload}' (see the `workloads` subcommand)"
+            ));
+        }
+        cfg.workload = workload.clone();
+    }
     Ok(cfg)
 }
 
 fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
     let cfg = load_config(flags)?;
     println!(
-        "scientist run: seed={} budget={} backend=mi300-sim",
-        cfg.seed, cfg.max_submissions
+        "scientist run: workload={} seed={} budget={} backend=mi300-sim",
+        cfg.workload, cfg.seed, cfg.max_submissions
     );
     let mut run = ScientistRun::new(cfg)?;
     let outcome = run.run_to_completion()?;
@@ -99,8 +113,60 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_workloads() -> Result<(), String> {
+    println!("registered workloads:");
+    for w in gpu_kernel_scientist::workload::registry() {
+        let fb = w.feedback_suite();
+        let lb = w.leaderboard_suite();
+        let seeds: Vec<&str> = w.starting_population().iter().map(|(n, _)| *n).collect();
+        println!("  {:12} {}", w.name(), w.description());
+        println!(
+            "  {:12}   feedback {} configs | leaderboard {} | seeds: {}",
+            "",
+            fb.configs.len(),
+            lb.configs.len(),
+            seeds.join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_campaign(flags: &HashMap<String, String>) -> Result<(), String> {
+    use gpu_kernel_scientist::scientist::campaign::{run_campaign, CampaignConfig};
+    let base = load_config(flags)?;
+    let config = match flags.get("workloads") {
+        Some(list) => CampaignConfig {
+            workloads: list.split(',').map(|s| s.trim().to_string()).collect(),
+            base,
+        },
+        // a singular --workload means a one-entry campaign, not "all"
+        None if flags.contains_key("workload") => CampaignConfig {
+            workloads: vec![base.workload.clone()],
+            base,
+        },
+        None => CampaignConfig::all_workloads(base),
+    };
+    println!(
+        "campaign over {} workloads ({}), seed={} budget={} per workload",
+        config.workloads.len(),
+        config.workloads.join(", "),
+        config.base.seed,
+        config.base.max_submissions
+    );
+    let outcome = run_campaign(&config)?;
+    println!("{}", report::render_campaign(&outcome));
+    Ok(())
+}
+
 fn cmd_table1(flags: &HashMap<String, String>) -> Result<(), String> {
     let cfg = load_config(flags)?;
+    if cfg.workload != gpu_kernel_scientist::workload::DEFAULT_WORKLOAD {
+        return Err(format!(
+            "table1 reproduces the paper's fp8 competition table; '{}' has no Table-1 rows \
+             (use `run --workload {}` instead)",
+            cfg.workload, cfg.workload
+        ));
+    }
     let mut rows: Vec<report::TableRow> = calibration::table1_rows(&MI300)
         .into_iter()
         .filter(|(l, _, _)| !l.starts_with("This work"))
@@ -139,10 +205,15 @@ fn cmd_leaderboard() -> Result<(), String> {
 fn cmd_baseline(flags: &HashMap<String, String>) -> Result<(), String> {
     let cfg = load_config(flags)?;
     let which = flags.get("tuner").map(String::as_str).unwrap_or("random");
+    let workload = gpu_kernel_scientist::workload::lookup(&cfg.workload)
+        .ok_or_else(|| format!("unknown workload '{}'", cfg.workload))?;
     let mut platform = EvalPlatform::new(
-        SimBackend::new(cfg.seed).with_noise(cfg.noise_sigma),
+        SimBackend::new(cfg.seed)
+            .with_noise(cfg.noise_sigma)
+            .with_workload(workload.clone()),
         PlatformConfig::default(),
-    );
+    )
+    .with_feedback_suite(workload.feedback_suite());
     let outcome = match which {
         "random" => RandomSearch { seed: cfg.seed }.run(&mut platform, cfg.max_submissions),
         "hillclimb" => HillClimber {
@@ -166,19 +237,40 @@ fn cmd_baseline(flags: &HashMap<String, String>) -> Result<(), String> {
 }
 
 fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), String> {
+    let workload_name = flags
+        .get("workload")
+        .map(String::as_str)
+        .unwrap_or(gpu_kernel_scientist::workload::DEFAULT_WORKLOAD);
+    let workload = gpu_kernel_scientist::workload::lookup(workload_name)
+        .ok_or_else(|| format!("unknown --workload '{workload_name}'"))?;
+    // the fp8 family also exposes the Table-1 comparison genomes
+    let candidates: Vec<(&'static str, _)> =
+        if workload_name == gpu_kernel_scientist::workload::DEFAULT_WORKLOAD {
+            seeds::all_seeds()
+        } else {
+            workload.starting_population()
+        };
+    let default_kernel = if workload_name == gpu_kernel_scientist::workload::DEFAULT_WORKLOAD {
+        "mfma-seed"
+    } else {
+        // each family lists its bootstrap fast-path seed last
+        candidates.last().map(|(n, _)| *n).unwrap_or("mfma-seed")
+    };
     let which = flags
         .get("seed-kernel")
         .map(String::as_str)
-        .unwrap_or("mfma-seed");
-    let genome = seeds::all_seeds()
+        .unwrap_or(default_kernel);
+    let genome = candidates
         .into_iter()
         .find(|(n, _)| *n == which)
         .map(|(_, g)| g)
-        .ok_or_else(|| format!("unknown seed kernel '{which}'"))?;
+        .ok_or_else(|| format!("unknown seed kernel '{which}' for workload {workload_name}"))?;
     println!("{}", render::render_hip_sketch(&genome));
-    println!("simulator breakdown on the feedback configs:");
-    for cfg in gpu_kernel_scientist::workload::FEEDBACK_CONFIGS {
-        let t = sim::estimate(&MI300, &genome, &cfg).map_err(|e| e.to_string())?;
+    println!("{workload_name} breakdown on the feedback configs:");
+    for cfg in &workload.feedback_suite().configs {
+        let t = workload
+            .estimate(&MI300, &genome, cfg)
+            .map_err(|e| e.to_string())?;
         println!(
             "  {cfg}: {:9.1} us (compute {:8.1}, mem {:8.1}, wb {:6.1}, eff {:.3})",
             t.total_us, t.compute_us, t.mem_us, t.writeback_us, t.compute_efficiency
@@ -225,6 +317,8 @@ fn main() {
     let flags = parse_flags(&args[args.len().min(1)..]);
     let result = match cmd {
         "run" => cmd_run(&flags),
+        "campaign" => cmd_campaign(&flags),
+        "workloads" => cmd_workloads(),
         "table1" => cmd_table1(&flags),
         "leaderboard" => cmd_leaderboard(),
         "baseline" => cmd_baseline(&flags),
@@ -232,7 +326,8 @@ fn main() {
         "eval-pjrt" => cmd_eval_pjrt(&flags),
         _ => {
             eprintln!(
-                "usage: kernel-scientist <run|table1|leaderboard|baseline|inspect|eval-pjrt> [--lineage true] \
+                "usage: kernel-scientist <run|campaign|workloads|table1|leaderboard|baseline|inspect|eval-pjrt> \
+                 [--workload name] [--workloads a,b,c] [--lineage true] \
                  [--seed N] [--budget N] [--config file.toml] [--tuner random|hillclimb|anneal] \
                  [--seed-kernel name] [--artifacts dir] [--save-population file.jsonl]"
             );

@@ -76,6 +76,39 @@ pub fn speedup(baseline_us: f64, measured_us: f64) -> f64 {
     baseline_us / measured_us
 }
 
+/// Render a campaign's per-workload summary as a markdown table.
+pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) -> String {
+    let mut s = String::from("### Campaign summary\n\n");
+    s.push_str(
+        "| Workload | Best | Feedback geomean (us) | Leaderboard (us) | Submissions | Cache h/m | Platform time (min) |\n",
+    );
+    s.push_str("|---|---|---|---|---|---|---|\n");
+    for r in &outcome.results {
+        let lb = r
+            .outcome
+            .leaderboard_us
+            .map(|x| format!("{x:.1}"))
+            .unwrap_or_else(|| "-".into());
+        s.push_str(&format!(
+            "| {} | {} | {:.1} | {} | {} | {}/{} | {:.0} |\n",
+            r.workload,
+            r.outcome.best_id,
+            r.outcome.best_geomean_us,
+            lb,
+            r.outcome.submissions,
+            r.cache_stats.0,
+            r.cache_stats.1,
+            r.outcome.wall_clock_s / 60.0
+        ));
+    }
+    s.push_str(&format!(
+        "\ntotal submissions: {}; campaign wall clock (concurrent): {:.0} min\n",
+        outcome.total_submissions(),
+        outcome.wall_clock_s() / 60.0
+    ));
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +170,32 @@ mod tests {
     #[test]
     fn speedup_math() {
         assert_eq!(speedup(850.0, 425.0), 2.0);
+    }
+
+    #[test]
+    fn campaign_table_renders_every_workload_row() {
+        use crate::scientist::campaign::{CampaignOutcome, WorkloadRunResult};
+        use crate::scientist::RunOutcome;
+        let row = |w: &str, best: f64| WorkloadRunResult {
+            workload: w.into(),
+            cache_stats: (2, 10),
+            outcome: RunOutcome {
+                workload: w.into(),
+                best_geomean_us: best,
+                best_id: "00009".into(),
+                submissions: 12,
+                wall_clock_s: 1080.0,
+                curve: ConvergenceCurve::default(),
+                leaderboard_us: Some(best * 1.1),
+            },
+        };
+        let out = CampaignOutcome {
+            results: vec![row("fp8-gemm", 400.0), row("row-softmax", 120.0)],
+        };
+        let s = render_campaign(&out);
+        assert!(s.contains("| fp8-gemm | 00009 | 400.0 |"), "{s}");
+        assert!(s.contains("| row-softmax | 00009 | 120.0 |"), "{s}");
+        assert!(s.contains("total submissions: 24"), "{s}");
+        assert!(s.contains("2/10"), "{s}");
     }
 }

@@ -1,0 +1,181 @@
+//! The campaign driver: several workloads optimized concurrently.
+//!
+//! A campaign runs one full [`ScientistRun`] per requested workload,
+//! each on its own OS thread with its own evaluation platform — its own
+//! submission quota, simulated wall clock, and **per-workload eval
+//! cache** (genome fingerprints are only meaningful within one
+//! workload's cost model, so caches are never shared). Within each run,
+//! step (4) still batches every iteration's children through the
+//! multi-lane executor, so a campaign composes both parallelism levels:
+//! across workloads (threads here) and across submissions (executor
+//! lanes, `DESIGN.md` §3).
+//!
+//! Campaigns are deterministic: every run is seeded independently from
+//! its own `RunConfig`, so results are bit-identical to running each
+//! workload standalone, regardless of thread interleaving (locked in by
+//! the tests below).
+
+use super::{RunOutcome, ScientistRun};
+use crate::config::RunConfig;
+use crate::workload::{self, Workload};
+
+/// Configuration of a multi-workload campaign.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Registry keys of the workloads to run (order is preserved in
+    /// the results).
+    pub workloads: Vec<String>,
+    /// Per-run configuration template; `base.workload` is overridden
+    /// per entry.
+    pub base: RunConfig,
+}
+
+impl CampaignConfig {
+    /// A campaign over every registered workload.
+    pub fn all_workloads(base: RunConfig) -> Self {
+        CampaignConfig {
+            workloads: workload::registry().iter().map(|w| w.name().to_string()).collect(),
+            base,
+        }
+    }
+}
+
+/// One workload's completed run inside a campaign.
+#[derive(Debug, Clone)]
+pub struct WorkloadRunResult {
+    pub workload: String,
+    pub outcome: RunOutcome,
+    /// (hits, misses) of this run's private eval cache.
+    pub cache_stats: (u64, u64),
+}
+
+/// All campaign results, in the requested workload order.
+#[derive(Debug, Clone)]
+pub struct CampaignOutcome {
+    pub results: Vec<WorkloadRunResult>,
+}
+
+impl CampaignOutcome {
+    /// Total submissions spent across every workload.
+    pub fn total_submissions(&self) -> u64 {
+        self.results.iter().map(|r| r.outcome.submissions).sum()
+    }
+
+    /// Campaign wall clock: the slowest workload's simulated platform
+    /// time (runs execute concurrently).
+    pub fn wall_clock_s(&self) -> f64 {
+        self.results
+            .iter()
+            .map(|r| r.outcome.wall_clock_s)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Run every requested workload's scientist loop concurrently (one OS
+/// thread per workload, each over its own multi-lane platform) and
+/// collect the outcomes in request order.
+pub fn run_campaign(config: &CampaignConfig) -> Result<CampaignOutcome, String> {
+    if config.workloads.is_empty() {
+        return Err("campaign has no workloads".into());
+    }
+    for name in &config.workloads {
+        if workload::lookup(name).is_none() {
+            return Err(format!("unknown workload '{name}'"));
+        }
+    }
+    let runs: Vec<Result<WorkloadRunResult, String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = config
+            .workloads
+            .iter()
+            .map(|name| {
+                let cfg = RunConfig {
+                    workload: name.clone(),
+                    ..config.base.clone()
+                };
+                scope.spawn(move || -> Result<WorkloadRunResult, String> {
+                    let mut run = ScientistRun::new(cfg)?;
+                    let outcome = run.run_to_completion()?;
+                    Ok(WorkloadRunResult {
+                        workload: name.clone(),
+                        cache_stats: run.platform.cache_stats(),
+                        outcome,
+                    })
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("campaign worker panicked"))
+            .collect()
+    });
+    let mut results = Vec::with_capacity(runs.len());
+    for r in runs {
+        results.push(r?);
+    }
+    Ok(CampaignOutcome { results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(budget: u64) -> RunConfig {
+        RunConfig {
+            max_submissions: budget,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn campaign_runs_every_requested_workload_in_order() {
+        let cfg = CampaignConfig {
+            workloads: vec!["row-softmax".into(), "fp8-gemm".into()],
+            base: base(10),
+        };
+        let out = run_campaign(&cfg).unwrap();
+        assert_eq!(out.results.len(), 2);
+        assert_eq!(out.results[0].workload, "row-softmax");
+        assert_eq!(out.results[1].workload, "fp8-gemm");
+        assert_eq!(out.results[0].outcome.workload, "row-softmax");
+        assert!(out.total_submissions() > 0);
+        assert!(out.wall_clock_s() > 0.0);
+    }
+
+    #[test]
+    fn campaign_matches_standalone_runs_bit_for_bit() {
+        // per-workload caches + independent seeding make the campaign
+        // deterministic regardless of thread interleaving
+        let cfg = CampaignConfig::all_workloads(base(14));
+        let campaign = run_campaign(&cfg).unwrap();
+        for r in &campaign.results {
+            let solo_cfg = RunConfig {
+                workload: r.workload.clone(),
+                ..base(14)
+            };
+            let mut solo = ScientistRun::new(solo_cfg).unwrap();
+            let solo_out = solo.run_to_completion().unwrap();
+            assert_eq!(r.outcome.best_id, solo_out.best_id, "{}", r.workload);
+            assert_eq!(
+                r.outcome.best_geomean_us, solo_out.best_geomean_us,
+                "{}",
+                r.workload
+            );
+            assert_eq!(r.outcome.submissions, solo_out.submissions, "{}", r.workload);
+            assert_eq!(r.cache_stats, solo.platform.cache_stats(), "{}", r.workload);
+        }
+    }
+
+    #[test]
+    fn campaign_rejects_unknown_and_empty() {
+        let bad = CampaignConfig {
+            workloads: vec!["fp8-gemm".into(), "nope".into()],
+            base: base(10),
+        };
+        assert!(run_campaign(&bad).unwrap_err().contains("unknown workload"));
+        let empty = CampaignConfig {
+            workloads: vec![],
+            base: base(10),
+        };
+        assert!(run_campaign(&empty).is_err());
+    }
+}

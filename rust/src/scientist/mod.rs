@@ -23,15 +23,17 @@
 //! black-box constraint.
 
 pub mod bootstrap;
+pub mod campaign;
+
+use std::sync::Arc;
 
 use crate::agents::{AgentSuite, Selection};
 use crate::config::RunConfig;
 use crate::eval::{EvalBackend, EvalPlatform, PlatformConfig};
-use crate::genome::seeds;
 use crate::metrics::ConvergenceCurve;
 use crate::population::{EvalOutcome, Individual, Population};
 use crate::sim::SimBackend;
-use crate::workload::BenchmarkSuite;
+use crate::workload::{self, Workload};
 
 /// One iteration's transcript (what the paper's appendices show).
 #[derive(Debug, Clone)]
@@ -46,19 +48,24 @@ pub struct IterationLog {
 /// Final result of a scientist run.
 #[derive(Debug, Clone)]
 pub struct RunOutcome {
+    /// Registry key of the workload this run optimized.
+    pub workload: String,
     /// Best feedback geomean found (microseconds).
     pub best_geomean_us: f64,
     pub best_id: String,
     pub submissions: u64,
     pub wall_clock_s: f64,
     pub curve: ConvergenceCurve,
-    /// Leaderboard (18-size) geomean of the best kernel, if computed.
+    /// Leaderboard-suite geomean of the best kernel, if computed.
     pub leaderboard_us: Option<f64>,
 }
 
 /// A full scientist run: platform + population + agents + loop state.
 pub struct ScientistRun<B: EvalBackend> {
     pub config: RunConfig,
+    /// The workload being optimized (seed genomes, suites, leaderboard
+    /// basis all come from here).
+    pub workload: Arc<dyn Workload>,
     pub platform: EvalPlatform<B>,
     pub population: Population,
     pub agents: AgentSuite,
@@ -69,9 +76,14 @@ pub struct ScientistRun<B: EvalBackend> {
 
 impl ScientistRun<SimBackend> {
     /// The paper's setup: simulated MI300 platform, surrogate agents,
-    /// the three seed kernels of §3.
+    /// the configured workload's seed kernels (`config.workload`
+    /// defaults to the paper's fp8 GEMM, reproducing §3 exactly).
     pub fn new(config: RunConfig) -> Result<Self, String> {
-        let backend = SimBackend::new(config.seed).with_noise(config.noise_sigma);
+        let workload = workload::lookup(&config.workload)
+            .ok_or_else(|| format!("unknown workload '{}'", config.workload))?;
+        let backend = SimBackend::new(config.seed)
+            .with_noise(config.noise_sigma)
+            .with_workload(workload.clone());
         let platform = EvalPlatform::new(
             backend,
             PlatformConfig {
@@ -80,7 +92,8 @@ impl ScientistRun<SimBackend> {
                 submission_quota: Some(config.max_submissions),
                 cache_results: config.eval_cache,
             },
-        );
+        )
+        .with_feedback_suite(workload.feedback_suite());
         Self::with_platform(config, platform)
     }
 }
@@ -93,6 +106,17 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         config: RunConfig,
         platform: EvalPlatform<B>,
     ) -> Result<Self, String> {
+        // the backend is the single source of truth for what is being
+        // evaluated; a config naming a different workload would submit
+        // one family's seeds to another family's cost model
+        let workload = platform.workload();
+        if workload.name() != config.workload {
+            return Err(format!(
+                "config workload '{}' does not match the platform backend's workload '{}'",
+                config.workload,
+                workload.name()
+            ));
+        }
         let agents = AgentSuite::paper(config.seed)
             .with_llm_config(config.llm.clone())
             .with_selection_policy(config.selection_policy)
@@ -101,6 +125,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         let population = Population::new(platform.feedback_suite.configs.clone());
         let mut run = ScientistRun {
             config,
+            workload,
             platform,
             population,
             agents,
@@ -109,6 +134,18 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             iteration: 0,
         };
         if run.config.bootstrap_probing {
+            // The probe sequence is fp8-specific (mfma-seed variants
+            // exercising the fp8 task's hazards); on another family the
+            // compile gate would reject the positive probes and falsely
+            // "confirm" the negative one, poisoning the findings doc.
+            if run.workload.name() != workload::DEFAULT_WORKLOAD {
+                return Err(format!(
+                    "bootstrap probing is specific to the {} workload (its probe \
+                     kernels are fp8 genomes); disable it for '{}'",
+                    workload::DEFAULT_WORKLOAD,
+                    run.workload.name()
+                ));
+            }
             // Re-derive the findings document by probing the platform
             // (paper §4.1/footnote 2) instead of assuming it. Probes
             // consume real submissions; their kernels join the ledger.
@@ -141,11 +178,17 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         Ok(run)
     }
 
-    /// Submit the §3 seed kernels (burns submissions, as in the paper).
+    /// Submit the workload's seed kernels (burns submissions, as in the
+    /// paper's §3 for the fp8 task).
     fn submit_seeds(&mut self) -> Result<(), String> {
-        for (name, genome) in seeds::starting_population() {
-            if name == "mfma-seed" && !self.config.include_mfma_seed {
-                continue; // no-bootstrap counterfactual: the deep-dive never happened
+        let seeds = self.workload.starting_population();
+        let bootstrap_idx = seeds.len().saturating_sub(1);
+        for (i, (name, genome)) in seeds.into_iter().enumerate() {
+            // no-bootstrap counterfactual: the deep-dive never happened,
+            // so the family's fast-path bootstrap seed (listed last —
+            // fp8's mfma-seed) is dropped along with the findings
+            if i == bootstrap_idx && !self.config.include_mfma_seed {
+                continue;
             }
             if self.platform.quota_exhausted() {
                 return Err("quota exhausted while seeding".into());
@@ -325,9 +368,10 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             .clone();
         let leaderboard_us = self
             .platform
-            .leaderboard_score(&best.genome, &BenchmarkSuite::leaderboard())
+            .leaderboard_score(&best.genome, &self.workload.leaderboard_suite())
             .ok();
         Ok(RunOutcome {
+            workload: self.workload.name().to_string(),
             best_geomean_us: best.score().unwrap(),
             best_id: best.id,
             submissions: self.platform.submissions(),
@@ -358,6 +402,102 @@ mod tests {
         assert_eq!(run.population.len(), 3);
         assert_eq!(run.platform.submissions(), 3);
         assert!(run.population.by_id("00001").is_some());
+    }
+
+    #[test]
+    fn unknown_workload_is_an_error() {
+        let cfg = RunConfig {
+            workload: "warp-drive".into(),
+            ..quick_config(10)
+        };
+        let err = ScientistRun::new(cfg).unwrap_err();
+        assert!(err.contains("unknown workload"), "{err}");
+    }
+
+    #[test]
+    fn bootstrap_probing_is_rejected_off_the_fp8_family() {
+        // the probe kernels are fp8 genomes; other families must fail
+        // fast instead of poisoning their findings doc
+        let cfg = RunConfig {
+            workload: "bf16-gemm".into(),
+            bootstrap_probing: true,
+            ..quick_config(20)
+        };
+        let err = ScientistRun::new(cfg).unwrap_err();
+        assert!(err.contains("bootstrap probing"), "{err}");
+    }
+
+    #[test]
+    fn with_platform_rejects_workload_mismatch() {
+        // the backend is the source of truth: a config naming a
+        // different family must not silently cross-wire seeds & model
+        use crate::eval::PlatformConfig;
+        let platform = crate::eval::EvalPlatform::new(
+            crate::sim::SimBackend::new(1), // carries the fp8 default
+            PlatformConfig::default(),
+        );
+        let cfg = RunConfig {
+            workload: "row-softmax".into(),
+            ..quick_config(10)
+        };
+        let err = ScientistRun::with_platform(cfg, platform).unwrap_err();
+        assert!(err.contains("does not match"), "{err}");
+    }
+
+    #[test]
+    fn no_bootstrap_counterfactual_drops_the_fast_path_seed_per_family() {
+        for w in workload::registry() {
+            let cfg = RunConfig {
+                workload: w.name().to_string(),
+                include_mfma_seed: false,
+                ..quick_config(10)
+            };
+            let run = ScientistRun::new(cfg).unwrap();
+            let seeds = w.starting_population();
+            assert_eq!(run.population.len(), seeds.len() - 1, "{}", w.name());
+            let dropped = seeds.last().unwrap().0;
+            assert!(
+                !run.population
+                    .members()
+                    .iter()
+                    .any(|m| m.experiment.contains(dropped)),
+                "{}: bootstrap seed {dropped} should be dropped",
+                w.name()
+            );
+        }
+    }
+
+    #[test]
+    fn run_targets_the_configured_workload() {
+        let cfg = RunConfig {
+            workload: "row-softmax".into(),
+            ..quick_config(10)
+        };
+        let run = ScientistRun::new(cfg).unwrap();
+        assert_eq!(run.workload.name(), "row-softmax");
+        // the platform times the workload's own feedback suite and the
+        // ledger's seed rows are the workload's seeds
+        assert_eq!(
+            run.platform.feedback_suite.configs,
+            run.workload.feedback_suite().configs
+        );
+        assert_eq!(
+            run.population.len(),
+            run.workload.starting_population().len()
+        );
+        assert!(run
+            .population
+            .by_id("00001")
+            .unwrap()
+            .experiment
+            .contains("torch-softmax"));
+    }
+
+    #[test]
+    fn outcome_is_stamped_with_the_workload() {
+        let mut run = ScientistRun::new(quick_config(8)).unwrap();
+        let outcome = run.run_to_completion().unwrap();
+        assert_eq!(outcome.workload, "fp8-gemm");
     }
 
     #[test]

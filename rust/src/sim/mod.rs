@@ -22,10 +22,12 @@
 
 pub mod calibration;
 
+use std::sync::Arc;
+
 use crate::genome::{Invalid, KernelGenome};
 use crate::gpu::{lds, memory, mfma, occupancy, GpuArch, MI300};
 use crate::rng::Rng;
-use crate::workload::GemmConfig;
+use crate::workload::{GemmConfig, Workload};
 
 /// Mechanistic per-run breakdown (microseconds unless noted). The
 /// *scientist never sees this* — only `total_us` leaves the platform —
@@ -44,8 +46,21 @@ pub struct KernelTiming {
     pub grid_utilization: f64,
 }
 
-/// Deterministic noiseless estimate for a genome on a config.
+/// Deterministic noiseless estimate for a genome on a config — the
+/// paper's fp8 block-scaled GEMM (per-row/col dequant scales included).
 pub fn estimate(arch: &GpuArch, g: &KernelGenome, cfg: &GemmConfig) -> Result<KernelTiming, Invalid> {
+    estimate_gemm(arch, g, cfg, true)
+}
+
+/// The tiled-GEMM cost model shared by the GEMM workload families.
+/// `block_scales` switches the fp8 task's per-row/col dequant-scale
+/// traffic; plain bf16/fp16 GEMMs have none.
+pub fn estimate_gemm(
+    arch: &GpuArch,
+    g: &KernelGenome,
+    cfg: &GemmConfig,
+    block_scales: bool,
+) -> Result<KernelTiming, Invalid> {
     g.validate()?;
     let occ = occupancy::occupancy(arch, g);
     let issue = occupancy::compute_issue_efficiency(&occ);
@@ -63,10 +78,15 @@ pub fn estimate(arch: &GpuArch, g: &KernelGenome, cfg: &GemmConfig) -> Result<Ke
     let tiles_m = (cfg.m / g.block_m).max(1) as f64;
     let tiles_n = (cfg.n / g.block_n).max(1) as f64;
     let redundancy = if g.lds_staging { 1.0 } else { 2.0 };
+    let scale_reads = if block_scales {
+        memory::scale_traffic(g, cfg)
+    } else {
+        0.0
+    };
     let total_reads = (cfg.m as f64 * cfg.k as f64 * elt * tiles_n
         + cfg.k as f64 * cfg.n as f64 * elt * tiles_m)
         * redundancy
-        + memory::scale_traffic(g, cfg);
+        + scale_reads;
     let hbm_traffic = memory::hbm_operand_traffic(g, cfg, arch);
     let coal = memory::coalescing_efficiency(g.vector_width);
     let t_hbm = hbm_traffic / (arch.hbm_tbps * 1e6);
@@ -114,6 +134,11 @@ pub fn estimate(arch: &GpuArch, g: &KernelGenome, cfg: &GemmConfig) -> Result<Ke
 /// with an RNG stream derived from the backend seed and a submission
 /// counter — two submissions of the *same* genome get different
 /// timings, as on the real platform.
+///
+/// The backend is workload-generic: the cost model it times genomes
+/// with is the [`Workload::estimate`] hook of whichever registered
+/// workload it carries (the paper's fp8 GEMM by default, which keeps
+/// the pre-registry timings bit-identical).
 #[derive(Debug, Clone)]
 pub struct SimBackend {
     pub arch: GpuArch,
@@ -123,6 +148,8 @@ pub struct SimBackend {
     /// The construction seed, kept so parallel lane backends can derive
     /// decorrelated-but-deterministic noise streams (`lane_clone`).
     seed: u64,
+    /// The workload whose cost model this backend times.
+    workload: Arc<dyn Workload>,
 }
 
 impl SimBackend {
@@ -133,7 +160,19 @@ impl SimBackend {
             rng: Rng::seed_from_u64(seed ^ 0x51b7_ca11),
             measurements: 0,
             seed,
+            workload: crate::workload::default_workload(),
         }
+    }
+
+    /// Time genomes with a different registered workload's cost model.
+    pub fn with_workload(mut self, workload: Arc<dyn Workload>) -> Self {
+        self.workload = workload;
+        self
+    }
+
+    /// The workload this backend evaluates.
+    pub fn workload(&self) -> &Arc<dyn Workload> {
+        &self.workload
     }
 
     /// An independent submission-lane backend: same architecture and
@@ -154,6 +193,7 @@ impl SimBackend {
             rng: self.rng.fork(lane),
             measurements: 0,
             seed: lane_seed,
+            workload: self.workload.clone(),
         }
     }
 
@@ -164,7 +204,7 @@ impl SimBackend {
 
     /// One noisy timing measurement (microseconds).
     pub fn measure(&mut self, g: &KernelGenome, cfg: &GemmConfig) -> Result<f64, Invalid> {
-        let t = estimate(&self.arch, g, cfg)?;
+        let t = self.workload.estimate(&self.arch, g, cfg)?;
         self.measurements += 1;
         let noise = self.rng.lognormal_factor(self.noise_sigma);
         Ok(t.total_us * noise)
@@ -172,7 +212,7 @@ impl SimBackend {
 
     /// Noiseless breakdown (used by reports, never by agents).
     pub fn breakdown(&self, g: &KernelGenome, cfg: &GemmConfig) -> Result<KernelTiming, Invalid> {
-        estimate(&self.arch, g, cfg)
+        self.workload.estimate(&self.arch, g, cfg)
     }
 
     pub fn measurements_taken(&self) -> u64 {
@@ -292,6 +332,40 @@ mod tests {
         let first = p4.lane_clone(0).measure(&g, &CFG).unwrap();
         let second = p4.lane_clone(0).measure(&g, &CFG).unwrap();
         assert_ne!(first, second, "successive forks advance the parent");
+    }
+
+    #[test]
+    fn default_backend_times_the_paper_workload() {
+        // SimBackend::new must stay bit-identical to the pre-registry
+        // behaviour: fp8-gemm cost model, scales included
+        let b = SimBackend::new(3);
+        assert_eq!(b.workload().name(), "fp8-gemm");
+        let g = seeds::human_oracle();
+        assert_eq!(b.breakdown(&g, &CFG), estimate(&MI300, &g, &CFG));
+    }
+
+    #[test]
+    fn estimate_gemm_scale_switch_only_drops_scale_traffic() {
+        // scales-off is never slower, and differs exactly where the
+        // scale vectors would have added fabric traffic
+        let g = seeds::human_oracle();
+        let with = estimate_gemm(&MI300, &g, &CFG, true).unwrap();
+        let without = estimate_gemm(&MI300, &g, &CFG, false).unwrap();
+        assert!(without.total_us <= with.total_us);
+        assert_eq!(estimate(&MI300, &g, &CFG).unwrap(), with, "estimate == scales-on");
+    }
+
+    #[test]
+    fn backend_with_workload_uses_that_cost_model() {
+        use crate::workload::{lookup, GemmConfig};
+        let w = lookup("row-softmax").expect("registered");
+        let b = SimBackend::new(1).with_workload(w.clone());
+        let g = crate::workload::softmax::fused_seed();
+        let cfg = GemmConfig::new(8192, 8192, 8192);
+        assert_eq!(b.breakdown(&g, &cfg), w.estimate(&MI300, &g, &cfg));
+        // lane clones keep the workload
+        let mut parent = b.clone();
+        assert_eq!(parent.lane_clone(0).workload().name(), "row-softmax");
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! In-tree test fixtures shared by the integration tests (and usable
+//! from examples/benches): tiny fast-run [`RunConfig`]s, seeded-RNG
+//! helpers, genome generators, and trajectory extraction.
+//!
+//! Deliberately a library module rather than a `tests/common/mod.rs`:
+//! the fixtures are part of the crate's supported surface (benches and
+//! examples reuse them, doc links resolve, and `cargo test` exercises
+//! the module's own unit tests). It contains no production logic —
+//! only deterministic constructors over public APIs — and the scientist
+//! loop never calls into it.
+
+use crate::config::RunConfig;
+use crate::genome::{edit, seeds, KernelGenome};
+use crate::rng::Rng;
+use crate::scientist::{RunOutcome, ScientistRun};
+use crate::sim::SimBackend;
+
+/// Tests honoring a CI-matrix parallelism read it from this variable.
+pub const PARALLELISM_ENV: &str = "GKS_TEST_PARALLELISM";
+
+/// Executor lanes requested by the CI matrix (defaults to 1 — the
+/// paper's sequential mode — when the variable is unset or malformed).
+pub fn env_parallelism() -> u32 {
+    std::env::var(PARALLELISM_ENV)
+        .ok()
+        .and_then(|v| v.parse::<u32>().ok())
+        .filter(|&p| p >= 1)
+        .unwrap_or(1)
+}
+
+/// A small, fast scientist-run config: paper defaults with the given
+/// seed and submission budget. Deliberately ignores the CI parallelism
+/// matrix — tests that assert sequential-clock properties rely on it.
+pub fn tiny_run_config(seed: u64, budget: u64) -> RunConfig {
+    RunConfig::default().with_seed(seed).with_budget(budget)
+}
+
+/// A noiseless config for determinism tests: with `noise_sigma = 0`
+/// measurements are exact, so trajectories are invariant under the
+/// executor's lane partitioning and lane-noise forking.
+pub fn noiseless_config(workload: &str, seed: u64, budget: u64) -> RunConfig {
+    let mut cfg = tiny_run_config(seed, budget).with_workload(workload);
+    cfg.noise_sigma = 0.0;
+    cfg
+}
+
+/// Construct + run a simulated scientist loop to completion.
+pub fn run_scientist(cfg: RunConfig) -> (ScientistRun<SimBackend>, RunOutcome) {
+    let mut run = ScientistRun::new(cfg).expect("scientist setup");
+    let outcome = run.run_to_completion().expect("scientist run");
+    (run, outcome)
+}
+
+/// The run's full population trajectory as (fingerprint, outcome)
+/// pairs — the bit-identity witness used by the determinism tests.
+pub fn trajectory(run: &ScientistRun<SimBackend>) -> Vec<(String, String)> {
+    run.population
+        .members()
+        .iter()
+        .map(|m| (m.genome.fingerprint(), format!("{:?}", m.outcome)))
+        .collect()
+}
+
+/// A deterministic RNG for test-local randomness.
+pub fn test_rng(seed: u64) -> Rng {
+    Rng::seed_from_u64(seed)
+}
+
+/// `n` distinct valid genomes (single-edit neighbors of the fp8
+/// canonical seeds). Panics if the space can't supply `n`.
+pub fn distinct_genomes(n: usize) -> Vec<KernelGenome> {
+    let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for base in [
+        seeds::mfma_seed(),
+        seeds::human_oracle(),
+        seeds::pytorch_reference(),
+    ] {
+        for (_, g) in edit::valid_neighbors(&base) {
+            if seen.insert(g.fingerprint()) {
+                out.push(g);
+            }
+            if out.len() == n {
+                return out;
+            }
+        }
+    }
+    panic!("not enough distinct genomes for the test (wanted {n})");
+}
+
+/// A random (possibly invalid) genome via an edit walk from a random
+/// canonical seed — the generator behind the property tests.
+pub fn random_genome(rng: &mut Rng) -> KernelGenome {
+    let starts = seeds::all_seeds();
+    let mut g = starts[rng.below(starts.len())].1.clone();
+    for _ in 0..rng.below(8) {
+        edit::GenomeEdit::random(rng).apply(&mut g);
+    }
+    g
+}
+
+/// A random *valid* genome (rejection-sampled [`random_genome`]).
+pub fn random_valid_genome(rng: &mut Rng) -> KernelGenome {
+    loop {
+        let g = random_genome(rng);
+        if g.validate().is_ok() {
+            return g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_genomes_are_distinct_and_valid() {
+        let gs = distinct_genomes(12);
+        assert_eq!(gs.len(), 12);
+        let fps: std::collections::HashSet<String> =
+            gs.iter().map(|g| g.fingerprint()).collect();
+        assert_eq!(fps.len(), 12);
+        for g in &gs {
+            assert!(g.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn noiseless_config_zeroes_noise_only() {
+        let cfg = noiseless_config("row-softmax", 7, 20);
+        assert_eq!(cfg.noise_sigma, 0.0);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.max_submissions, 20);
+        assert_eq!(cfg.workload, "row-softmax");
+        assert_eq!(cfg.eval_parallelism, 1);
+    }
+
+    #[test]
+    fn random_valid_genome_terminates_and_validates() {
+        let mut rng = test_rng(5);
+        for _ in 0..50 {
+            assert!(random_valid_genome(&mut rng).validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn env_parallelism_defaults_to_one() {
+        // (the variable is not set under plain `cargo test`)
+        if std::env::var(PARALLELISM_ENV).is_err() {
+            assert_eq!(env_parallelism(), 1);
+        }
+    }
+}

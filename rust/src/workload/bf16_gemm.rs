@@ -1,0 +1,206 @@
+//! The bf16 inference GEMM family: plain (unscaled) bf16 GEMMs at
+//! LLM-serving shapes.
+//!
+//! Same tiled-GEMM physics as the paper's competition task — the
+//! workload shares `sim::estimate_gemm` — but with the fp8 task's
+//! per-row/col dequant-scale traffic switched off (a bf16 GEMM has no
+//! block scales) and a family gate rejecting fp8 genomes (the task's
+//! operands are bf16 tensors; there are no fp8 inputs to load, so an
+//! fp8 kernel cannot compile against the task's signature).
+//!
+//! Shapes are decode/prefill GEMMs of a ~7B-parameter transformer:
+//! m = tokens in flight, k/n = hidden / FFN dims (4096, 8192, 14336).
+
+use super::{BenchmarkSuite, GemmConfig, Workload};
+use crate::eval::verifier::TolerancePolicy;
+use crate::genome::{seeds, Invalid, KernelGenome, Precision, ScaleCache};
+use crate::gpu::GpuArch;
+use crate::sim::KernelTiming;
+
+/// The 12 leaderboard shapes (geomean basis).
+pub const LEADERBOARD_SIZES: [GemmConfig; 12] = [
+    GemmConfig::new(512, 4096, 4096),
+    GemmConfig::new(512, 4096, 14336),
+    GemmConfig::new(512, 14336, 4096),
+    GemmConfig::new(1024, 4096, 4096),
+    GemmConfig::new(1024, 4096, 14336),
+    GemmConfig::new(1024, 14336, 4096),
+    GemmConfig::new(2048, 4096, 4096),
+    GemmConfig::new(2048, 4096, 14336),
+    GemmConfig::new(2048, 14336, 4096),
+    GemmConfig::new(4096, 4096, 4096),
+    GemmConfig::new(8192, 4096, 4096),
+    GemmConfig::new(2048, 8192, 8192),
+];
+
+/// The 6 per-submission feedback shapes (a leaderboard subset spanning
+/// the m range and both FFN directions).
+pub const FEEDBACK_CONFIGS: [GemmConfig; 6] = [
+    GemmConfig::new(512, 4096, 4096),
+    GemmConfig::new(512, 4096, 14336),
+    GemmConfig::new(1024, 14336, 4096),
+    GemmConfig::new(2048, 4096, 14336),
+    GemmConfig::new(4096, 4096, 4096),
+    GemmConfig::new(2048, 8192, 8192),
+];
+
+/// The library baseline: a tuned vectorized bf16 GEMM (what a
+/// `torch.matmul` dispatch reaches on MI300-class hardware) — the
+/// canonical PyTorch-reference genome minus the fp8 task's dequant
+/// scale caching (a plain bf16 GEMM has no scales to cache).
+pub fn library_seed() -> KernelGenome {
+    KernelGenome {
+        scale_cache: ScaleCache::GlobalReload,
+        ..seeds::pytorch_reference()
+    }
+}
+
+/// The first working Matrix-Core kernel for the family: fp16 MFMA with
+/// small tiles — functional, far from tuned (the loop's fast-path
+/// starting point, mirroring the paper's bootstrap seed).
+pub fn mfma_bf16_seed() -> KernelGenome {
+    KernelGenome {
+        precision: Precision::Fp16,
+        scale_cache: ScaleCache::GlobalReload,
+        ..seeds::mfma_seed()
+    }
+}
+
+impl Bf16Gemm {
+    fn naive_seed() -> KernelGenome {
+        // the same line-by-line scalar translation the paper starts
+        // from — upcast-to-f32 math, no staging
+        seeds::naive_hip()
+    }
+}
+
+/// The bf16 inference GEMM workload.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Bf16Gemm;
+
+impl Workload for Bf16Gemm {
+    fn name(&self) -> &'static str {
+        "bf16-gemm"
+    }
+
+    fn description(&self) -> &'static str {
+        "bf16 inference GEMM family (decode/prefill shapes, no block scales): 6-config feedback, 12-size leaderboard"
+    }
+
+    fn feedback_suite(&self) -> BenchmarkSuite {
+        BenchmarkSuite {
+            name: "bf16-feedback-6".into(),
+            configs: FEEDBACK_CONFIGS.to_vec(),
+        }
+    }
+
+    fn leaderboard_suite(&self) -> BenchmarkSuite {
+        BenchmarkSuite {
+            name: "bf16-leaderboard-12".into(),
+            configs: LEADERBOARD_SIZES.to_vec(),
+        }
+    }
+
+    fn starting_population(&self) -> Vec<(&'static str, KernelGenome)> {
+        vec![
+            ("bf16-library", library_seed()),
+            ("naive-bf16", Self::naive_seed()),
+            ("mfma-bf16-seed", mfma_bf16_seed()),
+        ]
+    }
+
+    fn reference_genome(&self) -> KernelGenome {
+        library_seed()
+    }
+
+    fn tolerance(&self) -> TolerancePolicy {
+        // no fp8 input quantum: only the bf16 output quantum plus f32
+        // reassociation over the reduction depth
+        TolerancePolicy {
+            base_rtol: 1.0 / 256.0,
+            accum_rtol_per_sqrt_k: 1e-4,
+        }
+    }
+
+    fn admits(&self, g: &KernelGenome) -> Result<(), String> {
+        if g.precision == Precision::Fp8 {
+            return Err(
+                "task operands are bf16 tensors; kernel declares fp8 inputs that do not exist"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+
+    fn estimate(
+        &self,
+        arch: &GpuArch,
+        g: &KernelGenome,
+        cfg: &GemmConfig,
+    ) -> Result<KernelTiming, Invalid> {
+        crate::sim::estimate_gemm(arch, g, cfg, false)
+    }
+
+    fn flops(&self, cfg: &GemmConfig) -> f64 {
+        cfg.flops()
+    }
+
+    fn min_hbm_bytes(&self, cfg: &GemmConfig) -> f64 {
+        cfg.operand_bytes(2) + cfg.output_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::MI300;
+
+    #[test]
+    fn feedback_is_subset_of_leaderboard() {
+        for c in FEEDBACK_CONFIGS {
+            assert!(LEADERBOARD_SIZES.contains(&c), "{c} not on leaderboard");
+        }
+    }
+
+    #[test]
+    fn family_gate_rejects_fp8_admits_bf16() {
+        let w = Bf16Gemm;
+        assert!(w.admits(&library_seed()).is_ok());
+        assert!(w.admits(&mfma_bf16_seed()).is_ok());
+        let fp8 = seeds::mfma_seed(); // fp8 MFMA from the paper task
+        assert!(w.admits(&fp8).is_err());
+    }
+
+    #[test]
+    fn scales_off_never_slower_than_the_fp8_model() {
+        // dropping scale traffic can only help, all else equal
+        let w = Bf16Gemm;
+        for cfg in FEEDBACK_CONFIGS {
+            let g = library_seed();
+            let ours = w.estimate(&MI300, &g, &cfg).unwrap().total_us;
+            let with_scales = crate::sim::estimate(&MI300, &g, &cfg).unwrap().total_us;
+            assert!(ours <= with_scales, "{cfg}");
+        }
+    }
+
+    #[test]
+    fn mfma_seed_has_headroom_over_naive() {
+        let w = Bf16Gemm;
+        for cfg in FEEDBACK_CONFIGS {
+            let mfma = w.estimate(&MI300, &mfma_bf16_seed(), &cfg).unwrap().total_us;
+            let naive = w.estimate(&MI300, &Bf16Gemm::naive_seed(), &cfg).unwrap().total_us;
+            assert!(mfma < naive, "{cfg}: mfma {mfma} >= naive {naive}");
+        }
+    }
+
+    #[test]
+    fn tolerance_admits_benign_error_at_max_depth() {
+        let w = Bf16Gemm;
+        let p = w.tolerance();
+        for cfg in FEEDBACK_CONFIGS {
+            let benign =
+                crate::eval::verifier::predicted_rel_error(&library_seed(), &cfg);
+            assert!(benign < p.rtol(&cfg), "{cfg}");
+        }
+    }
+}

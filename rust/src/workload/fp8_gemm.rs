@@ -1,0 +1,122 @@
+//! The paper's workload: the AMD Developer Challenge 2025 fp8
+//! block-scaled GEMM (MI300 target).
+//!
+//! This is the original single-benchmark reproduction moved behind the
+//! [`Workload`] trait. Everything delegates to the pre-registry code
+//! paths — `sim::estimate`, `genome::seeds`, `BenchmarkSuite::feedback/
+//! leaderboard`, `TolerancePolicy::default` — so timings, verifier
+//! verdicts, and therefore whole scientist trajectories are
+//! bit-identical to the pre-refactor system (locked in by
+//! `tests/determinism.rs` and the unit tests below).
+
+use super::{BenchmarkSuite, GemmConfig, Workload};
+use crate::eval::verifier::TolerancePolicy;
+use crate::genome::{seeds, Invalid, KernelGenome};
+use crate::gpu::GpuArch;
+use crate::sim::KernelTiming;
+
+/// The fp8 block-scaled GEMM competition task.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fp8Gemm;
+
+impl Workload for Fp8Gemm {
+    fn name(&self) -> &'static str {
+        "fp8-gemm"
+    }
+
+    fn description(&self) -> &'static str {
+        "AMD-competition fp8 block-scaled GEMM (the paper's task): 6-config feedback, 18-size leaderboard"
+    }
+
+    fn feedback_suite(&self) -> BenchmarkSuite {
+        BenchmarkSuite::feedback()
+    }
+
+    fn leaderboard_suite(&self) -> BenchmarkSuite {
+        BenchmarkSuite::leaderboard()
+    }
+
+    fn starting_population(&self) -> Vec<(&'static str, KernelGenome)> {
+        seeds::starting_population()
+    }
+
+    fn reference_genome(&self) -> KernelGenome {
+        seeds::pytorch_reference()
+    }
+
+    fn tolerance(&self) -> TolerancePolicy {
+        TolerancePolicy::default()
+    }
+
+    fn estimate(
+        &self,
+        arch: &GpuArch,
+        g: &KernelGenome,
+        cfg: &GemmConfig,
+    ) -> Result<KernelTiming, Invalid> {
+        crate::sim::estimate(arch, g, cfg)
+    }
+
+    fn flops(&self, cfg: &GemmConfig) -> f64 {
+        cfg.flops()
+    }
+
+    fn min_hbm_bytes(&self, cfg: &GemmConfig) -> f64 {
+        // fp8 operands (1 B) + per-row/col f32 scales + bf16 output
+        cfg.operand_bytes(1) + (cfg.m + cfg.n) as f64 * 4.0 + cfg.output_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::MI300;
+    use crate::workload::{FEEDBACK_CONFIGS, LEADERBOARD_SIZES};
+
+    #[test]
+    fn suites_are_the_paper_constants() {
+        let w = Fp8Gemm;
+        assert_eq!(w.feedback_suite().configs, FEEDBACK_CONFIGS.to_vec());
+        assert_eq!(w.leaderboard_suite().configs, LEADERBOARD_SIZES.to_vec());
+    }
+
+    #[test]
+    fn estimate_is_bit_identical_to_the_legacy_path() {
+        // the bit-identity anchor: the trait hook must be the exact
+        // same function the pre-registry simulator called
+        let w = Fp8Gemm;
+        for (_, g) in seeds::all_seeds() {
+            for cfg in FEEDBACK_CONFIGS {
+                assert_eq!(
+                    w.estimate(&MI300, &g, &cfg),
+                    crate::sim::estimate(&MI300, &g, &cfg)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tolerance_matches_the_default_policy() {
+        let w = Fp8Gemm;
+        let d = TolerancePolicy::default();
+        for cfg in FEEDBACK_CONFIGS {
+            assert_eq!(w.tolerance().rtol(&cfg), d.rtol(&cfg));
+        }
+    }
+
+    #[test]
+    fn admits_every_valid_genome() {
+        // the competition accepts any compiling HIP kernel; the family
+        // gate must not reject anything validate() admits
+        for (_, g) in seeds::all_seeds() {
+            assert!(Fp8Gemm.admits(&g).is_ok());
+        }
+    }
+
+    #[test]
+    fn roofline_hooks_positive() {
+        let cfg = GemmConfig::new(6144, 512, 4096);
+        assert!(Fp8Gemm.flops(&cfg) > 0.0);
+        assert!(Fp8Gemm.min_hbm_bytes(&cfg) > 0.0);
+    }
+}

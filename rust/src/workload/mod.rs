@@ -1,0 +1,399 @@
+//! The workload registry: every optimization scenario the scientist
+//! loop can run, behind one [`Workload`] trait.
+//!
+//! The paper's methodology is workload-agnostic — the agents see only
+//! code, timings, and assimilated GPU knowledge (§3). This module makes
+//! the reproduction match: a workload bundles its benchmark suites
+//! (per-submission feedback + final leaderboard geomean basis), its
+//! seed genomes, its verifier tolerance policy, and its analytic
+//! cost-model hook, and [`registry`] exposes every registered family:
+//!
+//! * [`fp8_gemm`] — the paper's AMD-competition fp8 block-scaled GEMM
+//!   (the original single-benchmark reproduction, timings bit-identical
+//!   to the pre-registry code);
+//! * [`bf16_gemm`] — a bf16 inference GEMM family (decode/prefill
+//!   shapes, no block scales);
+//! * [`softmax`] — a fused row-softmax/reduction family exercising the
+//!   bandwidth-bound side of the MI300 model in `gpu/`.
+//!
+//! Problem sizes are carried by [`GemmConfig`] for every family; each
+//! workload documents how it interprets the (m, k, n) fields (the
+//! softmax family uses m = rows and k = n = columns, so reduction-depth
+//! tolerances keep their meaning).
+//!
+//! The constants below are the fp8 competition's: the platform returns
+//! timings for **6 specified MxKxN input configurations** per
+//! submission (§3.1), while the leaderboard is the **geometric average
+//! over 18 specific matrix sizes** (§4.5). The exact size list is not
+//! published; we use an LLM-inference-shaped spread that includes the
+//! one size the paper does name, m=6144 k=512 n=4096 (App. A.1).
+
+pub mod bf16_gemm;
+pub mod fp8_gemm;
+pub mod softmax;
+
+use std::sync::Arc;
+
+use crate::eval::verifier::TolerancePolicy;
+use crate::genome::{Invalid, KernelGenome};
+use crate::gpu::GpuArch;
+use crate::sim::KernelTiming;
+
+/// One optimization scenario: benchmark suites, seed genomes, verifier
+/// tolerance, and the analytic roofline/cost-model hook the simulated
+/// platform times genomes with. Implementations must be cheap to
+/// construct and stateless — the registry hands out fresh `Arc`s and
+/// backends clone them per submission lane.
+pub trait Workload: Send + Sync + std::fmt::Debug {
+    /// Registry key (also the `workload = "..."` config value).
+    fn name(&self) -> &'static str;
+
+    /// One-line human description (CLI listing, reports).
+    fn description(&self) -> &'static str;
+
+    /// The per-submission feedback suite (what the platform times and
+    /// the population ledger records).
+    fn feedback_suite(&self) -> BenchmarkSuite;
+
+    /// The final leaderboard suite — the geomean basis scored once,
+    /// outside the submission quota.
+    fn leaderboard_suite(&self) -> BenchmarkSuite;
+
+    /// Seed genomes submitted before the loop starts, in order.
+    ///
+    /// **Ordering contract** (relied on by `submit_seeds`'s
+    /// no-bootstrap counterfactual, the annealer/GA fallbacks, and
+    /// `inspect`'s default): the library/reference baseline — the same
+    /// genome [`Workload::reference_genome`] returns — is listed
+    /// *first* (enforced by the registry tests), a "naive" translation
+    /// seed is present, and the family's fast-path bootstrap seed
+    /// (fp8's mfma-seed) is listed *last*.
+    fn starting_population(&self) -> Vec<(&'static str, KernelGenome)>;
+
+    /// The library/reference baseline genome (comparison rows).
+    fn reference_genome(&self) -> KernelGenome;
+
+    /// Verifier tolerance policy for this task's numerics.
+    fn tolerance(&self) -> TolerancePolicy;
+
+    /// Workload-specific compile gate on top of
+    /// [`KernelGenome::validate`] — e.g. the bf16 family has no fp8
+    /// operands to load. `Err` reads as a compile failure.
+    fn admits(&self, _g: &KernelGenome) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Noiseless analytic cost model: the simulator calls this per
+    /// (genome, config) measurement.
+    fn estimate(
+        &self,
+        arch: &GpuArch,
+        g: &KernelGenome,
+        cfg: &GemmConfig,
+    ) -> Result<KernelTiming, Invalid>;
+
+    /// Arithmetic work of one run (roofline accounting).
+    fn flops(&self, cfg: &GemmConfig) -> f64;
+
+    /// Minimum HBM bytes one run must move (roofline accounting).
+    fn min_hbm_bytes(&self, cfg: &GemmConfig) -> f64;
+}
+
+/// Registry key of the paper's workload — the default everywhere.
+pub const DEFAULT_WORKLOAD: &str = "fp8-gemm";
+
+/// Every registered workload, in registry order (the paper's fp8 GEMM
+/// first).
+pub fn registry() -> Vec<Arc<dyn Workload>> {
+    vec![
+        Arc::new(fp8_gemm::Fp8Gemm),
+        Arc::new(bf16_gemm::Bf16Gemm),
+        Arc::new(softmax::RowSoftmax),
+    ]
+}
+
+/// Look a workload up by registry key.
+pub fn lookup(name: &str) -> Option<Arc<dyn Workload>> {
+    registry().into_iter().find(|w| w.name() == name)
+}
+
+/// The default (paper fp8 GEMM) workload.
+pub fn default_workload() -> Arc<dyn Workload> {
+    Arc::new(fp8_gemm::Fp8Gemm)
+}
+
+/// One GEMM problem size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmConfig {
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+}
+
+impl GemmConfig {
+    pub const fn new(m: u32, k: u32, n: u32) -> Self {
+        GemmConfig { m, k, n }
+    }
+
+    /// Multiply-add count x2.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.k as f64 * self.n as f64
+    }
+
+    /// Operand bytes at a given element size (A + B), one pass.
+    pub fn operand_bytes(&self, elt: u32) -> f64 {
+        (self.m as f64 * self.k as f64 + self.k as f64 * self.n as f64) * elt as f64
+    }
+
+    /// Output bytes (bf16 C).
+    pub fn output_bytes(&self) -> f64 {
+        self.m as f64 * self.n as f64 * 2.0
+    }
+}
+
+impl std::fmt::Display for GemmConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "m={} k={} n={}", self.m, self.k, self.n)
+    }
+}
+
+/// The 18 leaderboard sizes (geomean basis, Table 1).
+pub const LEADERBOARD_SIZES: [GemmConfig; 18] = [
+    GemmConfig::new(4096, 512, 4096),
+    GemmConfig::new(4096, 1024, 4096),
+    GemmConfig::new(4096, 2048, 4096),
+    GemmConfig::new(4096, 4096, 4096),
+    GemmConfig::new(6144, 512, 4096), // named in paper App. A.1
+    GemmConfig::new(6144, 1024, 4096),
+    GemmConfig::new(6144, 2048, 6144),
+    GemmConfig::new(6144, 512, 6144),
+    GemmConfig::new(8192, 512, 8192),
+    GemmConfig::new(8192, 1024, 8192),
+    GemmConfig::new(8192, 2048, 8192),
+    GemmConfig::new(8192, 4096, 8192),
+    GemmConfig::new(4096, 7168, 4096),
+    GemmConfig::new(6144, 7168, 6144),
+    GemmConfig::new(8192, 7168, 8192),
+    GemmConfig::new(4096, 512, 8192),
+    GemmConfig::new(8192, 512, 4096),
+    GemmConfig::new(6144, 1024, 8192),
+];
+
+/// The 6 per-submission feedback configs (a subset of the leaderboard,
+/// spanning the k range and the named paper size).
+pub const FEEDBACK_CONFIGS: [GemmConfig; 6] = [
+    GemmConfig::new(6144, 512, 4096),
+    GemmConfig::new(4096, 1024, 4096),
+    GemmConfig::new(4096, 4096, 4096),
+    GemmConfig::new(8192, 512, 8192),
+    GemmConfig::new(8192, 1024, 8192),
+    GemmConfig::new(6144, 2048, 6144),
+];
+
+/// A named set of configs — the unit the evaluation platform runs.
+#[derive(Debug, Clone)]
+pub struct BenchmarkSuite {
+    pub name: String,
+    pub configs: Vec<GemmConfig>,
+}
+
+impl BenchmarkSuite {
+    /// The per-submission feedback suite (6 configs).
+    pub fn feedback() -> Self {
+        BenchmarkSuite {
+            name: "feedback-6".into(),
+            configs: FEEDBACK_CONFIGS.to_vec(),
+        }
+    }
+
+    /// The final leaderboard suite (18 sizes).
+    pub fn leaderboard() -> Self {
+        BenchmarkSuite {
+            name: "leaderboard-18".into(),
+            configs: LEADERBOARD_SIZES.to_vec(),
+        }
+    }
+
+    /// Small CPU-testbed suite matching the PJRT artifact catalog
+    /// shapes (see `python/compile/aot.py`).
+    pub fn testbed() -> Self {
+        BenchmarkSuite {
+            name: "testbed-pjrt".into(),
+            configs: vec![
+                GemmConfig::new(256, 256, 256),
+                GemmConfig::new(512, 256, 256),
+                GemmConfig::new(256, 512, 512),
+            ],
+        }
+    }
+
+    /// Synthetic sweep for ablations: a grid over (m, k, n) decades.
+    pub fn synthetic_sweep(points: usize, seed: u64) -> Self {
+        let mut rng = crate::rng::Rng::seed_from_u64(seed);
+        let dims = [512u32, 1024, 2048, 4096, 6144, 8192];
+        let configs = (0..points)
+            .map(|_| {
+                GemmConfig::new(
+                    *rng.choose(&dims),
+                    *rng.choose(&dims[..4]),
+                    *rng.choose(&dims),
+                )
+            })
+            .collect();
+        BenchmarkSuite {
+            name: format!("synthetic-{points}"),
+            configs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaderboard_has_18_unique_sizes() {
+        let mut set = std::collections::HashSet::new();
+        for c in LEADERBOARD_SIZES {
+            set.insert(c);
+        }
+        assert_eq!(set.len(), 18);
+    }
+
+    #[test]
+    fn feedback_is_subset_of_leaderboard() {
+        for c in FEEDBACK_CONFIGS {
+            assert!(LEADERBOARD_SIZES.contains(&c), "{c} not on leaderboard");
+        }
+    }
+
+    #[test]
+    fn paper_named_size_present() {
+        let named = GemmConfig::new(6144, 512, 4096);
+        assert!(FEEDBACK_CONFIGS.contains(&named));
+        assert!(LEADERBOARD_SIZES.contains(&named));
+    }
+
+    #[test]
+    fn flops_math() {
+        let c = GemmConfig::new(2, 3, 4);
+        assert_eq!(c.flops(), 48.0);
+        assert_eq!(c.operand_bytes(1), 18.0);
+        assert_eq!(c.output_bytes(), 16.0);
+    }
+
+    #[test]
+    fn synthetic_sweep_deterministic() {
+        let a = BenchmarkSuite::synthetic_sweep(10, 7);
+        let b = BenchmarkSuite::synthetic_sweep(10, 7);
+        assert_eq!(a.configs, b.configs);
+    }
+
+    #[test]
+    fn registry_has_at_least_three_workloads() {
+        let names: Vec<&str> = registry().iter().map(|w| w.name()).collect();
+        assert!(names.len() >= 3, "{names:?}");
+        assert_eq!(names[0], DEFAULT_WORKLOAD, "paper workload registers first");
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate registry keys");
+    }
+
+    #[test]
+    fn lookup_resolves_every_registered_name() {
+        for w in registry() {
+            let found = lookup(w.name()).expect("registered name must resolve");
+            assert_eq!(found.name(), w.name());
+        }
+        assert!(lookup("no-such-workload").is_none());
+        assert_eq!(default_workload().name(), DEFAULT_WORKLOAD);
+    }
+
+    #[test]
+    fn every_workload_is_internally_consistent() {
+        for w in registry() {
+            let fb = w.feedback_suite();
+            let lb = w.leaderboard_suite();
+            assert!(!fb.configs.is_empty(), "{}", w.name());
+            assert!(lb.configs.len() >= fb.configs.len(), "{}", w.name());
+            assert!(!w.description().is_empty());
+            let seeds = w.starting_population();
+            assert!(seeds.len() >= 2, "{}: need seeds to evolve from", w.name());
+            // the starting_population ordering contract: the library/
+            // reference baseline leads, a naive translation exists
+            // (the bootstrap-fast-path-last half of the contract is
+            // positional and exercised by the scientist's tests)
+            assert_eq!(
+                seeds[0].1,
+                w.reference_genome(),
+                "{}: the reference baseline must be the first seed",
+                w.name()
+            );
+            assert!(
+                seeds.iter().any(|(n, _)| n.contains("naive")),
+                "{}: no naive translation seed",
+                w.name()
+            );
+            for (name, g) in &seeds {
+                assert!(g.validate().is_ok(), "{}/{name}", w.name());
+                assert!(w.admits(g).is_ok(), "{}/{name}", w.name());
+                assert!(
+                    g.correctness_hazard().is_none(),
+                    "{}/{name} has a hazard",
+                    w.name()
+                );
+            }
+            assert!(w.admits(&w.reference_genome()).is_ok(), "{}", w.name());
+            for cfg in &fb.configs {
+                assert!(w.flops(cfg) > 0.0);
+                assert!(w.min_hbm_bytes(cfg) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn every_workload_times_its_seeds() {
+        use crate::gpu::MI300;
+        for w in registry() {
+            for cfg in &w.feedback_suite().configs {
+                for (name, g) in w.starting_population() {
+                    let t = w
+                        .estimate(&MI300, &g, cfg)
+                        .unwrap_or_else(|e| panic!("{}/{name} on {cfg}: {e}", w.name()));
+                    assert!(
+                        t.total_us.is_finite() && t.total_us > 0.0,
+                        "{}/{name} on {cfg}",
+                        w.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seed_orderings_favor_the_library_over_naive() {
+        // every family's naive translation must be slower than its
+        // library reference on every feedback config, so Table-1-style
+        // orderings carry over to the new workloads
+        use crate::gpu::MI300;
+        for w in registry() {
+            let lib = w.reference_genome();
+            let naive = w
+                .starting_population()
+                .into_iter()
+                .find(|(n, _)| n.contains("naive"))
+                .map(|(_, g)| g)
+                .expect("every family seeds a naive translation");
+            for cfg in &w.feedback_suite().configs {
+                let t_lib = w.estimate(&MI300, &lib, cfg).unwrap().total_us;
+                let t_naive = w.estimate(&MI300, &naive, cfg).unwrap().total_us;
+                assert!(
+                    t_naive > t_lib,
+                    "{} on {cfg}: naive {t_naive} <= library {t_lib}",
+                    w.name()
+                );
+            }
+        }
+    }
+}

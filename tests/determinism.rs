@@ -1,0 +1,169 @@
+//! The determinism matrix (extends the single-case check in
+//! `tests/executor.rs` to every registered workload):
+//!
+//! For each workload in `workload::registry()`, the scientist
+//! trajectory — the full population ledger of (genome fingerprint,
+//! outcome) pairs — must be **bit-identical**
+//!
+//! * across `eval_parallelism ∈ {1, 2, 4}` (plus the CI matrix value
+//!   from `GKS_TEST_PARALLELISM`), and
+//! * with the eval cache on vs. off,
+//!
+//! for a fixed seed. The runs use a noiseless platform
+//! (`noise_sigma = 0`): measurement jitter is the one *intended*
+//! lane-count-dependent effect (each lane models an independent
+//! competition server), so zeroing it exposes everything else —
+//! partitioning, ordering, cache interactions — which must be exact.
+
+use gpu_kernel_scientist::test_support as ts;
+use gpu_kernel_scientist::workload::{self, Workload};
+
+fn run_matrix_point(
+    workload: &str,
+    seed: u64,
+    parallelism: u32,
+    cache: bool,
+) -> (Vec<(String, String)>, String, f64) {
+    let mut cfg = ts::noiseless_config(workload, seed, 24);
+    cfg.eval_parallelism = parallelism;
+    cfg.eval_cache = cache;
+    let (run, outcome) = ts::run_scientist(cfg);
+    (ts::trajectory(&run), outcome.best_id, outcome.best_geomean_us)
+}
+
+#[test]
+fn trajectory_is_invariant_across_parallelism_and_cache_for_every_workload() {
+    for w in workload::registry() {
+        let name = w.name();
+        let (base_traj, base_best, base_score) = run_matrix_point(name, 13, 1, true);
+        assert!(!base_traj.is_empty(), "{name}: empty trajectory");
+        let mut lanes = vec![1, 2, 4];
+        let env = ts::env_parallelism();
+        if !lanes.contains(&env) {
+            lanes.push(env);
+        }
+        for p in lanes {
+            for cache in [true, false] {
+                if p == 1 && cache {
+                    continue; // the base point itself
+                }
+                let (traj, best, score) = run_matrix_point(name, 13, p, cache);
+                assert_eq!(
+                    traj, base_traj,
+                    "{name}: trajectory diverged at parallelism={p} cache={cache}"
+                );
+                assert_eq!(best, base_best, "{name}: p={p} cache={cache}");
+                assert_eq!(score, base_score, "{name}: p={p} cache={cache}");
+            }
+        }
+    }
+}
+
+#[test]
+fn trajectories_differ_between_workloads() {
+    // the matrix above would pass vacuously if every workload produced
+    // the same ledger; make sure the families genuinely diverge
+    let mut trajectories = Vec::new();
+    for w in workload::registry() {
+        let (t, _, _) = run_matrix_point(w.name(), 13, 1, true);
+        trajectories.push((w.name(), t));
+    }
+    for i in 0..trajectories.len() {
+        for j in (i + 1)..trajectories.len() {
+            assert_ne!(
+                trajectories[i].1, trajectories[j].1,
+                "{} and {} produced identical trajectories",
+                trajectories[i].0, trajectories[j].0
+            );
+        }
+    }
+}
+
+#[test]
+fn ci_matrix_lane_count_runs_are_reproducible_with_noise() {
+    // exercises exactly the CI matrix's lane count on a *noisy*
+    // platform for every workload — at GKS_TEST_PARALLELISM=4 this
+    // (noisy, 4-lane, full-loop) configuration runs nowhere else in
+    // the suite, which is what makes the CI matrix leg meaningful
+    let p = ts::env_parallelism();
+    for w in workload::registry() {
+        let run_once = || {
+            let mut cfg = ts::tiny_run_config(17, 21).with_workload(w.name());
+            cfg.eval_parallelism = p;
+            let (run, o) = ts::run_scientist(cfg);
+            (ts::trajectory(&run), o.best_id, o.best_geomean_us)
+        };
+        assert_eq!(run_once(), run_once(), "{} at {p} lanes", w.name());
+    }
+}
+
+#[test]
+fn noisy_single_lane_runs_stay_reproducible_per_seed() {
+    // with noise back on, same-seed same-lane-count runs must still be
+    // bit-identical (the original executor.rs guarantee, per workload)
+    for w in workload::registry() {
+        let run_once = || {
+            let cfg = ts::tiny_run_config(4, 18).with_workload(w.name());
+            let (run, outcome) = ts::run_scientist(cfg);
+            (ts::trajectory(&run), outcome.best_id, outcome.best_geomean_us)
+        };
+        assert_eq!(run_once(), run_once(), "{}", w.name());
+    }
+}
+
+#[test]
+fn every_workload_passes_an_end_to_end_smoke() {
+    // acceptance: each registered workload completes a full loop with a
+    // consistent ledger and a best kernel no worse than its seeds
+    for w in workload::registry() {
+        let name = w.name();
+        let cfg = ts::tiny_run_config(2, 30).with_workload(name);
+        let (run, outcome) = ts::run_scientist(cfg);
+        assert_eq!(outcome.workload, name);
+        assert!(outcome.submissions <= 30, "{name}");
+        assert!(
+            outcome.best_geomean_us.is_finite() && outcome.best_geomean_us > 0.0,
+            "{name}"
+        );
+        // ledger consistency: one population row per submission, in
+        // log order
+        assert_eq!(
+            run.platform.submissions() as usize,
+            run.population.len(),
+            "{name}"
+        );
+        for (rec, member) in run.platform.log().iter().zip(run.population.members()) {
+            assert_eq!(rec.outcome, member.outcome, "{name}");
+        }
+        // the loop's best must at least match the best seed, and beat
+        // the family's naive translation
+        let n_seeds = w.starting_population().len();
+        let best_seed = run
+            .population
+            .members()
+            .iter()
+            .take(n_seeds)
+            .filter_map(|m| m.score())
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            outcome.best_geomean_us <= best_seed,
+            "{name}: best {} worse than best seed {best_seed}",
+            outcome.best_geomean_us
+        );
+        let naive_score = run
+            .population
+            .members()
+            .iter()
+            .take(n_seeds)
+            .find(|m| m.experiment.contains("naive"))
+            .and_then(|m| m.score())
+            .expect("every family seeds a naive translation");
+        assert!(
+            outcome.best_geomean_us < naive_score,
+            "{name}: best {} does not beat naive {naive_score}",
+            outcome.best_geomean_us
+        );
+        // the leaderboard geomean is scored on the workload's own basis
+        assert!(outcome.leaderboard_us.is_some(), "{name}");
+    }
+}

@@ -8,30 +8,11 @@
 //! * the genome-hash cache returns identical `EvalOutcome`s without
 //!   consuming submission quota or platform time.
 
-use gpu_kernel_scientist::config::RunConfig;
 use gpu_kernel_scientist::eval::{EvalPlatform, PlatformConfig};
-use gpu_kernel_scientist::genome::{edit, KernelGenome};
 use gpu_kernel_scientist::prelude::*;
-
-fn distinct_genomes(n: usize) -> Vec<KernelGenome> {
-    let mut out = Vec::new();
-    let mut seen = std::collections::HashSet::new();
-    for base in [
-        seeds::mfma_seed(),
-        seeds::human_oracle(),
-        seeds::pytorch_reference(),
-    ] {
-        for (_, g) in edit::valid_neighbors(&base) {
-            if seen.insert(g.fingerprint()) {
-                out.push(g);
-            }
-            if out.len() == n {
-                return out;
-            }
-        }
-    }
-    panic!("not enough distinct genomes for the test");
-}
+use gpu_kernel_scientist::test_support::{
+    distinct_genomes, run_scientist, tiny_run_config, trajectory,
+};
 
 #[test]
 fn single_lane_batch_is_bit_identical_to_sequential_submits() {
@@ -58,17 +39,10 @@ fn single_lane_batch_is_bit_identical_to_sequential_submits() {
 #[test]
 fn scientist_trajectory_at_parallelism_one_is_deterministic_and_cache_neutral() {
     let run_once = |eval_cache: bool| {
-        let mut cfg = RunConfig::default().with_seed(13).with_budget(40);
+        let mut cfg = tiny_run_config(13, 40);
         cfg.eval_cache = eval_cache;
-        let mut run = ScientistRun::new(cfg).expect("setup");
-        let outcome = run.run_to_completion().expect("run");
-        let trajectory: Vec<(String, String)> = run
-            .population
-            .members()
-            .iter()
-            .map(|m| (m.genome.fingerprint(), format!("{:?}", m.outcome)))
-            .collect();
-        (outcome, trajectory)
+        let (run, outcome) = run_scientist(cfg);
+        (outcome, trajectory(&run))
     };
     let (o1, t1) = run_once(true);
     let (o2, t2) = run_once(true);
@@ -179,10 +153,9 @@ fn cache_returns_identical_outcomes_without_consuming_quota() {
 #[test]
 fn multi_lane_scientist_run_is_reproducible() {
     let run = || {
-        let mut cfg = RunConfig::default().with_seed(4).with_budget(36);
+        let mut cfg = tiny_run_config(4, 36);
         cfg.eval_parallelism = 3;
-        let mut r = ScientistRun::new(cfg).expect("setup");
-        let o = r.run_to_completion().expect("run");
+        let (_, o) = run_scientist(cfg);
         (o.best_id.clone(), o.best_geomean_us, o.submissions)
     };
     assert_eq!(run(), run());

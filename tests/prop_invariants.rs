@@ -13,19 +13,10 @@ use gpu_kernel_scientist::gpu::{occupancy, MI300};
 use gpu_kernel_scientist::metrics::geomean;
 use gpu_kernel_scientist::rng::Rng;
 use gpu_kernel_scientist::sim;
+use gpu_kernel_scientist::test_support::{random_genome, random_valid_genome};
 use gpu_kernel_scientist::workload::GemmConfig;
 
 const CASES: usize = 300;
-
-/// Random (possibly invalid) genome via an edit walk from a seed.
-fn random_genome(rng: &mut Rng) -> KernelGenome {
-    let starts = seeds::all_seeds();
-    let mut g = starts[rng.below(starts.len())].1.clone();
-    for _ in 0..rng.below(8) {
-        GenomeEdit::random(rng).apply(&mut g);
-    }
-    g
-}
 
 fn random_config(rng: &mut Rng) -> GemmConfig {
     let dims = [512u32, 1024, 2048, 4096, 6144, 8192];
@@ -227,6 +218,115 @@ fn prop_writer_output_always_reported() {
         );
         // writer reports always mention the experiment
         assert!(out.report.contains("Experiment:"));
+    }
+}
+
+#[test]
+fn prop_fingerprint_stable_under_clone_and_serialize_roundtrip() {
+    // the eval cache keys on the fingerprint, so it must survive every
+    // way a genome travels: clone, and JSON persist/parse round-trip
+    let mut rng = Rng::seed_from_u64(120);
+    for _ in 0..CASES {
+        let g = random_genome(&mut rng);
+        let fp = g.fingerprint();
+        assert_eq!(g.clone().fingerprint(), fp);
+        let json = g.to_json().to_string();
+        let back = KernelGenome::from_json(
+            &gpu_kernel_scientist::util::json::parse(&json).expect("parse"),
+        )
+        .expect("genome round-trip");
+        assert_eq!(back.fingerprint(), fp, "{g:?}");
+        assert_eq!(back, g);
+    }
+}
+
+#[test]
+fn prop_cache_hit_returns_the_recomputed_outcome() {
+    // on a noiseless platform, serving a genome from the cache must
+    // equal evaluating it again from scratch, bit for bit
+    use gpu_kernel_scientist::eval::{EvalPlatform, PlatformConfig};
+    use gpu_kernel_scientist::sim::SimBackend;
+    let mut rng = Rng::seed_from_u64(121);
+    for case in 0..40u64 {
+        let g = random_valid_genome(&mut rng);
+        let platform = |cache: bool| {
+            EvalPlatform::new(
+                SimBackend::new(case).with_noise(0.0),
+                PlatformConfig {
+                    cache_results: cache,
+                    ..Default::default()
+                },
+            )
+        };
+        let mut cached = platform(true);
+        let first = cached.submit_batch(std::slice::from_ref(&g));
+        let hit = cached.submit_batch(std::slice::from_ref(&g));
+        assert!(!first[0].cached && hit[0].cached);
+        assert_eq!(hit[0].outcome, first[0].outcome, "cache hit == recorded");
+        // true recompute: same backend seed, cache disabled
+        let mut raw = platform(false);
+        let r1 = raw.submit_batch(std::slice::from_ref(&g));
+        let r2 = raw.submit_batch(std::slice::from_ref(&g));
+        assert_eq!(r1[0].outcome, r2[0].outcome, "noiseless recompute is exact");
+        assert_eq!(hit[0].outcome, r1[0].outcome, "cache hit == recompute");
+    }
+}
+
+#[test]
+fn prop_cache_stats_account_for_every_batch_submission() {
+    // hits + misses == total genomes pushed through the batch path
+    // (in-batch duplicates and repeats across batches included)
+    use gpu_kernel_scientist::eval::{EvalPlatform, PlatformConfig};
+    use gpu_kernel_scientist::sim::SimBackend;
+    let mut rng = Rng::seed_from_u64(122);
+    for case in 0..20u64 {
+        let mut platform =
+            EvalPlatform::new(SimBackend::new(case), PlatformConfig::default());
+        let mut pool: Vec<KernelGenome> = Vec::new();
+        while pool.len() < 4 {
+            let g = random_valid_genome(&mut rng);
+            if !pool.iter().any(|p| p.fingerprint() == g.fingerprint()) {
+                pool.push(g);
+            }
+        }
+        let mut submitted = 0u64;
+        for _ in 0..4 {
+            let batch: Vec<KernelGenome> = (0..1 + rng.below(6))
+                .map(|_| pool[rng.below(pool.len())].clone())
+                .collect();
+            submitted += batch.len() as u64;
+            let results = platform.submit_batch(&batch);
+            assert_eq!(results.len(), batch.len(), "no quota: nothing truncated");
+            let (hits, misses) = platform.cache_stats();
+            assert_eq!(
+                hits + misses,
+                submitted,
+                "case {case}: every batch entry is exactly one counted lookup"
+            );
+        }
+        // quota truncation drops entries *uncounted*: the invariant is
+        // over processed entries (results returned), not attempts
+        let mut quota = EvalPlatform::new(
+            SimBackend::new(case),
+            PlatformConfig {
+                submission_quota: Some(1),
+                ..Default::default()
+            },
+        );
+        let results = quota.submit_batch(&pool);
+        assert_eq!(results.len(), 1);
+        let (h, m) = quota.cache_stats();
+        assert_eq!(h + m, 1, "case {case}: truncated entries stay uncounted");
+        // and uncached platforms count nothing
+        let mut raw = EvalPlatform::new(
+            SimBackend::new(case),
+            PlatformConfig {
+                cache_results: false,
+                ..Default::default()
+            },
+        );
+        raw.submit_batch(&pool);
+        assert_eq!(raw.cache_stats(), (0, 0));
     }
 }
 

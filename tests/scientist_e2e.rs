@@ -6,12 +6,10 @@ use gpu_kernel_scientist::gpu::MI300;
 use gpu_kernel_scientist::population::Population;
 use gpu_kernel_scientist::prelude::*;
 use gpu_kernel_scientist::sim::calibration::leaderboard_geomean;
+use gpu_kernel_scientist::test_support::{run_scientist, tiny_run_config};
 
 fn run_with(seed: u64, budget: u64) -> (ScientistRun<SimBackend>, RunOutcome) {
-    let cfg = RunConfig::default().with_seed(seed).with_budget(budget);
-    let mut run = ScientistRun::new(cfg).expect("setup");
-    let outcome = run.run_to_completion().expect("run");
-    (run, outcome)
+    run_scientist(tiny_run_config(seed, budget))
 }
 
 #[test]
@@ -100,7 +98,7 @@ fn submission_log_matches_population() {
 fn failed_submissions_recorded_not_fatal() {
     // with a hot/high-infidelity LLM some submissions fail; the loop
     // must keep going and still improve
-    let mut cfg = RunConfig::default().with_seed(4).with_budget(80);
+    let mut cfg = tiny_run_config(4, 80);
     cfg.llm.rubric_infidelity = 0.3;
     cfg.llm.temperature = 2.0;
     let mut run = ScientistRun::new(cfg).expect("setup");
@@ -129,7 +127,7 @@ fn knowledge_ablation_degrades_result() {
         o.best_geomean_us
     };
     let minimal = {
-        let mut cfg = RunConfig::default().with_seed(5).with_budget(80);
+        let mut cfg = tiny_run_config(5, 80);
         cfg.knowledge = KnowledgeProfile::Minimal;
         let mut run = ScientistRun::new(cfg).expect("setup");
         run.run_to_completion().expect("run").best_geomean_us
@@ -143,7 +141,7 @@ fn knowledge_ablation_degrades_result() {
 #[test]
 fn parallel_lanes_cut_wall_clock_not_quality() {
     let (_, seq) = run_with(6, 60);
-    let mut cfg = RunConfig::default().with_seed(6).with_budget(60);
+    let mut cfg = tiny_run_config(6, 60);
     cfg.eval_parallelism = 3;
     let mut run = ScientistRun::new(cfg).expect("setup");
     let par = run.run_to_completion().expect("run");
@@ -152,7 +150,7 @@ fn parallel_lanes_cut_wall_clock_not_quality() {
 
 #[test]
 fn bootstrap_probing_derives_findings_and_still_wins() {
-    let mut cfg = RunConfig::default().with_seed(7).with_budget(90);
+    let mut cfg = tiny_run_config(7, 90);
     cfg.bootstrap_probing = true;
     let mut run = ScientistRun::new(cfg).expect("setup");
     // the three probes + three seeds are in the ledger
@@ -173,10 +171,40 @@ fn bootstrap_probing_derives_findings_and_still_wins() {
 
 #[test]
 fn config_files_in_repo_parse() {
-    for f in ["configs/paper.toml", "configs/bootstrap.toml"] {
+    for f in [
+        "configs/paper.toml",
+        "configs/bootstrap.toml",
+        "configs/campaign.toml",
+    ] {
         let text = std::fs::read_to_string(f).expect(f);
         let cfg = RunConfig::from_toml(&text).expect(f);
         assert_eq!(cfg.max_submissions, 120);
+        assert!(gpu_kernel_scientist::workload::lookup(&cfg.workload).is_some());
+    }
+}
+
+#[test]
+fn e2e_runs_on_every_registered_workload_with_consistent_ledgers() {
+    // the workload-generic twin of the fp8 assertions above: seeds
+    // first, sequential ids, two-parent children, log == ledger
+    for w in gpu_kernel_scientist::workload::registry() {
+        let (run, outcome) =
+            run_scientist(tiny_run_config(11, 40).with_workload(w.name()));
+        let pop = &run.population;
+        assert_eq!(outcome.submissions as usize, pop.len(), "{}", w.name());
+        let seeds = w.starting_population();
+        for (i, (seed_name, _)) in seeds.iter().enumerate() {
+            let member = pop.by_id(&format!("{:05}", i + 1)).unwrap();
+            assert!(
+                member.experiment.contains(seed_name),
+                "{}: seed row {i} is {}",
+                w.name(),
+                member.experiment
+            );
+        }
+        for m in pop.members().iter().skip(seeds.len()) {
+            assert_eq!(m.parents.len(), 2, "{}: {}", w.name(), m.id);
+        }
     }
 }
 
