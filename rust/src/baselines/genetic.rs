@@ -8,11 +8,14 @@
 //! submission budget quantifies what the paper's "science" layer adds
 //! over plain evolution with the same operators.
 //!
-//! Each generation is evaluated as ONE batch through the platform's
-//! multi-lane executor ([`EvalPlatform::submit_batch`]) — the same
-//! machinery the scientist's step (4) uses — so the GA benefits from
-//! both real submission lanes and the eval-result cache (re-derived
-//! duplicate children are free).
+//! Each generation is evaluated through the platform's multi-lane
+//! executor on its **completion-driven stream path**
+//! ([`EvalPlatform::submit_stream_batch`]) — the same machinery the
+//! scientist's pipeline scheduler uses (DESIGN.md §8) — so the GA
+//! benefits from real submission lanes, persistent lane workers
+//! across generations, and the eval-result cache (re-derived
+//! duplicate children are free, including duplicates still in
+//! flight).
 
 use super::{workload_starts, Tuner, TunerOutcome};
 use crate::eval::{BatchResult, EvalBackend, EvalPlatform};
@@ -130,7 +133,7 @@ impl Tuner for GeneticAlgorithm {
         "genetic-algorithm"
     }
 
-    fn run<B: EvalBackend + Send>(
+    fn run<B: EvalBackend + Send + 'static>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,
@@ -158,7 +161,7 @@ impl Tuner for GeneticAlgorithm {
             }
             gen0.push(g);
         }
-        let results = platform.submit_batch(&gen0);
+        let results = platform.submit_stream_batch(&gen0);
         gen0.truncate(results.len());
         let mut population = fold_batch(&gen0, &results, &mut curve, &mut best);
 
@@ -192,7 +195,7 @@ impl Tuner for GeneticAlgorithm {
                 }
                 children.push(child);
             }
-            let results = platform.submit_batch(&children);
+            let results = platform.submit_stream_batch(&children);
             children.truncate(results.len());
             next.extend(fold_batch(&children, &results, &mut curve, &mut best));
             population = next;

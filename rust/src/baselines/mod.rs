@@ -42,14 +42,16 @@ pub struct TunerOutcome {
     pub curve: ConvergenceCurve,
 }
 
-/// A search strategy over the genome space. `B: Send` because tuners
-/// may evaluate candidate generations through the platform's
-/// multi-lane batch executor (the genetic baseline does).
+/// A search strategy over the genome space. `B: Send + 'static`
+/// because tuners may evaluate candidate generations through the
+/// platform's multi-lane executor, whose completion-driven stream
+/// path keeps per-lane worker threads alive (the genetic baseline
+/// does — see [`crate::eval::EvalPlatform::submit_stream_batch`]).
 pub trait Tuner {
     fn name(&self) -> &'static str;
 
     /// Run until `budget` submissions are spent on `platform`.
-    fn run<B: EvalBackend + Send>(
+    fn run<B: EvalBackend + Send + 'static>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,
@@ -86,7 +88,7 @@ impl Tuner for RandomSearch {
         "random-search"
     }
 
-    fn run<B: EvalBackend + Send>(
+    fn run<B: EvalBackend + Send + 'static>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,
@@ -141,7 +143,7 @@ impl Tuner for HillClimber {
         "hill-climber"
     }
 
-    fn run<B: EvalBackend + Send>(
+    fn run<B: EvalBackend + Send + 'static>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,
@@ -213,7 +215,7 @@ impl Tuner for Annealer {
         "simulated-annealing"
     }
 
-    fn run<B: EvalBackend + Send>(
+    fn run<B: EvalBackend + Send + 'static>(
         &mut self,
         platform: &mut EvalPlatform<B>,
         budget: u64,

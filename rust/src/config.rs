@@ -26,6 +26,18 @@ pub struct RunConfig {
     /// (keyed by genome content hash) without consuming submission
     /// quota or platform time.
     pub eval_cache: bool,
+    /// Drive the run with the steady-state experiment pipeline
+    /// (DESIGN.md §8): planning refills evaluation lanes the moment
+    /// they free instead of waiting at the lockstep batch barrier.
+    /// At `eval_parallelism = 1` the pipeline trajectory is
+    /// bit-identical to lockstep (`tests/pipeline.rs`).
+    pub pipeline: bool,
+    /// Pipeline depth per lane: how many submissions the scheduler may
+    /// keep queued-or-running per evaluation lane (total in-flight cap
+    /// = `eval_parallelism x inflight_per_lane`). 1 — the default —
+    /// plans against the freshest possible ledger; higher values plan
+    /// further ahead on staler results.
+    pub inflight_per_lane: u32,
     /// Simulator measurement noise (lognormal sigma).
     pub noise_sigma: f64,
     pub selection_policy: SelectionPolicy,
@@ -51,6 +63,8 @@ impl Default for RunConfig {
             reps_per_config: 3,
             eval_parallelism: 1,
             eval_cache: true,
+            pipeline: false,
+            inflight_per_lane: 1,
             noise_sigma: 0.02,
             selection_policy: SelectionPolicy::PaperLlm,
             experiment_rule: ExperimentRule::Paper,
@@ -76,6 +90,18 @@ impl RunConfig {
 
     pub fn with_budget(mut self, max_submissions: u64) -> Self {
         self.max_submissions = max_submissions;
+        self
+    }
+
+    /// Set the evaluation lane count (`platform.parallelism`).
+    pub fn with_parallelism(mut self, lanes: u32) -> Self {
+        self.eval_parallelism = lanes;
+        self
+    }
+
+    /// Toggle the steady-state pipeline scheduler (`platform.pipeline`).
+    pub fn with_pipeline(mut self, pipeline: bool) -> Self {
+        self.pipeline = pipeline;
         self
     }
 
@@ -141,6 +167,20 @@ impl RunConfig {
                     "false" => false,
                     _ => return Err(format!("bad cache '{value}'")),
                 }
+            }
+            "platform.pipeline" => {
+                self.pipeline = match value {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(format!("bad pipeline '{value}'")),
+                }
+            }
+            "platform.inflight_per_lane" => {
+                let depth = parse_u64(value)? as u32;
+                if depth == 0 {
+                    return Err("inflight_per_lane must be >= 1".into());
+                }
+                self.inflight_per_lane = depth;
             }
             "platform.noise_sigma" => self.noise_sigma = parse_f64(value)?,
             "agents.selection_policy" => {
@@ -248,6 +288,28 @@ rubric_infidelity = 0.2
         assert_eq!(c.knowledge, KnowledgeProfile::GenericOnly);
         assert_eq!(c.llm.temperature, 1.2);
         assert_eq!(c.llm.rubric_infidelity, 0.2);
+    }
+
+    #[test]
+    fn toml_pipeline_knobs() {
+        let c = RunConfig::from_toml(
+            "[platform]\nparallelism = 4\npipeline = true\ninflight_per_lane = 2\n",
+        )
+        .unwrap();
+        assert!(c.pipeline);
+        assert_eq!(c.eval_parallelism, 4);
+        assert_eq!(c.inflight_per_lane, 2);
+        assert!(!RunConfig::default().pipeline, "lockstep is the default");
+        assert_eq!(RunConfig::default().inflight_per_lane, 1);
+        assert!(RunConfig::from_toml("[platform]\npipeline = maybe\n").is_err());
+        assert!(RunConfig::from_toml("[platform]\ninflight_per_lane = 0\n").is_err());
+    }
+
+    #[test]
+    fn builders_set_pipeline_and_parallelism() {
+        let c = RunConfig::default().with_parallelism(4).with_pipeline(true);
+        assert_eq!(c.eval_parallelism, 4);
+        assert!(c.pipeline);
     }
 
     #[test]

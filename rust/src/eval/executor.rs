@@ -30,6 +30,8 @@
 //!   matches the pre-executor simulated-lanes behaviour.
 
 use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
 
 use super::{EvalBackend, EvalError};
 use crate::genome::KernelGenome;
@@ -137,6 +139,127 @@ pub fn run_batch<B: EvalBackend + Send>(
         .into_iter()
         .map(|o| o.expect("executor lane dropped a job"))
         .collect()
+}
+
+/// Persistent lane workers for the completion-driven stream path
+/// ([`super::EvalPlatform::submit_stream`] /
+/// [`super::EvalPlatform::poll_completed`], DESIGN.md §8).
+///
+/// Where [`run_batch`] forks fresh lane backends per barrier batch,
+/// the stream executor forks each lane **once** and keeps its worker
+/// thread alive for the platform's lifetime: jobs trickle in as the
+/// scheduler plans them and results trickle back as lanes finish, so
+/// evaluation overlaps with planning instead of waiting at a barrier.
+///
+/// Determinism contract: the caller assigns jobs to lanes (the
+/// platform uses its earliest-free virtual lane, which for uniform
+/// submission costs is the same static round-robin partition
+/// [`run_batch`] uses), each lane worker evaluates its jobs strictly
+/// in FIFO order on its own forked backend, and [`Self::collect`]
+/// returns one lane's oldest outstanding result. Nothing about OS
+/// thread scheduling can reorder results within a lane, so stream
+/// outcomes are a pure function of (backend seed, job→lane
+/// assignment) — the platform's virtual clock decides the assignment
+/// and the completion order.
+///
+/// The worker type is erased (channels carry only genomes and
+/// outcomes), so holders of a `StreamExecutor` need no knowledge of
+/// the backend type; only [`Self::spawn`] requires `B: Send + 'static`.
+pub struct StreamExecutor {
+    lanes: Vec<StreamLane>,
+}
+
+struct StreamLane {
+    /// `None` once shutdown has begun (sender dropped to stop the
+    /// worker loop).
+    jobs: Option<mpsc::Sender<(u64, KernelGenome)>>,
+    results: mpsc::Receiver<(u64, EvalOutcome)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl StreamExecutor {
+    /// Fork `lanes` worker backends off `backend` and start one
+    /// evaluation thread per lane. Returns `None` when the backend
+    /// cannot fork (the caller falls back to inline sequential
+    /// evaluation, exactly like [`run_batch`]) or when a single lane
+    /// is requested (inline is already bit-identical there).
+    pub fn spawn<B: EvalBackend + Send + 'static>(
+        backend: &mut B,
+        suite: &BenchmarkSuite,
+        reps_per_config: u32,
+        lanes: u32,
+    ) -> Option<StreamExecutor> {
+        if lanes <= 1 {
+            return None;
+        }
+        let mut lane_backends = Vec::with_capacity(lanes as usize);
+        for lane in 0..lanes as u64 {
+            lane_backends.push(backend.fork_lane(lane)?);
+        }
+        let lanes = lane_backends
+            .into_iter()
+            .map(|mut lane_backend| {
+                let suite = suite.clone();
+                let (jobs_tx, jobs_rx) = mpsc::channel::<(u64, KernelGenome)>();
+                let (results_tx, results_rx) = mpsc::channel();
+                let handle = std::thread::spawn(move || {
+                    while let Ok((ticket, genome)) = jobs_rx.recv() {
+                        let outcome =
+                            evaluate_one(&mut lane_backend, &suite, reps_per_config, &genome);
+                        if results_tx.send((ticket, outcome)).is_err() {
+                            break; // receiver gone: shutting down
+                        }
+                    }
+                });
+                StreamLane {
+                    jobs: Some(jobs_tx),
+                    results: results_rx,
+                    handle: Some(handle),
+                }
+            })
+            .collect();
+        Some(StreamExecutor { lanes })
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Queue one job on `lane`'s worker. Returns immediately; the
+    /// evaluation proceeds on the worker thread.
+    pub fn dispatch(&self, lane: usize, ticket: u64, genome: KernelGenome) {
+        self.lanes[lane]
+            .jobs
+            .as_ref()
+            .expect("stream executor already shut down")
+            .send((ticket, genome))
+            .expect("evaluation lane worker exited");
+    }
+
+    /// Block until `lane`'s **oldest outstanding** job finishes and
+    /// return its (ticket, outcome). Per-lane FIFO order is the
+    /// executor's half of the determinism contract.
+    pub fn collect(&self, lane: usize) -> (u64, EvalOutcome) {
+        self.lanes[lane]
+            .results
+            .recv()
+            .expect("evaluation lane worker exited")
+    }
+}
+
+impl Drop for StreamExecutor {
+    fn drop(&mut self) {
+        // Close every job channel first so all workers wind down
+        // concurrently, then join them.
+        for lane in &mut self.lanes {
+            lane.jobs.take();
+        }
+        for lane in &mut self.lanes {
+            if let Some(handle) = lane.handle.take() {
+                let _ = handle.join();
+            }
+        }
+    }
 }
 
 /// Eval-result cache keyed by genome content hash
@@ -276,6 +399,63 @@ mod tests {
         assert_eq!(r1, r2, "static lane partition must be schedule-independent");
         assert_eq!(r1.len(), jobs.len());
         assert!(r1.iter().all(|o| o.is_success()));
+    }
+
+    #[test]
+    fn stream_executor_matches_run_batch_partition() {
+        // same jobs, same seed: dispatching job i to lane i mod N
+        // through the stream workers must reproduce run_batch's static
+        // round-robin outcomes exactly
+        let jobs: Vec<_> = crate::genome::edit::valid_neighbors(&seeds::mfma_seed())
+            .into_iter()
+            .take(9)
+            .map(|(_, g)| g)
+            .collect();
+        let mut batch_backend = SimBackend::new(7);
+        let expected = run_batch(&mut batch_backend, &suite(), 2, &jobs, 3);
+
+        let mut stream_backend = SimBackend::new(7);
+        let ex = StreamExecutor::spawn(&mut stream_backend, &suite(), 2, 3)
+            .expect("sim backend forks lanes");
+        assert_eq!(ex.lanes(), 3);
+        for (i, g) in jobs.iter().enumerate() {
+            ex.dispatch(i % 3, i as u64, g.clone());
+        }
+        let mut got = vec![None; jobs.len()];
+        for (i, _) in jobs.iter().enumerate() {
+            let (ticket, outcome) = ex.collect(i % 3);
+            got[ticket as usize] = Some(outcome);
+        }
+        let got: Vec<EvalOutcome> = got.into_iter().map(|o| o.unwrap()).collect();
+        assert_eq!(expected, got);
+    }
+
+    #[test]
+    fn stream_executor_lane_results_are_fifo() {
+        let jobs: Vec<_> = crate::genome::edit::valid_neighbors(&seeds::human_oracle())
+            .into_iter()
+            .take(4)
+            .map(|(_, g)| g)
+            .collect();
+        let mut backend = SimBackend::new(19);
+        let ex = StreamExecutor::spawn(&mut backend, &suite(), 1, 2).unwrap();
+        // two jobs on lane 0, two on lane 1
+        for (i, g) in jobs.iter().enumerate() {
+            ex.dispatch(i % 2, i as u64, g.clone());
+        }
+        assert_eq!(ex.collect(0).0, 0, "lane 0 returns its oldest job first");
+        assert_eq!(ex.collect(1).0, 1);
+        assert_eq!(ex.collect(0).0, 2);
+        assert_eq!(ex.collect(1).0, 3);
+    }
+
+    #[test]
+    fn stream_executor_refuses_single_lane_and_shuts_down_clean() {
+        let mut backend = SimBackend::new(3);
+        assert!(StreamExecutor::spawn(&mut backend, &suite(), 3, 1).is_none());
+        // spawning and dropping without dispatching must not hang
+        let ex = StreamExecutor::spawn(&mut backend, &suite(), 3, 4).unwrap();
+        drop(ex);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! [`EvalPlatform::submit_batch`] run on *real* worker threads via
 //! [`executor`], one independently-forked backend per lane, and a
 //! genome-fingerprint [`executor::EvalCache`] makes duplicate
-//! submissions free (DESIGN.md §3).
+//! submissions free (DESIGN.md §3). The completion-driven stream API
+//! ([`EvalPlatform::submit_stream`] / [`EvalPlatform::poll_completed`])
+//! feeds the same lanes one submission at a time so a scheduler can
+//! refill each lane the moment it frees (DESIGN.md §8).
 
 pub mod executor;
 pub mod platform;
@@ -22,8 +25,10 @@ pub mod verifier;
 use crate::genome::KernelGenome;
 use crate::workload::{GemmConfig, Workload};
 
-pub use executor::{evaluate_one, run_batch, EvalCache};
-pub use platform::{BatchResult, EvalPlatform, PlatformConfig, SubmissionRecord};
+pub use executor::{evaluate_one, run_batch, EvalCache, StreamExecutor};
+pub use platform::{
+    BatchResult, CompletedEval, EvalPlatform, PlatformConfig, SubmissionRecord,
+};
 pub use verifier::{TolerancePolicy, Verdict};
 
 /// Why a submission failed.

@@ -2,10 +2,21 @@
 //! leaderboard scoring, the simulated wall clock, and (since the
 //! executor refactor, DESIGN.md §3) genuinely concurrent batch
 //! submission plus the genome-fingerprint result cache.
+//!
+//! Two concurrent submission APIs coexist (both on top of the
+//! multi-lane executor):
+//!
+//! * **Barrier batches** — [`EvalPlatform::submit_batch`]: one call,
+//!   one result vector, the caller waits for everything.
+//! * **Completion-driven stream** — [`EvalPlatform::submit_stream`] +
+//!   [`EvalPlatform::poll_completed`] (DESIGN.md §8): submissions
+//!   enter individually as a scheduler plans them, and completions
+//!   are drained one at a time in **virtual-clock order**, so the
+//!   steady-state pipeline can refill a lane the moment it frees.
 
 use std::collections::HashMap;
 
-use super::executor::{self, EvalCache};
+use super::executor::{self, EvalCache, StreamExecutor};
 use super::{EvalBackend, EvalError};
 use crate::genome::KernelGenome;
 use crate::metrics::geomean;
@@ -63,6 +74,58 @@ pub struct BatchResult {
     pub completed_at_s: f64,
 }
 
+/// One completed stream submission, returned by
+/// [`EvalPlatform::poll_completed`] in virtual-clock order.
+#[derive(Debug, Clone)]
+pub struct CompletedEval {
+    /// The ticket [`EvalPlatform::submit_stream`] handed out.
+    pub ticket: u64,
+    pub outcome: EvalOutcome,
+    /// Served from the eval cache (or aliased to an in-flight
+    /// duplicate): no quota, no platform time consumed.
+    pub cached: bool,
+    /// Index in the submission log (`None` for cache hits).
+    pub submission_index: Option<u64>,
+    /// Simulated wall-clock time at which the result became available.
+    pub completed_at_s: f64,
+}
+
+/// How stream submissions are evaluated (decided once, at the first
+/// [`EvalPlatform::submit_stream`] call).
+enum StreamState {
+    /// No stream submission has happened yet.
+    Idle,
+    /// Evaluate inline on the platform's own backend at submit time —
+    /// the single-lane / unforkable-backend path, bit-identical to
+    /// sequential [`EvalPlatform::submit`] calls.
+    Inline,
+    /// Dispatch to the persistent lane workers.
+    Threaded(StreamExecutor),
+}
+
+/// One in-flight (or already-served) stream submission.
+struct PendingEval {
+    ticket: u64,
+    completed_at_s: f64,
+    kind: PendingKind,
+}
+
+enum PendingKind {
+    /// Occupies a lane. `inline_outcome` is `Some` on the inline path
+    /// (evaluated at submit time), `None` while a worker runs it.
+    Run {
+        lane: usize,
+        submission_index: u64,
+        fingerprint: String,
+        inline_outcome: Option<EvalOutcome>,
+    },
+    /// Served from the result cache at submit time (free).
+    Cached { outcome: EvalOutcome },
+    /// Duplicate of an in-flight run with the same fingerprint:
+    /// resolves from the cache once the original completes (free).
+    Alias { fingerprint: String },
+}
+
 /// The evaluation platform wrapping a backend.
 pub struct EvalPlatform<B: EvalBackend> {
     backend: B,
@@ -75,8 +138,16 @@ pub struct EvalPlatform<B: EvalBackend> {
     /// submission order with equal per-submission cost, which matches
     /// the executor's static round-robin thread partition.
     lane_busy_until: Vec<f64>,
+    /// Total lane-seconds spent evaluating (drives
+    /// [`EvalPlatform::lane_occupancy`]; idle time shows up as the gap
+    /// to `lanes x wall_clock_s`).
+    busy_lane_s: f64,
     /// Eval-result cache keyed by genome fingerprint (DESIGN.md §3).
     cache: EvalCache,
+    /// Stream path state (submit_stream / poll_completed).
+    stream: StreamState,
+    pending: Vec<PendingEval>,
+    next_ticket: u64,
 }
 
 impl<B: EvalBackend> EvalPlatform<B> {
@@ -89,7 +160,11 @@ impl<B: EvalBackend> EvalPlatform<B> {
             feedback_suite: BenchmarkSuite::feedback(),
             log: Vec::new(),
             lane_busy_until: vec![0.0; lanes],
+            busy_lane_s: 0.0,
             cache,
+            stream: StreamState::Idle,
+            pending: Vec::new(),
+            next_ticket: 0,
         }
     }
 
@@ -139,6 +214,10 @@ impl<B: EvalBackend> EvalPlatform<B> {
     /// the backend (the cache only *serves* on the batch path, but
     /// results recorded here do populate it).
     pub fn submit(&mut self, genome: &KernelGenome) -> EvalOutcome {
+        debug_assert!(
+            self.pending.is_empty(),
+            "submit() while stream evaluations are in flight"
+        );
         assert!(
             !self.quota_exhausted(),
             "platform quota exhausted ({} submissions)",
@@ -171,6 +250,10 @@ impl<B: EvalBackend> EvalPlatform<B> {
     where
         B: Send,
     {
+        debug_assert!(
+            self.pending.is_empty(),
+            "submit_batch() while stream evaluations are in flight"
+        );
         enum Slot {
             Cached(EvalOutcome),
             Run(usize),
@@ -261,18 +344,312 @@ impl<B: EvalBackend> EvalPlatform<B> {
         results
     }
 
+    /// Stream submissions currently in flight (incl. cache hits not
+    /// yet polled).
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// In-flight stream submissions that occupy a lane (i.e. count
+    /// toward the quota once they complete).
+    fn pending_runs(&self) -> u64 {
+        self.pending
+            .iter()
+            .filter(|p| matches!(p.kind, PendingKind::Run { .. }))
+            .count() as u64
+    }
+
+    /// The in-flight run (if any) evaluating this fingerprint — the
+    /// aliasing target for duplicate stream submissions.
+    fn pending_run_with_fp(&self, fp: &str) -> Option<&PendingEval> {
+        self.pending.iter().find(|p| {
+            matches!(&p.kind, PendingKind::Run { fingerprint, .. } if fingerprint == fp)
+        })
+    }
+
+    /// Submit one kernel on the completion-driven stream path and
+    /// return its ticket; the result arrives through
+    /// [`EvalPlatform::poll_completed`]. Semantics match the batch
+    /// path per entry: cache hits (and duplicates of in-flight
+    /// submissions) are free — no quota, no platform time — while
+    /// misses occupy the earliest-free virtual lane for
+    /// `submission_cost_s` and run concurrently on that lane's
+    /// persistent worker thread (`B: 'static`; backends that cannot
+    /// fork evaluate inline, preserving the exact sequential call
+    /// sequence). Panics if the quota cannot cover a miss, counting
+    /// in-flight misses as already spent — stream callers plan
+    /// against `submissions() + in_flight()`.
+    pub fn submit_stream(&mut self, genome: &KernelGenome) -> u64
+    where
+        B: Send + 'static,
+    {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let fp = genome.fingerprint();
+        if self.cache.enabled() {
+            // duplicate of an in-flight run: resolves (free) when the
+            // original lands in the cache. Counted as a hit at poll
+            // time, mirroring the batch path's alias accounting.
+            if let Some(original) = self.pending_run_with_fp(&fp) {
+                let completed_at_s = original.completed_at_s;
+                self.pending.push(PendingEval {
+                    ticket,
+                    completed_at_s,
+                    kind: PendingKind::Alias { fingerprint: fp },
+                });
+                return ticket;
+            }
+            // counted lookup either way: a hit serves the entry below,
+            // a miss is the run's one counted miss (batch-path parity)
+            if let Some(outcome) = self.cache.lookup(&fp) {
+                self.pending.push(PendingEval {
+                    ticket,
+                    completed_at_s: self.wall_clock_s(),
+                    kind: PendingKind::Cached { outcome },
+                });
+                return ticket;
+            }
+        }
+        let pending_runs = self.pending_runs();
+        assert!(
+            self.config
+                .submission_quota
+                .map(|q| self.submissions() + pending_runs < q)
+                .unwrap_or(true),
+            "platform quota exhausted ({} submissions, {pending_runs} in flight)",
+            self.submissions()
+        );
+        if matches!(self.stream, StreamState::Idle) {
+            self.stream = match StreamExecutor::spawn(
+                &mut self.backend,
+                &self.feedback_suite,
+                self.config.reps_per_config,
+                self.config.parallelism,
+            ) {
+                Some(executor) => StreamState::Threaded(executor),
+                None => StreamState::Inline,
+            };
+        }
+        let cost = self.backend.submission_cost_s();
+        let lane = self.earliest_free_lane();
+        self.lane_busy_until[lane] += cost;
+        self.busy_lane_s += cost;
+        let completed_at_s = self.lane_busy_until[lane];
+        let submission_index = self.submissions() + pending_runs;
+        let inline_outcome = match &self.stream {
+            StreamState::Threaded(executor) => {
+                executor.dispatch(lane, ticket, genome.clone());
+                None
+            }
+            StreamState::Inline => Some(executor::evaluate_one(
+                &mut self.backend,
+                &self.feedback_suite,
+                self.config.reps_per_config,
+                genome,
+            )),
+            StreamState::Idle => unreachable!("stream mode decided above"),
+        };
+        self.pending.push(PendingEval {
+            ticket,
+            completed_at_s,
+            kind: PendingKind::Run {
+                lane,
+                submission_index,
+                fingerprint: fp,
+                inline_outcome,
+            },
+        });
+        ticket
+    }
+
+    /// Drain the in-flight stream submission with the **earliest
+    /// virtual completion time** (ties resolve to the earliest
+    /// ticket), blocking on its lane worker if it is still running.
+    /// Returns `None` when nothing is in flight.
+    ///
+    /// Because each virtual lane's clock only moves forward and each
+    /// lane worker finishes jobs in FIFO order, the completion order
+    /// this returns is a pure function of the submission sequence —
+    /// never of OS scheduling (DESIGN.md §8).
+    pub fn poll_completed(&mut self) -> Option<CompletedEval> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        // strict `<` keeps the earliest-pushed (lowest-ticket) entry on
+        // ties, which also guarantees an aliased original resolves
+        // before its duplicates
+        let mut earliest = 0;
+        for (i, p) in self.pending.iter().enumerate().skip(1) {
+            if p.completed_at_s < self.pending[earliest].completed_at_s {
+                earliest = i;
+            }
+        }
+        let p = self.pending.remove(earliest);
+        match p.kind {
+            PendingKind::Cached { outcome } => Some(CompletedEval {
+                ticket: p.ticket,
+                outcome,
+                cached: true,
+                submission_index: None,
+                completed_at_s: p.completed_at_s,
+            }),
+            PendingKind::Alias { fingerprint } => {
+                let outcome = self
+                    .cache
+                    .lookup(&fingerprint) // the alias's counted hit
+                    .expect("aliased submission completes before its duplicates");
+                Some(CompletedEval {
+                    ticket: p.ticket,
+                    outcome,
+                    cached: true,
+                    submission_index: None,
+                    completed_at_s: p.completed_at_s,
+                })
+            }
+            PendingKind::Run {
+                lane,
+                submission_index,
+                fingerprint,
+                inline_outcome,
+            } => {
+                let outcome = match inline_outcome {
+                    Some(outcome) => outcome,
+                    None => {
+                        let StreamState::Threaded(executor) = &self.stream else {
+                            unreachable!("worker-dispatched job without workers")
+                        };
+                        let (ticket, outcome) = executor.collect(lane);
+                        debug_assert_eq!(
+                            ticket, p.ticket,
+                            "lane workers must finish jobs in FIFO order"
+                        );
+                        outcome
+                    }
+                };
+                self.cache.insert(fingerprint, outcome.clone());
+                debug_assert_eq!(
+                    self.log.len() as u64,
+                    submission_index,
+                    "stream completions commit to the log in submission order"
+                );
+                self.log.push(SubmissionRecord {
+                    index: submission_index,
+                    completed_at_s: p.completed_at_s,
+                    outcome: outcome.clone(),
+                });
+                Some(CompletedEval {
+                    ticket: p.ticket,
+                    outcome,
+                    cached: false,
+                    submission_index: Some(submission_index),
+                    completed_at_s: p.completed_at_s,
+                })
+            }
+        }
+    }
+
+    /// Push a whole batch through the stream path and wait for all of
+    /// it — the streaming equivalent of [`EvalPlatform::submit_batch`]
+    /// (same quota-truncation semantics: planning stops at the first
+    /// entry the remaining quota cannot cover, so the result is a
+    /// prefix-aligned vector). The genetic baseline evaluates its
+    /// generations through this.
+    pub fn submit_stream_batch(&mut self, genomes: &[KernelGenome]) -> Vec<BatchResult>
+    where
+        B: Send + 'static,
+    {
+        // the drain below consumes every pending completion, so prior
+        // stream work must already be polled (same contract as the
+        // barrier paths)
+        debug_assert!(
+            self.pending.is_empty(),
+            "submit_stream_batch() while stream evaluations are in flight"
+        );
+        let remaining = match self.config.submission_quota {
+            Some(q) => q.saturating_sub(self.submissions() + self.pending_runs()),
+            None => u64::MAX,
+        };
+        let mut planned = 0u64;
+        let mut tickets = Vec::with_capacity(genomes.len());
+        for genome in genomes {
+            let fp = genome.fingerprint();
+            let free = self.cache.enabled()
+                && (self.cache.peek(&fp).is_some() || self.pending_run_with_fp(&fp).is_some());
+            if !free {
+                if planned >= remaining {
+                    break;
+                }
+                planned += 1;
+            }
+            tickets.push(self.submit_stream(genome));
+        }
+        let mut by_ticket: HashMap<u64, BatchResult> = HashMap::with_capacity(tickets.len());
+        while let Some(done) = self.poll_completed() {
+            by_ticket.insert(
+                done.ticket,
+                BatchResult {
+                    outcome: done.outcome,
+                    cached: done.cached,
+                    submission_index: done.submission_index,
+                    completed_at_s: done.completed_at_s,
+                },
+            );
+        }
+        tickets
+            .into_iter()
+            .map(|t| by_ticket.remove(&t).expect("every ticket completes"))
+            .collect()
+    }
+
+    /// Model a scheduling barrier: every lane waits for the slowest
+    /// one (lockstep's "plan the next round only after the whole batch
+    /// completes", DESIGN.md §8). A no-op with a single lane; must not
+    /// be called with stream work in flight.
+    pub fn sync_lanes(&mut self) {
+        debug_assert!(
+            self.pending.is_empty(),
+            "sync_lanes() while stream evaluations are in flight"
+        );
+        let barrier = self.wall_clock_s();
+        for lane in &mut self.lane_busy_until {
+            *lane = barrier;
+        }
+    }
+
+    /// Fraction of total lane-time spent evaluating: busy lane-seconds
+    /// over `lanes x` simulated makespan. 1.0 = perfectly saturated
+    /// lanes (also reported for an empty platform, vacuously).
+    pub fn lane_occupancy(&self) -> f64 {
+        let makespan = self.wall_clock_s();
+        if makespan <= 0.0 {
+            return 1.0;
+        }
+        self.busy_lane_s / (self.lane_busy_until.len() as f64 * makespan)
+    }
+
+    /// The lane-assignment rule shared by every submission path:
+    /// earliest-free virtual lane, ties to the LOWEST index. With
+    /// uniform submission costs this is exactly `run_batch`'s static
+    /// round-robin partition (job i -> lane i mod N), which is what
+    /// keeps stream and barrier evaluation agreeing on which lane
+    /// backend times which job.
+    fn earliest_free_lane(&self) -> usize {
+        let mut lane = 0;
+        for (i, &busy) in self.lane_busy_until.iter().enumerate().skip(1) {
+            if busy < self.lane_busy_until[lane] {
+                lane = i;
+            }
+        }
+        lane
+    }
+
     /// Record one completed submission: quota, earliest-free-lane wall
     /// clock, and the log line. Returns (log index, completion time).
     fn account_submission(&mut self, outcome: EvalOutcome) -> (u64, f64) {
         let cost = self.backend.submission_cost_s();
-        let lane = self
-            .lane_busy_until
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+        let lane = self.earliest_free_lane();
         self.lane_busy_until[lane] += cost;
+        self.busy_lane_s += cost;
         let completed_at_s = self.lane_busy_until[lane];
         let index = self.log.len() as u64;
         self.log.push(SubmissionRecord {
@@ -523,6 +900,229 @@ mod tests {
         assert!(!a[0].cached && !b[0].cached);
         assert_eq!(p.submissions(), 2);
         assert!(p.cached_outcome(&g).is_none());
+    }
+
+    #[test]
+    fn stream_single_lane_is_bit_identical_to_sequential_submits() {
+        let jobs: Vec<KernelGenome> =
+            crate::genome::edit::valid_neighbors(&seeds::mfma_seed())
+                .into_iter()
+                .take(5)
+                .map(|(_, g)| g)
+                .collect();
+        let mut seq = EvalPlatform::new(SimBackend::new(8), PlatformConfig::default());
+        let expected: Vec<EvalOutcome> = jobs.iter().map(|g| seq.submit(g)).collect();
+        let mut stream = EvalPlatform::new(SimBackend::new(8), PlatformConfig::default());
+        let tickets: Vec<u64> = jobs.iter().map(|g| stream.submit_stream(g)).collect();
+        assert_eq!(stream.in_flight(), jobs.len());
+        for (i, (ticket, expected)) in tickets.iter().zip(&expected).enumerate() {
+            let done = stream.poll_completed().expect("in flight");
+            assert_eq!(done.ticket, *ticket, "completion order == submission order");
+            assert_eq!(&done.outcome, expected, "job {i}");
+            assert!(!done.cached);
+            assert_eq!(done.submission_index, Some(i as u64));
+        }
+        assert!(stream.poll_completed().is_none());
+        assert_eq!(stream.wall_clock_s(), seq.wall_clock_s());
+        assert_eq!(stream.submissions(), seq.submissions());
+        let seq_times: Vec<f64> = seq.log().iter().map(|r| r.completed_at_s).collect();
+        let stream_times: Vec<f64> =
+            stream.log().iter().map(|r| r.completed_at_s).collect();
+        assert_eq!(seq_times, stream_times);
+    }
+
+    #[test]
+    fn stream_multi_lane_completes_in_virtual_clock_order() {
+        let jobs: Vec<KernelGenome> =
+            crate::genome::edit::valid_neighbors(&seeds::human_oracle())
+                .into_iter()
+                .take(6)
+                .map(|(_, g)| g)
+                .collect();
+        let run_once = || {
+            let mut p = EvalPlatform::new(
+                SimBackend::new(14),
+                PlatformConfig {
+                    parallelism: 3,
+                    ..Default::default()
+                },
+            );
+            for g in &jobs {
+                p.submit_stream(g);
+            }
+            let mut outcomes = Vec::new();
+            let mut i = 0u64;
+            while let Some(done) = p.poll_completed() {
+                assert_eq!(done.ticket, i, "virtual-clock order breaks ties by ticket");
+                assert_eq!(done.submission_index, Some(i));
+                // 3 lanes, 90 s each: jobs 0..2 land at 90 s, 3..5 at 180 s
+                let expected_t = 90.0 * (i / 3 + 1) as f64;
+                assert!((done.completed_at_s - expected_t).abs() < 1e-9);
+                outcomes.push(done.outcome);
+                i += 1;
+            }
+            assert_eq!(i, 6);
+            assert!((p.wall_clock_s() - 180.0).abs() < 1e-9);
+            assert!((p.lane_occupancy() - 1.0).abs() < 1e-12, "fully packed lanes");
+            outcomes
+        };
+        assert_eq!(run_once(), run_once(), "stream results are deterministic per seed");
+    }
+
+    #[test]
+    fn stream_interleaves_submissions_with_completions() {
+        // the steady-state usage pattern: drain one, refill one
+        let jobs: Vec<KernelGenome> =
+            crate::genome::edit::valid_neighbors(&seeds::mfma_seed())
+                .into_iter()
+                .take(6)
+                .map(|(_, g)| g)
+                .collect();
+        let mut p = EvalPlatform::new(
+            SimBackend::new(23),
+            PlatformConfig {
+                parallelism: 2,
+                ..Default::default()
+            },
+        );
+        p.submit_stream(&jobs[0]);
+        p.submit_stream(&jobs[1]);
+        for next in 2..jobs.len() {
+            let done = p.poll_completed().expect("in flight");
+            assert!(done.outcome.is_success());
+            p.submit_stream(&jobs[next]);
+            assert_eq!(p.in_flight(), 2, "a lane refills as soon as one frees");
+        }
+        while p.poll_completed().is_some() {}
+        assert_eq!(p.submissions(), 6);
+        // 6 uniform submissions over 2 continuously-fed lanes
+        assert!((p.wall_clock_s() - 270.0).abs() < 1e-9);
+        for (i, rec) in p.log().iter().enumerate() {
+            assert_eq!(rec.index, i as u64, "log stays in submission order");
+        }
+    }
+
+    #[test]
+    fn stream_cache_hits_and_inflight_aliases_are_free() {
+        let mut p = EvalPlatform::new(
+            SimBackend::new(31),
+            PlatformConfig {
+                parallelism: 2,
+                submission_quota: Some(2),
+                ..Default::default()
+            },
+        );
+        let g = seeds::mfma_seed();
+        let other = seeds::human_oracle();
+        // duplicate of an in-flight run aliases it (free)
+        let t0 = p.submit_stream(&g);
+        let t1 = p.submit_stream(&other);
+        let t2 = p.submit_stream(&g);
+        let first = p.poll_completed().unwrap();
+        assert_eq!(first.ticket, t0);
+        assert!(!first.cached);
+        let second = p.poll_completed().unwrap();
+        assert_eq!(second.ticket, t1, "equal completion times drain in ticket order");
+        let alias = p.poll_completed().unwrap();
+        assert_eq!(alias.ticket, t2, "the alias resolves after its original");
+        assert!(alias.cached);
+        assert_eq!(alias.outcome, first.outcome);
+        assert_eq!(alias.submission_index, None);
+        assert_eq!(p.submissions(), 2, "the alias consumed no quota");
+        let clock = p.wall_clock_s();
+        // quota is exhausted, but cached genomes are still served
+        let t3 = p.submit_stream(&g);
+        let hit = p.poll_completed().unwrap();
+        assert_eq!(hit.ticket, t3);
+        assert!(hit.cached);
+        assert_eq!(hit.outcome, first.outcome);
+        assert_eq!(p.submissions(), 2);
+        assert_eq!(p.wall_clock_s(), clock, "cache hit consumes no platform time");
+    }
+
+    #[test]
+    #[should_panic(expected = "quota exhausted")]
+    fn stream_counts_inflight_toward_quota() {
+        let mut p = EvalPlatform::new(
+            SimBackend::new(2),
+            PlatformConfig {
+                submission_quota: Some(1),
+                cache_results: false,
+                ..Default::default()
+            },
+        );
+        p.submit_stream(&seeds::mfma_seed());
+        // still in flight, but the quota is already spoken for
+        p.submit_stream(&seeds::human_oracle());
+    }
+
+    #[test]
+    fn stream_batch_matches_barrier_batch_at_one_lane() {
+        let jobs: Vec<KernelGenome> =
+            crate::genome::edit::valid_neighbors(&seeds::human_oracle())
+                .into_iter()
+                .take(4)
+                .map(|(_, g)| g)
+                .collect();
+        let mut barrier = EvalPlatform::new(SimBackend::new(6), PlatformConfig::default());
+        let expected = barrier.submit_batch(&jobs);
+        let mut stream = EvalPlatform::new(SimBackend::new(6), PlatformConfig::default());
+        let results = stream.submit_stream_batch(&jobs);
+        assert_eq!(results.len(), expected.len());
+        for (r, e) in results.iter().zip(&expected) {
+            assert_eq!(r.outcome, e.outcome);
+            assert_eq!(r.cached, e.cached);
+            assert_eq!(r.submission_index, e.submission_index);
+        }
+        assert_eq!(stream.wall_clock_s(), barrier.wall_clock_s());
+        assert_eq!(stream.cache_stats(), barrier.cache_stats());
+    }
+
+    #[test]
+    fn stream_batch_truncates_at_quota() {
+        let jobs: Vec<KernelGenome> =
+            crate::genome::edit::valid_neighbors(&seeds::human_oracle())
+                .into_iter()
+                .take(4)
+                .map(|(_, g)| g)
+                .collect();
+        let mut p = EvalPlatform::new(
+            SimBackend::new(3),
+            PlatformConfig {
+                submission_quota: Some(2),
+                ..Default::default()
+            },
+        );
+        let results = p.submit_stream_batch(&jobs);
+        assert_eq!(results.len(), 2);
+        assert_eq!(p.submissions(), 2);
+        assert!(p.quota_exhausted());
+    }
+
+    #[test]
+    fn sync_lanes_models_the_lockstep_barrier() {
+        let mut p = EvalPlatform::new(
+            SimBackend::new(5),
+            PlatformConfig {
+                parallelism: 3,
+                ..Default::default()
+            },
+        );
+        // full round: all three lanes busy to 90 s, sync is a no-op
+        let jobs = crate::test_support::distinct_genomes(5);
+        p.submit_batch(&jobs[..3]);
+        p.sync_lanes();
+        assert!((p.wall_clock_s() - 90.0).abs() < 1e-9);
+        // partial round: two lanes to 180 s, one idles at the barrier
+        p.submit_batch(&jobs[3..]);
+        p.sync_lanes();
+        assert!((p.wall_clock_s() - 180.0).abs() < 1e-9);
+        // 5 busy submissions over 3 lanes x 180 s of makespan
+        assert!((p.lane_occupancy() - 5.0 * 90.0 / (3.0 * 180.0)).abs() < 1e-12);
+        // the barrier means the next submission starts after 180 s on
+        // every lane, not on the idle lane at 90 s
+        p.submit(&jobs[0]);
+        assert!((p.wall_clock_s() - 270.0).abs() < 1e-9);
     }
 
     #[test]

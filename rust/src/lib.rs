@@ -91,7 +91,7 @@ pub mod prelude {
     pub use crate::metrics::geomean;
     pub use crate::population::{Individual, Population};
     pub use crate::scientist::campaign::{run_campaign, CampaignConfig, CampaignOutcome};
-    pub use crate::scientist::{RunOutcome, ScientistRun};
+    pub use crate::scientist::{PipelineStats, RunOutcome, ScientistRun};
     pub use crate::sim::SimBackend;
     pub use crate::workload::{registry, BenchmarkSuite, GemmConfig, Workload};
 }

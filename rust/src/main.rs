@@ -12,7 +12,10 @@
 //!
 //! `run`, `campaign`, `baseline`, and `inspect` accept `--workload
 //! <name>` (any registry key from `workloads`); the default is the
-//! paper's fp8 GEMM.
+//! paper's fp8 GEMM. `run` and `campaign` also accept
+//! `--parallelism <lanes>` (overrides `platform.parallelism`) and
+//! `--pipeline true|false` (the steady-state scheduler, DESIGN.md §8);
+//! like `--workload`, the flags win over the config file.
 //!
 //! Arguments use `--key value` pairs (offline build: no clap; parsing
 //! is in-tree).
@@ -68,14 +71,34 @@ fn load_config(flags: &HashMap<String, String>) -> Result<RunConfig, String> {
         }
         cfg.workload = workload.clone();
     }
+    // like --workload, the CLI flags win over the config file
+    if let Some(lanes) = flags.get("parallelism") {
+        cfg.eval_parallelism = lanes
+            .parse::<u32>()
+            .ok()
+            .filter(|&p| p >= 1)
+            .ok_or("bad --parallelism (want an integer >= 1)")?;
+    }
+    if let Some(pipeline) = flags.get("pipeline") {
+        cfg.pipeline = match pipeline.as_str() {
+            // a bare trailing `--pipeline` parses as an empty value
+            "true" | "" => true,
+            "false" => false,
+            other => return Err(format!("bad --pipeline '{other}' (want true|false)")),
+        };
+    }
     Ok(cfg)
 }
 
 fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
     let cfg = load_config(flags)?;
     println!(
-        "scientist run: workload={} seed={} budget={} backend=mi300-sim",
-        cfg.workload, cfg.seed, cfg.max_submissions
+        "scientist run: workload={} seed={} budget={} lanes={} scheduler={} backend=mi300-sim",
+        cfg.workload,
+        cfg.seed,
+        cfg.max_submissions,
+        cfg.eval_parallelism,
+        if cfg.pipeline { "pipeline" } else { "lockstep" }
     );
     let mut run = ScientistRun::new(cfg)?;
     let outcome = run.run_to_completion()?;
@@ -91,6 +114,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         outcome.submissions,
         outcome.wall_clock_s / 60.0
     );
+    println!("{}", report::render_pipeline(&outcome.pipeline));
     println!("{}", report::render_convergence("scientist", &outcome.curve));
     if flags.contains_key("lineage") {
         println!("== lineage ==\n{}", report::lineage::render_tree(&run.population));
@@ -147,11 +171,13 @@ fn cmd_campaign(flags: &HashMap<String, String>) -> Result<(), String> {
         None => CampaignConfig::all_workloads(base),
     };
     println!(
-        "campaign over {} workloads ({}), seed={} budget={} per workload",
+        "campaign over {} workloads ({}), seed={} budget={} lanes={} scheduler={} per workload",
         config.workloads.len(),
         config.workloads.join(", "),
         config.base.seed,
-        config.base.max_submissions
+        config.base.max_submissions,
+        config.base.eval_parallelism,
+        if config.base.pipeline { "pipeline" } else { "lockstep" }
     );
     let outcome = run_campaign(&config)?;
     println!("{}", report::render_campaign(&outcome));
@@ -207,11 +233,18 @@ fn cmd_baseline(flags: &HashMap<String, String>) -> Result<(), String> {
     let which = flags.get("tuner").map(String::as_str).unwrap_or("random");
     let workload = gpu_kernel_scientist::workload::lookup(&cfg.workload)
         .ok_or_else(|| format!("unknown workload '{}'", cfg.workload))?;
+    // honor the config/flag platform knobs (--parallelism included);
+    // quota stays None — the tuners enforce `budget` themselves
     let mut platform = EvalPlatform::new(
         SimBackend::new(cfg.seed)
             .with_noise(cfg.noise_sigma)
             .with_workload(workload.clone()),
-        PlatformConfig::default(),
+        PlatformConfig {
+            reps_per_config: cfg.reps_per_config,
+            parallelism: cfg.eval_parallelism,
+            submission_quota: None,
+            cache_results: cfg.eval_cache,
+        },
     )
     .with_feedback_suite(workload.feedback_suite());
     let outcome = match which {
@@ -328,7 +361,8 @@ fn main() {
             eprintln!(
                 "usage: kernel-scientist <run|campaign|workloads|table1|leaderboard|baseline|inspect|eval-pjrt> \
                  [--workload name] [--workloads a,b,c] [--lineage true] \
-                 [--seed N] [--budget N] [--config file.toml] [--tuner random|hillclimb|anneal] \
+                 [--seed N] [--budget N] [--parallelism N] [--pipeline true|false] \
+                 [--config file.toml] [--tuner random|hillclimb|anneal] \
                  [--seed-kernel name] [--artifacts dir] [--save-population file.jsonl]"
             );
             Ok(())

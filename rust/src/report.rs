@@ -76,13 +76,33 @@ pub fn speedup(baseline_us: f64, measured_us: f64) -> f64 {
     baseline_us / measured_us
 }
 
+/// One-line scheduler summary: mode, lane occupancy, pipeline depth,
+/// planning activity (DESIGN.md §8).
+pub fn render_pipeline(stats: &crate::scientist::PipelineStats) -> String {
+    let mode = if stats.pipelined {
+        "steady-state pipeline"
+    } else {
+        "lockstep"
+    };
+    format!(
+        "scheduler: {mode} over {} lane(s) | occupancy {:.0}% | in-flight mean {:.1} \
+         (max {}) | {} planning rounds, {} duplicates replanned",
+        stats.lanes,
+        stats.lane_occupancy * 100.0,
+        stats.mean_in_flight,
+        stats.max_in_flight,
+        stats.planning_rounds,
+        stats.replanned_duplicates
+    )
+}
+
 /// Render a campaign's per-workload summary as a markdown table.
 pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) -> String {
     let mut s = String::from("### Campaign summary\n\n");
     s.push_str(
-        "| Workload | Best | Feedback geomean (us) | Leaderboard (us) | Submissions | Cache h/m | Platform time (min) |\n",
+        "| Workload | Best | Feedback geomean (us) | Leaderboard (us) | Submissions | Cache h/m | Platform time (min) | Lane occupancy |\n",
     );
-    s.push_str("|---|---|---|---|---|---|---|\n");
+    s.push_str("|---|---|---|---|---|---|---|---|\n");
     for r in &outcome.results {
         let lb = r
             .outcome
@@ -90,7 +110,7 @@ pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) ->
             .map(|x| format!("{x:.1}"))
             .unwrap_or_else(|| "-".into());
         s.push_str(&format!(
-            "| {} | {} | {:.1} | {} | {} | {}/{} | {:.0} |\n",
+            "| {} | {} | {:.1} | {} | {} | {}/{} | {:.0} | {:.0}% |\n",
             r.workload,
             r.outcome.best_id,
             r.outcome.best_geomean_us,
@@ -98,7 +118,8 @@ pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) ->
             r.outcome.submissions,
             r.cache_stats.0,
             r.cache_stats.1,
-            r.outcome.wall_clock_s / 60.0
+            r.outcome.wall_clock_s / 60.0,
+            r.outcome.pipeline.lane_occupancy * 100.0
         ));
     }
     s.push_str(&format!(
@@ -175,7 +196,7 @@ mod tests {
     #[test]
     fn campaign_table_renders_every_workload_row() {
         use crate::scientist::campaign::{CampaignOutcome, WorkloadRunResult};
-        use crate::scientist::RunOutcome;
+        use crate::scientist::{PipelineStats, RunOutcome};
         let row = |w: &str, best: f64| WorkloadRunResult {
             workload: w.into(),
             cache_stats: (2, 10),
@@ -187,6 +208,12 @@ mod tests {
                 wall_clock_s: 1080.0,
                 curve: ConvergenceCurve::default(),
                 leaderboard_us: Some(best * 1.1),
+                pipeline: PipelineStats {
+                    pipelined: true,
+                    lanes: 4,
+                    lane_occupancy: 0.9,
+                    ..Default::default()
+                },
             },
         };
         let out = CampaignOutcome {
@@ -197,5 +224,29 @@ mod tests {
         assert!(s.contains("| row-softmax | 00009 | 120.0 |"), "{s}");
         assert!(s.contains("total submissions: 24"), "{s}");
         assert!(s.contains("2/10"), "{s}");
+        assert!(s.contains("| 90% |"), "{s}");
+    }
+
+    #[test]
+    fn pipeline_summary_renders_both_modes() {
+        use crate::scientist::PipelineStats;
+        let stats = PipelineStats {
+            pipelined: true,
+            lanes: 4,
+            lane_occupancy: 0.9375,
+            mean_in_flight: 3.8,
+            max_in_flight: 4,
+            planning_rounds: 11,
+            replanned_duplicates: 2,
+        };
+        let s = render_pipeline(&stats);
+        assert!(s.contains("steady-state pipeline over 4 lane(s)"), "{s}");
+        assert!(s.contains("occupancy 94%"), "{s}");
+        assert!(s.contains("2 duplicates replanned"), "{s}");
+        let lockstep = PipelineStats {
+            pipelined: false,
+            ..stats
+        };
+        assert!(render_pipeline(&lockstep).contains("lockstep"));
     }
 }

@@ -5,10 +5,13 @@
 //! submission quota, simulated wall clock, and **per-workload eval
 //! cache** (genome fingerprints are only meaningful within one
 //! workload's cost model, so caches are never shared). Within each run,
-//! step (4) still batches every iteration's children through the
-//! multi-lane executor, so a campaign composes both parallelism levels:
-//! across workloads (threads here) and across submissions (executor
-//! lanes, `DESIGN.md` §3).
+//! the configured scheduler drives the executor lanes — lockstep
+//! barrier batches by default, or the steady-state pipeline
+//! (`base.pipeline = true`, DESIGN.md §8) whose per-lane worker
+//! threads then stack under the campaign's per-workload threads — so a
+//! campaign composes both parallelism levels: across workloads
+//! (threads here) and across submissions (executor lanes, `DESIGN.md`
+//! §3).
 //!
 //! Campaigns are deterministic: every run is seeded independently from
 //! its own `RunConfig`, so results are bit-identical to running each
@@ -162,6 +165,36 @@ mod tests {
             );
             assert_eq!(r.outcome.submissions, solo_out.submissions, "{}", r.workload);
             assert_eq!(r.cache_stats, solo.platform.cache_stats(), "{}", r.workload);
+        }
+    }
+
+    #[test]
+    fn pipelined_campaign_matches_standalone_pipeline_runs() {
+        // the pipeline scheduler composes under the campaign's
+        // per-workload threads without breaking the bit-identity
+        // guarantee: stream worker threads are private to each run
+        let base = RunConfig {
+            eval_parallelism: 2,
+            pipeline: true,
+            ..base(16)
+        };
+        let cfg = CampaignConfig::all_workloads(base.clone());
+        let campaign = run_campaign(&cfg).unwrap();
+        for r in &campaign.results {
+            let solo_cfg = RunConfig {
+                workload: r.workload.clone(),
+                ..base.clone()
+            };
+            let mut solo = ScientistRun::new(solo_cfg).unwrap();
+            let solo_out = solo.run_to_completion().unwrap();
+            assert_eq!(r.outcome.best_id, solo_out.best_id, "{}", r.workload);
+            assert_eq!(
+                r.outcome.best_geomean_us, solo_out.best_geomean_us,
+                "{}",
+                r.workload
+            );
+            assert_eq!(r.outcome.submissions, solo_out.submissions, "{}", r.workload);
+            assert!(r.outcome.pipeline.pipelined, "{}", r.workload);
         }
     }
 

@@ -18,16 +18,34 @@
 //! lane counts run the children on real worker threads (paper §5.1's
 //! counterfactual; DESIGN.md §3).
 //!
+//! Two schedulers can drive the loop (DESIGN.md §8):
+//!
+//! * **Lockstep** (default, the paper's shape): plan a whole
+//!   iteration, submit its children as one barrier batch, wait for
+//!   everything, plan again. With more lanes than children the spare
+//!   lanes idle at the barrier — modeled by [`crate::eval::EvalPlatform::sync_lanes`].
+//! * **Steady-state pipeline** (`platform.pipeline = true`,
+//!   [`pipeline`]): a queue of planned experiments feeds the lanes
+//!   through the platform's completion-driven stream API, and the
+//!   selector/designer/writer stages run again the moment the queue
+//!   can no longer fill a freed lane. At `eval_parallelism = 1` its
+//!   trajectory is bit-identical to lockstep (`tests/pipeline.rs`).
+//!
 //! Everything the agents see flows through the population ledger —
 //! they never touch the simulator's internals, matching the paper's
 //! black-box constraint.
 
 pub mod bootstrap;
 pub mod campaign;
+pub mod pipeline;
 
+use std::collections::HashSet;
 use std::sync::Arc;
 
-use crate::agents::{AgentSuite, Selection};
+pub use pipeline::PipelineStats;
+use pipeline::SchedCounters;
+
+use crate::agents::{AgentSuite, KernelWrite, Selection};
 use crate::config::RunConfig;
 use crate::eval::{EvalBackend, EvalPlatform, PlatformConfig};
 use crate::metrics::ConvergenceCurve;
@@ -58,6 +76,9 @@ pub struct RunOutcome {
     pub curve: ConvergenceCurve,
     /// Leaderboard-suite geomean of the best kernel, if computed.
     pub leaderboard_us: Option<f64>,
+    /// Scheduler-level throughput stats: lane occupancy, pipeline
+    /// depth, planning rounds (DESIGN.md §8).
+    pub pipeline: PipelineStats,
 }
 
 /// A full scientist run: platform + population + agents + loop state.
@@ -72,6 +93,32 @@ pub struct ScientistRun<B: EvalBackend> {
     pub curve: ConvergenceCurve,
     pub logs: Vec<IterationLog>,
     iteration: usize,
+    /// Scheduler counters (planning rounds, duplicate replans, depth
+    /// samples) shared by the lockstep and pipeline drivers.
+    sched: SchedCounters,
+}
+
+/// One writer child waiting for an evaluation lane: everything the
+/// ledger needs once its result lands. Produced by
+/// [`ScientistRun::plan_group`], consumed by both schedulers.
+pub(crate) struct PlannedExperiment {
+    pub base_id: String,
+    pub reference_id: String,
+    pub description: String,
+    pub write: KernelWrite,
+    /// Genome content hash, computed once at planning (the dedup keys
+    /// everywhere downstream reuse it).
+    pub fingerprint: String,
+}
+
+/// One select → design → write planning round.
+pub(crate) struct PlannedGroup {
+    pub selection: Selection,
+    pub avenue_names: Vec<String>,
+    pub chosen_experiments: Vec<String>,
+    pub experiments: Vec<PlannedExperiment>,
+    /// Writer children discarded as duplicates during this round.
+    pub duplicates_skipped: u64,
 }
 
 impl ScientistRun<SimBackend> {
@@ -132,6 +179,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             curve: ConvergenceCurve::default(),
             logs: Vec::new(),
             iteration: 0,
+            sched: SchedCounters::default(),
         };
         if run.config.bootstrap_probing {
             // The probe sequence is fp8-specific (mfma-seed variants
@@ -183,6 +231,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
     fn submit_seeds(&mut self) -> Result<(), String> {
         let seeds = self.workload.starting_population();
         let bootstrap_idx = seeds.len().saturating_sub(1);
+        let before = self.platform.submissions();
         for (i, (name, genome)) in seeds.into_iter().enumerate() {
             // no-bootstrap counterfactual: the deep-dive never happened,
             // so the family's fast-path bootstrap seed (listed last —
@@ -204,6 +253,12 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 submitted_at,
             );
         }
+        // the loop cannot plan before every seed result is back, so
+        // both schedulers start from a post-seed barrier
+        let submitted = self.platform.submissions() - before;
+        self.sched
+            .sample_submissions(submitted, self.config.eval_parallelism);
+        self.platform.sync_lanes();
         Ok(())
     }
 
@@ -246,14 +301,23 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             .saturating_sub(self.platform.submissions())
     }
 
-    /// Run one full loop iteration (select -> design -> 3x write ->
-    /// one batched submit through the multi-lane executor). Returns
-    /// `None` when out of budget or when selection is impossible.
-    pub fn run_iteration(&mut self) -> Option<&IterationLog> {
-        if self.budget_left() == 0 {
-            return None;
-        }
-        self.iteration += 1;
+    /// Run one select → design → write planning round against the
+    /// current ledger. `room` caps how many children may be planned
+    /// (submission budget not yet spoken for); `reserved_fps` carries
+    /// fingerprints of experiments already queued or in flight, so the
+    /// pipeline never plans a duplicate of pending work (the lockstep
+    /// path passes an empty set — its only reservations are the ledger
+    /// and the group itself).
+    ///
+    /// Returns `None` when selection is impossible or the designer has
+    /// no plans; a `Some` group may still be empty if every written
+    /// child was a duplicate (counted in `duplicates_skipped` — the
+    /// pipeline's replan signal).
+    fn plan_group(
+        &mut self,
+        room: u64,
+        reserved_fps: &HashSet<String>,
+    ) -> Option<PlannedGroup> {
         // Stage 1 — Evolutionary Selector
         let selection = self
             .agents
@@ -275,88 +339,125 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         }
         let chosen = self.agents.designer.choose(&design.plans, &mut self.agents.llm);
 
-        // Stage 3 — Kernel Writer x chosen. Children are collected
-        // first, then submitted as ONE batch through the platform's
-        // multi-lane executor (step 4). The planning loop mirrors the
-        // old sequential path exactly: writes happen while (virtual)
-        // budget remains, and each non-duplicate child reserves one
-        // submission — so at parallelism=1 the writer-RNG and
-        // backend-RNG call sequences are unchanged.
-        let mut submitted_ids = Vec::new();
-        let mut chosen_experiments = Vec::new();
-        let mut batch: Vec<crate::genome::KernelGenome> = Vec::new();
-        let mut pending: Vec<(String, crate::agents::KernelWrite)> = Vec::new();
-        for idx in &chosen {
-            if (batch.len() as u64) >= self.budget_left() {
-                break;
-            }
-            let plan = &design.plans[*idx];
-            chosen_experiments.push(plan.description.clone());
-            let write = self.agents.writer.write(
-                &base.genome,
-                &reference.genome,
-                plan,
-                &mut self.agents.llm,
-            );
-            // duplicate kernels are pointless submissions; the paper's
-            // population ids are unique code versions. Skip exact dups
-            // (against the ledger and within this batch).
-            let fp = write.genome.fingerprint();
-            if self.population.contains_fingerprint(&fp)
-                || batch.iter().any(|g| g.fingerprint() == fp)
-            {
-                continue;
-            }
-            batch.push(write.genome.clone());
-            pending.push((plan.description.clone(), write));
-        }
-        let results = self.platform.submit_batch(&batch);
-        for ((description, write), result) in pending.into_iter().zip(results) {
-            let submitted_at = result
-                .submission_index
-                .map(|i| i + 1)
-                .unwrap_or_else(|| self.platform.submissions());
-            let id = self.record_individual(
-                vec![base.id.clone(), reference.id.clone()],
-                write.genome,
-                description,
-                write.report,
-                result.outcome,
-                submitted_at,
-            );
-            submitted_ids.push(id);
-        }
-
-        self.logs.push(IterationLog {
-            iteration: self.iteration,
+        // Stage 3 — Kernel Writer x chosen. Writes happen while
+        // (virtual) budget remains and each non-duplicate child
+        // reserves one submission — the same call sequence as the
+        // original sequential path, so parallelism=1 trajectories are
+        // unchanged bit for bit. Duplicate kernels are pointless
+        // submissions (the paper's population ids are unique code
+        // versions): skip exact dups against the ledger, the caller's
+        // reservations, and this group — via precomputed fingerprint
+        // sets, never by re-rendering genomes (§Perf).
+        let mut group = PlannedGroup {
             selection,
             avenue_names: design
                 .avenues
                 .iter()
                 .map(|a| a.name().to_string())
                 .collect(),
-            chosen_experiments,
+            chosen_experiments: Vec::new(),
+            experiments: Vec::new(),
+            duplicates_skipped: 0,
+        };
+        let mut group_fps: HashSet<String> = HashSet::new();
+        for idx in &chosen {
+            if (group.experiments.len() as u64) >= room {
+                break;
+            }
+            let plan = &design.plans[*idx];
+            group.chosen_experiments.push(plan.description.clone());
+            let write = self.agents.writer.write(
+                &base.genome,
+                &reference.genome,
+                plan,
+                &mut self.agents.llm,
+            );
+            let fp = write.genome.fingerprint();
+            if self.population.contains_fingerprint(&fp)
+                || reserved_fps.contains(&fp)
+                || group_fps.contains(&fp)
+            {
+                group.duplicates_skipped += 1;
+                continue;
+            }
+            group_fps.insert(fp.clone());
+            group.experiments.push(PlannedExperiment {
+                base_id: base.id.clone(),
+                reference_id: reference.id.clone(),
+                description: plan.description.clone(),
+                write,
+                fingerprint: fp,
+            });
+        }
+        Some(group)
+    }
+
+    /// Add one completed experiment to the ledger and return its id.
+    fn record_experiment(
+        &mut self,
+        experiment: PlannedExperiment,
+        outcome: EvalOutcome,
+        submitted_at: u64,
+    ) -> String {
+        self.record_individual(
+            vec![experiment.base_id, experiment.reference_id],
+            experiment.write.genome,
+            experiment.description,
+            experiment.write.report,
+            outcome,
+            submitted_at,
+        )
+    }
+
+    /// Run one full **lockstep** loop iteration (select -> design ->
+    /// 3x write -> one batched submit through the multi-lane
+    /// executor, then a barrier: the next iteration plans only after
+    /// the whole batch completes). Returns `None` when out of budget
+    /// or when selection is impossible.
+    pub fn run_iteration(&mut self) -> Option<&IterationLog> {
+        if self.budget_left() == 0 {
+            return None;
+        }
+        self.iteration += 1;
+        let no_reservations = HashSet::new();
+        let group = self.plan_group(self.budget_left(), &no_reservations)?;
+        self.sched.planning_rounds += 1;
+        self.sched.replanned_duplicates += group.duplicates_skipped;
+
+        let batch: Vec<crate::genome::KernelGenome> = group
+            .experiments
+            .iter()
+            .map(|e| e.write.genome.clone())
+            .collect();
+        let results = self.platform.submit_batch(&batch);
+        self.sched.sample_submissions(
+            results.iter().filter(|r| !r.cached).count() as u64,
+            self.config.eval_parallelism,
+        );
+        let mut submitted_ids = Vec::new();
+        for (experiment, result) in group.experiments.into_iter().zip(results) {
+            let submitted_at = result
+                .submission_index
+                .map(|i| i + 1)
+                .unwrap_or_else(|| self.platform.submissions());
+            submitted_ids.push(self.record_experiment(
+                experiment,
+                result.outcome,
+                submitted_at,
+            ));
+        }
+        // the lockstep barrier: every lane waits for the slowest
+        // before the next planning round (a no-op at one lane)
+        self.platform.sync_lanes();
+
+        self.logs.push(IterationLog {
+            iteration: self.iteration,
+            selection: group.selection,
+            avenue_names: group.avenue_names,
+            chosen_experiments: group.chosen_experiments,
             submitted_ids,
         });
         self.logs.last()
-    }
-
-    /// Run until the submission budget is exhausted (or the loop
-    /// stalls), then compute the outcome.
-    pub fn run_to_completion(&mut self) -> Result<RunOutcome, String> {
-        let mut stalls = 0;
-        while self.budget_left() > 0 && stalls < 8 {
-            let before = self.platform.submissions();
-            if self.run_iteration().is_none() {
-                break;
-            }
-            if self.platform.submissions() == before {
-                stalls += 1; // iteration produced only duplicates
-            } else {
-                stalls = 0;
-            }
-        }
-        self.outcome()
     }
 
     /// Current outcome snapshot.
@@ -378,7 +479,40 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             wall_clock_s: self.platform.wall_clock_s(),
             curve: self.curve.clone(),
             leaderboard_us,
+            pipeline: self.sched.stats(
+                self.config.pipeline,
+                self.config.eval_parallelism,
+                self.platform.lane_occupancy(),
+            ),
         })
+    }
+}
+
+impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
+    /// Run until the submission budget is exhausted (or the loop
+    /// stalls), then compute the outcome. Dispatches on
+    /// `config.pipeline`: the lockstep barrier loop by default, the
+    /// steady-state pipeline scheduler ([`pipeline`], DESIGN.md §8)
+    /// when enabled. (`B: 'static` because the pipeline's stream path
+    /// keeps per-lane worker threads alive across iterations.)
+    pub fn run_to_completion(&mut self) -> Result<RunOutcome, String> {
+        if self.config.pipeline {
+            self.pump_pipeline()?;
+        } else {
+            let mut stalls = 0;
+            while self.budget_left() > 0 && stalls < 8 {
+                let before = self.platform.submissions();
+                if self.run_iteration().is_none() {
+                    break;
+                }
+                if self.platform.submissions() == before {
+                    stalls += 1; // iteration produced only duplicates
+                } else {
+                    stalls = 0;
+                }
+            }
+        }
+        self.outcome()
     }
 }
 

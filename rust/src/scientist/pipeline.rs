@@ -1,0 +1,290 @@
+//! The steady-state experiment pipeline (DESIGN.md §8).
+//!
+//! The paper's loop is throughput-bound by the evaluation platform,
+//! and lockstep scheduling makes it worse than it needs to be: with
+//! `parallelism = N` lanes, every iteration submits at most 3
+//! children and then waits at a barrier, so N-3 lanes idle per round
+//! and *all* lanes idle while the next round is planned. AutoKernel
+//! and KernelFoundry (PAPERS.md) both frame agent-driven search as a
+//! continuously fed evaluation queue; this module is that scheduler.
+//!
+//! Shape: a queue of planned experiments sits between the agent
+//! stages and the platform's completion-driven stream API
+//! ([`crate::eval::EvalPlatform::submit_stream`] /
+//! [`crate::eval::EvalPlatform::poll_completed`]). The loop drains one
+//! completion at a time — in **virtual-clock order**, which the
+//! platform guarantees is a pure function of the submission sequence —
+//! folds it into the ledger, and then refills:
+//!
+//! * **Queue refill rule** — whenever free lane capacity
+//!   (`parallelism x inflight_per_lane` minus in-flight) outruns the
+//!   queue, run another select → design → write round against the
+//!   freshest ledger. Results still in flight are simply not there
+//!   yet: planning trades a little staleness for never letting a lane
+//!   wait on an agent stage.
+//! * **Replanning** — a written child that duplicates the ledger, the
+//!   queue, or an in-flight submission is discarded
+//!   (`replanned_duplicates`) and planning continues, so duplicates
+//!   never occupy a lane. Eight consecutive all-duplicate rounds
+//!   **against an unchanged ledger** stop planning (the lockstep stall
+//!   rule, same constant); any completion re-arms the streak, since a
+//!   grown ledger can un-stick the writer.
+//! * **Degenerate lockstep case** — at `parallelism = 1` with the
+//!   default depth the cap is 1: the scheduler plans a full group,
+//!   feeds its children one at a time through the same backend in the
+//!   same order, and can only plan again once the group has drained —
+//!   exactly the lockstep call sequence, so the trajectory is
+//!   bit-identical (`tests/pipeline.rs` locks this in).
+//!
+//! Determinism: planning decisions depend only on the ledger and the
+//! agents' seeded RNG; the ledger grows in virtual-clock completion
+//! order; lane assignment is the platform's earliest-free rule. No OS
+//! scheduling anywhere in that chain — pipeline runs replay from
+//! (seed, config) at any lane count, re-verified across
+//! `parallelism ∈ {1, 2, 4}` for every registered workload.
+
+use std::collections::{HashSet, VecDeque};
+
+use super::{IterationLog, PlannedExperiment, ScientistRun};
+use crate::eval::EvalBackend;
+
+/// Scheduler-level throughput statistics, reported in
+/// [`super::RunOutcome`] for both the lockstep and pipeline drivers.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PipelineStats {
+    /// True when the steady-state pipeline scheduler drove the run.
+    pub pipelined: bool,
+    /// Evaluation lanes (platform parallelism).
+    pub lanes: u32,
+    /// Busy lane-seconds over `lanes x` simulated makespan; 1.0 means
+    /// no lane ever idled.
+    pub lane_occupancy: f64,
+    /// Mean submissions simultaneously occupying lanes, sampled at
+    /// each submission event.
+    pub mean_in_flight: f64,
+    /// Peak simultaneous lane occupancy observed.
+    pub max_in_flight: u64,
+    /// Select → design → write rounds run.
+    pub planning_rounds: u64,
+    /// Duplicate children discarded at planning time and replanned
+    /// instead of submitted.
+    pub replanned_duplicates: u64,
+}
+
+/// Raw counters both schedulers accumulate on the run; snapshot into
+/// [`PipelineStats`] by [`SchedCounters::stats`].
+#[derive(Debug, Clone, Default)]
+pub(crate) struct SchedCounters {
+    pub planning_rounds: u64,
+    pub replanned_duplicates: u64,
+    depth_total: u64,
+    depth_samples: u64,
+    max_in_flight: u64,
+}
+
+impl SchedCounters {
+    /// Record one in-flight depth observation (pipeline path: sampled
+    /// right after each stream submission).
+    pub fn sample_depth(&mut self, in_flight: u64) {
+        self.depth_total += in_flight;
+        self.depth_samples += 1;
+        self.max_in_flight = self.max_in_flight.max(in_flight);
+    }
+
+    /// Record a barrier round of `n` submissions on `lanes` lanes
+    /// (lockstep path): each submission sees `min(n, lanes)` of the
+    /// batch occupying lanes at once.
+    pub fn sample_submissions(&mut self, n: u64, lanes: u32) {
+        let depth = n.min(lanes.max(1) as u64);
+        for _ in 0..n {
+            self.sample_depth(depth);
+        }
+    }
+
+    pub fn stats(&self, pipelined: bool, lanes: u32, lane_occupancy: f64) -> PipelineStats {
+        PipelineStats {
+            pipelined,
+            lanes: lanes.max(1),
+            lane_occupancy,
+            mean_in_flight: if self.depth_samples > 0 {
+                self.depth_total as f64 / self.depth_samples as f64
+            } else {
+                0.0
+            },
+            max_in_flight: self.max_in_flight,
+            planning_rounds: self.planning_rounds,
+            replanned_duplicates: self.replanned_duplicates,
+        }
+    }
+}
+
+/// One child occupying an evaluation lane.
+struct InFlightChild {
+    ticket: u64,
+    experiment: PlannedExperiment,
+    /// Position of the planning round's [`IterationLog`] in
+    /// `run.logs`, so the id lands in the right transcript entry.
+    log_pos: usize,
+}
+
+impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
+    /// Drive the steady-state pipeline until the submission budget is
+    /// spent or planning runs dry. See the module docs for the refill
+    /// rule and the determinism argument.
+    pub(super) fn pump_pipeline(&mut self) -> Result<(), String> {
+        let lanes = self.config.eval_parallelism.max(1) as usize;
+        let cap = lanes * self.config.inflight_per_lane.max(1) as usize;
+        let mut queue: VecDeque<(PlannedExperiment, usize)> = VecDeque::new();
+        // fingerprints of queued + in-flight children — the replan
+        // path's reservation set (the ledger itself is checked inside
+        // plan_group)
+        let mut reserved: HashSet<String> = HashSet::new();
+        let mut in_flight: Vec<InFlightChild> = Vec::new();
+        let mut stalls = 0u32;
+        let mut planning_dead = false;
+        loop {
+            // refill: plan whenever the queue cannot feed the free
+            // lane capacity and budget remains
+            while !planning_dead && stalls < 8 && queue.len() + in_flight.len() < cap {
+                let committed = self.platform.submissions()
+                    + in_flight.len() as u64
+                    + queue.len() as u64;
+                let room = self.config.max_submissions.saturating_sub(committed);
+                if room == 0 {
+                    break;
+                }
+                self.iteration += 1;
+                let Some(group) = self.plan_group(room, &reserved) else {
+                    planning_dead = true;
+                    break;
+                };
+                self.sched.planning_rounds += 1;
+                self.sched.replanned_duplicates += group.duplicates_skipped;
+                if group.experiments.is_empty() {
+                    stalls += 1;
+                } else {
+                    stalls = 0;
+                }
+                let log_pos = self.logs.len();
+                self.logs.push(IterationLog {
+                    iteration: self.iteration,
+                    selection: group.selection,
+                    avenue_names: group.avenue_names,
+                    chosen_experiments: group.chosen_experiments,
+                    submitted_ids: Vec::new(),
+                });
+                for experiment in group.experiments {
+                    reserved.insert(experiment.fingerprint.clone());
+                    queue.push_back((experiment, log_pos));
+                }
+            }
+            // feed: move planned experiments onto lanes up to the cap
+            while in_flight.len() < cap {
+                let Some((experiment, log_pos)) = queue.pop_front() else {
+                    break;
+                };
+                let ticket = self.platform.submit_stream(&experiment.write.genome);
+                in_flight.push(InFlightChild {
+                    ticket,
+                    experiment,
+                    log_pos,
+                });
+                self.sched.sample_depth(in_flight.len() as u64);
+            }
+            // drain: fold the earliest virtual completion into the
+            // ledger; nothing in flight means nothing left to do
+            let Some(done) = self.platform.poll_completed() else {
+                break;
+            };
+            let pos = in_flight
+                .iter()
+                .position(|c| c.ticket == done.ticket)
+                .expect("completion for an unknown ticket");
+            let child = in_flight.remove(pos);
+            reserved.remove(&child.experiment.fingerprint);
+            let submitted_at = done
+                .submission_index
+                .map(|i| i + 1)
+                .unwrap_or_else(|| self.platform.submissions());
+            let id = self.record_experiment(child.experiment, done.outcome, submitted_at);
+            self.logs[child.log_pos].submitted_ids.push(id);
+            // the ledger just changed, so a duplicate streak is no
+            // longer evidence that planning is exhausted — re-arm it.
+            // (At one lane nothing is ever in flight while a dud
+            // streak runs, so this cannot fire there and lockstep
+            // bit-identity is untouched.)
+            stalls = 0;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::RunConfig;
+    use crate::scientist::ScientistRun;
+    use crate::workload::Workload;
+
+    fn pipeline_config(seed: u64, budget: u64, lanes: u32) -> RunConfig {
+        RunConfig::default()
+            .with_seed(seed)
+            .with_budget(budget)
+            .with_parallelism(lanes)
+            .with_pipeline(true)
+    }
+
+    #[test]
+    fn pipeline_run_completes_within_budget_and_dedups() {
+        let mut run = ScientistRun::new(pipeline_config(9, 30, 3)).unwrap();
+        let outcome = run.run_to_completion().unwrap();
+        assert!(outcome.submissions <= 30);
+        assert!(outcome.pipeline.pipelined);
+        assert_eq!(outcome.pipeline.lanes, 3);
+        // every ledger entry consumed a real submission (duplicates
+        // were replanned, never submitted)
+        assert_eq!(run.population.len() as u64, outcome.submissions);
+        let fps: std::collections::HashSet<String> = run
+            .population
+            .members()
+            .iter()
+            .map(|m| m.genome.fingerprint())
+            .collect();
+        assert_eq!(fps.len(), run.population.len(), "no duplicate ever submitted");
+    }
+
+    #[test]
+    fn pipeline_depth_respects_the_inflight_cap() {
+        let mut cfg = pipeline_config(5, 24, 2);
+        cfg.inflight_per_lane = 2;
+        let mut run = ScientistRun::new(cfg).unwrap();
+        let outcome = run.run_to_completion().unwrap();
+        assert!(outcome.pipeline.max_in_flight <= 4, "cap = lanes x depth");
+        assert!(outcome.pipeline.mean_in_flight > 0.0);
+        assert!(outcome.pipeline.planning_rounds > 0);
+    }
+
+    #[test]
+    fn pipeline_curve_stays_monotone() {
+        let mut run = ScientistRun::new(pipeline_config(1, 36, 4)).unwrap();
+        let outcome = run.run_to_completion().unwrap();
+        let pts = &outcome.curve.points;
+        assert!(!pts.is_empty());
+        for w in pts.windows(2) {
+            assert!(w[1].best_geomean_us <= w[0].best_geomean_us);
+        }
+    }
+
+    #[test]
+    fn pipeline_logs_attribute_children_to_their_planning_round() {
+        let mut run = ScientistRun::new(pipeline_config(3, 28, 4)).unwrap();
+        run.run_to_completion().unwrap();
+        assert!(!run.logs.is_empty());
+        let mut logged = 0usize;
+        for log in &run.logs {
+            assert!(log.submitted_ids.len() <= log.chosen_experiments.len());
+            logged += log.submitted_ids.len();
+        }
+        let seeds = run.workload.starting_population().len();
+        assert_eq!(logged + seeds, run.population.len());
+    }
+}

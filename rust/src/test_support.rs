@@ -44,6 +44,16 @@ pub fn noiseless_config(workload: &str, seed: u64, budget: u64) -> RunConfig {
     cfg
 }
 
+/// A steady-state-pipeline variant of [`tiny_run_config`]: same paper
+/// defaults (noise included), with the scheduler switched to the
+/// pipeline (DESIGN.md §8) over `lanes` evaluation lanes.
+pub fn pipeline_config(workload: &str, seed: u64, budget: u64, lanes: u32) -> RunConfig {
+    tiny_run_config(seed, budget)
+        .with_workload(workload)
+        .with_parallelism(lanes)
+        .with_pipeline(true)
+}
+
 /// Construct + run a simulated scientist loop to completion.
 pub fn run_scientist(cfg: RunConfig) -> (ScientistRun<SimBackend>, RunOutcome) {
     let mut run = ScientistRun::new(cfg).expect("scientist setup");
@@ -133,6 +143,17 @@ mod tests {
         assert_eq!(cfg.max_submissions, 20);
         assert_eq!(cfg.workload, "row-softmax");
         assert_eq!(cfg.eval_parallelism, 1);
+    }
+
+    #[test]
+    fn pipeline_config_switches_scheduler_only() {
+        let cfg = pipeline_config("bf16-gemm", 3, 18, 4);
+        assert!(cfg.pipeline);
+        assert_eq!(cfg.eval_parallelism, 4);
+        assert_eq!(cfg.workload, "bf16-gemm");
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.max_submissions, 18);
+        assert_eq!(cfg.noise_sigma, RunConfig::default().noise_sigma);
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! The steady-state pipeline's equivalence + determinism matrix
+//! (DESIGN.md §8, complements `tests/determinism.rs`):
+//!
+//! * at `parallelism = 1` the pipeline is the **degenerate lockstep
+//!   case**: same agent-RNG and backend-RNG call sequences, hence a
+//!   bit-identical trajectory, transcript, and wall clock — for every
+//!   registered workload, with measurement noise on;
+//! * at any lane count a pipeline run is a pure function of
+//!   (seed, config): re-running it reproduces the trajectory exactly,
+//!   and the eval cache is invisible to it (duplicates are replanned,
+//!   never submitted);
+//! * at `parallelism = 4` the pipeline keeps lanes busy that lockstep
+//!   leaves idling at the batch barrier: strictly higher lane
+//!   occupancy and a strictly shorter simulated wall clock on the
+//!   fp8-gemm quickstart configuration.
+
+use gpu_kernel_scientist::test_support as ts;
+use gpu_kernel_scientist::workload::{self, Workload};
+
+type Trajectory = Vec<(String, String)>;
+type RunPoint = (Trajectory, String, f64, u64, f64);
+
+fn run_point(
+    workload: &str,
+    seed: u64,
+    budget: u64,
+    lanes: u32,
+    pipeline: bool,
+    cache: bool,
+) -> RunPoint {
+    let mut cfg = ts::tiny_run_config(seed, budget).with_workload(workload);
+    cfg.eval_parallelism = lanes;
+    cfg.pipeline = pipeline;
+    cfg.eval_cache = cache;
+    let (run, outcome) = ts::run_scientist(cfg);
+    (
+        ts::trajectory(&run),
+        outcome.best_id,
+        outcome.best_geomean_us,
+        outcome.submissions,
+        outcome.wall_clock_s,
+    )
+}
+
+#[test]
+fn pipeline_at_one_lane_is_bit_identical_to_lockstep_for_every_workload() {
+    for w in workload::registry() {
+        let name = w.name();
+        let lockstep_cfg = ts::tiny_run_config(11, 24).with_workload(name);
+        let (lockstep_run, lockstep_out) = ts::run_scientist(lockstep_cfg);
+        let pipeline_cfg = ts::pipeline_config(name, 11, 24, 1);
+        let (pipeline_run, pipeline_out) = ts::run_scientist(pipeline_cfg);
+
+        assert_eq!(
+            ts::trajectory(&lockstep_run),
+            ts::trajectory(&pipeline_run),
+            "{name}: pipeline@1 must replay the lockstep trajectory bit for bit"
+        );
+        assert_eq!(lockstep_out.best_id, pipeline_out.best_id, "{name}");
+        assert_eq!(
+            lockstep_out.best_geomean_us, pipeline_out.best_geomean_us,
+            "{name}"
+        );
+        assert_eq!(lockstep_out.submissions, pipeline_out.submissions, "{name}");
+        assert_eq!(lockstep_out.wall_clock_s, pipeline_out.wall_clock_s, "{name}");
+        assert_eq!(
+            lockstep_run.platform.cache_stats(),
+            pipeline_run.platform.cache_stats(),
+            "{name}"
+        );
+        // same transcript: planning rounds and child attribution match
+        assert_eq!(lockstep_run.logs.len(), pipeline_run.logs.len(), "{name}");
+        for (a, b) in lockstep_run.logs.iter().zip(&pipeline_run.logs) {
+            assert_eq!(a.submitted_ids, b.submitted_ids, "{name}");
+            assert_eq!(a.chosen_experiments, b.chosen_experiments, "{name}");
+            assert_eq!(a.selection.base_id, b.selection.base_id, "{name}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_trajectory_is_a_pure_function_of_seed_and_config() {
+    // noisy runs, every workload, parallelism {1, 2, 4} (+ the CI
+    // matrix lane count): virtual-clock completion order — not OS
+    // scheduling — decides what the planner sees, so same-config runs
+    // replay exactly
+    let mut lanes = vec![1u32, 2, 4];
+    let env = ts::env_parallelism();
+    if !lanes.contains(&env) {
+        lanes.push(env);
+    }
+    for w in workload::registry() {
+        for &p in &lanes {
+            let a = run_point(w.name(), 13, 24, p, true, true);
+            let b = run_point(w.name(), 13, 24, p, true, true);
+            assert_eq!(a, b, "{} diverged at parallelism={p}", w.name());
+        }
+    }
+}
+
+#[test]
+fn pipeline_never_submits_duplicates_so_the_cache_is_invisible() {
+    for w in workload::registry() {
+        for p in [1u32, 4] {
+            let (cached, ..) = run_point(w.name(), 13, 24, p, true, true);
+            let (raw, ..) = run_point(w.name(), 13, 24, p, true, false);
+            assert_eq!(
+                cached, raw,
+                "{} at parallelism={p}: cache on/off must not change the trajectory",
+                w.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_saturates_lanes_that_lockstep_leaves_idle() {
+    // the fp8-gemm quickstart configuration (seed 42, budget 30) on 4
+    // lanes: lockstep submits <= 3 children per round and then waits at
+    // the barrier, so at least one lane always idles; the pipeline
+    // refills lanes the moment they free
+    let run_mode = |pipeline: bool| {
+        let mut cfg = ts::tiny_run_config(42, 30);
+        cfg.eval_parallelism = 4;
+        cfg.pipeline = pipeline;
+        let (_, outcome) = ts::run_scientist(cfg);
+        outcome
+    };
+    let lockstep = run_mode(false);
+    let pipeline = run_mode(true);
+    assert!(
+        pipeline.pipeline.lane_occupancy > lockstep.pipeline.lane_occupancy,
+        "pipeline occupancy {:.3} must strictly exceed lockstep {:.3}",
+        pipeline.pipeline.lane_occupancy,
+        lockstep.pipeline.lane_occupancy
+    );
+    // lockstep's 3-child rounds cannot fill 4 lanes
+    assert!(
+        lockstep.pipeline.lane_occupancy < 1.0,
+        "lockstep at 4 lanes idles at the barrier ({:.3})",
+        lockstep.pipeline.lane_occupancy
+    );
+    // simulated time per submission: the pipeline is strictly faster
+    let lockstep_rate = lockstep.wall_clock_s / lockstep.submissions as f64;
+    let pipeline_rate = pipeline.wall_clock_s / pipeline.submissions as f64;
+    assert!(
+        pipeline_rate < lockstep_rate,
+        "pipeline {pipeline_rate:.1} s/submission vs lockstep {lockstep_rate:.1}"
+    );
+    // depth: the pipeline genuinely keeps several submissions in
+    // flight, lockstep at one lane cannot
+    assert!(pipeline.pipeline.mean_in_flight > 1.5);
+    assert!(pipeline.pipeline.max_in_flight <= 4, "cap = lanes x 1");
+}
+
+#[test]
+fn single_lane_pipeline_reports_saturated_lanes() {
+    let cfg = ts::pipeline_config(workload::DEFAULT_WORKLOAD, 7, 20, 1);
+    let (_, outcome) = ts::run_scientist(cfg);
+    assert!(outcome.pipeline.pipelined);
+    assert_eq!(outcome.pipeline.lanes, 1);
+    assert!((outcome.pipeline.lane_occupancy - 1.0).abs() < 1e-12);
+    assert!((outcome.pipeline.mean_in_flight - 1.0).abs() < 1e-12);
+    assert_eq!(outcome.pipeline.max_in_flight, 1);
+}
