@@ -74,6 +74,54 @@ impl FindingsDoc {
     pub fn has(&self, f: Finding) -> bool {
         self.findings.contains(&f)
     }
+
+    /// Serialize for a run-store checkpoint (bootstrap-probing runs
+    /// must resume with the probed findings, not re-probe).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| Json::Str(format!("{f:?}")))
+                        .collect(),
+                ),
+            ),
+            (
+                "digest",
+                Json::Arr(self.digest.iter().map(|d| Json::Str(d.clone())).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild from a [`FindingsDoc::to_json`] checkpoint entry.
+    pub fn from_json(v: &crate::util::json::Json) -> Result<FindingsDoc, String> {
+        let mut doc = FindingsDoc::default();
+        for f in v
+            .get("findings")
+            .and_then(|x| x.as_arr())
+            .ok_or("findings doc: missing findings")?
+        {
+            let name = f.as_str().ok_or("findings doc: non-string finding")?;
+            doc.findings.push(match name {
+                "MfmaSemantics" => Finding::MfmaSemantics,
+                "LdsRepurposeTrick" => Finding::LdsRepurposeTrick,
+                "SwizzleLayouts" => Finding::SwizzleLayouts,
+                other => return Err(format!("findings doc: unknown finding '{other}'")),
+            });
+        }
+        for d in v
+            .get("digest")
+            .and_then(|x| x.as_arr())
+            .ok_or("findings doc: missing digest")?
+        {
+            doc.digest
+                .push(d.as_str().ok_or("findings doc: non-string digest")?.to_string());
+        }
+        Ok(doc)
+    }
 }
 
 /// One optimization avenue — a digested, directed piece of knowledge
@@ -393,6 +441,31 @@ mod tests {
         assert!(doc.has(Finding::MfmaSemantics));
         assert!(doc.has(Finding::LdsRepurposeTrick));
         assert_eq!(doc.digest.len(), 3);
+    }
+
+    #[test]
+    fn findings_doc_json_roundtrip() {
+        let doc = FindingsDoc::bootstrap();
+        let back = FindingsDoc::from_json(
+            &crate::util::json::parse(&doc.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        for f in [
+            Finding::MfmaSemantics,
+            Finding::LdsRepurposeTrick,
+            Finding::SwizzleLayouts,
+        ] {
+            assert_eq!(back.has(f), doc.has(f));
+        }
+        assert_eq!(back.digest, doc.digest);
+        // an empty doc (no-bootstrap run) round-trips too
+        let empty = FindingsDoc::default();
+        let back = FindingsDoc::from_json(
+            &crate::util::json::parse(&empty.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert!(!back.has(Finding::MfmaSemantics));
+        assert!(back.digest.is_empty());
     }
 
     #[test]

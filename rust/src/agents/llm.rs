@@ -65,6 +65,17 @@ impl SurrogateLlm {
         &mut self.rng
     }
 
+    /// Snapshot the sampler stream for a run-store checkpoint.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore the sampler stream from a checkpoint snapshot, so the
+    /// resumed agents continue the exact decision sequence.
+    pub fn restore_rng(&mut self, state: [u64; 4]) {
+        self.rng = Rng::from_state(state);
+    }
+
     /// Temperature-weighted choice over scored items (higher score =
     /// more likely). At temperature 0 this is argmax.
     pub fn sample_weighted<T>(&mut self, items: &[(T, f64)]) -> usize

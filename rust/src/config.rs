@@ -52,6 +52,21 @@ pub struct RunConfig {
     /// itself a product of the bootstrap deep-dive; the no-bootstrap
     /// counterfactual drops it along with the findings.
     pub include_mfma_seed: bool,
+    /// Durable run store directory (`[store] dir`, DESIGN.md §9). When
+    /// set, every experiment is journaled to
+    /// `<dir>/journal.jsonl` and the run checkpoints periodically to
+    /// `<dir>/checkpoint.json`; `resume`/`replay` reconstruct from it.
+    /// `None` (the default) keeps the run in-memory only.
+    pub store_dir: Option<String>,
+    /// Completed scheduler steps between checkpoints (`[store]
+    /// checkpoint_every`): lockstep iterations, or drained pipeline
+    /// completions. 1 — the default — checkpoints after every step.
+    pub checkpoint_every: u64,
+    /// Testing/CI knob (CLI `--halt-after N`, never persisted): abort
+    /// the scheduler — **without** a final checkpoint, simulating a
+    /// crash — once the platform has committed `N` submissions. The
+    /// resume-equivalence suite and CI smoke are built on it.
+    pub halt_after: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -72,6 +87,9 @@ impl Default for RunConfig {
             llm: LlmConfig::default(),
             bootstrap_probing: false,
             include_mfma_seed: true,
+            store_dir: None,
+            checkpoint_every: 1,
+            halt_after: None,
         }
     }
 }
@@ -117,7 +135,10 @@ impl RunConfig {
             }
             if line.starts_with('[') && line.ends_with(']') {
                 section = line[1..line.len() - 1].trim().to_string();
-                if !matches!(section.as_str(), "run" | "platform" | "agents" | "llm") {
+                if !matches!(
+                    section.as_str(),
+                    "run" | "platform" | "agents" | "llm" | "store"
+                ) {
                     return Err(format!("line {}: unknown section [{section}]", lineno + 1));
                 }
                 continue;
@@ -184,21 +205,9 @@ impl RunConfig {
             }
             "platform.noise_sigma" => self.noise_sigma = parse_f64(value)?,
             "agents.selection_policy" => {
-                self.selection_policy = match value {
-                    "paper" => SelectionPolicy::PaperLlm,
-                    "random" => SelectionPolicy::Random,
-                    "greedy" => SelectionPolicy::GreedyBest,
-                    _ => return Err(format!("bad selection_policy '{value}'")),
-                }
+                self.selection_policy = parse_selection_policy(value)?
             }
-            "agents.experiment_rule" => {
-                self.experiment_rule = match value {
-                    "paper" => ExperimentRule::Paper,
-                    "top_max" => ExperimentRule::TopMax,
-                    "random3" => ExperimentRule::Random3,
-                    _ => return Err(format!("bad experiment_rule '{value}'")),
-                }
-            }
+            "agents.experiment_rule" => self.experiment_rule = parse_experiment_rule(value)?,
             "agents.bootstrap_probing" => {
                 self.bootstrap_probing = match value {
                     "true" => true,
@@ -206,20 +215,160 @@ impl RunConfig {
                     _ => return Err(format!("bad bootstrap_probing '{value}'")),
                 }
             }
-            "agents.knowledge" => {
-                self.knowledge = match value {
-                    "full" => KnowledgeProfile::Full,
-                    "generic" => KnowledgeProfile::GenericOnly,
-                    "minimal" => KnowledgeProfile::Minimal,
-                    _ => return Err(format!("bad knowledge '{value}'")),
-                }
-            }
+            "agents.knowledge" => self.knowledge = parse_knowledge(value)?,
             "llm.temperature" => self.llm.temperature = parse_f64(value)?,
             "llm.estimate_sigma" => self.llm.estimate_sigma = parse_f64(value)?,
             "llm.rubric_infidelity" => self.llm.rubric_infidelity = parse_f64(value)?,
+            "store.dir" => {
+                if value.is_empty() {
+                    return Err("store.dir must not be empty".into());
+                }
+                self.store_dir = Some(value.to_string());
+            }
+            "store.checkpoint_every" => {
+                let every = parse_u64(value)?;
+                if every == 0 {
+                    return Err("checkpoint_every must be >= 1".into());
+                }
+                self.checkpoint_every = every;
+            }
             _ => return Err(format!("unknown key '{key}'")),
         }
         Ok(())
+    }
+}
+
+impl RunConfig {
+    /// Serialize every persistent knob for the run-store checkpoint
+    /// (DESIGN.md §9) so `resume` is self-contained — no config file
+    /// needed. Tokens match the TOML vocabulary; `store_dir` and the
+    /// `halt_after` test knob are runtime-local and not persisted (the
+    /// resume CLI re-derives the directory from its argument).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("workload", Json::Str(self.workload.clone())),
+            // hex: the seed derives every RNG stream and Json::Num is
+            // f64-backed — a seed >= 2^53 must round-trip exactly or
+            // the resumed lane forks diverge
+            ("seed", crate::util::json::u64_hex(self.seed)),
+            ("max_submissions", Json::Num(self.max_submissions as f64)),
+            ("reps_per_config", Json::Num(self.reps_per_config as f64)),
+            ("parallelism", Json::Num(self.eval_parallelism as f64)),
+            ("cache", Json::Bool(self.eval_cache)),
+            ("pipeline", Json::Bool(self.pipeline)),
+            (
+                "inflight_per_lane",
+                Json::Num(self.inflight_per_lane as f64),
+            ),
+            ("noise_sigma", Json::Num(self.noise_sigma)),
+            (
+                "selection_policy",
+                Json::Str(selection_policy_token(self.selection_policy).into()),
+            ),
+            (
+                "experiment_rule",
+                Json::Str(experiment_rule_token(self.experiment_rule).into()),
+            ),
+            ("knowledge", Json::Str(knowledge_token(self.knowledge).into())),
+            ("temperature", Json::Num(self.llm.temperature)),
+            ("estimate_sigma", Json::Num(self.llm.estimate_sigma)),
+            ("rubric_infidelity", Json::Num(self.llm.rubric_infidelity)),
+            ("bootstrap_probing", Json::Bool(self.bootstrap_probing)),
+            ("include_mfma_seed", Json::Bool(self.include_mfma_seed)),
+            ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
+        ])
+    }
+
+    /// Rebuild from a [`RunConfig::to_json`] checkpoint entry.
+    pub fn from_json(v: &crate::util::json::Json) -> Result<RunConfig, String> {
+        use crate::util::json::{parse_u64_hex, req_bool, req_f64, req_str, req_u64};
+        // same rule as genome::persist: a corrupted checkpoint must not
+        // narrow into a valid-looking config via `as u32`
+        let u32_field = |k: &str| -> Result<u32, String> {
+            let raw = req_u64(v, k)?;
+            u32::try_from(raw).map_err(|_| format!("config: {k} out of u32 range: {raw}"))
+        };
+        let workload = req_str(v, "workload")?.to_string();
+        if crate::workload::lookup(&workload).is_none() {
+            return Err(format!("config: unknown workload '{workload}'"));
+        }
+        Ok(RunConfig {
+            workload,
+            seed: parse_u64_hex(v.get("seed").ok_or("config: missing seed")?)
+                .map_err(|e| format!("config seed: {e}"))?,
+            max_submissions: req_u64(v, "max_submissions")?,
+            reps_per_config: u32_field("reps_per_config")?,
+            eval_parallelism: u32_field("parallelism")?,
+            eval_cache: req_bool(v, "cache")?,
+            pipeline: req_bool(v, "pipeline")?,
+            inflight_per_lane: u32_field("inflight_per_lane")?,
+            noise_sigma: req_f64(v, "noise_sigma")?,
+            selection_policy: parse_selection_policy(req_str(v, "selection_policy")?)?,
+            experiment_rule: parse_experiment_rule(req_str(v, "experiment_rule")?)?,
+            knowledge: parse_knowledge(req_str(v, "knowledge")?)?,
+            llm: LlmConfig {
+                temperature: req_f64(v, "temperature")?,
+                estimate_sigma: req_f64(v, "estimate_sigma")?,
+                rubric_infidelity: req_f64(v, "rubric_infidelity")?,
+            },
+            bootstrap_probing: req_bool(v, "bootstrap_probing")?,
+            include_mfma_seed: req_bool(v, "include_mfma_seed")?,
+            store_dir: None,
+            checkpoint_every: req_u64(v, "checkpoint_every")?,
+            halt_after: None,
+        })
+    }
+}
+
+fn selection_policy_token(p: SelectionPolicy) -> &'static str {
+    match p {
+        SelectionPolicy::PaperLlm => "paper",
+        SelectionPolicy::Random => "random",
+        SelectionPolicy::GreedyBest => "greedy",
+    }
+}
+
+fn parse_selection_policy(value: &str) -> Result<SelectionPolicy, String> {
+    match value {
+        "paper" => Ok(SelectionPolicy::PaperLlm),
+        "random" => Ok(SelectionPolicy::Random),
+        "greedy" => Ok(SelectionPolicy::GreedyBest),
+        _ => Err(format!("bad selection_policy '{value}'")),
+    }
+}
+
+fn experiment_rule_token(r: ExperimentRule) -> &'static str {
+    match r {
+        ExperimentRule::Paper => "paper",
+        ExperimentRule::TopMax => "top_max",
+        ExperimentRule::Random3 => "random3",
+    }
+}
+
+fn parse_experiment_rule(value: &str) -> Result<ExperimentRule, String> {
+    match value {
+        "paper" => Ok(ExperimentRule::Paper),
+        "top_max" => Ok(ExperimentRule::TopMax),
+        "random3" => Ok(ExperimentRule::Random3),
+        _ => Err(format!("bad experiment_rule '{value}'")),
+    }
+}
+
+fn knowledge_token(k: KnowledgeProfile) -> &'static str {
+    match k {
+        KnowledgeProfile::Full => "full",
+        KnowledgeProfile::GenericOnly => "generic",
+        KnowledgeProfile::Minimal => "minimal",
+    }
+}
+
+fn parse_knowledge(value: &str) -> Result<KnowledgeProfile, String> {
+    match value {
+        "full" => Ok(KnowledgeProfile::Full),
+        "generic" => Ok(KnowledgeProfile::GenericOnly),
+        "minimal" => Ok(KnowledgeProfile::Minimal),
+        _ => Err(format!("bad knowledge '{value}'")),
     }
 }
 
@@ -335,6 +484,104 @@ rubric_infidelity = 0.2
     fn builder_sets_workload() {
         let c = RunConfig::default().with_workload("row-softmax");
         assert_eq!(c.workload, "row-softmax");
+    }
+
+    #[test]
+    fn toml_store_section() {
+        let c = RunConfig::from_toml(
+            "[store]\ndir = \"runs/a\"\ncheckpoint_every = 5\n",
+        )
+        .unwrap();
+        assert_eq!(c.store_dir.as_deref(), Some("runs/a"));
+        assert_eq!(c.checkpoint_every, 5);
+        let d = RunConfig::default();
+        assert!(d.store_dir.is_none(), "persistence is opt-in");
+        assert_eq!(d.checkpoint_every, 1);
+        assert!(d.halt_after.is_none());
+        assert!(RunConfig::from_toml("[store]\ncheckpoint_every = 0\n").is_err());
+        assert!(RunConfig::from_toml("[store]\ndir = \"\"\n").is_err());
+    }
+
+    #[test]
+    fn config_json_roundtrip_preserves_every_persistent_knob() {
+        let mut c = RunConfig::from_toml(
+            r#"
+[run]
+workload = "row-softmax"
+seed = 11
+max_submissions = 77
+[platform]
+reps_per_config = 2
+parallelism = 3
+pipeline = true
+inflight_per_lane = 2
+noise_sigma = 0.035
+cache = false
+[agents]
+selection_policy = "greedy"
+experiment_rule = "random3"
+knowledge = "minimal"
+[llm]
+temperature = 1.25
+estimate_sigma = 0.4
+rubric_infidelity = 0.11
+[store]
+dir = "runs/x"
+checkpoint_every = 3
+"#,
+        )
+        .unwrap();
+        c.include_mfma_seed = false;
+        let s = c.to_json().to_string();
+        let back =
+            RunConfig::from_json(&crate::util::json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.workload, c.workload);
+        assert_eq!(back.seed, c.seed);
+        assert_eq!(back.max_submissions, c.max_submissions);
+        assert_eq!(back.reps_per_config, c.reps_per_config);
+        assert_eq!(back.eval_parallelism, c.eval_parallelism);
+        assert_eq!(back.eval_cache, c.eval_cache);
+        assert_eq!(back.pipeline, c.pipeline);
+        assert_eq!(back.inflight_per_lane, c.inflight_per_lane);
+        assert_eq!(back.noise_sigma, c.noise_sigma);
+        assert_eq!(back.selection_policy, c.selection_policy);
+        assert_eq!(back.experiment_rule, c.experiment_rule);
+        assert_eq!(back.knowledge, c.knowledge);
+        assert_eq!(back.llm.temperature, c.llm.temperature);
+        assert_eq!(back.llm.estimate_sigma, c.llm.estimate_sigma);
+        assert_eq!(back.llm.rubric_infidelity, c.llm.rubric_infidelity);
+        assert_eq!(back.bootstrap_probing, c.bootstrap_probing);
+        assert_eq!(back.include_mfma_seed, c.include_mfma_seed);
+        assert_eq!(back.checkpoint_every, c.checkpoint_every);
+        // runtime-local knobs are deliberately not persisted
+        assert!(back.store_dir.is_none());
+        assert!(back.halt_after.is_none());
+    }
+
+    #[test]
+    fn config_json_seed_is_full_width() {
+        // the seed derives every RNG stream: a value past 2^53 must
+        // round-trip exactly (hex encoding), never via f64
+        let c = RunConfig::default().with_seed(u64::MAX - 12345);
+        let back =
+            RunConfig::from_json(&crate::util::json::parse(&c.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.seed, u64::MAX - 12345);
+    }
+
+    #[test]
+    fn config_from_json_rejects_out_of_u32_range() {
+        // same rule as genome::persist — a corrupted checkpoint must
+        // not narrow into a valid-looking config
+        let mut j = RunConfig::default().to_json();
+        if let crate::util::json::Json::Obj(ref mut m) = j {
+            m.insert(
+                "parallelism".into(),
+                crate::util::json::Json::Num(4294967297.0),
+            );
+        }
+        let err = RunConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("out of u32 range"), "{err}");
     }
 
     #[test]

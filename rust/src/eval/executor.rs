@@ -196,6 +196,20 @@ impl StreamExecutor {
         for lane in 0..lanes as u64 {
             lane_backends.push(backend.fork_lane(lane)?);
         }
+        Some(Self::from_backends(lane_backends, suite, reps_per_config))
+    }
+
+    /// Start one worker thread per pre-built lane backend. The resume
+    /// path uses this directly: it re-forks the lanes from the
+    /// checkpointed pre-spawn parent state, fast-forwards each by
+    /// replaying its committed FIFO prefix, and hands them here — the
+    /// workers then continue exactly where the crashed run's would
+    /// have (DESIGN.md §9).
+    pub fn from_backends<B: EvalBackend + Send + 'static>(
+        lane_backends: Vec<B>,
+        suite: &BenchmarkSuite,
+        reps_per_config: u32,
+    ) -> StreamExecutor {
         let lanes = lane_backends
             .into_iter()
             .map(|mut lane_backend| {
@@ -218,7 +232,7 @@ impl StreamExecutor {
                 }
             })
             .collect();
-        Some(StreamExecutor { lanes })
+        StreamExecutor { lanes }
     }
 
     pub fn lanes(&self) -> usize {
@@ -284,6 +298,27 @@ impl EvalCache {
 
     pub fn enabled(&self) -> bool {
         self.enabled
+    }
+
+    /// Rebuild a cache from checkpointed contents + counted stats (the
+    /// warm-start path: prior evaluation artifacts are reused instead
+    /// of recomputed, and hit/miss accounting continues seamlessly).
+    pub fn restore(
+        enabled: bool,
+        entries: Vec<(String, EvalOutcome)>,
+        hits: u64,
+        misses: u64,
+    ) -> Self {
+        EvalCache {
+            enabled,
+            map: if enabled {
+                entries.into_iter().collect()
+            } else {
+                HashMap::new()
+            },
+            hits,
+            misses,
+        }
     }
 
     /// Counted lookup (batch path): hits and misses feed `stats`.

@@ -27,7 +27,8 @@ use crate::workload::{GemmConfig, Workload};
 
 pub use executor::{evaluate_one, run_batch, EvalCache, StreamExecutor};
 pub use platform::{
-    BatchResult, CompletedEval, EvalPlatform, PlatformConfig, SubmissionRecord,
+    BatchResult, CompletedEval, EvalPlatform, PlatformCheckpoint, PlatformConfig,
+    SubmissionRecord,
 };
 pub use verifier::{TolerancePolicy, Verdict};
 
@@ -97,6 +98,22 @@ pub trait EvalBackend {
     {
         None
     }
+
+    /// Serializable mutable state (RNG streams, counters) for run-store
+    /// checkpoints (DESIGN.md §9). `None` — the default — means the
+    /// backend cannot be checkpointed, and runs over it refuse a
+    /// `[store]` configuration instead of persisting unre-playable
+    /// ledgers (the PJRT runtime's device state lives outside us).
+    fn state_json(&self) -> Option<crate::util::json::Json> {
+        None
+    }
+
+    /// Restore state captured by [`EvalBackend::state_json`]. After the
+    /// restore, the backend's measurement streams must continue exactly
+    /// as the checkpointed run's would have.
+    fn restore_state(&mut self, _state: &crate::util::json::Json) -> Result<(), String> {
+        Err("backend does not support checkpoint restore".into())
+    }
 }
 
 impl EvalBackend for crate::sim::SimBackend {
@@ -134,6 +151,14 @@ impl EvalBackend for crate::sim::SimBackend {
 
     fn workload(&self) -> std::sync::Arc<dyn crate::workload::Workload> {
         crate::sim::SimBackend::workload(self).clone()
+    }
+
+    fn state_json(&self) -> Option<crate::util::json::Json> {
+        Some(crate::sim::SimBackend::state_json(self))
+    }
+
+    fn restore_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
+        crate::sim::SimBackend::restore_state_json(self, state)
     }
 }
 

@@ -58,6 +58,10 @@ pub struct SubmissionRecord {
     pub index: u64,
     /// Simulated wall-clock time (s) at which results became available.
     pub completed_at_s: f64,
+    /// Virtual lane that evaluated the submission. Checkpoint restores
+    /// use it to replay each stream lane's committed FIFO prefix
+    /// (DESIGN.md §9).
+    pub lane: u32,
     pub outcome: EvalOutcome,
 }
 
@@ -90,6 +94,29 @@ pub struct CompletedEval {
     pub completed_at_s: f64,
 }
 
+/// Platform accounting captured into (and restored from) a run-store
+/// checkpoint, rolled back to the last committed completion — see
+/// [`EvalPlatform::checkpoint_state`]. Serialization lives with the
+/// store ([`crate::store`]); backend state travels as the opaque JSON
+/// the backend's [`super::EvalBackend::state_json`] produced.
+#[derive(Debug, Clone)]
+pub struct PlatformCheckpoint {
+    pub lane_busy_until: Vec<f64>,
+    pub busy_lane_s: f64,
+    pub next_ticket: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub backend: crate::util::json::Json,
+    /// Parent backend state just before the stream executor forked its
+    /// lane workers (present iff `stream_threaded`).
+    pub prespawn_backend: Option<crate::util::json::Json>,
+    /// Whether the checkpointed run had live stream lane workers.
+    pub stream_threaded: bool,
+    /// Submission-log length at stream-worker spawn time: entries from
+    /// here on replay onto re-forked lane backends at restore.
+    pub stream_log_start: u64,
+}
+
 /// How stream submissions are evaluated (decided once, at the first
 /// [`EvalPlatform::submit_stream`] call).
 enum StreamState {
@@ -118,6 +145,17 @@ enum PendingKind {
         submission_index: u64,
         fingerprint: String,
         inline_outcome: Option<EvalOutcome>,
+        /// Lane-clock and busy-time values as of just before this
+        /// dispatch: a checkpoint unwinds in-flight work by restoring
+        /// these recorded values (exact — no float subtraction).
+        prev_lane_clock: f64,
+        prev_busy_lane_s: f64,
+        /// Inline path only: parent backend state just before this
+        /// dispatch's inline evaluation. Inline evaluation advances the
+        /// parent's noise stream at *submit* time, so unwinding the
+        /// submission must also rewind the backend to here (threaded
+        /// dispatches never touch the parent — `None`).
+        prev_backend_state: Option<crate::util::json::Json>,
     },
     /// Served from the result cache at submit time (free).
     Cached { outcome: EvalOutcome },
@@ -148,6 +186,21 @@ pub struct EvalPlatform<B: EvalBackend> {
     stream: StreamState,
     pending: Vec<PendingEval>,
     next_ticket: u64,
+    /// Capture backend-state snapshots at the points a checkpoint
+    /// would need them (stream spawn, inline dispatches). Off by
+    /// default — store-less runs pay nothing on the submission path;
+    /// enabled by [`EvalPlatform::enable_state_capture`] when a run
+    /// store is configured.
+    capture_backend_state: bool,
+    /// Backend state captured just before the stream executor forked
+    /// its lane workers — checkpoints carry it so a resume can re-fork
+    /// identical lane backends (DESIGN.md §9).
+    prespawn_state: Option<crate::util::json::Json>,
+    /// Submission-log length at the moment the stream workers spawned:
+    /// log entries from here on were evaluated on lane backends (and
+    /// are replayed per lane on restore); earlier entries ran inline on
+    /// the parent backend (covered by its own state snapshot).
+    stream_log_start: u64,
 }
 
 impl<B: EvalBackend> EvalPlatform<B> {
@@ -165,7 +218,18 @@ impl<B: EvalBackend> EvalPlatform<B> {
             stream: StreamState::Idle,
             pending: Vec::new(),
             next_ticket: 0,
+            capture_backend_state: false,
+            prespawn_state: None,
+            stream_log_start: 0,
         }
+    }
+
+    /// Switch on checkpoint-state capture (see the field docs). Must be
+    /// called before any stream submission whose state a checkpoint may
+    /// need — [`crate::scientist::ScientistRun`] enables it at
+    /// construction whenever a `[store]` is configured.
+    pub fn enable_state_capture(&mut self) {
+        self.capture_backend_state = true;
     }
 
     /// Use a non-default feedback suite (the PJRT backend needs the
@@ -420,33 +484,54 @@ impl<B: EvalBackend> EvalPlatform<B> {
             self.submissions()
         );
         if matches!(self.stream, StreamState::Idle) {
+            // capture the pre-fork backend state first: a checkpoint
+            // needs it to re-fork identical lane workers on resume
+            let prespawn = if self.capture_backend_state {
+                self.backend.state_json()
+            } else {
+                None
+            };
             self.stream = match StreamExecutor::spawn(
                 &mut self.backend,
                 &self.feedback_suite,
                 self.config.reps_per_config,
                 self.config.parallelism,
             ) {
-                Some(executor) => StreamState::Threaded(executor),
+                Some(executor) => {
+                    self.prespawn_state = prespawn;
+                    self.stream_log_start = self.log.len() as u64;
+                    StreamState::Threaded(executor)
+                }
                 None => StreamState::Inline,
             };
         }
         let cost = self.backend.submission_cost_s();
         let lane = self.earliest_free_lane();
+        let prev_lane_clock = self.lane_busy_until[lane];
+        let prev_busy_lane_s = self.busy_lane_s;
         self.lane_busy_until[lane] += cost;
         self.busy_lane_s += cost;
         let completed_at_s = self.lane_busy_until[lane];
         let submission_index = self.submissions() + pending_runs;
-        let inline_outcome = match &self.stream {
+        let (inline_outcome, prev_backend_state) = match &self.stream {
             StreamState::Threaded(executor) => {
                 executor.dispatch(lane, ticket, genome.clone());
-                None
+                (None, None)
             }
-            StreamState::Inline => Some(executor::evaluate_one(
-                &mut self.backend,
-                &self.feedback_suite,
-                self.config.reps_per_config,
-                genome,
-            )),
+            StreamState::Inline => {
+                let prev = if self.capture_backend_state {
+                    self.backend.state_json()
+                } else {
+                    None
+                };
+                let outcome = executor::evaluate_one(
+                    &mut self.backend,
+                    &self.feedback_suite,
+                    self.config.reps_per_config,
+                    genome,
+                );
+                (Some(outcome), prev)
+            }
             StreamState::Idle => unreachable!("stream mode decided above"),
         };
         self.pending.push(PendingEval {
@@ -457,6 +542,9 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 submission_index,
                 fingerprint: fp,
                 inline_outcome,
+                prev_lane_clock,
+                prev_busy_lane_s,
+                prev_backend_state,
             },
         });
         ticket
@@ -511,6 +599,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 submission_index,
                 fingerprint,
                 inline_outcome,
+                ..
             } => {
                 let outcome = match inline_outcome {
                     Some(outcome) => outcome,
@@ -535,6 +624,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 self.log.push(SubmissionRecord {
                     index: submission_index,
                     completed_at_s: p.completed_at_s,
+                    lane: lane as u32,
                     outcome: outcome.clone(),
                 });
                 Some(CompletedEval {
@@ -655,6 +745,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
         self.log.push(SubmissionRecord {
             index,
             completed_at_s,
+            lane: lane as u32,
             outcome,
         });
         (index, completed_at_s)
@@ -669,6 +760,188 @@ impl<B: EvalBackend> EvalPlatform<B> {
     /// (hits, misses) of counted cache lookups on the batch path.
     pub fn cache_stats(&self) -> (u64, u64) {
         self.cache.stats()
+    }
+
+    /// Platform accounting for a run-store checkpoint, **rolled back to
+    /// the last committed completion** (DESIGN.md §9): in-flight stream
+    /// submissions are unwound exactly — lane clocks and busy time
+    /// restore the recorded pre-dispatch values, their quota/ticket/
+    /// cache-stat effects are subtracted — because the scheduler
+    /// re-submits the corresponding experiments on resume through the
+    /// normal path, which re-derives identical lanes, tickets, and
+    /// clocks. Errors when the backend cannot serialize its state.
+    ///
+    /// Invariant the busy-time rollback relies on (and per-lane clocks
+    /// do not): committed submissions are a *global* dispatch-order
+    /// prefix of the in-flight ones, which holds because
+    /// [`super::EvalBackend::submission_cost_s`] is constant per
+    /// backend — uniform costs make virtual completion order equal
+    /// dispatch order. A backend with varying per-call costs would
+    /// need per-commit busy accounting instead of the oldest-pending
+    /// snapshot.
+    pub fn checkpoint_state(&self) -> Result<PlatformCheckpoint, String> {
+        if !self.capture_backend_state {
+            return Err(
+                "platform state capture is disabled (call enable_state_capture before \
+                 submitting anything a checkpoint must cover)"
+                    .into(),
+            );
+        }
+        // Inline in-flight dispatches already advanced the parent's
+        // noise stream at submit time; rewinding them means rewinding
+        // the backend to the oldest dispatch's recorded pre-state.
+        let backend = self
+            .pending
+            .iter()
+            .find_map(|p| match &p.kind {
+                PendingKind::Run {
+                    prev_backend_state: Some(s),
+                    ..
+                } => Some(s.clone()),
+                _ => None,
+            })
+            .or_else(|| self.backend.state_json())
+            .ok_or_else(|| {
+                format!("backend '{}' does not support checkpointing", self.backend.name())
+            })?;
+        let mut lanes = self.lane_busy_until.clone();
+        let mut busy = self.busy_lane_s;
+        let mut pending_hits = 0u64;
+        let mut pending_misses = 0u64;
+        // unwind in reverse dispatch order so stacked dispatches on one
+        // lane restore the oldest recorded value; busy time rolls back
+        // to the oldest in-flight run's recorded snapshot. Stat
+        // rollback mirrors submit_stream's counting exactly: a Run's
+        // miss (and a Cached entry's hit) is only ever counted when the
+        // cache is enabled — with it disabled, stats stay (0, 0).
+        let counted = self.cache.enabled();
+        for p in self.pending.iter().rev() {
+            match &p.kind {
+                PendingKind::Run {
+                    lane,
+                    prev_lane_clock,
+                    prev_busy_lane_s,
+                    ..
+                } => {
+                    lanes[*lane] = *prev_lane_clock;
+                    busy = *prev_busy_lane_s;
+                    pending_misses += counted as u64;
+                }
+                PendingKind::Cached { .. } => pending_hits += 1,
+                PendingKind::Alias { .. } => {}
+            }
+        }
+        let (hits, misses) = self.cache.stats();
+        Ok(PlatformCheckpoint {
+            lane_busy_until: lanes,
+            busy_lane_s: busy,
+            next_ticket: self.next_ticket - self.pending.len() as u64,
+            cache_hits: hits - pending_hits,
+            cache_misses: misses - pending_misses,
+            backend,
+            prespawn_backend: self.prespawn_state.clone(),
+            stream_threaded: matches!(self.stream, StreamState::Threaded(_)),
+            stream_log_start: self.stream_log_start,
+        })
+    }
+
+    /// Restore a freshly constructed platform from a checkpoint: the
+    /// submission log (journal-derived, in submission order), the eval
+    /// cache contents, and — when the crashed run had live stream
+    /// workers — re-forked lane backends fast-forwarded by replaying
+    /// each lane's committed FIFO prefix (`committed_genomes` aligns
+    /// with `log`). Replay outcomes are compared against the ledger, so
+    /// a corrupted journal or non-deterministic backend fails loudly
+    /// instead of silently diverging.
+    pub fn restore_checkpoint(
+        &mut self,
+        cp: &PlatformCheckpoint,
+        log: Vec<SubmissionRecord>,
+        cache_entries: Vec<(String, EvalOutcome)>,
+        committed_genomes: &[KernelGenome],
+    ) -> Result<(), String>
+    where
+        B: Send + 'static,
+    {
+        assert!(
+            self.log.is_empty() && self.pending.is_empty(),
+            "restore_checkpoint() expects a freshly constructed platform"
+        );
+        if cp.lane_busy_until.len() != self.lane_busy_until.len() {
+            return Err(format!(
+                "checkpoint has {} lanes but the platform is configured for {} \
+                 (platform.parallelism must match the checkpointed run)",
+                cp.lane_busy_until.len(),
+                self.lane_busy_until.len()
+            ));
+        }
+        if committed_genomes.len() != log.len() {
+            return Err(format!(
+                "{} committed genomes for {} log entries",
+                committed_genomes.len(),
+                log.len()
+            ));
+        }
+        if cp.stream_threaded {
+            // re-fork the lane workers from the pre-spawn parent state,
+            // then advance each by its committed jobs: a lane backend's
+            // state is a pure function of (fork state, FIFO prefix)
+            let prespawn = cp
+                .prespawn_backend
+                .as_ref()
+                .ok_or("checkpoint marks live stream workers but has no pre-spawn state")?;
+            self.backend.restore_state(prespawn)?;
+            let lanes = self.config.parallelism as usize;
+            let mut lane_backends = Vec::with_capacity(lanes);
+            for lane in 0..lanes as u64 {
+                lane_backends.push(
+                    self.backend
+                        .fork_lane(lane)
+                        .ok_or("backend no longer supports lane forking")?,
+                );
+            }
+            for (i, rec) in log.iter().enumerate().skip(cp.stream_log_start as usize) {
+                let lane = rec.lane as usize;
+                if lane >= lane_backends.len() {
+                    return Err(format!("log entry {i} names out-of-range lane {lane}"));
+                }
+                let replayed = executor::evaluate_one(
+                    &mut lane_backends[lane],
+                    &self.feedback_suite,
+                    self.config.reps_per_config,
+                    &committed_genomes[i],
+                );
+                if replayed != rec.outcome {
+                    return Err(format!(
+                        "ledger/backend divergence replaying submission {i} on lane {lane}: \
+                         journal says {:?}, replay produced {replayed:?}",
+                        rec.outcome
+                    ));
+                }
+            }
+            self.stream = StreamState::Threaded(StreamExecutor::from_backends(
+                lane_backends,
+                &self.feedback_suite,
+                self.config.reps_per_config,
+            ));
+            self.prespawn_state = Some(prespawn.clone());
+        }
+        // parent backend continues from its checkpointed stream state;
+        // the resumed platform keeps checkpointing, so capture stays on
+        self.backend.restore_state(&cp.backend)?;
+        self.capture_backend_state = true;
+        self.stream_log_start = cp.stream_log_start;
+        self.log = log;
+        self.lane_busy_until = cp.lane_busy_until.clone();
+        self.busy_lane_s = cp.busy_lane_s;
+        self.next_ticket = cp.next_ticket;
+        self.cache = EvalCache::restore(
+            self.config.cache_results,
+            cache_entries,
+            cp.cache_hits,
+            cp.cache_misses,
+        );
+        Ok(())
     }
 
     /// Final leaderboard score: geomean over a (typically 18-size)
@@ -1123,6 +1396,146 @@ mod tests {
         // every lane, not on the idle lane at 90 s
         p.submit(&jobs[0]);
         assert!((p.wall_clock_s() - 270.0).abs() < 1e-9);
+    }
+
+    /// Drive `n` stream submissions + drains on a fresh platform,
+    /// checkpointing after `ckpt_at` completions, then restore a second
+    /// platform from that checkpoint and check both finish the
+    /// remaining jobs bit-identically.
+    fn stream_checkpoint_roundtrip(lanes: u32, ckpt_at: usize) {
+        let jobs = crate::test_support::distinct_genomes(8);
+        let mk = || {
+            let mut p = EvalPlatform::new(
+                SimBackend::new(33),
+                PlatformConfig {
+                    parallelism: lanes,
+                    ..Default::default()
+                },
+            );
+            p.enable_state_capture();
+            p
+        };
+        // reference: uninterrupted run
+        let mut live = mk();
+        let mut live_outcomes = Vec::new();
+        for g in &jobs {
+            live.submit_stream(g);
+        }
+        let mut cp = None;
+        let mut resubmit_from = 0usize;
+        for i in 0..jobs.len() {
+            let done = live.poll_completed().unwrap();
+            live_outcomes.push(done.outcome);
+            if i + 1 == ckpt_at {
+                cp = Some(live.checkpoint_state().unwrap());
+                // everything not yet committed gets re-submitted on the
+                // restored platform, as the scheduler would on resume
+                resubmit_from = i + 1;
+            }
+        }
+        let cp = cp.unwrap();
+        // restored platform: rebuild the log + cache from the committed
+        // prefix (what the journal would hold)
+        let committed: Vec<KernelGenome> = jobs[..resubmit_from].to_vec();
+        let log: Vec<SubmissionRecord> = live.log()[..resubmit_from].to_vec();
+        let cache_entries: Vec<(String, EvalOutcome)> = log
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (committed[i].fingerprint(), r.outcome.clone()))
+            .collect();
+        let mut resumed = mk();
+        resumed
+            .restore_checkpoint(&cp, log, cache_entries, &committed)
+            .unwrap();
+        assert_eq!(resumed.submissions(), resubmit_from as u64);
+        for g in &jobs[resubmit_from..] {
+            resumed.submit_stream(g);
+        }
+        let mut resumed_outcomes = Vec::new();
+        while let Some(done) = resumed.poll_completed() {
+            resumed_outcomes.push(done.outcome);
+        }
+        assert_eq!(
+            &live_outcomes[resubmit_from..],
+            &resumed_outcomes[..],
+            "lanes={lanes} ckpt_at={ckpt_at}: resumed tail must be bit-identical"
+        );
+        assert_eq!(resumed.submissions(), live.submissions());
+        assert_eq!(resumed.wall_clock_s(), live.wall_clock_s());
+        assert_eq!(resumed.cache_stats(), live.cache_stats());
+        let live_log: Vec<(u64, f64, u32)> =
+            live.log().iter().map(|r| (r.index, r.completed_at_s, r.lane)).collect();
+        let resumed_log: Vec<(u64, f64, u32)> =
+            resumed.log().iter().map(|r| (r.index, r.completed_at_s, r.lane)).collect();
+        assert_eq!(live_log, resumed_log);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_inline_stream() {
+        stream_checkpoint_roundtrip(1, 3);
+        stream_checkpoint_roundtrip(1, 7);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_threaded_stream() {
+        stream_checkpoint_roundtrip(3, 2);
+        stream_checkpoint_roundtrip(3, 5);
+    }
+
+    #[test]
+    fn checkpoint_unwinds_in_flight_work_exactly() {
+        // checkpoint with jobs still in flight: the rolled-back clocks,
+        // tickets, and cache stats equal a platform that never
+        // dispatched them
+        let jobs = crate::test_support::distinct_genomes(5);
+        let mut p = EvalPlatform::new(
+            SimBackend::new(9),
+            PlatformConfig {
+                parallelism: 2,
+                ..Default::default()
+            },
+        );
+        p.enable_state_capture();
+        for g in &jobs {
+            p.submit_stream(g);
+        }
+        p.poll_completed().unwrap(); // one committed, four in flight
+        let cp = p.checkpoint_state().unwrap();
+        assert_eq!(cp.next_ticket, 1);
+        assert_eq!(cp.cache_misses, 1, "only the committed run's counted miss");
+        // one committed 90 s submission on lane 0; lane 1 rolled back
+        assert_eq!(cp.lane_busy_until, vec![90.0, 0.0]);
+        assert_eq!(cp.busy_lane_s, 90.0);
+        assert!(cp.stream_threaded);
+        assert!(cp.prespawn_backend.is_some());
+    }
+
+    #[test]
+    fn checkpoint_restore_rejects_lane_mismatch_and_divergence() {
+        let jobs = crate::test_support::distinct_genomes(3);
+        let mut p = EvalPlatform::new(SimBackend::new(4), PlatformConfig::default());
+        p.enable_state_capture();
+        for g in &jobs {
+            p.submit_stream(g);
+        }
+        while p.poll_completed().is_some() {}
+        let cp = p.checkpoint_state().unwrap();
+        let mut wrong_lanes = EvalPlatform::new(
+            SimBackend::new(4),
+            PlatformConfig {
+                parallelism: 2,
+                ..Default::default()
+            },
+        );
+        assert!(wrong_lanes
+            .restore_checkpoint(&cp, p.log().to_vec(), vec![], &jobs)
+            .unwrap_err()
+            .contains("lanes"));
+        let mut short = EvalPlatform::new(SimBackend::new(4), PlatformConfig::default());
+        assert!(short
+            .restore_checkpoint(&cp, p.log().to_vec(), vec![], &jobs[..1])
+            .unwrap_err()
+            .contains("log entries"));
     }
 
     #[test]

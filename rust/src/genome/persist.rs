@@ -35,10 +35,13 @@ impl KernelGenome {
 
     pub fn from_json(v: &Json) -> Result<KernelGenome, String> {
         let u32_field = |k: &str| -> Result<u32, String> {
-            v.get(k)
+            let raw = v
+                .get(k)
                 .and_then(|x| x.as_u64())
-                .map(|x| x as u32)
-                .ok_or_else(|| format!("missing/invalid field {k}"))
+                .ok_or_else(|| format!("missing/invalid field {k}"))?;
+            // a hand-edited/corrupted ledger must not narrow into a
+            // valid-looking genome: out-of-range values are errors
+            u32::try_from(raw).map_err(|_| format!("field {k} out of u32 range: {raw}"))
         };
         let bool_field = |k: &str| -> Result<bool, String> {
             v.get(k)
@@ -123,6 +126,27 @@ mod tests {
     fn from_json_rejects_missing_field() {
         let v = json::parse(r#"{"block_m": 32}"#).unwrap();
         assert!(KernelGenome::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_out_of_range_u32() {
+        // 2^32 used to truncate to block_m = 0 via `as u32`; now it is
+        // a hard error (the ledger makes corrupted JSON a real input)
+        let mut j = seeds::naive_hip().to_json();
+        if let Json::Obj(ref mut m) = j {
+            m.insert("block_m".into(), Json::Num(4294967296.0));
+        }
+        let err = KernelGenome::from_json(&j).unwrap_err();
+        assert!(err.contains("out of u32 range"), "{err}");
+        // u32::MAX itself still round-trips (range check, not a clamp)
+        let mut j = seeds::naive_hip().to_json();
+        if let Json::Obj(ref mut m) = j {
+            m.insert("lds_pad".into(), Json::Num(4294967295.0));
+        }
+        assert_eq!(
+            KernelGenome::from_json(&j).unwrap().lds_pad,
+            u32::MAX
+        );
     }
 
     #[test]

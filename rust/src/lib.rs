@@ -41,6 +41,12 @@
 //! duplicate genomes free. See `README.md` for the crate layout, the
 //! tier-1 verify command, and how to run every bench and example.
 //!
+//! Runs can be made **durable**: with a `[store] dir` configured,
+//! every experiment journals to an append-only ledger and the run
+//! checkpoints its RNG streams, platform clocks, and eval cache —
+//! `resume` continues a crashed campaign bit-identically and `replay`
+//! re-renders it without evaluating ([`store`], `DESIGN.md` §9).
+//!
 //! The loop is **workload-generic**: every scenario-specific piece —
 //! benchmark suites, seed genomes, verifier tolerance, the analytic
 //! cost model — lives behind the [`workload::Workload`] trait, and
@@ -75,6 +81,7 @@ pub mod test_support;
 pub mod util;
 pub mod scientist;
 pub mod sim;
+pub mod store;
 pub mod workload;
 
 /// Plural alias for the workload registry module (`workloads::registry()`

@@ -3,6 +3,10 @@
 //! Subcommands:
 //!   run         run the scientist loop on the simulated MI300 platform
 //!   campaign    run several workloads' loops concurrently
+//!   resume      continue a crashed/halted run (or campaign) from its
+//!               `--store` directory, bit-identically (DESIGN.md §9)
+//!   replay      re-render a persisted run's transcripts/curve from its
+//!               journal without evaluating anything
 //!   workloads   list the workload registry
 //!   table1      regenerate the paper's Table 1 comparison
 //!   leaderboard score the canonical genomes on the 18-size suite
@@ -13,8 +17,10 @@
 //! `run`, `campaign`, `baseline`, and `inspect` accept `--workload
 //! <name>` (any registry key from `workloads`); the default is the
 //! paper's fp8 GEMM. `run` and `campaign` also accept
-//! `--parallelism <lanes>` (overrides `platform.parallelism`) and
-//! `--pipeline true|false` (the steady-state scheduler, DESIGN.md §8);
+//! `--parallelism <lanes>` (overrides `platform.parallelism`),
+//! `--pipeline true|false` (the steady-state scheduler, DESIGN.md §8),
+//! `--store <dir>` (the durable run ledger, `[store] dir`), and
+//! `--halt-after <N>` (testing: simulate a crash after N submissions);
 //! like `--workload`, the flags win over the config file.
 //!
 //! Arguments use `--key value` pairs (offline build: no clap; parsing
@@ -87,11 +93,22 @@ fn load_config(flags: &HashMap<String, String>) -> Result<RunConfig, String> {
             other => return Err(format!("bad --pipeline '{other}' (want true|false)")),
         };
     }
+    if let Some(dir) = flags.get("store") {
+        if dir.is_empty() {
+            return Err("bad --store (want a directory)".into());
+        }
+        cfg.store_dir = Some(dir.clone());
+    }
+    if let Some(halt) = flags.get("halt-after") {
+        cfg.halt_after = Some(
+            halt.parse()
+                .map_err(|_| "bad --halt-after (want a submission count)")?,
+        );
+    }
     Ok(cfg)
 }
 
-fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
-    let cfg = load_config(flags)?;
+fn print_run_header(cfg: &RunConfig) {
     println!(
         "scientist run: workload={} seed={} budget={} lanes={} scheduler={} backend=mi300-sim",
         cfg.workload,
@@ -100,8 +117,13 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         cfg.eval_parallelism,
         if cfg.pipeline { "pipeline" } else { "lockstep" }
     );
-    let mut run = ScientistRun::new(cfg)?;
-    let outcome = run.run_to_completion()?;
+}
+
+fn print_run_report(
+    run: &gpu_kernel_scientist::scientist::ScientistRun<SimBackend>,
+    outcome: &gpu_kernel_scientist::scientist::RunOutcome,
+    flags: &HashMap<String, String>,
+) -> Result<(), String> {
     for log in &run.logs {
         println!("{}", report::render_iteration(log));
     }
@@ -135,6 +157,115 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         println!("population saved to {path}");
     }
     Ok(())
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = load_config(flags)?;
+    print_run_header(&cfg);
+    let mut run = ScientistRun::new(cfg)?;
+    let outcome = run.run_to_completion()?;
+    if run.halted() {
+        // only point at `resume` when something was actually persisted
+        let hint = match &run.config.store_dir {
+            Some(dir) => format!("; continue with `resume --store {dir}`"),
+            None => "; nothing was persisted (no --store)".into(),
+        };
+        println!(
+            "run halted after {} submissions (simulated crash — no final checkpoint){hint}",
+            outcome.submissions
+        );
+        return Ok(());
+    }
+    print_run_report(&run, &outcome, flags)
+}
+
+fn cmd_resume(flags: &HashMap<String, String>) -> Result<(), String> {
+    use gpu_kernel_scientist::scientist::campaign::resume_campaign;
+    let dir = flags
+        .get("store")
+        .ok_or("resume requires --store <dir>")?;
+    let halt_after = match flags.get("halt-after") {
+        Some(halt) => Some(
+            halt.parse::<u64>()
+                .map_err(|_| "bad --halt-after (want a submission count)")?,
+        ),
+        None => None,
+    };
+    let path = Path::new(dir);
+    if gpu_kernel_scientist::store::read_campaign_manifest(path)?.is_some() {
+        println!("resuming campaign from {dir}");
+        let outcome = resume_campaign(path, halt_after)?;
+        println!("{}", report::render_campaign(&outcome));
+        return Ok(());
+    }
+    let mut run = ScientistRun::resume(path)?;
+    // --halt-after applies to the resumed leg too (halt_after is never
+    // persisted): crash-recovery of a resumed run is itself testable
+    run.config.halt_after = halt_after;
+    // one provenance line, then output identical to an uninterrupted
+    // `run` (the CI resume-equivalence smoke diffs the two)
+    println!(
+        "resumed from {dir}: {} ledger entries, {} submissions committed",
+        run.population.len(),
+        run.platform.submissions()
+    );
+    print_run_header(&run.config);
+    let outcome = run.run_to_completion()?;
+    if run.halted() {
+        println!(
+            "run halted again after {} submissions; continue with `resume --store {dir}`",
+            outcome.submissions
+        );
+        return Ok(());
+    }
+    print_run_report(&run, &outcome, flags)
+}
+
+fn print_replay(dir: &Path, flags: &HashMap<String, String>) -> Result<(), String> {
+    let r = gpu_kernel_scientist::store::replay(dir)?;
+    println!(
+        "replay of {}: workload={} seed={} | {} ledger entries over {} committed submissions{}",
+        dir.display(),
+        r.workload,
+        r.config.seed,
+        r.population.len(),
+        r.submissions,
+        if r.torn_tail {
+            " (torn final journal line dropped)"
+        } else {
+            ""
+        }
+    );
+    for log in &r.logs {
+        println!("{}", report::render_iteration(log));
+    }
+    match r.population.best() {
+        Some(best) => println!(
+            "\nbest kernel {}: feedback geomean {:.1} us",
+            best.id,
+            best.score().unwrap_or(f64::NAN)
+        ),
+        None => println!("\nno successful kernel in the ledger"),
+    }
+    println!("{}", report::render_convergence("replay", &r.curve));
+    if flags.contains_key("lineage") {
+        println!("== lineage ==\n{}", report::lineage::render_tree(&r.population));
+    }
+    Ok(())
+}
+
+fn cmd_replay(flags: &HashMap<String, String>) -> Result<(), String> {
+    let dir = flags
+        .get("store")
+        .ok_or("replay requires --store <dir>")?;
+    let path = Path::new(dir);
+    if let Some(workloads) = gpu_kernel_scientist::store::read_campaign_manifest(path)? {
+        for w in &workloads {
+            print_replay(&path.join(w), flags)?;
+        }
+        return Ok(());
+    }
+    print_replay(path, flags)
 }
 
 fn cmd_workloads() -> Result<(), String> {
@@ -351,6 +482,8 @@ fn main() {
     let result = match cmd {
         "run" => cmd_run(&flags),
         "campaign" => cmd_campaign(&flags),
+        "resume" => cmd_resume(&flags),
+        "replay" => cmd_replay(&flags),
         "workloads" => cmd_workloads(),
         "table1" => cmd_table1(&flags),
         "leaderboard" => cmd_leaderboard(),
@@ -359,9 +492,10 @@ fn main() {
         "eval-pjrt" => cmd_eval_pjrt(&flags),
         _ => {
             eprintln!(
-                "usage: kernel-scientist <run|campaign|workloads|table1|leaderboard|baseline|inspect|eval-pjrt> \
+                "usage: kernel-scientist <run|campaign|resume|replay|workloads|table1|leaderboard|baseline|inspect|eval-pjrt> \
                  [--workload name] [--workloads a,b,c] [--lineage true] \
                  [--seed N] [--budget N] [--parallelism N] [--pipeline true|false] \
+                 [--store dir] [--halt-after N] \
                  [--config file.toml] [--tuner random|hillclimb|anneal] \
                  [--seed-kernel name] [--artifacts dir] [--save-population file.jsonl]"
             );

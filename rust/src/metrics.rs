@@ -4,10 +4,16 @@
 
 
 /// Geometric mean — the leaderboard aggregation (§4.5). Panics on an
-/// empty slice; non-positive entries are clamped to a tiny epsilon
-/// (timings are always positive in practice).
+/// empty slice. Timings must be positive and finite: a NaN/inf/zero
+/// entry is a platform bug, surfaced by the debug assertion instead of
+/// silently skewing the leaderboard (release builds clamp to a tiny
+/// epsilon as a last resort).
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty(), "geomean of empty slice");
+    debug_assert!(
+        xs.iter().all(|x| x.is_finite() && *x > 0.0),
+        "geomean over non-positive/non-finite timings: {xs:?}"
+    );
     let log_sum: f64 = xs.iter().map(|&x| x.max(1e-12).ln()).sum();
     (log_sum / xs.len() as f64).exp()
 }
@@ -27,11 +33,13 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Percentile via linear interpolation (p in [0, 100]).
+/// Percentile via linear interpolation (p in [0, 100]). Total order
+/// over f64 (NaN sorts last) — a NaN timing must not panic the
+/// reporting path mid-run.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -150,6 +158,21 @@ mod tests {
         assert!((percentile(&xs, 100.0) - 5.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 3.0).abs() < 1e-12);
         assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_total_order_survives_nan() {
+        // NaN sorts last under total_cmp instead of panicking the sort
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 100.0 / 3.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive/non-finite")]
+    #[cfg(debug_assertions)]
+    fn geomean_surfaces_non_finite_timings() {
+        geomean(&[10.0, f64::NAN]);
     }
 
     #[test]

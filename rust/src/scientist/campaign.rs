@@ -17,6 +17,14 @@
 //! its own `RunConfig`, so results are bit-identical to running each
 //! workload standalone, regardless of thread interleaving (locked in by
 //! the tests below).
+//!
+//! With a `[store] dir` configured, each workload journals to its own
+//! per-workload ledger under `<dir>/<workload>/` (eval caches and RNG
+//! streams are per-workload, so ledgers must be too) and the campaign
+//! writes a `campaign.json` manifest naming the members in request
+//! order — [`resume_campaign`] continues every member after a crash.
+
+use std::path::Path;
 
 use super::{RunOutcome, ScientistRun};
 use crate::config::RunConfig;
@@ -86,6 +94,11 @@ pub fn run_campaign(config: &CampaignConfig) -> Result<CampaignOutcome, String> 
             return Err(format!("unknown workload '{name}'"));
         }
     }
+    if let Some(dir) = &config.base.store_dir {
+        // manifest first: a crash during the very first iteration must
+        // still leave a resumable campaign directory
+        crate::store::write_campaign_manifest(Path::new(dir), &config.workloads)?;
+    }
     let runs: Vec<Result<WorkloadRunResult, String>> = std::thread::scope(|scope| {
         let handles: Vec<_> = config
             .workloads
@@ -93,10 +106,59 @@ pub fn run_campaign(config: &CampaignConfig) -> Result<CampaignOutcome, String> 
             .map(|name| {
                 let cfg = RunConfig {
                     workload: name.clone(),
+                    // per-workload ledger: caches and RNG streams are
+                    // workload-private, so persistence is too
+                    store_dir: config
+                        .base
+                        .store_dir
+                        .as_ref()
+                        .map(|d| crate::store::campaign_member_dir(d, name)),
                     ..config.base.clone()
                 };
                 scope.spawn(move || -> Result<WorkloadRunResult, String> {
                     let mut run = ScientistRun::new(cfg)?;
+                    let outcome = run.run_to_completion()?;
+                    Ok(WorkloadRunResult {
+                        workload: name.clone(),
+                        cache_stats: run.platform.cache_stats(),
+                        outcome,
+                    })
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("campaign worker panicked"))
+            .collect()
+    });
+    let mut results = Vec::with_capacity(runs.len());
+    for r in runs {
+        results.push(r?);
+    }
+    Ok(CampaignOutcome { results })
+}
+
+/// Resume every member of a crashed campaign from `<dir>` (one
+/// [`ScientistRun::resume`] per manifest entry, concurrently — the
+/// same thread-per-workload shape as [`run_campaign`]) and run each to
+/// completion. Members that already finished simply recompute their
+/// outcome from the final checkpoint. `halt_after` re-arms the
+/// simulated-crash knob on every member (it is never persisted), so
+/// repeated crash-recovery is testable for campaigns too.
+pub fn resume_campaign(dir: &Path, halt_after: Option<u64>) -> Result<CampaignOutcome, String> {
+    let workloads = crate::store::read_campaign_manifest(dir)?
+        .ok_or_else(|| format!("{}: no campaign manifest", dir.display()))?;
+    if workloads.is_empty() {
+        return Err("campaign manifest has no workloads".into());
+    }
+    let runs: Vec<Result<WorkloadRunResult, String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = workloads
+            .iter()
+            .map(|name| {
+                let member = dir.join(name);
+                scope.spawn(move || -> Result<WorkloadRunResult, String> {
+                    let mut run = ScientistRun::resume(&member)?;
+                    run.config.halt_after = halt_after;
                     let outcome = run.run_to_completion()?;
                     Ok(WorkloadRunResult {
                         workload: name.clone(),

@@ -40,17 +40,21 @@ pub mod campaign;
 pub mod pipeline;
 
 use std::collections::HashSet;
+use std::path::Path;
 use std::sync::Arc;
 
 pub use pipeline::PipelineStats;
 use pipeline::SchedCounters;
 
-use crate::agents::{AgentSuite, KernelWrite, Selection};
+use crate::agents::{AgentSuite, FindingsDoc, KernelWrite, Selection};
 use crate::config::RunConfig;
 use crate::eval::{EvalBackend, EvalPlatform, PlatformConfig};
 use crate::metrics::ConvergenceCurve;
 use crate::population::{EvalOutcome, Individual, Population};
 use crate::sim::SimBackend;
+use crate::store::{
+    journal, Checkpoint, ExperimentRecord, JournalRecord, PendingPlan, PlanRecord, RunStore,
+};
 use crate::workload::{self, Workload};
 
 /// One iteration's transcript (what the paper's appendices show).
@@ -96,6 +100,56 @@ pub struct ScientistRun<B: EvalBackend> {
     /// Scheduler counters (planning rounds, duplicate replans, depth
     /// samples) shared by the lockstep and pipeline drivers.
     sched: SchedCounters,
+    /// Durable run store (journal + checkpoints, DESIGN.md §9); `None`
+    /// unless the config names a `[store] dir`.
+    store: Option<RunStore>,
+    /// Scheduler state reconstructed by [`ScientistRun::resume`],
+    /// consumed by the first `run_to_completion` call.
+    resume_state: Option<ResumeState>,
+    /// Set when `config.halt_after` aborted the scheduler (simulated
+    /// crash: no final checkpoint was written).
+    halted: bool,
+}
+
+/// Mid-run scheduler state carried across a resume: the stall streak,
+/// whether planning had gone dead, and every planned-but-uncommitted
+/// experiment (in dispatch order — the resumed pipeline re-feeds these
+/// through the normal submission path before planning anything new).
+pub(crate) struct ResumeState {
+    pub stalls: u32,
+    pub planning_dead: bool,
+    pub pending: Vec<(PlannedExperiment, usize)>,
+    /// How many `pending` entries were in flight at the checkpoint:
+    /// their depth samples are already in the restored counters, so the
+    /// resumed feed skips re-sampling exactly that many dispatches.
+    pub skip_depth: usize,
+}
+
+/// Evaluation provenance of one ledger entry, journaled alongside it
+/// so the platform log and eval cache are reconstructible.
+pub(crate) struct Provenance {
+    /// 1-based submission count at which the result became available —
+    /// explicit (rather than read from the platform) so batch
+    /// submissions attribute each child to its own submission index on
+    /// the convergence curve.
+    pub submitted_at: u64,
+    pub cached: bool,
+    pub submission_index: Option<u64>,
+    /// Producing planning round (`logs` position); `None` for seeds
+    /// and bootstrap probes.
+    pub plan: Option<usize>,
+}
+
+impl Provenance {
+    /// A sequential inline submission (seeds, bootstrap probes).
+    fn seed(submitted_at: u64) -> Provenance {
+        Provenance {
+            submitted_at,
+            cached: false,
+            submission_index: Some(submitted_at - 1),
+            plan: None,
+        }
+    }
 }
 
 /// One writer child waiting for an evaluation lane: everything the
@@ -143,6 +197,111 @@ impl ScientistRun<SimBackend> {
         .with_feedback_suite(workload.feedback_suite());
         Self::with_platform(config, platform)
     }
+
+    /// Reconstruct a crashed (or halted) run from its store directory
+    /// and return it ready to continue **bit-identically** to a run
+    /// that was never interrupted (DESIGN.md §9; `tests/resume.rs`).
+    ///
+    /// The journal is truncated to the last checkpoint's consistent
+    /// prefix; the ledger, transcripts, convergence curve, platform
+    /// log, and eval cache are rebuilt from it; RNG streams (surrogate
+    /// LLM + simulator noise, including re-forked stream-lane workers)
+    /// restore from the checkpoint. Bootstrap probing and seeding are
+    /// **not** re-run — their results are already in the ledger.
+    pub fn resume(dir: &Path) -> Result<Self, String> {
+        let (mut store, cp, records) = RunStore::open_for_resume(dir)?;
+        let mut config = cp.config.clone();
+        config.store_dir = Some(dir.display().to_string());
+        let workload = workload::lookup(&config.workload)
+            .ok_or_else(|| format!("unknown workload '{}'", config.workload))?;
+        let backend = SimBackend::new(config.seed)
+            .with_noise(config.noise_sigma)
+            .with_workload(workload.clone());
+        let platform = EvalPlatform::new(
+            backend,
+            PlatformConfig {
+                reps_per_config: config.reps_per_config,
+                parallelism: config.eval_parallelism,
+                submission_quota: Some(config.max_submissions),
+                cache_results: config.eval_cache,
+            },
+        )
+        .with_feedback_suite(workload.feedback_suite());
+        let agents = AgentSuite::paper(config.seed)
+            .with_llm_config(config.llm.clone())
+            .with_selection_policy(config.selection_policy)
+            .with_experiment_rule(config.experiment_rule)
+            .with_knowledge(config.knowledge);
+        let ledger = journal::rebuild(
+            &records,
+            platform.feedback_suite.configs.clone(),
+            true,
+        )?;
+        if ledger.population.len() != cp.ledger_len || ledger.logs.len() != cp.logs_len {
+            return Err(format!(
+                "journal rebuilt {} ledger entries / {} transcripts but the checkpoint \
+                 recorded {} / {} — store corrupted",
+                ledger.population.len(),
+                ledger.logs.len(),
+                cp.ledger_len,
+                cp.logs_len
+            ));
+        }
+        let mut run = ScientistRun {
+            config,
+            workload,
+            platform,
+            population: ledger.population,
+            agents,
+            curve: ledger.curve,
+            logs: ledger.logs,
+            iteration: cp.iteration,
+            sched: SchedCounters::restore(&cp.sched),
+            store: None,
+            resume_state: Some(ResumeState {
+                stalls: cp.stalls,
+                planning_dead: cp.planning_dead,
+                pending: cp
+                    .pending
+                    .iter()
+                    .map(|p| {
+                        (
+                            PlannedExperiment {
+                                base_id: p.base_id.clone(),
+                                reference_id: p.reference_id.clone(),
+                                description: p.description.clone(),
+                                write: KernelWrite {
+                                    genome: p.genome.clone(),
+                                    applied: p.applied.clone(),
+                                    skipped: p.skipped.clone(),
+                                    repairs: p.repairs.clone(),
+                                    report: p.report.clone(),
+                                    diff: p.diff.clone(),
+                                },
+                                fingerprint: p.fingerprint.clone(),
+                            },
+                            p.log_pos,
+                        )
+                    })
+                    .collect(),
+                skip_depth: cp.skip_depth,
+            }),
+            halted: false,
+        };
+        run.agents.llm.restore_rng(cp.llm_rng);
+        run.agents.knowledge.findings = FindingsDoc::from_json(&cp.findings)?;
+        run.platform.restore_checkpoint(
+            &cp.platform,
+            ledger.log_entries,
+            ledger.cache_entries,
+            &ledger.committed_genomes,
+        )?;
+        // every validation passed — only now discard the stale journal
+        // tail (a failed resume must leave the full history on disk)
+        store.commit_truncation()?;
+        run.store = Some(store);
+        Ok(run)
+    }
 }
 
 impl<B: EvalBackend + Send> ScientistRun<B> {
@@ -180,7 +339,22 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             logs: Vec::new(),
             iteration: 0,
             sched: SchedCounters::default(),
+            store: None,
+            resume_state: None,
+            halted: false,
         };
+        if let Some(dir) = run.config.store_dir.clone() {
+            // checkpoints need backend-state snapshots at dispatch
+            // points; store-less runs never pay for them
+            run.platform.enable_state_capture();
+            // fail fast before burning submissions: a store over a
+            // backend that cannot snapshot its state would journal
+            // ledgers no resume can ever continue
+            run.platform.checkpoint_state().map_err(|e| {
+                format!("[store] configured but the platform cannot checkpoint: {e}")
+            })?;
+            run.store = Some(RunStore::create(Path::new(&dir))?);
+        }
         if run.config.bootstrap_probing {
             // The probe sequence is fp8-specific (mfma-seed variants
             // exercising the fp8 task's hazards); on another family the
@@ -218,11 +392,14 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                     label.clone(),
                     format!("hardware probe ({label})"),
                     outcome,
-                    submitted_at,
+                    Provenance::seed(submitted_at),
                 );
             }
         }
         run.submit_seeds()?;
+        // the store's first checkpoint: a crash at any later point can
+        // resume from at least the post-seed state
+        run.write_checkpoint(0, false, &[], 0)?;
         Ok(run)
     }
 
@@ -250,7 +427,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 format!("seed kernel: {name}"),
                 format!("provided seed ({name})"),
                 outcome,
-                submitted_at,
+                Provenance::seed(submitted_at),
             );
         }
         // the loop cannot plan before every seed result is back, so
@@ -262,11 +439,8 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         Ok(())
     }
 
-    /// Add one evaluated kernel to the ledger. `submitted_at` is the
-    /// 1-based submission count at which its results became available —
-    /// explicit (rather than read from the platform) so batch
-    /// submissions attribute each child to its own submission index on
-    /// the convergence curve.
+    /// Add one evaluated kernel to the ledger (and, when a store is
+    /// configured, journal it with its evaluation provenance).
     fn record_individual(
         &mut self,
         parents: Vec<String>,
@@ -274,14 +448,14 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         experiment: String,
         report: String,
         outcome: EvalOutcome,
-        submitted_at: u64,
+        prov: Provenance,
     ) -> String {
         let id = self.population.next_id();
         if let Some(ts) = outcome.timings() {
             self.curve
-                .record(submitted_at as usize, crate::metrics::geomean(ts));
+                .record(prov.submitted_at as usize, crate::metrics::geomean(ts));
         } else if let Some(best) = self.curve.best() {
-            self.curve.record(submitted_at as usize, best);
+            self.curve.record(prov.submitted_at as usize, best);
         }
         self.population.add(Individual {
             id: id.clone(),
@@ -291,6 +465,33 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             report,
             outcome,
         });
+        if self.store.is_some() {
+            // journal the entry the moment it lands: a crash anywhere
+            // after this line cannot lose it
+            let (lane, completed_at_s) = match prov.submission_index {
+                Some(i) => {
+                    let rec = &self.platform.log()[i as usize];
+                    (Some(rec.lane), Some(rec.completed_at_s))
+                }
+                None => (None, None),
+            };
+            let individual = self
+                .population
+                .members()
+                .last()
+                .expect("entry just added")
+                .clone();
+            let record = JournalRecord::Exp(ExperimentRecord {
+                individual,
+                submitted_at: prov.submitted_at,
+                submission_index: prov.submission_index,
+                cached: prov.cached,
+                lane,
+                completed_at_s,
+                plan: prov.plan,
+            });
+            self.store.as_mut().expect("store checked above").append(&record);
+        }
         id
     }
 
@@ -397,7 +598,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         &mut self,
         experiment: PlannedExperiment,
         outcome: EvalOutcome,
-        submitted_at: u64,
+        prov: Provenance,
     ) -> String {
         self.record_individual(
             vec![experiment.base_id, experiment.reference_id],
@@ -405,8 +606,80 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             experiment.description,
             experiment.write.report,
             outcome,
-            submitted_at,
+            prov,
         )
+    }
+
+    /// Journal one planning round's transcript (no-op without a store).
+    fn journal_plan(&mut self, log_pos: usize) {
+        let Some(store) = self.store.as_mut() else { return };
+        let log = &self.logs[log_pos];
+        store.append(&JournalRecord::Plan(PlanRecord {
+            iteration: log.iteration,
+            log_pos,
+            base_id: log.selection.base_id.clone(),
+            reference_id: log.selection.reference_id.clone(),
+            policy: log.selection.policy,
+            rationale: log.selection.rationale.clone(),
+            avenues: log.avenue_names.clone(),
+            chosen: log.chosen_experiments.clone(),
+        }));
+    }
+
+    /// Snapshot everything a resume needs and write it to the store
+    /// (no-op without one). `pending` lists planned-but-uncommitted
+    /// experiments in dispatch order; `skip_depth` of them were in
+    /// flight. See DESIGN.md §9 for what goes where (journal vs
+    /// checkpoint).
+    fn write_checkpoint(
+        &mut self,
+        stalls: u32,
+        planning_dead: bool,
+        pending: &[(&PlannedExperiment, usize)],
+        skip_depth: usize,
+    ) -> Result<(), String> {
+        if self.store.is_none() {
+            return Ok(());
+        }
+        let platform = self.platform.checkpoint_state()?;
+        let best = self.population.best();
+        let cp = Checkpoint {
+            config: self.config.clone(),
+            journal_bytes: 0, // stamped by the store at write time
+            ledger_len: self.population.len(),
+            logs_len: self.logs.len(),
+            iteration: self.iteration,
+            stalls,
+            planning_dead,
+            sched: self.sched.snapshot(),
+            llm_rng: self.agents.llm.rng_state(),
+            findings: self.agents.knowledge.findings.to_json(),
+            platform,
+            pending: pending
+                .iter()
+                .map(|(e, log_pos)| PendingPlan {
+                    base_id: e.base_id.clone(),
+                    reference_id: e.reference_id.clone(),
+                    description: e.description.clone(),
+                    fingerprint: e.fingerprint.clone(),
+                    log_pos: *log_pos,
+                    genome: e.write.genome.clone(),
+                    applied: e.write.applied.clone(),
+                    skipped: e.write.skipped.clone(),
+                    repairs: e.write.repairs.clone(),
+                    report: e.write.report.clone(),
+                    diff: e.write.diff.clone(),
+                })
+                .collect(),
+            skip_depth,
+            best_id: best.map(|b| b.id.clone()),
+            best_geomean_us: self.population.best().and_then(|b| b.score()),
+        };
+        self.store
+            .as_mut()
+            .expect("store checked above")
+            .write_checkpoint(cp);
+        Ok(())
     }
 
     /// Run one full **lockstep** loop iteration (select -> design ->
@@ -435,16 +708,18 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             self.config.eval_parallelism,
         );
         let mut submitted_ids = Vec::new();
+        let log_pos = self.logs.len();
         for (experiment, result) in group.experiments.into_iter().zip(results) {
-            let submitted_at = result
-                .submission_index
-                .map(|i| i + 1)
-                .unwrap_or_else(|| self.platform.submissions());
-            submitted_ids.push(self.record_experiment(
-                experiment,
-                result.outcome,
-                submitted_at,
-            ));
+            let prov = Provenance {
+                submitted_at: result
+                    .submission_index
+                    .map(|i| i + 1)
+                    .unwrap_or_else(|| self.platform.submissions()),
+                cached: result.cached,
+                submission_index: result.submission_index,
+                plan: Some(log_pos),
+            };
+            submitted_ids.push(self.record_experiment(experiment, result.outcome, prov));
         }
         // the lockstep barrier: every lane waits for the slowest
         // before the next planning round (a no-op at one lane)
@@ -457,6 +732,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             chosen_experiments: group.chosen_experiments,
             submitted_ids,
         });
+        self.journal_plan(log_pos);
         self.logs.last()
     }
 
@@ -499,20 +775,55 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
         if self.config.pipeline {
             self.pump_pipeline()?;
         } else {
-            let mut stalls = 0;
-            while self.budget_left() > 0 && stalls < 8 {
-                let before = self.platform.submissions();
-                if self.run_iteration().is_none() {
-                    break;
-                }
-                if self.platform.submissions() == before {
-                    stalls += 1; // iteration produced only duplicates
-                } else {
-                    stalls = 0;
-                }
-            }
+            self.pump_lockstep()?;
         }
         self.outcome()
+    }
+
+    /// The lockstep barrier loop, with store checkpoints at the
+    /// iteration boundary (every `checkpoint_every` iterations + a
+    /// final one — unless `halt_after` simulated a crash).
+    fn pump_lockstep(&mut self) -> Result<(), String> {
+        // lockstep checkpoints never carry pending work, so a resumed
+        // run only needs the stall streak back
+        let mut stalls = self.resume_state.take().map(|r| r.stalls).unwrap_or(0);
+        let every = self.config.checkpoint_every.max(1);
+        let mut steps = 0u64;
+        while self.budget_left() > 0 && stalls < 8 {
+            if self.halt_reached() {
+                self.halted = true;
+                return Ok(());
+            }
+            let before = self.platform.submissions();
+            if self.run_iteration().is_none() {
+                break;
+            }
+            if self.platform.submissions() == before {
+                stalls += 1; // iteration produced only duplicates
+            } else {
+                stalls = 0;
+            }
+            steps += 1;
+            if steps % every == 0 {
+                self.write_checkpoint(stalls, false, &[], 0)?;
+            }
+        }
+        self.write_checkpoint(stalls, false, &[], 0)
+    }
+
+    /// Whether the `halt_after` test knob says to abort now (simulated
+    /// crash; see [`crate::config::RunConfig::halt_after`]).
+    pub(crate) fn halt_reached(&self) -> bool {
+        self.config
+            .halt_after
+            .map(|h| self.platform.submissions() >= h)
+            .unwrap_or(false)
+    }
+
+    /// True when `halt_after` aborted the scheduler (the run's store —
+    /// if any — ends at its last periodic checkpoint, like a crash).
+    pub fn halted(&self) -> bool {
+        self.halted
     }
 }
 

@@ -101,6 +101,28 @@ impl SchedCounters {
         }
     }
 
+    /// Snapshot for a run-store checkpoint.
+    pub fn snapshot(&self) -> crate::store::SchedSnapshot {
+        crate::store::SchedSnapshot {
+            planning_rounds: self.planning_rounds,
+            replanned_duplicates: self.replanned_duplicates,
+            depth_total: self.depth_total,
+            depth_samples: self.depth_samples,
+            max_in_flight: self.max_in_flight,
+        }
+    }
+
+    /// Rebuild from a checkpoint snapshot.
+    pub fn restore(s: &crate::store::SchedSnapshot) -> SchedCounters {
+        SchedCounters {
+            planning_rounds: s.planning_rounds,
+            replanned_duplicates: s.replanned_duplicates,
+            depth_total: s.depth_total,
+            depth_samples: s.depth_samples,
+            max_in_flight: s.max_in_flight,
+        }
+    }
+
     pub fn stats(&self, pipelined: bool, lanes: u32, lane_occupancy: f64) -> PipelineStats {
         PipelineStats {
             pipelined,
@@ -142,7 +164,30 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
         let mut in_flight: Vec<InFlightChild> = Vec::new();
         let mut stalls = 0u32;
         let mut planning_dead = false;
+        // A resumed run re-feeds the checkpoint's planned-but-
+        // uncommitted experiments (former in-flight first, in original
+        // dispatch order) through the normal path below: the rolled-
+        // back platform re-derives identical lanes, tickets, and
+        // clocks. Their depth samples are already in the restored
+        // counters, so the first `skip_depth` dispatches don't
+        // re-sample (DESIGN.md §9).
+        let mut skip_depth = 0usize;
+        if let Some(resume) = self.resume_state.take() {
+            stalls = resume.stalls;
+            planning_dead = resume.planning_dead;
+            skip_depth = resume.skip_depth;
+            for (experiment, log_pos) in resume.pending {
+                reserved.insert(experiment.fingerprint.clone());
+                queue.push_back((experiment, log_pos));
+            }
+        }
+        let every = self.config.checkpoint_every.max(1);
+        let mut completions = 0u64;
         loop {
+            if self.halt_reached() {
+                self.halted = true;
+                return Ok(());
+            }
             // refill: plan whenever the queue cannot feed the free
             // lane capacity and budget remains
             while !planning_dead && stalls < 8 && queue.len() + in_flight.len() < cap {
@@ -173,6 +218,7 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                     chosen_experiments: group.chosen_experiments,
                     submitted_ids: Vec::new(),
                 });
+                self.journal_plan(log_pos);
                 for experiment in group.experiments {
                     reserved.insert(experiment.fingerprint.clone());
                     queue.push_back((experiment, log_pos));
@@ -189,7 +235,11 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                     experiment,
                     log_pos,
                 });
-                self.sched.sample_depth(in_flight.len() as u64);
+                if skip_depth > 0 {
+                    skip_depth -= 1; // re-fed: sampled before the crash
+                } else {
+                    self.sched.sample_depth(in_flight.len() as u64);
+                }
             }
             // drain: fold the earliest virtual completion into the
             // ledger; nothing in flight means nothing left to do
@@ -202,11 +252,16 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                 .expect("completion for an unknown ticket");
             let child = in_flight.remove(pos);
             reserved.remove(&child.experiment.fingerprint);
-            let submitted_at = done
-                .submission_index
-                .map(|i| i + 1)
-                .unwrap_or_else(|| self.platform.submissions());
-            let id = self.record_experiment(child.experiment, done.outcome, submitted_at);
+            let prov = super::Provenance {
+                submitted_at: done
+                    .submission_index
+                    .map(|i| i + 1)
+                    .unwrap_or_else(|| self.platform.submissions()),
+                cached: done.cached,
+                submission_index: done.submission_index,
+                plan: Some(child.log_pos),
+            };
+            let id = self.record_experiment(child.experiment, done.outcome, prov);
             self.logs[child.log_pos].submitted_ids.push(id);
             // the ledger just changed, so a duplicate streak is no
             // longer evidence that planning is exhausted — re-arm it.
@@ -214,8 +269,17 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
             // streak runs, so this cannot fire there and lockstep
             // bit-identity is untouched.)
             stalls = 0;
+            completions += 1;
+            if completions % every == 0 {
+                let pending: Vec<(&PlannedExperiment, usize)> = in_flight
+                    .iter()
+                    .map(|c| (&c.experiment, c.log_pos))
+                    .chain(queue.iter().map(|(e, p)| (e, *p)))
+                    .collect();
+                self.write_checkpoint(stalls, planning_dead, &pending, in_flight.len())?;
+            }
         }
-        Ok(())
+        self.write_checkpoint(stalls, planning_dead, &[], 0)
     }
 }
 

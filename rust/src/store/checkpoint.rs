@@ -1,0 +1,314 @@
+//! Checkpoint serialization: the crash-safe snapshot a `resume`
+//! restores from (DESIGN.md §9).
+//!
+//! A checkpoint carries exactly the state that is **not** a pure
+//! function of the journal prefix it names:
+//!
+//! * the full [`RunConfig`] (resume is self-contained);
+//! * the agents' surrogate-LLM RNG stream and the findings document;
+//! * the platform's rolled-back accounting
+//!   ([`crate::eval::PlatformCheckpoint`]): lane clocks, busy time,
+//!   tickets, counted cache stats, and the backend RNG states (parent,
+//!   and the pre-spawn state the stream lane workers re-fork from);
+//! * scheduler position: iteration counter, stall streak, and — for
+//!   the pipeline — every planned-but-uncommitted experiment, which
+//!   the resumed scheduler re-feeds through the normal submission path;
+//! * `journal_bytes`, the journal length this snapshot is consistent
+//!   with — resume truncates the journal file to it, discarding any
+//!   entries the crash left beyond the checkpoint.
+//!
+//! Full-width u64s (RNG words) travel as hex strings
+//! ([`crate::util::json::u64_hex`]); everything else is plain JSON.
+//! Writes are atomic (temp file + rename) so a crash mid-checkpoint
+//! leaves the previous checkpoint intact.
+
+use std::path::Path;
+
+use crate::config::RunConfig;
+use crate::eval::PlatformCheckpoint;
+use crate::genome::KernelGenome;
+use crate::util::json::{
+    self, parse_str_arr, parse_u64_hex, req_bool, req_f64, req_str, req_u64, str_arr, u64_hex,
+    Json,
+};
+
+pub const CHECKPOINT_FILE: &str = "checkpoint.json";
+const VERSION: u64 = 1;
+
+/// Scheduler counters snapshot (mirrors the run's private
+/// `SchedCounters` — see `scientist::pipeline`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedSnapshot {
+    pub planning_rounds: u64,
+    pub replanned_duplicates: u64,
+    pub depth_total: u64,
+    pub depth_samples: u64,
+    pub max_in_flight: u64,
+}
+
+/// One planned-but-uncommitted experiment (queued or in flight at
+/// checkpoint time). The resumed pipeline re-submits these, in order,
+/// before planning anything new.
+#[derive(Debug, Clone)]
+pub struct PendingPlan {
+    pub base_id: String,
+    pub reference_id: String,
+    pub description: String,
+    pub fingerprint: String,
+    pub log_pos: usize,
+    pub genome: KernelGenome,
+    pub applied: Vec<String>,
+    pub skipped: Vec<String>,
+    pub repairs: Vec<String>,
+    pub report: String,
+    pub diff: String,
+}
+
+/// The full snapshot (see module docs).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub config: RunConfig,
+    pub journal_bytes: u64,
+    pub ledger_len: usize,
+    pub logs_len: usize,
+    pub iteration: usize,
+    pub stalls: u32,
+    pub planning_dead: bool,
+    pub sched: SchedSnapshot,
+    pub llm_rng: [u64; 4],
+    pub findings: Json,
+    pub platform: PlatformCheckpoint,
+    pub pending: Vec<PendingPlan>,
+    /// How many `pending` entries were already in flight (their depth
+    /// samples are in `sched`; the resumed feed skips re-sampling them).
+    pub skip_depth: usize,
+    /// Informational leaderboard summary (rendered by `replay`; never
+    /// used for restore).
+    pub best_id: Option<String>,
+    pub best_geomean_us: Option<f64>,
+}
+
+fn rng_words(state: &[u64; 4]) -> Json {
+    Json::Arr(state.iter().map(|&w| u64_hex(w)).collect())
+}
+
+fn parse_rng_words(v: Option<&Json>, what: &str) -> Result<[u64; 4], String> {
+    let arr = v
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| format!("checkpoint: missing {what}"))?;
+    if arr.len() != 4 {
+        return Err(format!("checkpoint: {what} wants 4 words, got {}", arr.len()));
+    }
+    let mut out = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        out[i] = parse_u64_hex(w).map_err(|e| format!("checkpoint {what}[{i}]: {e}"))?;
+    }
+    Ok(out)
+}
+
+impl PendingPlan {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("base", Json::Str(self.base_id.clone())),
+            ("reference", Json::Str(self.reference_id.clone())),
+            ("description", Json::Str(self.description.clone())),
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("log_pos", Json::Num(self.log_pos as f64)),
+            ("genome", self.genome.to_json()),
+            ("applied", str_arr(&self.applied)),
+            ("skipped", str_arr(&self.skipped)),
+            ("repairs", str_arr(&self.repairs)),
+            ("report", Json::Str(self.report.clone())),
+            ("diff", Json::Str(self.diff.clone())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<PendingPlan, String> {
+        Ok(PendingPlan {
+            base_id: req_str(v, "base")?.to_string(),
+            reference_id: req_str(v, "reference")?.to_string(),
+            description: req_str(v, "description")?.to_string(),
+            fingerprint: req_str(v, "fingerprint")?.to_string(),
+            log_pos: req_u64(v, "log_pos")? as usize,
+            genome: KernelGenome::from_json(
+                v.get("genome").ok_or("checkpoint: pending missing genome")?,
+            )?,
+            applied: parse_str_arr(v.get("applied"), "applied")?,
+            skipped: parse_str_arr(v.get("skipped"), "skipped")?,
+            repairs: parse_str_arr(v.get("repairs"), "repairs")?,
+            report: req_str(v, "report")?.to_string(),
+            diff: req_str(v, "diff")?.to_string(),
+        })
+    }
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        let p = &self.platform;
+        Json::obj(vec![
+            ("version", Json::Num(VERSION as f64)),
+            ("config", self.config.to_json()),
+            ("journal_bytes", Json::Num(self.journal_bytes as f64)),
+            ("ledger_len", Json::Num(self.ledger_len as f64)),
+            ("logs_len", Json::Num(self.logs_len as f64)),
+            ("iteration", Json::Num(self.iteration as f64)),
+            ("stalls", Json::Num(self.stalls as f64)),
+            ("planning_dead", Json::Bool(self.planning_dead)),
+            (
+                "sched",
+                Json::obj(vec![
+                    ("planning_rounds", Json::Num(self.sched.planning_rounds as f64)),
+                    (
+                        "replanned_duplicates",
+                        Json::Num(self.sched.replanned_duplicates as f64),
+                    ),
+                    ("depth_total", Json::Num(self.sched.depth_total as f64)),
+                    ("depth_samples", Json::Num(self.sched.depth_samples as f64)),
+                    ("max_in_flight", Json::Num(self.sched.max_in_flight as f64)),
+                ]),
+            ),
+            ("llm_rng", rng_words(&self.llm_rng)),
+            ("findings", self.findings.clone()),
+            (
+                "platform",
+                Json::obj(vec![
+                    (
+                        "lane_busy_until",
+                        Json::Arr(p.lane_busy_until.iter().map(|&t| Json::Num(t)).collect()),
+                    ),
+                    ("busy_lane_s", Json::Num(p.busy_lane_s)),
+                    ("next_ticket", Json::Num(p.next_ticket as f64)),
+                    ("cache_hits", Json::Num(p.cache_hits as f64)),
+                    ("cache_misses", Json::Num(p.cache_misses as f64)),
+                    ("backend", p.backend.clone()),
+                    (
+                        "prespawn_backend",
+                        p.prespawn_backend.clone().unwrap_or(Json::Null),
+                    ),
+                    ("stream_threaded", Json::Bool(p.stream_threaded)),
+                    ("stream_log_start", Json::Num(p.stream_log_start as f64)),
+                ]),
+            ),
+            (
+                "pending",
+                Json::Arr(self.pending.iter().map(|p| p.to_json()).collect()),
+            ),
+            ("skip_depth", Json::Num(self.skip_depth as f64)),
+            (
+                "best_id",
+                self.best_id
+                    .clone()
+                    .map(Json::Str)
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "best_geomean_us",
+                self.best_geomean_us.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Checkpoint, String> {
+        let version = req_u64(v, "version")?;
+        if version != VERSION {
+            return Err(format!(
+                "checkpoint version {version} unsupported (this build reads {VERSION})"
+            ));
+        }
+        let sched = v.get("sched").ok_or("checkpoint: missing sched")?;
+        let p = v.get("platform").ok_or("checkpoint: missing platform")?;
+        let lane_busy_until = p
+            .get("lane_busy_until")
+            .and_then(|x| x.as_arr())
+            .ok_or("checkpoint: missing lane_busy_until")?
+            .iter()
+            .map(|t| t.as_f64().ok_or("checkpoint: bad lane clock".to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Checkpoint {
+            config: RunConfig::from_json(
+                v.get("config").ok_or("checkpoint: missing config")?,
+            )?,
+            journal_bytes: req_u64(v, "journal_bytes")?,
+            ledger_len: req_u64(v, "ledger_len")? as usize,
+            logs_len: req_u64(v, "logs_len")? as usize,
+            iteration: req_u64(v, "iteration")? as usize,
+            stalls: req_u64(v, "stalls")? as u32,
+            planning_dead: req_bool(v, "planning_dead")?,
+            sched: SchedSnapshot {
+                planning_rounds: req_u64(sched, "planning_rounds")?,
+                replanned_duplicates: req_u64(sched, "replanned_duplicates")?,
+                depth_total: req_u64(sched, "depth_total")?,
+                depth_samples: req_u64(sched, "depth_samples")?,
+                max_in_flight: req_u64(sched, "max_in_flight")?,
+            },
+            llm_rng: parse_rng_words(v.get("llm_rng"), "llm_rng")?,
+            findings: v
+                .get("findings")
+                .ok_or("checkpoint: missing findings")?
+                .clone(),
+            platform: PlatformCheckpoint {
+                lane_busy_until,
+                busy_lane_s: req_f64(p, "busy_lane_s")?,
+                next_ticket: req_u64(p, "next_ticket")?,
+                cache_hits: req_u64(p, "cache_hits")?,
+                cache_misses: req_u64(p, "cache_misses")?,
+                backend: p
+                    .get("backend")
+                    .ok_or("checkpoint: missing backend state")?
+                    .clone(),
+                prespawn_backend: match p.get("prespawn_backend") {
+                    None | Some(Json::Null) => None,
+                    Some(s) => Some(s.clone()),
+                },
+                stream_threaded: req_bool(p, "stream_threaded")?,
+                stream_log_start: req_u64(p, "stream_log_start")?,
+            },
+            pending: v
+                .get("pending")
+                .and_then(|x| x.as_arr())
+                .ok_or("checkpoint: missing pending")?
+                .iter()
+                .map(PendingPlan::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+            skip_depth: req_u64(v, "skip_depth")? as usize,
+            best_id: match v.get("best_id") {
+                None | Some(Json::Null) => None,
+                Some(s) => Some(
+                    s.as_str()
+                        .ok_or("checkpoint: bad best_id")?
+                        .to_string(),
+                ),
+            },
+            best_geomean_us: match v.get("best_geomean_us") {
+                None | Some(Json::Null) => None,
+                Some(x) => Some(x.as_f64().ok_or("checkpoint: bad best_geomean_us")?),
+            },
+        })
+    }
+
+    /// Atomically persist to `<dir>/checkpoint.json`: write a temp
+    /// file, fsync it, then rename over the previous checkpoint — a
+    /// crash mid-write leaves the old snapshot intact.
+    pub fn write_atomic(&self, dir: &Path) -> Result<(), String> {
+        let tmp = dir.join(format!("{CHECKPOINT_FILE}.tmp"));
+        let target = dir.join(CHECKPOINT_FILE);
+        let text = self.to_json().to_string();
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| format!("{}: {e}", tmp.display()))?;
+            f.write_all(text.as_bytes())
+                .and_then(|_| f.sync_all())
+                .map_err(|e| format!("{}: {e}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, &target).map_err(|e| format!("{}: {e}", target.display()))
+    }
+
+    /// Load `<dir>/checkpoint.json`.
+    pub fn load(dir: &Path) -> Result<Checkpoint, String> {
+        let path = dir.join(CHECKPOINT_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (was this run started with [store]?)", path.display()))?;
+        Checkpoint::from_json(&json::parse(&text).map_err(|e| e.to_string())?)
+    }
+}

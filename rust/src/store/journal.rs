@@ -1,0 +1,309 @@
+//! Journal records: the append-only experiment ledger (DESIGN.md §9).
+//!
+//! One JSON object per line, tagged by `"t"`:
+//!
+//! * `"exp"` — one evaluated (or cache-served) kernel: the full
+//!   [`Individual`] plus its evaluation provenance (submission index,
+//!   lane, completion time, cache flag) and the planning round that
+//!   produced it. The ledger's population, convergence curve, platform
+//!   log, and eval-cache contents are all pure functions of the `exp`
+//!   sequence — [`rebuild`] recomputes them.
+//! * `"plan"` — one select → design → write round: the selection
+//!   triple (base / reference / rationale, App. A.1), the avenue list,
+//!   and the chosen experiment descriptions. Together with the `exp`
+//!   records' `plan` back-references these reconstruct every
+//!   [`IterationLog`] transcript.
+//!
+//! Records are self-describing so `replay` can re-render a campaign
+//! without evaluating anything, and strict enough that `resume` can
+//! verify the rebuilt ledger against the checkpoint.
+
+use crate::agents::{ReferencePolicy, Selection};
+use crate::eval::SubmissionRecord;
+use crate::genome::KernelGenome;
+use crate::metrics::ConvergenceCurve;
+use crate::population::{EvalOutcome, Individual, Population};
+use crate::scientist::IterationLog;
+use crate::util::json::{self, parse_str_arr, req_bool, req_str, req_u64, str_arr, Json};
+use crate::workload::GemmConfig;
+
+/// One journal line.
+#[derive(Debug, Clone)]
+pub enum JournalRecord {
+    Plan(PlanRecord),
+    Exp(ExperimentRecord),
+}
+
+/// One select → design → write round (`"t":"plan"`).
+#[derive(Debug, Clone)]
+pub struct PlanRecord {
+    pub iteration: usize,
+    /// Position of this round's [`IterationLog`] in the run's
+    /// transcript (`exp` records reference it via `plan`).
+    pub log_pos: usize,
+    pub base_id: String,
+    pub reference_id: String,
+    pub policy: Option<ReferencePolicy>,
+    pub rationale: String,
+    pub avenues: Vec<String>,
+    pub chosen: Vec<String>,
+}
+
+/// One ledger entry (`"t":"exp"`).
+#[derive(Debug, Clone)]
+pub struct ExperimentRecord {
+    pub individual: Individual,
+    /// 1-based submission count at which the result became available
+    /// (the convergence curve's x-axis).
+    pub submitted_at: u64,
+    /// Index in the platform submission log; `None` for cache hits.
+    pub submission_index: Option<u64>,
+    /// Served from the eval cache (no quota, no platform time).
+    pub cached: bool,
+    /// Virtual lane that evaluated the submission (`None` for cache
+    /// hits) — restore replays each lane's committed FIFO prefix.
+    pub lane: Option<u32>,
+    /// Simulated completion time (`None` for cache hits).
+    pub completed_at_s: Option<f64>,
+    /// Back-reference to the producing plan's `log_pos` (`None` for
+    /// seeds and bootstrap probes).
+    pub plan: Option<usize>,
+}
+
+fn policy_token(p: ReferencePolicy) -> &'static str {
+    match p {
+        ReferencePolicy::DivergentPath => "divergent_path",
+        ReferencePolicy::DirectParent => "direct_parent",
+        ReferencePolicy::PerConfigSpecialist => "per_config_specialist",
+    }
+}
+
+fn parse_policy(s: &str) -> Result<ReferencePolicy, String> {
+    match s {
+        "divergent_path" => Ok(ReferencePolicy::DivergentPath),
+        "direct_parent" => Ok(ReferencePolicy::DirectParent),
+        "per_config_specialist" => Ok(ReferencePolicy::PerConfigSpecialist),
+        other => Err(format!("unknown reference policy '{other}'")),
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map(Json::Num).unwrap_or(Json::Null)
+}
+
+impl JournalRecord {
+    pub fn to_json(&self) -> Json {
+        match self {
+            JournalRecord::Plan(p) => Json::obj(vec![
+                ("t", Json::Str("plan".into())),
+                ("iteration", Json::Num(p.iteration as f64)),
+                ("log_pos", Json::Num(p.log_pos as f64)),
+                ("base", Json::Str(p.base_id.clone())),
+                ("reference", Json::Str(p.reference_id.clone())),
+                (
+                    "policy",
+                    p.policy
+                        .map(|pol| Json::Str(policy_token(pol).into()))
+                        .unwrap_or(Json::Null),
+                ),
+                ("rationale", Json::Str(p.rationale.clone())),
+                ("avenues", str_arr(&p.avenues)),
+                ("chosen", str_arr(&p.chosen)),
+            ]),
+            JournalRecord::Exp(e) => Json::obj(vec![
+                ("t", Json::Str("exp".into())),
+                ("ind", e.individual.to_json()),
+                ("submitted_at", Json::Num(e.submitted_at as f64)),
+                (
+                    "submission_index",
+                    opt_num(e.submission_index.map(|i| i as f64)),
+                ),
+                ("cached", Json::Bool(e.cached)),
+                ("lane", opt_num(e.lane.map(|l| l as f64))),
+                ("completed_at_s", opt_num(e.completed_at_s)),
+                ("plan", opt_num(e.plan.map(|p| p as f64))),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<JournalRecord, String> {
+        let tag = v
+            .get("t")
+            .and_then(|x| x.as_str())
+            .ok_or("journal: record without tag")?;
+        match tag {
+            "plan" => Ok(JournalRecord::Plan(PlanRecord {
+                iteration: req_u64(v, "iteration")? as usize,
+                log_pos: req_u64(v, "log_pos")? as usize,
+                base_id: req_str(v, "base")?.to_string(),
+                reference_id: req_str(v, "reference")?.to_string(),
+                policy: match v.get("policy") {
+                    None | Some(Json::Null) => None,
+                    Some(p) => Some(parse_policy(
+                        p.as_str().ok_or("journal: non-string policy")?,
+                    )?),
+                },
+                rationale: req_str(v, "rationale")?.to_string(),
+                avenues: parse_str_arr(v.get("avenues"), "avenues")?,
+                chosen: parse_str_arr(v.get("chosen"), "chosen")?,
+            })),
+            "exp" => Ok(JournalRecord::Exp(ExperimentRecord {
+                individual: Individual::from_json(
+                    v.get("ind").ok_or("journal: exp missing ind")?,
+                )?,
+                submitted_at: req_u64(v, "submitted_at")?,
+                submission_index: match v.get("submission_index") {
+                    None | Some(Json::Null) => None,
+                    Some(x) => Some(
+                        x.as_u64().ok_or("journal: bad submission_index")?,
+                    ),
+                },
+                cached: req_bool(v, "cached")?,
+                lane: match v.get("lane") {
+                    None | Some(Json::Null) => None,
+                    Some(x) => Some(x.as_u64().ok_or("journal: bad lane")? as u32),
+                },
+                completed_at_s: match v.get("completed_at_s") {
+                    None | Some(Json::Null) => None,
+                    Some(x) => Some(x.as_f64().ok_or("journal: bad completed_at_s")?),
+                },
+                plan: match v.get("plan") {
+                    None | Some(Json::Null) => None,
+                    Some(x) => Some(x.as_u64().ok_or("journal: bad plan")? as usize),
+                },
+            })),
+            other => Err(format!("journal: unknown record tag '{other}'")),
+        }
+    }
+}
+
+/// Everything [`rebuild`] derives from the journal: the run state the
+/// checkpoint does **not** need to duplicate.
+pub struct RebuiltLedger {
+    pub population: Population,
+    pub curve: ConvergenceCurve,
+    pub logs: Vec<IterationLog>,
+    /// Platform submission log (committed submissions, in order).
+    pub log_entries: Vec<SubmissionRecord>,
+    /// Eval-cache contents (fingerprint → outcome of every evaluation).
+    pub cache_entries: Vec<(String, EvalOutcome)>,
+    /// Genomes aligned with `log_entries` (the lane-replay input).
+    pub committed_genomes: Vec<KernelGenome>,
+}
+
+/// Reconstruct the run state the journal encodes. `strict` is the
+/// resume path (the journal was truncated to the checkpoint, so any
+/// inconsistency is corruption); replay passes `false` and tolerates a
+/// dangling plan reference from a mid-write crash tail.
+pub fn rebuild(
+    records: &[JournalRecord],
+    feedback_configs: Vec<GemmConfig>,
+    strict: bool,
+) -> Result<RebuiltLedger, String> {
+    let mut logs: Vec<IterationLog> = Vec::new();
+    for rec in records {
+        if let JournalRecord::Plan(p) = rec {
+            if p.log_pos != logs.len() {
+                return Err(format!(
+                    "journal: plan at log_pos {} but {} transcripts rebuilt",
+                    p.log_pos,
+                    logs.len()
+                ));
+            }
+            logs.push(IterationLog {
+                iteration: p.iteration,
+                selection: Selection {
+                    base_id: p.base_id.clone(),
+                    reference_id: p.reference_id.clone(),
+                    policy: p.policy,
+                    rationale: p.rationale.clone(),
+                },
+                avenue_names: p.avenues.clone(),
+                chosen_experiments: p.chosen.clone(),
+                submitted_ids: Vec::new(),
+            });
+        }
+    }
+    let mut population = Population::new(feedback_configs);
+    let mut curve = ConvergenceCurve::default();
+    let mut log_entries: Vec<SubmissionRecord> = Vec::new();
+    let mut cache_entries: Vec<(String, EvalOutcome)> = Vec::new();
+    let mut committed_genomes: Vec<KernelGenome> = Vec::new();
+    for rec in records {
+        let JournalRecord::Exp(e) = rec else { continue };
+        // mirror ScientistRun::record_individual's curve update exactly
+        if let Some(ts) = e.individual.outcome.timings() {
+            curve.record(e.submitted_at as usize, crate::metrics::geomean(ts));
+        } else if let Some(best) = curve.best() {
+            curve.record(e.submitted_at as usize, best);
+        }
+        if let Some(index) = e.submission_index {
+            if index as usize != log_entries.len() {
+                return Err(format!(
+                    "journal: submission {index} out of order (expected {})",
+                    log_entries.len()
+                ));
+            }
+            let lane = e.lane.ok_or("journal: committed exp without lane")?;
+            let completed_at_s = e
+                .completed_at_s
+                .ok_or("journal: committed exp without completed_at_s")?;
+            log_entries.push(SubmissionRecord {
+                index,
+                completed_at_s,
+                lane,
+                outcome: e.individual.outcome.clone(),
+            });
+            cache_entries
+                .push((e.individual.genome.fingerprint(), e.individual.outcome.clone()));
+            committed_genomes.push(e.individual.genome.clone());
+        }
+        if let Some(plan) = e.plan {
+            match logs.get_mut(plan) {
+                Some(log) => log.submitted_ids.push(e.individual.id.clone()),
+                None if strict => {
+                    return Err(format!(
+                        "journal: exp {} references missing plan {plan}",
+                        e.individual.id
+                    ))
+                }
+                None => {} // replay tolerance: crash-torn plan line
+            }
+        }
+        population.add(e.individual.clone());
+    }
+    Ok(RebuiltLedger {
+        population,
+        curve,
+        logs,
+        log_entries,
+        cache_entries,
+        committed_genomes,
+    })
+}
+
+/// Parse journal text into records. A parse failure on the **final**
+/// non-empty line is reported separately (`torn`) so callers can treat
+/// a mid-write crash tail as expected (`replay`) or as corruption
+/// (`resume` — which never sees one, because it truncates the journal
+/// to the checkpoint's recorded length first).
+pub fn parse_journal(text: &str) -> Result<(Vec<JournalRecord>, bool), String> {
+    let lines: Vec<(usize, &str)> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .collect();
+    let mut records = Vec::with_capacity(lines.len());
+    for (pos, (lineno, line)) in lines.iter().enumerate() {
+        let parsed = json::parse(line)
+            .map_err(|e| e.to_string())
+            .and_then(|v| JournalRecord::from_json(&v));
+        match parsed {
+            Ok(rec) => records.push(rec),
+            // torn final line: everything before it is intact
+            Err(_) if pos + 1 == lines.len() => return Ok((records, true)),
+            Err(e) => return Err(format!("journal line {}: {e}", lineno + 1)),
+        }
+    }
+    Ok((records, false))
+}

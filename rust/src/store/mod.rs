@@ -1,0 +1,269 @@
+//! The durable run store: crash-safe persistence of the evolutionary
+//! archive (DESIGN.md §9).
+//!
+//! The paper's loop works by "strategically selecting promising prior
+//! code versions as a basis for new iterations" (§3.1) — the archive
+//! *is* the asset. This module makes it durable: every experiment is
+//! journaled to `<dir>/journal.jsonl` as it lands (genome, lineage,
+//! selector rationale, writer self-report, verifier verdict, timings,
+//! virtual-clock metadata), and the run periodically snapshots the
+//! non-derivable remainder — RNG streams, platform clocks, eval-cache
+//! stats, pending pipeline work — to `<dir>/checkpoint.json`
+//! ([`checkpoint`]).
+//!
+//! Crash model: journal lines are appended before the in-memory state
+//! advances past them, and checkpoints are written atomically (temp +
+//! rename). After a crash, `resume` loads the last checkpoint,
+//! **truncates the journal to the length that checkpoint is consistent
+//! with**, rebuilds the ledger from the journal prefix
+//! ([`journal::rebuild`]), restores the RNG streams and platform
+//! accounting, and continues — bit-identically to a run that never
+//! crashed (`tests/resume.rs` locks this for every registered workload
+//! under both schedulers). `replay` ([`replay`]) re-renders transcripts
+//! and reports from the journal alone, without evaluating anything.
+//!
+//! Store writes are **fail-stop**: an I/O error aborts the run (panic)
+//! rather than silently continuing with an unpersisted ledger — a
+//! durability subsystem that drops writes is worse than none.
+
+pub mod checkpoint;
+pub mod journal;
+pub mod replay;
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub use checkpoint::{Checkpoint, PendingPlan, SchedSnapshot};
+pub use journal::{ExperimentRecord, JournalRecord, PlanRecord, RebuiltLedger};
+pub use replay::{replay, ReplayedRun};
+
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+const CAMPAIGN_MANIFEST: &str = "campaign.json";
+
+/// Append handle on a run's store directory.
+pub struct RunStore {
+    dir: PathBuf,
+    journal: std::fs::File,
+    journal_bytes: u64,
+}
+
+impl RunStore {
+    /// Start a fresh store in `dir` (created if needed). Any previous
+    /// journal **and checkpoint** there are removed — `run` starts a
+    /// new campaign; only `resume` continues one. Removing the old
+    /// checkpoint first matters: a crash before this run's first
+    /// checkpoint must leave "no checkpoint" (a clear error), never a
+    /// stale checkpoint paired with the new run's journal.
+    pub fn create(dir: &Path) -> Result<RunStore, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        for stale in [
+            checkpoint::CHECKPOINT_FILE.to_string(),
+            format!("{}.tmp", checkpoint::CHECKPOINT_FILE),
+        ] {
+            let path = dir.join(&stale);
+            if path.exists() {
+                std::fs::remove_file(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+            }
+        }
+        let path = dir.join(JOURNAL_FILE);
+        let journal = std::fs::File::create(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(RunStore {
+            dir: dir.to_path_buf(),
+            journal,
+            journal_bytes: 0,
+        })
+    }
+
+    /// Reopen a store for resumption: load the checkpoint and parse the
+    /// journal prefix the checkpoint is consistent with. **Nothing on
+    /// disk is modified yet** — the journal tail past the checkpoint is
+    /// only discarded by [`RunStore::commit_truncation`], which the
+    /// resume path calls after every validation step has passed, so a
+    /// *failed* resume leaves the full journal (and the history
+    /// `replay` renders from it) intact for diagnosis.
+    pub fn open_for_resume(
+        dir: &Path,
+    ) -> Result<(RunStore, Checkpoint, Vec<JournalRecord>), String> {
+        let cp = Checkpoint::load(dir)?;
+        let path = dir.join(JOURNAL_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        if (text.len() as u64) < cp.journal_bytes {
+            return Err(format!(
+                "journal is {} bytes but the checkpoint covers {} — store corrupted",
+                text.len(),
+                cp.journal_bytes
+            ));
+        }
+        // .get: a corrupt byte count landing mid-UTF-8 must error, not
+        // panic the resume path
+        let prefix = text
+            .get(..cp.journal_bytes as usize)
+            .ok_or("checkpoint journal length splits a UTF-8 scalar — store corrupted")?;
+        let (records, torn) = journal::parse_journal(prefix)?;
+        if torn {
+            return Err("journal torn inside the checkpointed prefix — store corrupted".into());
+        }
+        let journal = std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok((
+            RunStore {
+                dir: dir.to_path_buf(),
+                journal,
+                journal_bytes: cp.journal_bytes,
+            },
+            cp,
+            records,
+        ))
+    }
+
+    /// Discard the journal tail past the checkpointed prefix and
+    /// position the append cursor at its end. Called once, after a
+    /// resume has fully validated and restored — appends before this
+    /// would interleave with the stale tail.
+    pub fn commit_truncation(&mut self) -> Result<(), String> {
+        use std::io::Seek;
+        let path = self.dir.join(JOURNAL_FILE);
+        self.journal
+            .set_len(self.journal_bytes)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        self.journal
+            .seek(std::io::SeekFrom::Start(self.journal_bytes))
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Journal length in bytes — the consistency marker checkpoints
+    /// record.
+    pub fn journal_bytes(&self) -> u64 {
+        self.journal_bytes
+    }
+
+    /// Append one record to the journal. Fail-stop on I/O errors (see
+    /// module docs).
+    pub fn append(&mut self, record: &JournalRecord) {
+        let mut line = record.to_json().to_string();
+        line.push('\n');
+        self.journal
+            .write_all(line.as_bytes())
+            .expect("run store: journal write failed (fail-stop)");
+        self.journal_bytes += line.len() as u64;
+    }
+
+    /// Atomically persist a checkpoint stamped with the current journal
+    /// length. The journal is fsynced first: a checkpoint must never
+    /// name bytes the journal hasn't durably reached, or a power loss
+    /// between the two would make the store unresumable. Fail-stop on
+    /// I/O errors.
+    pub fn write_checkpoint(&mut self, mut cp: Checkpoint) {
+        self.journal
+            .sync_all()
+            .expect("run store: journal fsync failed (fail-stop)");
+        cp.journal_bytes = self.journal_bytes;
+        cp.write_atomic(&self.dir)
+            .expect("run store: checkpoint write failed (fail-stop)");
+    }
+}
+
+/// Record a campaign's workload list (in request order) so `resume`
+/// and `replay` can reconstruct the whole campaign from its directory.
+pub fn write_campaign_manifest(dir: &Path, workloads: &[String]) -> Result<(), String> {
+    use crate::util::json::Json;
+    std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let doc = Json::obj(vec![(
+        "workloads",
+        Json::Arr(workloads.iter().map(|w| Json::Str(w.clone())).collect()),
+    )]);
+    let path = dir.join(CAMPAIGN_MANIFEST);
+    std::fs::write(&path, doc.to_string()).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Read a campaign manifest, if `dir` holds one (`None` means `dir` is
+/// a single-run store).
+pub fn read_campaign_manifest(dir: &Path) -> Result<Option<Vec<String>>, String> {
+    let path = dir.join(CAMPAIGN_MANIFEST);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let doc = crate::util::json::parse(&text).map_err(|e| e.to_string())?;
+    let workloads = doc
+        .get("workloads")
+        .and_then(|x| x.as_arr())
+        .ok_or("campaign manifest: missing workloads")?
+        .iter()
+        .map(|w| {
+            w.as_str()
+                .map(String::from)
+                .ok_or_else(|| "campaign manifest: non-string workload".to_string())
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(Some(workloads))
+}
+
+/// The per-workload store directory inside a campaign store.
+pub fn campaign_member_dir(dir: &str, workload: &str) -> String {
+    format!("{}/{}", dir.trim_end_matches('/'), workload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::test_support::scratch_dir;
+
+    #[test]
+    fn campaign_manifest_roundtrip() {
+        let dir = scratch_dir("manifest");
+        assert_eq!(read_campaign_manifest(&dir).unwrap(), None);
+        let workloads = vec!["fp8-gemm".to_string(), "row-softmax".to_string()];
+        write_campaign_manifest(&dir, &workloads).unwrap();
+        assert_eq!(read_campaign_manifest(&dir).unwrap(), Some(workloads));
+        assert_eq!(
+            campaign_member_dir("runs/camp/", "fp8-gemm"),
+            "runs/camp/fp8-gemm"
+        );
+    }
+
+    #[test]
+    fn journal_append_tracks_bytes_and_roundtrips() {
+        use crate::genome::seeds;
+        use crate::population::{EvalOutcome, Individual};
+        let dir = scratch_dir("journal");
+        let mut store = RunStore::create(&dir).unwrap();
+        assert_eq!(store.journal_bytes(), 0);
+        let record = JournalRecord::Exp(ExperimentRecord {
+            individual: Individual {
+                id: "00001".into(),
+                parents: vec![],
+                genome: seeds::mfma_seed(),
+                experiment: "seed kernel: mfma-seed".into(),
+                report: "provided seed".into(),
+                outcome: EvalOutcome::Timings(vec![100.0; 6]),
+            },
+            submitted_at: 1,
+            submission_index: Some(0),
+            cached: false,
+            lane: Some(0),
+            completed_at_s: Some(90.0),
+            plan: None,
+        });
+        store.append(&record);
+        let on_disk = std::fs::read_to_string(dir.join(JOURNAL_FILE)).unwrap();
+        assert_eq!(on_disk.len() as u64, store.journal_bytes());
+        let (records, torn) = journal::parse_journal(&on_disk).unwrap();
+        assert!(!torn);
+        assert_eq!(records.len(), 1);
+        // torn tails are detected and everything before them survives
+        let torn_text = format!("{on_disk}{{\"t\":\"exp\",\"ind\":");
+        let (records, torn) = journal::parse_journal(&torn_text).unwrap();
+        assert!(torn);
+        assert_eq!(records.len(), 1);
+    }
+}

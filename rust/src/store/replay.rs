@@ -1,0 +1,56 @@
+//! Replay: re-render a persisted run's transcripts, convergence curve,
+//! and lineage from the journal alone — no evaluation, no RNG, no
+//! platform (DESIGN.md §9). The audit path: everything the `run`
+//! command printed live is reconstructible after the fact.
+
+use std::path::Path;
+
+use super::{checkpoint::Checkpoint, journal, JOURNAL_FILE};
+use crate::config::RunConfig;
+use crate::metrics::ConvergenceCurve;
+use crate::population::Population;
+use crate::scientist::IterationLog;
+use crate::workload::Workload;
+
+/// A run reconstructed from its journal.
+pub struct ReplayedRun {
+    pub config: RunConfig,
+    pub workload: String,
+    pub population: Population,
+    pub logs: Vec<IterationLog>,
+    pub curve: ConvergenceCurve,
+    /// Committed (quota-consuming) submissions recorded.
+    pub submissions: u64,
+    /// True when the journal ended in a torn line (crash mid-append);
+    /// the torn tail is dropped, everything before it is rendered.
+    pub torn_tail: bool,
+}
+
+/// Rebuild a run from `<dir>`'s journal. Unlike `resume`, replay reads
+/// the **full** journal — including entries past the last checkpoint —
+/// because it renders what happened rather than reconstructing a
+/// consistent execution state; a torn final line (crash mid-write) is
+/// tolerated and reported via [`ReplayedRun::torn_tail`].
+pub fn replay(dir: &Path) -> Result<ReplayedRun, String> {
+    let cp = Checkpoint::load(dir)?;
+    let workload = crate::workload::lookup(&cp.config.workload)
+        .ok_or_else(|| format!("unknown workload '{}' in checkpoint", cp.config.workload))?;
+    let path = dir.join(JOURNAL_FILE);
+    let text =
+        std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let (records, torn_tail) = journal::parse_journal(&text)?;
+    let ledger = journal::rebuild(
+        &records,
+        workload.feedback_suite().configs,
+        /* strict= */ false,
+    )?;
+    Ok(ReplayedRun {
+        workload: cp.config.workload.clone(),
+        config: cp.config,
+        submissions: ledger.log_entries.len() as u64,
+        population: ledger.population,
+        logs: ledger.logs,
+        curve: ledger.curve,
+        torn_tail,
+    })
+}

@@ -76,6 +76,20 @@ pub fn test_rng(seed: u64) -> Rng {
     Rng::seed_from_u64(seed)
 }
 
+/// A unique, freshly created scratch directory under the system temp
+/// dir (for run-store tests). Uniqueness comes from the process id plus
+/// a process-wide counter, so concurrent test threads never collide.
+pub fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("gks-{tag}-{}-{n}", std::process::id()));
+    // fresh: a previous run's leftovers must not leak into this test
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
 /// `n` distinct valid genomes (single-edit neighbors of the fp8
 /// canonical seeds). Panics if the space can't supply `n`.
 pub fn distinct_genomes(n: usize) -> Vec<KernelGenome> {

@@ -136,6 +136,70 @@ impl Json {
     }
 }
 
+/// Encode a full-width u64 as a hex string value. [`Json::Num`] is
+/// f64-backed and loses integer precision past 2^53, so RNG state
+/// words and other full-range u64s travel as 16-digit hex strings.
+pub fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Decode a [`u64_hex`] value. Strict: hex digits only (from_str_radix
+/// alone would accept a leading '+').
+pub fn parse_u64_hex(v: &Json) -> Result<u64, String> {
+    let s = v.as_str().ok_or("expected hex string")?;
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(format!("bad hex u64 '{s}'"));
+    }
+    u64::from_str_radix(s, 16).map_err(|_| format!("bad hex u64 '{s}'"))
+}
+
+/// Encode a string list (shared by the run-store serializers).
+pub fn str_arr(xs: &[String]) -> Json {
+    Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect())
+}
+
+/// Decode a [`str_arr`] value; `what` names the field in errors.
+pub fn parse_str_arr(v: Option<&Json>, what: &str) -> Result<Vec<String>, String> {
+    v.and_then(|x| x.as_arr())
+        .ok_or_else(|| format!("missing {what}"))?
+        .iter()
+        .map(|s| {
+            s.as_str()
+                .map(String::from)
+                .ok_or_else(|| format!("non-string {what} entry"))
+        })
+        .collect()
+}
+
+/// Required-field accessors over an object value, erroring with the
+/// field name — the shared vocabulary of the run-store parsers.
+pub fn req_u64(v: &Json, k: &str) -> Result<u64, String> {
+    v.get(k)
+        .and_then(|x| x.as_u64())
+        .ok_or_else(|| format!("missing/invalid {k}"))
+}
+
+/// See [`req_u64`].
+pub fn req_f64(v: &Json, k: &str) -> Result<f64, String> {
+    v.get(k)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| format!("missing/invalid {k}"))
+}
+
+/// See [`req_u64`].
+pub fn req_str<'a>(v: &'a Json, k: &str) -> Result<&'a str, String> {
+    v.get(k)
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| format!("missing/invalid {k}"))
+}
+
+/// See [`req_u64`].
+pub fn req_bool(v: &Json, k: &str) -> Result<bool, String> {
+    v.get(k)
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| format!("missing/invalid {k}"))
+}
+
 /// Parse error with byte position.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
@@ -241,17 +305,38 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.pos + 4 >= self.bytes.len() {
-                                return Err(self.err("bad \\u escape"));
+                            let cp = self.hex4(self.pos + 1)?;
+                            if (0xD800..=0xDBFF).contains(&cp) {
+                                // High surrogate: per RFC 8259 §7 a
+                                // low-surrogate escape must follow, and
+                                // the pair decodes to one supplementary
+                                // scalar (non-BMP text round-trips
+                                // instead of collapsing to U+FFFD).
+                                if self.bytes.get(self.pos + 5) != Some(&b'\\')
+                                    || self.bytes.get(self.pos + 6) != Some(&b'u')
+                                {
+                                    return Err(self.err(
+                                        "lone high surrogate (expected \\u low surrogate)",
+                                    ));
+                                }
+                                let lo = self.hex4(self.pos + 7)?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    return Err(self.err("invalid low surrogate"));
+                                }
+                                let scalar =
+                                    0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                let c = char::from_u32(scalar)
+                                    .ok_or_else(|| self.err("bad surrogate pair"))?;
+                                s.push(c);
+                                self.pos += 10;
+                            } else if (0xDC00..=0xDFFF).contains(&cp) {
+                                return Err(self.err("lone low surrogate"));
+                            } else {
+                                // every non-surrogate BMP code point is
+                                // a valid scalar value
+                                s.push(char::from_u32(cp).expect("non-surrogate scalar"));
+                                self.pos += 4;
                             }
-                            let hex =
-                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // surrogate pairs unsupported (not needed for our data)
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.pos += 4;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -269,6 +354,18 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits starting at byte `at` (the XXXX of a `\uXXXX`).
+    /// Strict: from_str_radix alone would accept a leading '+'.
+    fn hex4(&self, at: usize) -> Result<u32, ParseError> {
+        if at + 4 > self.bytes.len()
+            || !self.bytes[at..at + 4].iter().all(|b| b.is_ascii_hexdigit())
+        {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.bytes[at..at + 4]).expect("ascii hex");
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
     }
 
     fn number(&mut self) -> Result<Json, ParseError> {
@@ -412,6 +509,56 @@ mod tests {
     fn unicode_passthrough() {
         let v = parse("\"héllo → 世界\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo → 世界"));
+        // non-BMP scalars pass through as raw UTF-8 and round-trip
+        let emitted = Json::Str("rationale 😀 𝒳 \u{10ffff}".into()).to_string();
+        assert_eq!(
+            parse(&emitted).unwrap().as_str(),
+            Some("rationale 😀 𝒳 \u{10ffff}")
+        );
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        // U+1F600 as its canonical escaped pair
+        assert_eq!(
+            parse(r#""\uD83D\uDE00""#).unwrap().as_str(),
+            Some("\u{1f600}")
+        );
+        // pair embedded in surrounding text, lowercase hex
+        assert_eq!(
+            parse(r#""a\ud835\udcb3b""#).unwrap().as_str(),
+            Some("a\u{1d4b3}b")
+        );
+        // highest scalar value U+10FFFF
+        assert_eq!(
+            parse(r#""\uDBFF\uDFFF""#).unwrap().as_str(),
+            Some("\u{10ffff}")
+        );
+        // BMP escapes still decode directly
+        assert_eq!(parse(r#""\u4e16\u754c""#).unwrap().as_str(), Some("世界"));
+    }
+
+    #[test]
+    fn lone_surrogates_rejected() {
+        // a high surrogate with no continuation, a non-escape after it,
+        // a bad low half, and a bare low surrogate are all parse errors
+        // (never U+FFFD corruption)
+        assert!(parse(r#""\uD83D""#).is_err());
+        assert!(parse(r#""\uD83Dx""#).is_err());
+        assert!(parse(r#""\uD83DA""#).is_err());
+        assert!(parse(r#""\uDE00""#).is_err());
+        assert!(parse(r#""\uD83D\uD83D""#).is_err());
+        // strict hex: a leading '+' is not a hex digit
+        assert!(parse(r#""\u+bcd""#).is_err());
+    }
+
+    #[test]
+    fn hex_u64_roundtrip_is_strict() {
+        assert_eq!(parse_u64_hex(&u64_hex(u64::MAX)).unwrap(), u64::MAX);
+        assert_eq!(parse_u64_hex(&u64_hex(0)).unwrap(), 0);
+        assert!(parse_u64_hex(&Json::Str("+00000000000000ff".into())).is_err());
+        assert!(parse_u64_hex(&Json::Str("".into())).is_err());
+        assert!(parse_u64_hex(&Json::Num(5.0)).is_err());
     }
 
     #[test]

@@ -331,6 +331,115 @@ fn prop_cache_stats_account_for_every_batch_submission() {
 }
 
 #[test]
+fn prop_ledger_entry_and_genome_json_roundtrip_lossless() {
+    // the run-store journal (DESIGN.md §9) makes serialized ledger
+    // entries a real input path: to_json → emit → parse → from_json
+    // must be lossless for randomized genomes and unicode-heavy
+    // rationale strings — including non-BMP scalars (the surrogate-pair
+    // parser fix) and JSON-hostile characters
+    use gpu_kernel_scientist::population::{EvalOutcome, Individual};
+    use gpu_kernel_scientist::store::{ExperimentRecord, JournalRecord, PlanRecord};
+    use gpu_kernel_scientist::util::json;
+
+    const POOL: &[char] = &[
+        'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{1}', '\u{1f}', 'é', 'ß',
+        '世', '界', '→', '\u{2028}', '😀', '🚀', '\u{1d4b3}', '\u{10ffff}', '\u{fffd}',
+    ];
+    let mut rng = Rng::seed_from_u64(130);
+    let random_text = |rng: &mut Rng| -> String {
+        (0..rng.below(40)).map(|_| *rng.choose(POOL)).collect()
+    };
+    for case in 0..CASES {
+        let outcome = match rng.below(3) {
+            0 => EvalOutcome::Timings((0..6).map(|_| rng.range_f64(1.0, 9e4)).collect()),
+            1 => EvalOutcome::CompileFailure(random_text(&mut rng)),
+            _ => EvalOutcome::IncorrectResult(random_text(&mut rng)),
+        };
+        let cached = rng.chance(0.3);
+        let record = JournalRecord::Exp(ExperimentRecord {
+            individual: Individual {
+                id: format!("{case:05}"),
+                parents: (0..rng.below(3)).map(|p| format!("{p:05}")).collect(),
+                genome: random_genome(&mut rng),
+                experiment: random_text(&mut rng),
+                report: random_text(&mut rng),
+                outcome,
+            },
+            submitted_at: rng.below(500) as u64 + 1,
+            submission_index: if cached { None } else { Some(case as u64) },
+            cached,
+            lane: if cached { None } else { Some(rng.below(8) as u32) },
+            completed_at_s: if cached {
+                None
+            } else {
+                Some(rng.range_f64(90.0, 9e5))
+            },
+            plan: if rng.chance(0.5) {
+                Some(rng.below(64))
+            } else {
+                None
+            },
+        });
+        let emitted = record.to_json().to_string();
+        let back = JournalRecord::from_json(&json::parse(&emitted).expect("parse"))
+            .expect("ledger entry round-trip");
+        // deterministic emission (ordered keys) makes re-emission a
+        // full structural equality check
+        assert_eq!(back.to_json().to_string(), emitted, "case {case}");
+        let (JournalRecord::Exp(a), JournalRecord::Exp(b)) = (&record, &back) else {
+            panic!("tag changed in round-trip");
+        };
+        assert_eq!(a.individual, b.individual, "case {case}");
+        assert_eq!(a.individual.genome.fingerprint(), b.individual.genome.fingerprint());
+
+        // plan records carry the selector rationale — the most
+        // unicode-heavy free text in the ledger
+        let plan = JournalRecord::Plan(PlanRecord {
+            iteration: case,
+            log_pos: case,
+            base_id: "00007".into(),
+            reference_id: "00003".into(),
+            policy: None,
+            rationale: random_text(&mut rng),
+            avenues: (0..rng.below(4)).map(|_| random_text(&mut rng)).collect(),
+            chosen: (0..rng.below(3)).map(|_| random_text(&mut rng)).collect(),
+        });
+        let emitted = plan.to_json().to_string();
+        let back = JournalRecord::from_json(&json::parse(&emitted).expect("parse plan"))
+            .expect("plan round-trip");
+        assert_eq!(back.to_json().to_string(), emitted, "plan case {case}");
+    }
+}
+
+#[test]
+fn prop_surrogate_escaped_text_parses_to_the_same_scalars() {
+    // any non-BMP scalar written as a \uXXXX\uXXXX pair must parse to
+    // the same string as the raw UTF-8 form (RFC 8259 §7)
+    use gpu_kernel_scientist::util::json;
+    let mut rng = Rng::seed_from_u64(131);
+    for _ in 0..CASES {
+        let mut raw = String::from("x");
+        let mut escaped = String::from("\"x");
+        for _ in 0..1 + rng.below(12) {
+            // random supplementary-plane scalar
+            let cp = 0x10000 + (rng.next_u64() % (0x10FFFF - 0x10000 + 1)) as u32;
+            let Some(c) = char::from_u32(cp) else { continue };
+            raw.push(c);
+            let v = cp - 0x10000;
+            let hi = 0xD800 + (v >> 10);
+            let lo = 0xDC00 + (v & 0x3FF);
+            escaped.push_str(&format!("\\u{hi:04X}\\u{lo:04X}"));
+        }
+        escaped.push('"');
+        let parsed = json::parse(&escaped).expect("escaped pair parses");
+        assert_eq!(parsed.as_str(), Some(raw.as_str()));
+        // and the raw form round-trips through our emitter
+        let emitted = json::Json::Str(raw.clone()).to_string();
+        assert_eq!(json::parse(&emitted).unwrap().as_str(), Some(raw.as_str()));
+    }
+}
+
+#[test]
 fn prop_population_jsonl_roundtrip_random() {
     use gpu_kernel_scientist::population::{EvalOutcome, Individual, Population};
     use gpu_kernel_scientist::workload::FEEDBACK_CONFIGS;

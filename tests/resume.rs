@@ -1,0 +1,412 @@
+//! Resume-equivalence suite (DESIGN.md §9; the acceptance bar of the
+//! run-store subsystem): an interrupted-then-resumed run is
+//! **bit-identical** — full ledger, transcripts, convergence curve,
+//! wall clock, cache stats, scheduler stats — to a run that was never
+//! interrupted, for every registered workload, under both the lockstep
+//! and steady-state-pipeline schedulers, at one and several lanes.
+//!
+//! Interruption is simulated with the `halt_after` knob: the scheduler
+//! aborts mid-campaign *without* a final checkpoint, exactly like a
+//! crash — resume has only the last periodic checkpoint plus the
+//! journal tail to work from (and must discard the tail past the
+//! checkpoint).
+
+use std::path::Path;
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::report;
+use gpu_kernel_scientist::scientist::{RunOutcome, ScientistRun};
+use gpu_kernel_scientist::sim::SimBackend;
+use gpu_kernel_scientist::test_support::scratch_dir;
+use gpu_kernel_scientist::workload::{registry, Workload};
+use gpu_kernel_scientist::{store, workloads};
+
+fn store_config(
+    workload: &str,
+    seed: u64,
+    budget: u64,
+    lanes: u32,
+    pipeline: bool,
+    dir: &Path,
+) -> RunConfig {
+    let mut cfg = RunConfig::default()
+        .with_workload(workload)
+        .with_seed(seed)
+        .with_budget(budget)
+        .with_parallelism(lanes)
+        .with_pipeline(pipeline);
+    cfg.store_dir = Some(dir.display().to_string());
+    cfg
+}
+
+/// The full bit-identity assertion: ledger, transcripts, curve,
+/// platform accounting, cache stats, scheduler stats.
+fn assert_bit_identical(
+    label: &str,
+    full: &ScientistRun<SimBackend>,
+    full_out: &RunOutcome,
+    resumed: &ScientistRun<SimBackend>,
+    resumed_out: &RunOutcome,
+) {
+    assert_eq!(
+        full.population.members(),
+        resumed.population.members(),
+        "{label}: full ledger (genomes, lineage, reports, outcomes)"
+    );
+    let render = |run: &ScientistRun<SimBackend>| -> Vec<String> {
+        run.logs.iter().map(report::render_iteration).collect()
+    };
+    assert_eq!(render(full), render(resumed), "{label}: iteration transcripts");
+    assert_eq!(
+        full_out.curve.points, resumed_out.curve.points,
+        "{label}: convergence curve"
+    );
+    assert_eq!(full_out.best_id, resumed_out.best_id, "{label}: best id");
+    assert_eq!(
+        full_out.best_geomean_us, resumed_out.best_geomean_us,
+        "{label}: best geomean (bitwise)"
+    );
+    assert_eq!(
+        full_out.leaderboard_us, resumed_out.leaderboard_us,
+        "{label}: leaderboard score (bitwise)"
+    );
+    assert_eq!(
+        full_out.submissions, resumed_out.submissions,
+        "{label}: submissions"
+    );
+    assert_eq!(
+        full_out.wall_clock_s, resumed_out.wall_clock_s,
+        "{label}: simulated wall clock (bitwise)"
+    );
+    assert_eq!(
+        full.platform.cache_stats(),
+        resumed.platform.cache_stats(),
+        "{label}: cache stats"
+    );
+    assert_eq!(
+        full_out.pipeline, resumed_out.pipeline,
+        "{label}: scheduler stats (occupancy, depth, planning rounds)"
+    );
+}
+
+/// Run the (workload, scheduler, lanes) configuration twice — once
+/// uninterrupted, once crashed at `halt_after` submissions and then
+/// resumed — and assert bit-identity.
+fn resume_matches_uninterrupted(
+    workload: &str,
+    seed: u64,
+    budget: u64,
+    lanes: u32,
+    pipeline: bool,
+    halt_after: u64,
+    checkpoint_every: u64,
+) {
+    let label = format!(
+        "{workload} {} lanes={lanes} halt={halt_after} every={checkpoint_every}",
+        if pipeline { "pipeline" } else { "lockstep" }
+    );
+    let full_dir = scratch_dir("full");
+    let crash_dir = scratch_dir("crash");
+
+    let mut full_cfg = store_config(workload, seed, budget, lanes, pipeline, &full_dir);
+    full_cfg.checkpoint_every = checkpoint_every;
+    let mut full = ScientistRun::new(full_cfg).expect("uninterrupted setup");
+    let full_out = full.run_to_completion().expect("uninterrupted run");
+    assert!(!full.halted());
+
+    let mut crash_cfg = store_config(workload, seed, budget, lanes, pipeline, &crash_dir);
+    crash_cfg.checkpoint_every = checkpoint_every;
+    crash_cfg.halt_after = Some(halt_after);
+    let mut crashed = ScientistRun::new(crash_cfg).expect("crashing setup");
+    let _ = crashed.run_to_completion().expect("halted run");
+    assert!(crashed.halted(), "{label}: halt_after should trip");
+    let crashed_subs = crashed.platform.submissions();
+    assert!(
+        crashed_subs < budget,
+        "{label}: the crash must interrupt mid-campaign"
+    );
+    drop(crashed); // the process is gone; only the store survives
+
+    let mut resumed = ScientistRun::resume(&crash_dir).expect("resume");
+    assert!(
+        resumed.platform.submissions() <= crashed_subs,
+        "{label}: resume starts from the last checkpoint, not past the crash"
+    );
+    let resumed_out = resumed.run_to_completion().expect("resumed run");
+    assert!(!resumed.halted(), "{label}: halt knob is not persisted");
+    assert_bit_identical(&label, &full, &full_out, &resumed, &resumed_out);
+}
+
+#[test]
+fn lockstep_resume_is_bit_identical_for_every_workload() {
+    for w in registry() {
+        resume_matches_uninterrupted(w.name(), 7, 24, 1, false, 12, 1);
+    }
+}
+
+#[test]
+fn pipeline_resume_is_bit_identical_for_every_workload() {
+    for w in registry() {
+        resume_matches_uninterrupted(w.name(), 5, 24, 1, true, 12, 1);
+    }
+}
+
+#[test]
+fn multi_lane_lockstep_resume_is_bit_identical() {
+    // lockstep at several lanes: ephemeral per-batch lane forks, so the
+    // parent backend snapshot alone must carry the noise streams
+    resume_matches_uninterrupted("fp8-gemm", 11, 26, 3, false, 14, 1);
+}
+
+#[test]
+fn multi_lane_pipeline_resume_is_bit_identical() {
+    // pipeline at several lanes: persistent stream workers — resume
+    // re-forks the lane backends from the pre-spawn state and replays
+    // each lane's committed FIFO prefix, and checkpoints taken with
+    // work in flight unwind it exactly
+    resume_matches_uninterrupted("fp8-gemm", 3, 26, 3, true, 14, 1);
+    resume_matches_uninterrupted("row-softmax", 9, 24, 2, true, 13, 1);
+}
+
+#[test]
+fn deep_pipeline_resume_with_stale_checkpoint() {
+    // inflight_per_lane > 1 plus a checkpoint cadence > 1: the crash
+    // lands several completions past the last checkpoint, so resume
+    // must discard the journal tail and re-derive it live
+    let full_dir = scratch_dir("full");
+    let crash_dir = scratch_dir("crash");
+    let mk = |dir: &Path| {
+        let mut cfg = store_config("bf16-gemm", 13, 28, 2, true, dir);
+        cfg.inflight_per_lane = 2;
+        cfg.checkpoint_every = 3;
+        cfg
+    };
+    let mut full = ScientistRun::new(mk(&full_dir)).unwrap();
+    let full_out = full.run_to_completion().unwrap();
+    let mut crash_cfg = mk(&crash_dir);
+    crash_cfg.halt_after = Some(15);
+    let mut crashed = ScientistRun::new(crash_cfg).unwrap();
+    let _ = crashed.run_to_completion().unwrap();
+    assert!(crashed.halted());
+    drop(crashed);
+    let mut resumed = ScientistRun::resume(&crash_dir).unwrap();
+    let resumed_out = resumed.run_to_completion().unwrap();
+    assert_bit_identical("deep pipeline", &full, &full_out, &resumed, &resumed_out);
+}
+
+#[test]
+fn resume_with_the_eval_cache_disabled_is_bit_identical() {
+    // cache off: counted stats stay (0, 0) and a mid-flight checkpoint
+    // must not try to subtract uncounted misses — the rolled-back
+    // stats mirror submit_stream's counting rule exactly
+    let full_dir = scratch_dir("full");
+    let crash_dir = scratch_dir("crash");
+    let mk = |dir: &Path| {
+        let mut cfg = store_config("fp8-gemm", 27, 24, 2, true, dir);
+        cfg.eval_cache = false;
+        cfg
+    };
+    let mut full = ScientistRun::new(mk(&full_dir)).unwrap();
+    let full_out = full.run_to_completion().unwrap();
+    let mut crash_cfg = mk(&crash_dir);
+    crash_cfg.halt_after = Some(13);
+    let mut crashed = ScientistRun::new(crash_cfg).unwrap();
+    let _ = crashed.run_to_completion().unwrap();
+    assert!(crashed.halted());
+    drop(crashed);
+    let mut resumed = ScientistRun::resume(&crash_dir).unwrap();
+    let resumed_out = resumed.run_to_completion().unwrap();
+    assert_eq!(resumed.platform.cache_stats(), (0, 0));
+    assert_bit_identical("cache off", &full, &full_out, &resumed, &resumed_out);
+}
+
+#[test]
+fn failed_resume_leaves_the_journal_intact() {
+    // corrupt the checkpoint so resume fails validation: the journal
+    // tail must NOT be truncated (replay still renders full history)
+    let dir = scratch_dir("preserve");
+    let mut cfg = store_config("fp8-gemm", 33, 20, 1, false, &dir);
+    cfg.checkpoint_every = 4; // leave journal entries past the checkpoint
+    cfg.halt_after = Some(11);
+    let mut crashed = ScientistRun::new(cfg).unwrap();
+    let _ = crashed.run_to_completion().unwrap();
+    assert!(crashed.halted());
+    drop(crashed);
+    let journal_before =
+        std::fs::read_to_string(dir.join(store::JOURNAL_FILE)).unwrap();
+    // sabotage: claim a different lane count than the run used
+    let cp_path = dir.join("checkpoint.json");
+    let cp = std::fs::read_to_string(&cp_path).unwrap();
+    let cp = cp.replace("\"lane_busy_until\":[", "\"lane_busy_until\":[0,");
+    std::fs::write(&cp_path, cp).unwrap();
+    assert!(ScientistRun::resume(&dir).is_err());
+    let journal_after =
+        std::fs::read_to_string(dir.join(store::JOURNAL_FILE)).unwrap();
+    assert_eq!(
+        journal_before, journal_after,
+        "a failed resume must not destroy the post-checkpoint history"
+    );
+}
+
+#[test]
+fn deep_inline_pipeline_resume_rewinds_the_parent_noise_stream() {
+    // lanes = 1 with inflight_per_lane = 2: stream dispatches evaluate
+    // *inline* on the parent backend at submit time, so a checkpoint
+    // with work in flight must rewind the parent to the oldest
+    // dispatch's recorded pre-state — the resumed re-dispatch then
+    // redraws the exact same noise
+    let full_dir = scratch_dir("full");
+    let crash_dir = scratch_dir("crash");
+    let mk = |dir: &Path| {
+        let mut cfg = store_config("fp8-gemm", 19, 24, 1, true, dir);
+        cfg.inflight_per_lane = 2;
+        cfg
+    };
+    let mut full = ScientistRun::new(mk(&full_dir)).unwrap();
+    let full_out = full.run_to_completion().unwrap();
+    let mut crash_cfg = mk(&crash_dir);
+    crash_cfg.halt_after = Some(13);
+    let mut crashed = ScientistRun::new(crash_cfg).unwrap();
+    let _ = crashed.run_to_completion().unwrap();
+    assert!(crashed.halted());
+    drop(crashed);
+    let mut resumed = ScientistRun::resume(&crash_dir).unwrap();
+    let resumed_out = resumed.run_to_completion().unwrap();
+    assert_bit_identical("deep inline", &full, &full_out, &resumed, &resumed_out);
+}
+
+#[test]
+fn resume_discards_a_torn_journal_tail() {
+    // simulate a crash mid-append: garbage past the last checkpoint
+    // must be truncated away, and the resumed run still matches the
+    // uninterrupted one bit for bit
+    let full_dir = scratch_dir("full");
+    let crash_dir = scratch_dir("crash");
+    let mut full_cfg = store_config("fp8-gemm", 17, 22, 1, false, &full_dir);
+    full_cfg.checkpoint_every = 2;
+    let mut full = ScientistRun::new(full_cfg).unwrap();
+    let full_out = full.run_to_completion().unwrap();
+
+    let mut crash_cfg = store_config("fp8-gemm", 17, 22, 1, false, &crash_dir);
+    crash_cfg.checkpoint_every = 2;
+    crash_cfg.halt_after = Some(11);
+    let mut crashed = ScientistRun::new(crash_cfg).unwrap();
+    let _ = crashed.run_to_completion().unwrap();
+    assert!(crashed.halted());
+    drop(crashed);
+    // torn half-line at the journal's end
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(crash_dir.join(store::JOURNAL_FILE))
+        .unwrap();
+    f.write_all(b"{\"t\":\"exp\",\"ind\":{\"trunc").unwrap();
+    drop(f);
+
+    let mut resumed = ScientistRun::resume(&crash_dir).unwrap();
+    let resumed_out = resumed.run_to_completion().unwrap();
+    assert_bit_identical("torn tail", &full, &full_out, &resumed, &resumed_out);
+}
+
+#[test]
+fn store_instrumentation_never_perturbs_the_trajectory() {
+    // a run with a store attached is bit-identical to one without
+    use gpu_kernel_scientist::test_support::trajectory;
+    for (pipeline, lanes) in [(false, 1), (true, 2)] {
+        let dir = scratch_dir("instr");
+        let base = RunConfig::default()
+            .with_workload("row-softmax")
+            .with_seed(21)
+            .with_budget(20)
+            .with_parallelism(lanes)
+            .with_pipeline(pipeline);
+        let mut plain = ScientistRun::new(base.clone()).unwrap();
+        let plain_out = plain.run_to_completion().unwrap();
+        let mut stored_cfg = base;
+        stored_cfg.store_dir = Some(dir.display().to_string());
+        let mut stored = ScientistRun::new(stored_cfg).unwrap();
+        let stored_out = stored.run_to_completion().unwrap();
+        assert_eq!(trajectory(&plain), trajectory(&stored));
+        assert_eq!(plain_out.best_geomean_us, stored_out.best_geomean_us);
+        assert_eq!(plain_out.wall_clock_s, stored_out.wall_clock_s);
+        assert_eq!(plain.platform.cache_stats(), stored.platform.cache_stats());
+    }
+}
+
+#[test]
+fn replay_reconstructs_the_run_without_evaluating() {
+    let dir = scratch_dir("replay");
+    let cfg = store_config("fp8-gemm", 23, 20, 1, false, &dir);
+    let mut run = ScientistRun::new(cfg).unwrap();
+    run.run_to_completion().unwrap();
+    let replayed = store::replay(&dir).expect("replay");
+    assert!(!replayed.torn_tail);
+    assert_eq!(replayed.workload, "fp8-gemm");
+    assert_eq!(replayed.population.members(), run.population.members());
+    assert_eq!(replayed.submissions, run.platform.submissions());
+    let render = |logs: &[gpu_kernel_scientist::scientist::IterationLog]| -> Vec<String> {
+        logs.iter().map(report::render_iteration).collect()
+    };
+    assert_eq!(render(&replayed.logs), render(&run.logs));
+    assert_eq!(replayed.curve.points, run.curve.points);
+}
+
+#[test]
+fn resume_of_a_completed_run_recomputes_the_same_outcome() {
+    let dir = scratch_dir("done");
+    let cfg = store_config("row-softmax", 29, 18, 1, true, &dir);
+    let mut run = ScientistRun::new(cfg).unwrap();
+    let out = run.run_to_completion().unwrap();
+    let mut again = ScientistRun::resume(&dir).unwrap();
+    let out2 = again.run_to_completion().unwrap();
+    assert_bit_identical("completed rerun", &run, &out, &again, &out2);
+}
+
+#[test]
+fn resume_without_a_store_is_a_clear_error() {
+    let dir = scratch_dir("empty");
+    let err = ScientistRun::resume(&dir).unwrap_err();
+    assert!(err.contains("checkpoint"), "{err}");
+}
+
+#[test]
+fn campaign_store_is_resumable_per_workload() {
+    use gpu_kernel_scientist::scientist::campaign::{
+        resume_campaign, run_campaign, CampaignConfig,
+    };
+    let full_dir = scratch_dir("camp-full");
+    let crash_dir = scratch_dir("camp-crash");
+    let base = |dir: &Path| {
+        let mut cfg = RunConfig::default().with_seed(31).with_budget(16);
+        cfg.store_dir = Some(dir.display().to_string());
+        cfg
+    };
+    let workloads: Vec<String> =
+        workloads::registry().iter().map(|w| w.name().to_string()).collect();
+    let full = run_campaign(&CampaignConfig {
+        workloads: workloads.clone(),
+        base: base(&full_dir),
+    })
+    .unwrap();
+    // crash every member at half budget, then resume the campaign
+    let mut crash_base = base(&crash_dir);
+    crash_base.halt_after = Some(8);
+    let _ = run_campaign(&CampaignConfig {
+        workloads: workloads.clone(),
+        base: crash_base,
+    })
+    .unwrap();
+    let resumed = resume_campaign(&crash_dir, None).unwrap();
+    assert_eq!(full.results.len(), resumed.results.len());
+    for (a, b) in full.results.iter().zip(&resumed.results) {
+        assert_eq!(a.workload, b.workload);
+        assert_eq!(a.outcome.best_id, b.outcome.best_id, "{}", a.workload);
+        assert_eq!(
+            a.outcome.best_geomean_us, b.outcome.best_geomean_us,
+            "{}",
+            a.workload
+        );
+        assert_eq!(a.outcome.submissions, b.outcome.submissions, "{}", a.workload);
+        assert_eq!(a.cache_stats, b.cache_stats, "{}", a.workload);
+    }
+}
