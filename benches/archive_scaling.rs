@@ -1,0 +1,232 @@
+//! Perf bench: coordinator overhead at archive scale (DESIGN.md §Perf,
+//! archive-scaling pass).
+//!
+//! The paper's loop re-reads the whole archive every planning round
+//! ("strategically selecting promising prior code versions", §3.1).
+//! Before the indexed archive, selection cloned + sorted `successful()`
+//! and walked lineage by linear id scans — O(n)–O(n²) per round — so
+//! coordinator overhead grew with ledger length exactly when long
+//! campaigns made the ledger long. This bench drives synthetic archives
+//! of 1k / 10k / 50k members through the real agent stages and asserts
+//! the targets DESIGN.md §Perf records:
+//!
+//!   * per-planning-round coordinator cost (select → design → choose)
+//!     grows ≤ 2x from 1k to 50k members;
+//!   * the archive query mix (by_id, best, ancestors, config_winners,
+//!     duplicate probe) grows ≤ 2x from 1k to 50k members;
+//!   * journal-entry serialization streams allocation-free into a
+//!     reusable buffer (reported as ns/entry; asserted ≤ 50 µs).
+//!
+//! Run: `cargo bench --bench archive_scaling`
+
+use std::time::Duration;
+
+use gpu_kernel_scientist::agents::{AgentSuite, Designer, Selector};
+use gpu_kernel_scientist::population::{EvalOutcome, Individual, Population};
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::rng::Rng;
+use gpu_kernel_scientist::store::{ExperimentRecord, JournalRecord};
+use gpu_kernel_scientist::test_support::random_genome;
+use gpu_kernel_scientist::util::bench::{bench, header, report, BenchResult};
+use gpu_kernel_scientist::workload::FEEDBACK_CONFIGS;
+
+/// A realistic long-campaign archive: a branchy lineage forest over
+/// mostly-recent parents, a slowly improving timing trend with
+/// per-config jitter (so the "beats the best somewhere" frontier is a
+/// bounded recent band at every archive size, as in real runs), ~8%
+/// failures, and distinct-ish genomes from random edit walks.
+fn synthetic_archive(n: usize, seed: u64) -> Population {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut pop = Population::new(FEEDBACK_CONFIGS.to_vec());
+    for i in 0..n {
+        let id = format!("{:05}", i + 1);
+        let parents = if i == 0 {
+            vec![]
+        } else {
+            // re-branching from mid-history winners keeps lineage depth
+            // logarithmic in archive length (real archives re-branch
+            // from the frontier, not from one ever-deepening chain) —
+            // parent index in [i/2, i)
+            let lo = i / 2;
+            vec![format!("{:05}", lo + rng.below(i - lo) + 1)]
+        };
+        let outcome = if i > 0 && rng.chance(0.08) {
+            EvalOutcome::CompileFailure("LDS overflow (synthetic)".into())
+        } else {
+            // multiplicative decay dominates the ±3% jitter beyond a
+            // few hundred members, bounding the specialist frontier
+            let trend = 5000.0 * 0.9997f64.powi(i as i32);
+            EvalOutcome::Timings(
+                (0..FEEDBACK_CONFIGS.len())
+                    .map(|_| trend * rng.range_f64(0.97, 1.03))
+                    .collect(),
+            )
+        };
+        pop.add(Individual {
+            id,
+            parents,
+            genome: random_genome(&mut rng),
+            experiment: format!("synthetic experiment {i}"),
+            report: String::new(),
+            outcome,
+        });
+    }
+    pop
+}
+
+struct SizePoint {
+    n: usize,
+    planning_round_ns: f64,
+    query_mix_ns: f64,
+}
+
+fn measure(n: usize, budget: Duration) -> SizePoint {
+    println!("\n-- archive of {n} members --");
+    let pop = synthetic_archive(n, 42);
+    let mut suite = AgentSuite::paper(7);
+    let selector = Selector::new(SelectionPolicy::PaperLlm);
+    let designer = Designer::default();
+
+    // one full coordinator planning round against the ledger: the
+    // selector's judgement (leaderboard top-k, specialist + divergence
+    // candidates), the designer's 10 avenues → 5 plans, and the 3-of-5
+    // choice. Everything but the writer/backend — i.e. exactly the
+    // per-round overhead that used to scale with the archive.
+    let r = bench("planning round (select → design → choose)", budget, || {
+        let sel = selector.select(&pop, &mut suite.llm).expect("selects");
+        let base = pop.by_id(&sel.base_id).expect("base in archive");
+        let design = designer.design(
+            &base.id,
+            &base.genome,
+            &pop,
+            &suite.knowledge,
+            &mut suite.llm,
+        );
+        let chosen = designer.choose(&design.plans, &mut suite.llm);
+        std::hint::black_box((sel, chosen));
+    });
+    report(&r);
+    let planning_round_ns = r.mean_ns;
+
+    // the raw archive query mix every consumer leans on
+    let probe = pop.members()[n / 2].genome.clone();
+    let novel = {
+        // a genome absent from the archive: flip until the probe misses
+        let mut rng = Rng::seed_from_u64(987);
+        loop {
+            let g = random_genome(&mut rng);
+            if pop.find_duplicate(&g).is_none() {
+                break g;
+            }
+        }
+    };
+    let deep_id = pop.members()[n - 1].id.clone();
+    let q = bench("query mix (by_id/best/ancestors/winners/dup)", budget, || {
+        std::hint::black_box(pop.by_id(&deep_id));
+        std::hint::black_box(pop.best());
+        std::hint::black_box(pop.ancestors(&deep_id).len());
+        std::hint::black_box(pop.config_winners());
+        std::hint::black_box(pop.find_duplicate(&probe).is_some());
+        std::hint::black_box(pop.find_duplicate(&novel).is_none());
+    });
+    report(&q);
+    SizePoint {
+        n,
+        planning_round_ns,
+        query_mix_ns: q.mean_ns,
+    }
+}
+
+fn journal_serialization(budget: Duration) -> BenchResult {
+    let pop = synthetic_archive(64, 5);
+    let records: Vec<JournalRecord> = pop
+        .members()
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            JournalRecord::Exp(ExperimentRecord {
+                individual: m.clone(),
+                submitted_at: i as u64 + 1,
+                submission_index: Some(i as u64),
+                cached: false,
+                lane: Some((i % 4) as u32),
+                completed_at_s: Some(90.0 * (i as f64 + 1.0)),
+                plan: if i > 2 { Some(i / 3) } else { None },
+            })
+        })
+        .collect();
+    let mut buf = String::new();
+    let mut i = 0usize;
+    let r = bench("journal entry streamed serialize (reused buffer)", budget, || {
+        buf.clear();
+        records[i % records.len()].write_json(&mut buf);
+        buf.push('\n');
+        std::hint::black_box(buf.len());
+        i += 1;
+    });
+    report(&r);
+    r
+}
+
+fn main() {
+    header("archive_scaling — coordinator overhead vs ledger length");
+    let budget = Duration::from_millis(400);
+
+    // two interleaved measurement rounds, per-size minimum: a noisy
+    // neighbour on a shared CI runner inflates one window, not the
+    // min of two windows taken seconds apart — the asserted ratios
+    // compare like against like
+    let sizes = [1_000usize, 10_000, 50_000];
+    let mut points: Vec<SizePoint> = sizes.into_iter().map(|n| measure(n, budget)).collect();
+    println!("\n-- second interleaved round (per-size minimum is scored) --");
+    for (i, n) in sizes.into_iter().enumerate() {
+        let again = measure(n, budget);
+        points[i].planning_round_ns = points[i].planning_round_ns.min(again.planning_round_ns);
+        points[i].query_mix_ns = points[i].query_mix_ns.min(again.query_mix_ns);
+    }
+
+    println!("\n| members | planning round | query mix |");
+    println!("|--------:|---------------:|----------:|");
+    for p in &points {
+        println!(
+            "| {:6} | {:11.1} us | {:7.2} us |",
+            p.n,
+            p.planning_round_ns / 1e3,
+            p.query_mix_ns / 1e3
+        );
+    }
+
+    let small = &points[0];
+    let large = &points[points.len() - 1];
+    let plan_ratio = large.planning_round_ns / small.planning_round_ns;
+    let query_ratio = large.query_mix_ns / small.query_mix_ns;
+    println!(
+        "\n1k → 50k growth: planning {plan_ratio:.2}x, query mix {query_ratio:.2}x \
+         (target <= 2x each)"
+    );
+    assert!(
+        plan_ratio <= 2.0,
+        "planning-round overhead must stay near-flat (1k → 50k grew {plan_ratio:.2}x)"
+    );
+    assert!(
+        query_ratio <= 2.0,
+        "archive query mix must stay near-flat (1k → 50k grew {query_ratio:.2}x)"
+    );
+    // absolute sanity alongside sim_throughput's 5 ms/iteration bound:
+    // a planning round against a 50k-member ledger stays far below the
+    // 90 s/submission platform latency it schedules against
+    assert!(
+        large.planning_round_ns < 5_000_000.0,
+        "planning round at 50k members above 5 ms: {} ns",
+        large.planning_round_ns
+    );
+
+    let j = journal_serialization(budget);
+    assert!(
+        j.mean_ns < 50_000.0,
+        "journal entry serialization above 50 us: {} ns",
+        j.mean_ns
+    );
+
+    println!("\narchive_scaling targets: OK");
+}

@@ -105,17 +105,18 @@ impl Designer {
                 (a, (lo + hi) * 0.5 * wobble)
             })
             .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.sort_by(|a, b| b.1.total_cmp(&a.1));
         scored.truncate(self.n_avenues);
         let avenues: Vec<Avenue> = scored.iter().map(|(a, _)| *a).collect();
 
-        // lineage history for novelty shaping
-        let tried: std::collections::HashSet<String> = pop
+        // lineage history for novelty shaping (borrowed — no per-call
+        // experiment-string clones, §Perf)
+        let tried: std::collections::HashSet<&str> = pop
             .ancestors(base_id)
             .iter()
             .copied()
             .chain(pop.by_id(base_id))
-            .map(|m| m.experiment.clone())
+            .map(|m| m.experiment.as_str())
             .collect();
 
         let mut plans = Vec::new();
@@ -180,7 +181,7 @@ impl Designer {
                         .iter()
                         .enumerate()
                         .filter(|(i, _)| !chosen.contains(i))
-                        .max_by(|a, b| key(a.1).partial_cmp(&key(b.1)).unwrap())
+                        .max_by(|a, b| key(a.1).total_cmp(&key(b.1)))
                         .map(|(i, _)| i)
                 };
                 // (i) most innovative
@@ -204,11 +205,7 @@ impl Designer {
             ExperimentRule::TopMax => {
                 let mut idx: Vec<usize> = (0..plans.len()).collect();
                 idx.sort_by(|&a, &b| {
-                    plans[b]
-                        .performance
-                        .1
-                        .partial_cmp(&plans[a].performance.1)
-                        .unwrap()
+                    plans[b].performance.1.total_cmp(&plans[a].performance.1)
                 });
                 idx.truncate(n);
                 idx

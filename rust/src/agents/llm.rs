@@ -87,7 +87,7 @@ impl SurrogateLlm {
             return items
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+                .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
                 .map(|(i, _)| i)
                 .unwrap();
         }

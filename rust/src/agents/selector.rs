@@ -59,17 +59,26 @@ impl Selector {
     }
 
     /// Select base + reference. Requires >= 2 successful members.
+    ///
+    /// Perf (§Perf, archive-scaling pass): every path reads the
+    /// population's incrementally maintained indexes — the leaderboard
+    /// for top-k/second-best (the old per-call `successful()` clone +
+    /// full sort is gone), the per-config timing indexes for the
+    /// specialist candidates, and resolved parent indices for the
+    /// divergence walk — so per-round cost no longer grows with the
+    /// archive. Candidate content, order, weights, and RNG call
+    /// sequence are unchanged, keeping trajectories bit-identical.
     pub fn select(&self, pop: &Population, llm: &mut SurrogateLlm) -> Option<Selection> {
-        let ok = pop.successful();
-        if ok.len() < 2 {
+        let n_ok = pop.successful_count();
+        if n_ok < 2 {
             return None;
         }
         match self.policy {
             SelectionPolicy::Random => {
-                let base = ok[llm.rng().below(ok.len())];
-                let mut reference = ok[llm.rng().below(ok.len())];
+                let base = pop.nth_successful(llm.rng().below(n_ok));
+                let mut reference = pop.nth_successful(llm.rng().below(n_ok));
                 while reference.id == base.id {
-                    reference = ok[llm.rng().below(ok.len())];
+                    reference = pop.nth_successful(llm.rng().below(n_ok));
                 }
                 Some(Selection {
                     base_id: base.id.clone(),
@@ -79,11 +88,12 @@ impl Selector {
                 })
             }
             SelectionPolicy::GreedyBest => {
-                let mut sorted = ok.clone();
-                sorted.sort_by(|a, b| a.score().partial_cmp(&b.score()).unwrap());
+                let mut top = pop.leaderboard_members();
+                let best = top.next().expect(">= 2 successful members");
+                let second = top.next().expect(">= 2 successful members");
                 Some(Selection {
-                    base_id: sorted[0].id.clone(),
-                    reference_id: sorted[1].id.clone(),
+                    base_id: best.id.clone(),
+                    reference_id: second.id.clone(),
                     policy: None,
                     rationale: "(greedy ablation: best and second-best by geomean)".into(),
                 })
@@ -93,19 +103,18 @@ impl Selector {
     }
 
     fn select_llm(&self, pop: &Population, llm: &mut SurrogateLlm) -> Option<Selection> {
-        let ok = pop.successful();
         // --- base: lowest geomean, with a temperature-weighted wobble
         // over the top few (the LLM sometimes favours a near-best with
-        // interesting properties).
-        let mut sorted = ok.clone();
-        sorted.sort_by(|a, b| a.score().partial_cmp(&b.score()).unwrap());
-        let top: Vec<(&Individual, f64)> = sorted
-            .iter()
+        // interesting properties). Leaderboard order == the old stable
+        // sort of successful() by score.
+        let top: Vec<(&Individual, f64)> = pop
+            .leaderboard_members()
             .take(3)
             .enumerate()
-            .map(|(rank, m)| (*m, 1.0 - rank as f64 * 0.45))
+            .map(|(rank, m)| (m, 1.0 - rank as f64 * 0.45))
             .collect();
         let base = top[llm.sample_weighted(&top)].0;
+        let base_idx = pop.index_of(&base.id).expect("base is in the population");
 
         // --- reference: gather one candidate per applicable policy,
         // then let the surrogate choose among them.
@@ -120,73 +129,67 @@ impl Selector {
             }
         }
         // (b) per-config specialist: someone who beats the base on >= 1
-        // feedback config despite a worse geomean.
-        if let Some(base_ts) = base.outcome.timings() {
-            'members: for m in &ok {
-                if m.id == base.id {
-                    continue;
-                }
-                if let Some(ts) = m.outcome.timings() {
-                    for (i, (&t, &bt)) in ts.iter().zip(base_ts.iter()).enumerate() {
-                        if t < bt {
-                            candidates.push((
-                                ReferencePolicy::PerConfigSpecialist,
-                                m,
-                                0.9 + i as f64 * 1e-3,
-                            ));
-                            continue 'members;
-                        }
-                    }
-                }
-            }
+        // feedback config despite a worse geomean. Answered from the
+        // per-config timing indexes in O(result) — same candidates,
+        // same first-config weights, same insertion order as the old
+        // full-archive scan.
+        for (i, m) in pop.config_beaters(base) {
+            candidates.push((ReferencePolicy::PerConfigSpecialist, m, 0.9 + i as f64 * 1e-3));
         }
         // (c) divergent path: a member sharing a common ancestor with
-        // the base but on a different branch (not an ancestor/descendant).
-        // Perf note (§Perf iteration 2): the base's ancestor chain is
-        // computed once and candidate chains are walked without
-        // allocating a set per member — selection is O(depth) per
-        // candidate instead of O(population) set builds.
+        // the base but on a different branch (not an ancestor/
+        // descendant). The base's ancestor set is built once; candidate
+        // chains walk resolved parent *indices* (no id hashing), so the
+        // scan is O(depth) per candidate and stops at the first hit.
         {
-            let base_anc: std::collections::HashSet<&str> = pop
-                .ancestors(&base.id)
-                .iter()
-                .map(|m| m.id.as_str())
-                .collect();
-            'outer: for m in &ok {
-                if m.id == base.id || base_anc.contains(m.id.as_str()) {
+            let mut base_anc: std::collections::HashSet<usize> =
+                std::collections::HashSet::new();
+            let mut cur = pop.parent_of(base_idx);
+            while let Some(p) = cur {
+                base_anc.insert(p);
+                cur = pop.parent_of(p);
+            }
+            'outer: for &mi in pop.successful_indices() {
+                let mi = mi as usize;
+                if mi == base_idx || base_anc.contains(&mi) {
                     continue;
                 }
-                // walk m's ancestor chain directly
-                let mut cur = m.parents.first().map(String::as_str);
+                // walk m's ancestor chain directly (indices strictly
+                // descend, so cycles are impossible — the depth cap
+                // stays because "divergence evidence within 64
+                // generations" is observable selector behaviour)
+                let mut cur = pop.parent_of(mi);
                 let mut depth = 0;
-                while let Some(pid) = cur {
-                    if pid == base.id {
+                while let Some(p) = cur {
+                    if p == base_idx {
                         continue 'outer; // descendant of base, not divergent
                     }
-                    if base_anc.contains(pid) {
-                        candidates.push((ReferencePolicy::DivergentPath, m, 0.85));
+                    if base_anc.contains(&p) {
+                        candidates.push((
+                            ReferencePolicy::DivergentPath,
+                            pop.member(mi),
+                            0.85,
+                        ));
                         break 'outer;
                     }
-                    cur = pop
-                        .by_id(pid)
-                        .and_then(|p| p.parents.first())
-                        .map(String::as_str);
+                    cur = pop.parent_of(p);
                     depth += 1;
                     if depth > 64 {
-                        break; // cycle guard
+                        break;
                     }
                 }
             }
         }
         // fallback: second best
         if candidates.is_empty() {
-            let second = sorted.iter().find(|m| m.id != base.id)?;
+            let second = pop.leaderboard_members().find(|m| m.id != base.id)?;
             candidates.push((ReferencePolicy::DirectParent, second, 0.5));
         }
-        // dedup on reference id, keep highest weight
-        candidates.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        // dedup on reference id, keep highest weight (no per-candidate
+        // id clones — the seen-set borrows)
+        candidates.sort_by(|a, b| b.2.total_cmp(&a.2));
         let mut seen = std::collections::HashSet::new();
-        candidates.retain(|(_, m, _)| seen.insert(m.id.clone()) && m.id != base.id);
+        candidates.retain(|(_, m, _)| seen.insert(m.id.as_str()) && m.id != base.id);
         if candidates.is_empty() {
             return None;
         }

@@ -172,7 +172,7 @@ impl Tuner for GeneticAlgorithm {
             let mut next: Vec<Scored> = Vec::new();
             // elitism: carry over the best without re-evaluation
             let mut sorted = population.clone();
-            sorted.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap());
+            sorted.sort_by(|a, b| a.score.total_cmp(&b.score));
             for e in sorted.iter().take(self.elitism) {
                 next.push(e.clone());
             }

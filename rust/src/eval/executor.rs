@@ -277,13 +277,17 @@ impl Drop for StreamExecutor {
 }
 
 /// Eval-result cache keyed by genome content hash
-/// ([`KernelGenome::fingerprint`]): re-submitting a duplicate genome is
-/// free — it returns the recorded [`EvalOutcome`] without consuming
-/// submission quota, platform time, or a backend evaluation.
+/// ([`KernelGenome::fingerprint_hash`]): re-submitting a duplicate
+/// genome is free — it returns the recorded [`EvalOutcome`] without
+/// consuming submission quota, platform time, or a backend evaluation.
+/// The u64 hash key replaced the formatted fingerprint `String`
+/// (§Perf, archive-scaling pass): every submission probes the cache,
+/// and rendering a string per probe was the hot path's dominant
+/// allocation.
 #[derive(Debug, Clone, Default)]
 pub struct EvalCache {
     enabled: bool,
-    map: HashMap<String, EvalOutcome>,
+    map: HashMap<u64, EvalOutcome>,
     hits: u64,
     misses: u64,
 }
@@ -305,7 +309,7 @@ impl EvalCache {
     /// of recomputed, and hit/miss accounting continues seamlessly).
     pub fn restore(
         enabled: bool,
-        entries: Vec<(String, EvalOutcome)>,
+        entries: Vec<(u64, EvalOutcome)>,
         hits: u64,
         misses: u64,
     ) -> Self {
@@ -322,11 +326,11 @@ impl EvalCache {
     }
 
     /// Counted lookup (batch path): hits and misses feed `stats`.
-    pub fn lookup(&mut self, fingerprint: &str) -> Option<EvalOutcome> {
+    pub fn lookup(&mut self, fingerprint: u64) -> Option<EvalOutcome> {
         if !self.enabled {
             return None;
         }
-        match self.map.get(fingerprint) {
+        match self.map.get(&fingerprint) {
             Some(out) => {
                 self.hits += 1;
                 Some(out.clone())
@@ -339,14 +343,14 @@ impl EvalCache {
     }
 
     /// Uncounted lookup (planning probes that must not skew stats).
-    pub fn peek(&self, fingerprint: &str) -> Option<&EvalOutcome> {
+    pub fn peek(&self, fingerprint: u64) -> Option<&EvalOutcome> {
         if !self.enabled {
             return None;
         }
-        self.map.get(fingerprint)
+        self.map.get(&fingerprint)
     }
 
-    pub fn insert(&mut self, fingerprint: String, outcome: EvalOutcome) {
+    pub fn insert(&mut self, fingerprint: u64, outcome: EvalOutcome) {
         if self.enabled {
             self.map.insert(fingerprint, outcome);
         }
@@ -496,25 +500,25 @@ mod tests {
     #[test]
     fn cache_hits_and_stats() {
         let mut c = EvalCache::new(true);
-        let fp = seeds::mfma_seed().fingerprint();
-        assert!(c.lookup(&fp).is_none());
-        c.insert(fp.clone(), EvalOutcome::Timings(vec![1.0; 6]));
+        let fp = seeds::mfma_seed().fingerprint_hash();
+        assert!(c.lookup(fp).is_none());
+        c.insert(fp, EvalOutcome::Timings(vec![1.0; 6]));
         assert_eq!(
-            c.lookup(&fp),
+            c.lookup(fp),
             Some(EvalOutcome::Timings(vec![1.0; 6]))
         );
         assert_eq!(c.stats(), (1, 1));
         assert_eq!(c.len(), 1);
-        assert!(c.peek(&fp).is_some());
+        assert!(c.peek(fp).is_some());
     }
 
     #[test]
     fn disabled_cache_never_serves() {
         let mut c = EvalCache::new(false);
-        let fp = seeds::mfma_seed().fingerprint();
-        c.insert(fp.clone(), EvalOutcome::Timings(vec![1.0; 6]));
-        assert!(c.lookup(&fp).is_none());
-        assert!(c.peek(&fp).is_none());
+        let fp = seeds::mfma_seed().fingerprint_hash();
+        c.insert(fp, EvalOutcome::Timings(vec![1.0; 6]));
+        assert!(c.lookup(fp).is_none());
+        assert!(c.peek(fp).is_none());
         assert!(c.is_empty());
     }
 }

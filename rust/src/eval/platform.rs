@@ -143,7 +143,9 @@ enum PendingKind {
     Run {
         lane: usize,
         submission_index: u64,
-        fingerprint: String,
+        /// Genome content hash ([`KernelGenome::fingerprint_hash`]) —
+        /// the in-flight alias key (§Perf: no per-dispatch `String`).
+        fingerprint: u64,
         inline_outcome: Option<EvalOutcome>,
         /// Lane-clock and busy-time values as of just before this
         /// dispatch: a checkpoint unwinds in-flight work by restoring
@@ -161,7 +163,7 @@ enum PendingKind {
     Cached { outcome: EvalOutcome },
     /// Duplicate of an in-flight run with the same fingerprint:
     /// resolves from the cache once the original completes (free).
-    Alias { fingerprint: String },
+    Alias { fingerprint: u64 },
 }
 
 /// The evaluation platform wrapping a backend.
@@ -293,7 +295,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
             self.config.reps_per_config,
             genome,
         );
-        self.cache.insert(genome.fingerprint(), outcome.clone());
+        self.cache.insert(genome.fingerprint_hash(), outcome.clone());
         self.account_submission(outcome.clone());
         outcome
     }
@@ -330,9 +332,10 @@ impl<B: EvalBackend> EvalPlatform<B> {
         };
         let mut slots: Vec<Slot> = Vec::with_capacity(genomes.len());
         let mut jobs: Vec<KernelGenome> = Vec::new();
-        let mut planned_fps: HashMap<String, usize> = HashMap::new();
+        let mut job_fps: Vec<u64> = Vec::new();
+        let mut planned_fps: HashMap<u64, usize> = HashMap::new();
         for genome in genomes {
-            let fp = genome.fingerprint();
+            let fp = genome.fingerprint_hash();
             // Counted-stats invariant: every *processed* entry (one
             // that yields a result) contributes exactly one counted
             // lookup — in-batch duplicates count theirs as the hit at
@@ -344,8 +347,8 @@ impl<B: EvalBackend> EvalPlatform<B> {
                     slots.push(Slot::Alias(j));
                     continue;
                 }
-                if self.cache.peek(&fp).is_some() {
-                    let hit = self.cache.lookup(&fp).expect("peeked entry present");
+                if self.cache.peek(fp).is_some() {
+                    let hit = self.cache.lookup(fp).expect("peeked entry present");
                     slots.push(Slot::Cached(hit));
                     continue;
                 }
@@ -354,11 +357,12 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 break; // quota exhausted: truncate the batch here, uncounted
             }
             if self.cache.enabled() {
-                let miss = self.cache.lookup(&fp); // counted miss
+                let miss = self.cache.lookup(fp); // counted miss
                 debug_assert!(miss.is_none());
             }
             slots.push(Slot::Run(jobs.len()));
             planned_fps.insert(fp, jobs.len());
+            job_fps.push(fp);
             jobs.push(genome.clone());
         }
         let outcomes = executor::run_batch(
@@ -383,7 +387,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
                     // hit in the cache stats.
                     let outcome = self
                         .cache
-                        .lookup(&jobs[j].fingerprint())
+                        .lookup(job_fps[j])
                         .unwrap_or_else(|| outcomes[j].clone());
                     results.push(BatchResult {
                         outcome,
@@ -394,7 +398,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 }
                 Slot::Run(j) => {
                     let outcome = outcomes[j].clone();
-                    self.cache.insert(jobs[j].fingerprint(), outcome.clone());
+                    self.cache.insert(job_fps[j], outcome.clone());
                     let (index, completed_at_s) = self.account_submission(outcome.clone());
                     results.push(BatchResult {
                         outcome,
@@ -425,9 +429,9 @@ impl<B: EvalBackend> EvalPlatform<B> {
 
     /// The in-flight run (if any) evaluating this fingerprint — the
     /// aliasing target for duplicate stream submissions.
-    fn pending_run_with_fp(&self, fp: &str) -> Option<&PendingEval> {
+    fn pending_run_with_fp(&self, fp: u64) -> Option<&PendingEval> {
         self.pending.iter().find(|p| {
-            matches!(&p.kind, PendingKind::Run { fingerprint, .. } if fingerprint == fp)
+            matches!(&p.kind, PendingKind::Run { fingerprint, .. } if *fingerprint == fp)
         })
     }
 
@@ -449,12 +453,12 @@ impl<B: EvalBackend> EvalPlatform<B> {
     {
         let ticket = self.next_ticket;
         self.next_ticket += 1;
-        let fp = genome.fingerprint();
+        let fp = genome.fingerprint_hash();
         if self.cache.enabled() {
             // duplicate of an in-flight run: resolves (free) when the
             // original lands in the cache. Counted as a hit at poll
             // time, mirroring the batch path's alias accounting.
-            if let Some(original) = self.pending_run_with_fp(&fp) {
+            if let Some(original) = self.pending_run_with_fp(fp) {
                 let completed_at_s = original.completed_at_s;
                 self.pending.push(PendingEval {
                     ticket,
@@ -465,7 +469,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
             }
             // counted lookup either way: a hit serves the entry below,
             // a miss is the run's one counted miss (batch-path parity)
-            if let Some(outcome) = self.cache.lookup(&fp) {
+            if let Some(outcome) = self.cache.lookup(fp) {
                 self.pending.push(PendingEval {
                     ticket,
                     completed_at_s: self.wall_clock_s(),
@@ -584,7 +588,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
             PendingKind::Alias { fingerprint } => {
                 let outcome = self
                     .cache
-                    .lookup(&fingerprint) // the alias's counted hit
+                    .lookup(fingerprint) // the alias's counted hit
                     .expect("aliased submission completes before its duplicates");
                 Some(CompletedEval {
                     ticket: p.ticket,
@@ -662,9 +666,9 @@ impl<B: EvalBackend> EvalPlatform<B> {
         let mut planned = 0u64;
         let mut tickets = Vec::with_capacity(genomes.len());
         for genome in genomes {
-            let fp = genome.fingerprint();
+            let fp = genome.fingerprint_hash();
             let free = self.cache.enabled()
-                && (self.cache.peek(&fp).is_some() || self.pending_run_with_fp(&fp).is_some());
+                && (self.cache.peek(fp).is_some() || self.pending_run_with_fp(fp).is_some());
             if !free {
                 if planned >= remaining {
                     break;
@@ -754,7 +758,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
     /// Read-only cache probe (planning aid for batch callers: a cached
     /// genome will not consume quota). Does not count toward stats.
     pub fn cached_outcome(&self, genome: &KernelGenome) -> Option<EvalOutcome> {
-        self.cache.peek(&genome.fingerprint()).cloned()
+        self.cache.peek(genome.fingerprint_hash()).cloned()
     }
 
     /// (hits, misses) of counted cache lookups on the batch path.
@@ -857,7 +861,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
         &mut self,
         cp: &PlatformCheckpoint,
         log: Vec<SubmissionRecord>,
-        cache_entries: Vec<(String, EvalOutcome)>,
+        cache_entries: Vec<(u64, EvalOutcome)>,
         committed_genomes: &[KernelGenome],
     ) -> Result<(), String>
     where
@@ -1438,10 +1442,10 @@ mod tests {
         // prefix (what the journal would hold)
         let committed: Vec<KernelGenome> = jobs[..resubmit_from].to_vec();
         let log: Vec<SubmissionRecord> = live.log()[..resubmit_from].to_vec();
-        let cache_entries: Vec<(String, EvalOutcome)> = log
+        let cache_entries: Vec<(u64, EvalOutcome)> = log
             .iter()
             .enumerate()
-            .map(|(i, r)| (committed[i].fingerprint(), r.outcome.clone()))
+            .map(|(i, r)| (committed[i].fingerprint_hash(), r.outcome.clone()))
             .collect();
         let mut resumed = mk();
         resumed

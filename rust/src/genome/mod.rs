@@ -344,7 +344,12 @@ impl KernelGenome {
         self.lds_tile_bytes()
     }
 
-    /// A short, stable fingerprint used for deduplication.
+    /// A short, stable fingerprint used for display and persistence.
+    /// Hot paths (dedup sets, the eval cache, in-flight alias maps) key
+    /// on [`KernelGenome::fingerprint_hash`] instead — rendering this
+    /// string per probe was the dominant per-submission allocation
+    /// (§Perf). String equality here is exactly genome equality: every
+    /// axis is rendered unambiguously.
     pub fn fingerprint(&self) -> String {
         format!(
             "{}x{}x{}-{:?}-{:?}-u{}-s{}{}p{}-{:?}-v{}-w{}-{:?}-{:?}-{:?}-a{}-k{}",
@@ -366,6 +371,45 @@ impl KernelGenome {
             self.acc_in_regs as u8,
             (self.k_innermost as u8) + 2 * (self.isa_scheduling as u8),
         )
+    }
+
+    /// 64-bit content hash over the same axes [`Self::fingerprint`]
+    /// renders — the allocation-free dedup/cache key (§Perf). Stable
+    /// across runs and platforms: a fixed splitmix64-style finalizer
+    /// folded over every field in declaration order, no `RandomState`
+    /// anywhere, so trajectories and persisted caches stay
+    /// reproducible. Collisions are theoretically possible (the u32
+    /// axes alone exceed 64 bits); callers whose *semantics* depend on
+    /// exact identity (e.g. [`crate::population::Population`]'s
+    /// duplicate probe) confirm with genome equality on the positive
+    /// path — `tests/prop_invariants.rs` checks hash/string agreement.
+    pub fn fingerprint_hash(&self) -> u64 {
+        #[inline]
+        fn mix(h: u64, v: u64) -> u64 {
+            let mut x = (h ^ v).wrapping_add(0x9E37_79B9_7F4A_7C15);
+            x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            x ^ (x >> 31)
+        }
+        let mut h = 0x6b73_2d66_7036_3401u64;
+        h = mix(h, self.block_m as u64);
+        h = mix(h, self.block_n as u64);
+        h = mix(h, self.block_k as u64);
+        h = mix(h, self.compute as u64);
+        h = mix(h, self.precision as u64);
+        h = mix(h, self.unroll_k as u64);
+        h = mix(h, self.lds_staging as u64);
+        h = mix(h, self.double_buffer as u64);
+        h = mix(h, self.lds_pad as u64);
+        h = mix(h, self.swizzle as u64);
+        h = mix(h, self.vector_width as u64);
+        h = mix(h, self.waves_per_block as u64);
+        h = mix(h, self.writeback as u64);
+        h = mix(h, self.scale_cache as u64);
+        h = mix(h, self.grid_mapping as u64);
+        h = mix(h, self.acc_in_regs as u64);
+        h = mix(h, self.k_innermost as u64);
+        mix(h, self.isa_scheduling as u64)
     }
 }
 
@@ -528,6 +572,31 @@ mod tests {
         let b = seeds::human_oracle();
         assert_ne!(a.fingerprint(), b.fingerprint());
         assert_eq!(a.fingerprint(), seeds::naive_hip().fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_hash_agrees_with_string_form() {
+        // hash equality must track string equality (distinct seeds
+        // hash apart, identical genomes hash together) and be a pure
+        // function of the genome
+        let all = seeds::all_seeds();
+        for (na, a) in &all {
+            for (nb, b) in &all {
+                assert_eq!(
+                    a.fingerprint() == b.fingerprint(),
+                    a.fingerprint_hash() == b.fingerprint_hash(),
+                    "{na} vs {nb}"
+                );
+            }
+        }
+        let g = seeds::human_oracle();
+        assert_eq!(g.fingerprint_hash(), g.clone().fingerprint_hash());
+        // single-axis flips change the hash
+        let flipped = KernelGenome {
+            k_innermost: !g.k_innermost,
+            ..g.clone()
+        };
+        assert_ne!(g.fingerprint_hash(), flipped.fingerprint_hash());
     }
 
     #[test]

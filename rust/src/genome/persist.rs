@@ -33,6 +33,47 @@ impl KernelGenome {
         ])
     }
 
+    /// Stream the [`Self::to_json`] object into `out`, byte-identical
+    /// to `self.to_json().to_string()` (keys in the emitter's sorted
+    /// order) but with no intermediate tree — the run-store journal's
+    /// per-entry hot path (§Perf). Enum variants are plain ASCII
+    /// identifiers, so their `Debug` names need no escaping.
+    pub fn write_json(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        fn num(out: &mut String, key: &str, v: u32) {
+            use std::fmt::Write as _;
+            let _ = write!(out, "\"{key}\":{v},");
+        }
+        fn boolean(out: &mut String, key: &str, v: bool) {
+            use std::fmt::Write as _;
+            let _ = write!(out, "\"{key}\":{v},");
+        }
+        fn variant<T: std::fmt::Debug>(out: &mut String, key: &str, v: &T) {
+            use std::fmt::Write as _;
+            let _ = write!(out, "\"{key}\":\"{v:?}\",");
+        }
+        out.push('{');
+        boolean(out, "acc_in_regs", self.acc_in_regs);
+        num(out, "block_k", self.block_k);
+        num(out, "block_m", self.block_m);
+        num(out, "block_n", self.block_n);
+        variant(out, "compute", &self.compute);
+        boolean(out, "double_buffer", self.double_buffer);
+        variant(out, "grid_mapping", &self.grid_mapping);
+        boolean(out, "isa_scheduling", self.isa_scheduling);
+        boolean(out, "k_innermost", self.k_innermost);
+        num(out, "lds_pad", self.lds_pad);
+        boolean(out, "lds_staging", self.lds_staging);
+        variant(out, "precision", &self.precision);
+        variant(out, "scale_cache", &self.scale_cache);
+        variant(out, "swizzle", &self.swizzle);
+        num(out, "unroll_k", self.unroll_k);
+        num(out, "vector_width", self.vector_width);
+        num(out, "waves_per_block", self.waves_per_block);
+        let _ = write!(out, "\"writeback\":\"{:?}\"", self.writeback);
+        out.push('}');
+    }
+
     pub fn from_json(v: &Json) -> Result<KernelGenome, String> {
         let u32_field = |k: &str| -> Result<u32, String> {
             let raw = v
@@ -119,6 +160,24 @@ mod tests {
             let s = g.to_json().to_string();
             let back = KernelGenome::from_json(&json::parse(&s).unwrap()).unwrap();
             assert_eq!(g, back, "{name}");
+        }
+    }
+
+    #[test]
+    fn streamed_json_matches_tree_emitter() {
+        use crate::rng::Rng;
+        use crate::test_support::random_genome;
+        let mut rng = Rng::seed_from_u64(42);
+        for _ in 0..50 {
+            let g = random_genome(&mut rng);
+            let mut streamed = String::new();
+            g.write_json(&mut streamed);
+            assert_eq!(streamed, g.to_json().to_string(), "{g:?}");
+        }
+        for (name, g) in seeds::all_seeds() {
+            let mut streamed = String::new();
+            g.write_json(&mut streamed);
+            assert_eq!(streamed, g.to_json().to_string(), "{name}");
         }
     }
 

@@ -7,6 +7,20 @@
 //! MxKxN input configurations" (§3.1). This module is exactly that
 //! ledger, plus lineage queries (ancestors, divergence points,
 //! per-config winners) and JSONL persistence so a run can resume.
+//!
+//! Since the archive-scaling pass (§Perf, `benches/archive_scaling.rs`)
+//! the population is an **indexed archive**: every query the planning
+//! loop issues per round — `by_id`, `best`, the leaderboard top-k,
+//! per-config winners, ancestor walks, duplicate probes — answers from
+//! indexes maintained incrementally at [`Population::add`], in O(1) /
+//! O(result) instead of re-scanning or re-sorting the member list.
+//! All indexes preserve the exact tie-break order of the scan-based
+//! implementation (first-minimum wins; equal scores keep insertion
+//! order, as a stable sort would), so trajectories are bit-identical —
+//! `tests/prop_invariants.rs` checks observational equivalence against
+//! a naive reference on randomized archives.
+
+use std::collections::{BTreeSet, HashMap};
 
 use crate::genome::KernelGenome;
 use crate::metrics::geomean;
@@ -88,6 +102,52 @@ impl Individual {
         ])
     }
 
+    /// Stream the [`Self::to_json`] object into `out`, byte-identical
+    /// to `self.to_json().to_string()` (keys in the emitter's sorted
+    /// order) but with no intermediate tree or per-field `String` —
+    /// the run-store journal's hot path (§Perf).
+    pub fn write_json(&self, out: &mut String) {
+        out.push_str("{\"experiment\":");
+        json::push_str_value(out, &self.experiment);
+        out.push_str(",\"genome\":");
+        self.genome.write_json(out);
+        out.push_str(",\"id\":");
+        json::push_str_value(out, &self.id);
+        out.push_str(",\"outcome\":");
+        match &self.outcome {
+            EvalOutcome::Timings(t) => {
+                out.push_str("{\"kind\":\"timings\",\"us\":[");
+                for (i, &x) in t.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    json::push_num_value(out, x);
+                }
+                out.push_str("]}");
+            }
+            EvalOutcome::CompileFailure(msg) => {
+                out.push_str("{\"kind\":\"compile_failure\",\"msg\":");
+                json::push_str_value(out, msg);
+                out.push('}');
+            }
+            EvalOutcome::IncorrectResult(msg) => {
+                out.push_str("{\"kind\":\"incorrect_result\",\"msg\":");
+                json::push_str_value(out, msg);
+                out.push('}');
+            }
+        }
+        out.push_str(",\"parents\":[");
+        for (i, p) in self.parents.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json::push_str_value(out, p);
+        }
+        out.push_str("],\"report\":");
+        json::push_str_value(out, &self.report);
+        out.push('}');
+    }
+
     pub fn from_json(v: &Json) -> Result<Individual, String> {
         let id = v
             .get("id")
@@ -141,24 +201,83 @@ impl Individual {
     }
 }
 
-/// The growing list of kernels (paper Fig. 1, right side).
+/// The growing list of kernels (paper Fig. 1, right side), behind the
+/// incrementally maintained indexes described in the module docs.
 #[derive(Debug, Clone, Default)]
 pub struct Population {
     members: Vec<Individual>,
     /// The feedback configs the timing vectors are indexed by.
     pub feedback_configs: Vec<GemmConfig>,
-    /// Fingerprint cache: set of genome fingerprints present, so the
-    /// writer's duplicate check is O(1) instead of re-rendering every
-    /// member's fingerprint per probe (perf pass, EXPERIMENTS.md §Perf).
-    fingerprints: std::collections::HashSet<String>,
+    /// id → member index: O(1) `by_id`, and what every lineage walk
+    /// resolves parent ids through.
+    index_by_id: HashMap<String, u32>,
+    /// Genome content-hash → index of the FIRST member carrying it
+    /// (insertion order), so the duplicate probe's positive path never
+    /// re-renders fingerprints (§Perf). Positive hits are confirmed
+    /// with genome equality — hash collisions cannot perturb dedup.
+    index_by_fp: HashMap<u64, u32>,
+    /// Per-member feedback geomean, computed once at `add` (`None` for
+    /// failures) — queries never recompute it.
+    scores: Vec<Option<f64>>,
+    /// First parent resolved to a member index at `add` (`None` for
+    /// seeds and dangling references). Resolution happens against the
+    /// members already present, so `parent_index[i] < i` always: the
+    /// ancestor walk strictly descends and needs no cycle guard (this
+    /// replaces the old O(chain²) `out.iter().any` check).
+    parent_index: Vec<Option<u32>>,
+    /// Successful member indices in insertion order (what the old
+    /// `successful()` scan produced).
+    successful_order: Vec<u32>,
+    /// Successful members as (total-order score key, index), iterating
+    /// in (geomean asc, insertion asc) order — exactly what a stable
+    /// sort of `successful()` by score yields. O(log n) insertion at
+    /// `add`, so even a 100k-entry journal rebuild stays loglinear.
+    leaderboard: BTreeSet<(u64, u32)>,
+    /// Per feedback config: successful members as (total-order timing
+    /// key, index). Answers "who beats timing t on config i" (the
+    /// selector's specialist query) as a range scan in O(result).
+    config_index: Vec<BTreeSet<(u64, u32)>>,
+    /// Per feedback config: current winner (index, timing), first
+    /// strictly-lower timing wins — the old scan's tie-break.
+    winners: Vec<Option<(u32, f64)>>,
+}
+
+/// Total-order-preserving u64 encoding of an f64 — the IEEE-754 trick
+/// behind [`f64::total_cmp`]: `key(a) < key(b)` iff `a.total_cmp(&b)`
+/// is `Less`. Lets the score/timing indexes live in ordinary
+/// `BTreeSet<(u64, u32)>`s (f64 itself is not `Ord`).
+fn total_order_key(t: f64) -> u64 {
+    let b = t.to_bits();
+    if b >> 63 == 0 {
+        b | 0x8000_0000_0000_0000
+    } else {
+        !b
+    }
+}
+
+/// Inverse of [`total_order_key`] (a bijection on bit patterns).
+fn total_order_decode(k: u64) -> f64 {
+    f64::from_bits(if k >> 63 == 1 {
+        k & 0x7FFF_FFFF_FFFF_FFFF
+    } else {
+        !k
+    })
 }
 
 impl Population {
     pub fn new(feedback_configs: Vec<GemmConfig>) -> Self {
+        let n = feedback_configs.len();
         Population {
             members: Vec::new(),
             feedback_configs,
-            fingerprints: std::collections::HashSet::new(),
+            index_by_id: HashMap::new(),
+            index_by_fp: HashMap::new(),
+            scores: Vec::new(),
+            parent_index: Vec::new(),
+            successful_order: Vec::new(),
+            leaderboard: BTreeSet::new(),
+            config_index: vec![BTreeSet::new(); n],
+            winners: vec![None; n],
         }
     }
 
@@ -168,8 +287,37 @@ impl Population {
     }
 
     pub fn add(&mut self, ind: Individual) {
-        debug_assert!(self.by_id(&ind.id).is_none(), "duplicate id {}", ind.id);
-        self.fingerprints.insert(ind.genome.fingerprint());
+        debug_assert!(
+            !self.index_by_id.contains_key(&ind.id),
+            "duplicate id {}",
+            ind.id
+        );
+        let idx = self.members.len() as u32;
+        // resolve the lineage link before registering the new id, so a
+        // (malformed) self-parent stays dangling instead of looping
+        let parent = ind
+            .parents
+            .first()
+            .and_then(|p| self.index_by_id.get(p).copied());
+        self.parent_index.push(parent);
+        self.index_by_id.insert(ind.id.clone(), idx);
+        self.index_by_fp
+            .entry(ind.genome.fingerprint_hash())
+            .or_insert(idx);
+        let score = ind.score();
+        if let Some(ts) = ind.outcome.timings() {
+            let nc = self.config_index.len();
+            for (i, &t) in ts.iter().enumerate().take(nc) {
+                if self.winners[i].map(|(_, best)| t < best).unwrap_or(true) {
+                    self.winners[i] = Some((idx, t));
+                }
+                self.config_index[i].insert((total_order_key(t), idx));
+            }
+            let s = score.expect("successful member has a geomean");
+            self.leaderboard.insert((total_order_key(s), idx));
+            self.successful_order.push(idx);
+        }
+        self.scores.push(score);
         self.members.push(ind);
     }
 
@@ -185,54 +333,135 @@ impl Population {
         &self.members
     }
 
+    /// Member by position (the indexes speak in positions).
+    pub fn member(&self, idx: usize) -> &Individual {
+        &self.members[idx]
+    }
+
+    /// Position of `id`, if present.
+    pub fn index_of(&self, id: &str) -> Option<usize> {
+        self.index_by_id.get(id).map(|&i| i as usize)
+    }
+
+    /// Position of member `idx`'s first parent (resolved at `add`;
+    /// always strictly less than `idx`).
+    pub fn parent_of(&self, idx: usize) -> Option<usize> {
+        self.parent_index[idx].map(|i| i as usize)
+    }
+
+    /// Cached feedback geomean of member `idx` (`None` for failures).
+    pub fn score_of(&self, idx: usize) -> Option<f64> {
+        self.scores[idx]
+    }
+
     pub fn by_id(&self, id: &str) -> Option<&Individual> {
-        self.members.iter().find(|m| m.id == id)
+        self.index_of(id).map(|i| &self.members[i])
     }
 
-    /// All members with successful timings.
+    /// All members with successful timings (insertion order).
     pub fn successful(&self) -> Vec<&Individual> {
-        self.members.iter().filter(|m| m.outcome.is_success()).collect()
+        self.successful_order
+            .iter()
+            .map(|&i| &self.members[i as usize])
+            .collect()
     }
 
-    /// Best (lowest feedback geomean) successful member.
+    /// How many members succeeded — `successful().len()` without the
+    /// allocation.
+    pub fn successful_count(&self) -> usize {
+        self.successful_order.len()
+    }
+
+    /// Successful member indices in insertion order.
+    pub fn successful_indices(&self) -> &[u32] {
+        &self.successful_order
+    }
+
+    /// The i-th successful member in insertion order.
+    pub fn nth_successful(&self, i: usize) -> &Individual {
+        &self.members[self.successful_order[i] as usize]
+    }
+
+    /// Successful members from best geomean down (ties keep insertion
+    /// order, matching a stable sort of [`Population::successful`] by
+    /// score) — the selector's top-k source; maintained incrementally,
+    /// never re-sorted per call.
+    pub fn leaderboard_members(&self) -> impl Iterator<Item = &Individual> + '_ {
+        self.leaderboard
+            .iter()
+            .map(move |&(_, i)| &self.members[i as usize])
+    }
+
+    /// Best (lowest feedback geomean) successful member. O(log n): the
+    /// leaderboard head, which is the first-minimum member exactly as
+    /// the old `min_by` scan returned.
     pub fn best(&self) -> Option<&Individual> {
-        self.successful()
-            .into_iter()
-            .min_by(|a, b| a.score().partial_cmp(&b.score()).unwrap())
+        self.leaderboard
+            .iter()
+            .next()
+            .map(|&(_, i)| &self.members[i as usize])
     }
 
     /// Per-config winners: for each feedback config index, the id of
-    /// the member with the lowest timing there.
+    /// the member with the lowest timing there (first strictly-lower
+    /// wins). O(configs) per call from the incrementally maintained
+    /// winner table — no archive scan, no per-improvement id clones.
     pub fn config_winners(&self) -> Vec<Option<String>> {
-        let n = self.feedback_configs.len();
-        let mut winners: Vec<Option<(String, f64)>> = vec![None; n];
-        for m in self.successful() {
-            if let Some(ts) = m.outcome.timings() {
-                for (i, &t) in ts.iter().enumerate().take(n) {
-                    if winners[i].as_ref().map(|(_, best)| t < *best).unwrap_or(true) {
-                        winners[i] = Some((m.id.clone(), t));
-                    }
+        self.winners
+            .iter()
+            .map(|w| w.map(|(i, _)| self.members[i as usize].id.clone()))
+            .collect()
+    }
+
+    /// Successful members that beat `base` on at least one feedback
+    /// config, as (first beating config index, member) in insertion
+    /// order — the selector's per-config-specialist candidate set
+    /// (paper App. A.1 sample 3). Answered from the per-config timing
+    /// indexes in time proportional to the result instead of a full
+    /// archive scan; the candidate list (content, order, first-config
+    /// attribution) is exactly what the old scan produced.
+    pub fn config_beaters(&self, base: &Individual) -> Vec<(usize, &Individual)> {
+        let Some(base_ts) = base.outcome.timings() else {
+            return Vec::new();
+        };
+        let base_idx = self.index_of(&base.id).map(|i| i as u32);
+        let nc = base_ts.len().min(self.config_index.len());
+        // walk configs high→low so the surviving map entry per member
+        // is its lowest (first) beating config
+        let mut firsts: HashMap<u32, usize> = HashMap::new();
+        for i in (0..nc).rev() {
+            let bt = base_ts[i];
+            // everything total-ordered below bt; `<` (the scan's
+            // comparison) re-confirms, so e.g. a negative-NaN timing —
+            // below bt in total order but not under `<` — stays out
+            for &(k, idx) in self.config_index[i].range(..(total_order_key(bt), 0)) {
+                if total_order_decode(k) < bt && Some(idx) != base_idx {
+                    firsts.insert(idx, i);
                 }
             }
         }
-        winners.into_iter().map(|w| w.map(|(id, _)| id)).collect()
+        let mut out: Vec<(u32, usize)> = firsts.into_iter().collect();
+        out.sort_unstable_by_key(|&(idx, _)| idx);
+        out.into_iter()
+            .map(|(idx, cfg)| (cfg, &self.members[idx as usize]))
+            .collect()
     }
 
-    /// Ancestor chain of `id` (nearest first), following first parents.
+    /// Ancestor chain of `id` (nearest first), following first
+    /// parents. O(depth): a pure index walk. Parents resolve at `add`
+    /// against earlier members only, so the chain strictly descends —
+    /// cycles are unrepresentable (the old quadratic cycle guard is
+    /// gone by construction).
     pub fn ancestors(&self, id: &str) -> Vec<&Individual> {
         let mut out: Vec<&Individual> = Vec::new();
-        let mut cur = self.by_id(id);
-        while let Some(ind) = cur {
-            if let Some(parent_id) = ind.parents.first() {
-                cur = self.by_id(parent_id);
-                if let Some(p) = cur {
-                    if out.iter().any(|x| x.id == p.id) {
-                        break; // cycle guard
-                    }
-                    out.push(p);
+        let mut cur = self.index_of(id);
+        while let Some(i) = cur {
+            match self.parent_of(i) {
+                Some(p) => {
+                    out.push(&self.members[p]);
+                    cur = Some(p);
                 }
-            } else {
-                break;
+                None => break,
             }
         }
         out
@@ -240,34 +469,60 @@ impl Population {
 
     /// Nearest common ancestor of two members, if any.
     pub fn common_ancestor(&self, a: &str, b: &str) -> Option<&Individual> {
-        let anc_a: Vec<&Individual> = self.ancestors(a);
-        let anc_b: std::collections::HashSet<&str> =
-            self.ancestors(b).iter().map(|m| m.id.as_str()).collect();
-        anc_a.into_iter().find(|m| anc_b.contains(m.id.as_str()))
-    }
-
-    /// O(1) duplicate probe by precomputed fingerprint — the batch
-    /// planner's form of [`Population::find_duplicate`] (it already
-    /// holds the fingerprint and only needs a yes/no).
-    pub fn contains_fingerprint(&self, fingerprint: &str) -> bool {
-        self.fingerprints.contains(fingerprint)
-    }
-
-    /// Members whose genome fingerprint matches (dedup check). The
-    /// common (negative) case is O(1) via the fingerprint cache.
-    pub fn find_duplicate(&self, g: &KernelGenome) -> Option<&Individual> {
-        let fp = g.fingerprint();
-        if !self.fingerprints.contains(&fp) {
-            return None;
+        let mut anc_b: std::collections::HashSet<usize> = std::collections::HashSet::new();
+        let mut cur = self.index_of(b);
+        while let Some(i) = cur {
+            cur = self.parent_of(i);
+            if let Some(p) = cur {
+                anc_b.insert(p);
+            }
         }
-        self.members.iter().find(|m| m.genome.fingerprint() == fp)
+        let mut cur = self.index_of(a);
+        while let Some(i) = cur {
+            cur = self.parent_of(i);
+            if let Some(p) = cur {
+                if anc_b.contains(&p) {
+                    return Some(&self.members[p]);
+                }
+            }
+        }
+        None
+    }
+
+    /// O(1) duplicate probe by precomputed content hash — the batch
+    /// planner's form of [`Population::find_duplicate`] (it already
+    /// holds the hash and the genome; the genome confirms the positive
+    /// path against hash collisions).
+    pub fn contains_genome(&self, fp: u64, g: &KernelGenome) -> bool {
+        match self.index_by_fp.get(&fp) {
+            Some(&idx) if self.members[idx as usize].genome == *g => true,
+            // hash hit on a different genome (collision — astronomically
+            // rare): answer exactly anyway
+            Some(_) => self.members.iter().any(|m| m.genome == *g),
+            None => false,
+        }
+    }
+
+    /// Members whose genome matches (dedup check; string-fingerprint
+    /// equality is genome equality). The common negative case is O(1)
+    /// via the content-hash index; positive hits return the first
+    /// matching member, confirmed by genome equality.
+    pub fn find_duplicate(&self, g: &KernelGenome) -> Option<&Individual> {
+        let &idx = self.index_by_fp.get(&g.fingerprint_hash())?;
+        let m = &self.members[idx as usize];
+        if m.genome == *g {
+            return Some(m);
+        }
+        // collision fallback: exact scan, same answer the string-keyed
+        // archive gave
+        self.members.iter().find(|m| m.genome == *g)
     }
 
     /// Serialize to JSONL (one member per line, append-friendly).
     pub fn to_jsonl(&self) -> String {
         let mut s = String::new();
         for m in &self.members {
-            s.push_str(&m.to_json().to_string());
+            m.write_json(&mut s);
             s.push('\n');
         }
         s
@@ -350,6 +605,27 @@ mod tests {
         p.add(bad);
         assert_eq!(p.best().unwrap().id, "00004");
         assert_eq!(p.successful().len(), 4);
+        assert_eq!(p.successful_count(), 4);
+        assert!(p.score_of(4).is_none());
+    }
+
+    #[test]
+    fn leaderboard_sorted_with_stable_ties() {
+        let mut p = pop();
+        // a tie with 00003's 900.0: insertion order breaks it
+        p.add(ind("00005", &["00001"], 900.0));
+        let order: Vec<&str> = p
+            .leaderboard_members()
+            .map(|m| m.id.as_str())
+            .collect();
+        assert_eq!(order, vec!["00004", "00002", "00003", "00005", "00001"]);
+        // equivalent to a stable sort of successful() by score
+        let mut sorted = p.successful();
+        sorted.sort_by(|a, b| {
+            a.score().unwrap().total_cmp(&b.score().unwrap())
+        });
+        let expect: Vec<&str> = sorted.iter().map(|m| m.id.as_str()).collect();
+        assert_eq!(order, expect);
     }
 
     #[test]
@@ -357,6 +633,7 @@ mod tests {
         let p = pop();
         let chain: Vec<&str> = p.ancestors("00004").iter().map(|m| m.id.as_str()).collect();
         assert_eq!(chain, vec!["00002", "00001"]);
+        assert_eq!(p.parent_of(p.index_of("00004").unwrap()), p.index_of("00002"));
     }
 
     #[test]
@@ -383,6 +660,33 @@ mod tests {
     }
 
     #[test]
+    fn config_beaters_reports_first_beating_config_in_insertion_order() {
+        let mut p = Population::new(FEEDBACK_CONFIGS.to_vec());
+        let mut base = ind("00001", &[], 100.0);
+        base.outcome = EvalOutcome::Timings(vec![100.0; 6]);
+        let mut b = ind("00002", &[], 100.0);
+        b.outcome = EvalOutcome::Timings(vec![150.0, 90.0, 80.0, 150.0, 150.0, 150.0]);
+        let mut c = ind("00003", &[], 100.0);
+        c.outcome = EvalOutcome::Timings(vec![150.0; 6]); // beats nowhere
+        let mut d = ind("00004", &[], 100.0);
+        d.outcome = EvalOutcome::Timings(vec![99.0, 150.0, 150.0, 150.0, 150.0, 150.0]);
+        p.add(base);
+        p.add(b);
+        p.add(c);
+        p.add(d);
+        let base = p.by_id("00001").unwrap();
+        let beaters: Vec<(usize, &str)> = p
+            .config_beaters(base)
+            .into_iter()
+            .map(|(i, m)| (i, m.id.as_str()))
+            .collect();
+        // insertion order; 00002's first beating config is 1, not 2
+        assert_eq!(beaters, vec![(1, "00002"), (0, "00004")]);
+        // the base itself never appears, even though it ties itself
+        assert!(beaters.iter().all(|(_, id)| *id != "00001"));
+    }
+
+    #[test]
     fn jsonl_roundtrip() {
         let p = pop();
         let text = p.to_jsonl();
@@ -406,11 +710,27 @@ mod tests {
     }
 
     #[test]
+    fn streamed_member_json_matches_tree_emitter() {
+        let mut p = pop();
+        let mut bad = ind("00005", &["00004"], 1.0);
+        bad.outcome = EvalOutcome::IncorrectResult("race \"x\"\nline".into());
+        p.add(bad);
+        for m in p.members() {
+            let mut streamed = String::new();
+            m.write_json(&mut streamed);
+            assert_eq!(streamed, m.to_json().to_string(), "{}", m.id);
+        }
+    }
+
+    #[test]
     fn duplicate_detection() {
         let p = pop();
         assert!(p.find_duplicate(&seeds::mfma_seed()).is_some());
+        assert_eq!(p.find_duplicate(&seeds::mfma_seed()).unwrap().id, "00001");
         assert!(p.find_duplicate(&seeds::human_oracle()).is_none());
-        assert!(p.contains_fingerprint(&seeds::mfma_seed().fingerprint()));
-        assert!(!p.contains_fingerprint(&seeds::human_oracle().fingerprint()));
+        let g = seeds::mfma_seed();
+        assert!(p.contains_genome(g.fingerprint_hash(), &g));
+        let h = seeds::human_oracle();
+        assert!(!p.contains_genome(h.fingerprint_hash(), &h));
     }
 }

@@ -124,9 +124,10 @@ pub fn diversity(pop: &Population) -> DiversityStats {
         };
     }
     let genomes: Vec<[String; 17]> = ok.iter().map(|m| axis_values(&m.genome)).collect();
-    // unique fraction
-    let mut fps: Vec<String> = ok.iter().map(|m| m.genome.fingerprint()).collect();
-    fps.sort();
+    // unique fraction (content hashes — no per-member fingerprint
+    // rendering, §Perf)
+    let mut fps: Vec<u64> = ok.iter().map(|m| m.genome.fingerprint_hash()).collect();
+    fps.sort_unstable();
     fps.dedup();
     let unique_fraction = fps.len() as f64 / ok.len() as f64;
     // mean pairwise hamming (sampled cap to stay O(n^2) small)

@@ -212,7 +212,7 @@ impl Catalog {
             .min_by(|a, b| {
                 let da = key.tile_distance(&a.variant.unwrap());
                 let db = key.tile_distance(&b.variant.unwrap());
-                da.partial_cmp(&db).unwrap()
+                da.total_cmp(&db)
             })
     }
 }

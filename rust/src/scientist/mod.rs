@@ -160,9 +160,10 @@ pub(crate) struct PlannedExperiment {
     pub reference_id: String,
     pub description: String,
     pub write: KernelWrite,
-    /// Genome content hash, computed once at planning (the dedup keys
-    /// everywhere downstream reuse it).
-    pub fingerprint: String,
+    /// Genome content hash ([`crate::genome::KernelGenome::fingerprint_hash`]),
+    /// computed once at planning — the dedup keys everywhere downstream
+    /// (queue reservations, in-flight sets, checkpoints) reuse it.
+    pub fingerprint: u64,
 }
 
 /// One select → design → write planning round.
@@ -278,7 +279,7 @@ impl ScientistRun<SimBackend> {
                                     report: p.report.clone(),
                                     diff: p.diff.clone(),
                                 },
-                                fingerprint: p.fingerprint.clone(),
+                                fingerprint: p.fingerprint,
                             },
                             p.log_pos,
                         )
@@ -517,15 +518,17 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
     fn plan_group(
         &mut self,
         room: u64,
-        reserved_fps: &HashSet<String>,
+        reserved_fps: &HashSet<u64>,
     ) -> Option<PlannedGroup> {
         // Stage 1 — Evolutionary Selector
         let selection = self
             .agents
             .selector
             .select(&self.population, &mut self.agents.llm)?;
-        let base = self.population.by_id(&selection.base_id)?.clone();
-        let reference = self.population.by_id(&selection.reference_id)?.clone();
+        // borrowed, not cloned: the agent stages only read the ledger,
+        // so the round never copies full Individuals (§Perf)
+        let base = self.population.by_id(&selection.base_id)?;
+        let reference = self.population.by_id(&selection.reference_id)?;
 
         // Stage 2 — Experiment Designer
         let design = self.agents.designer.design(
@@ -560,7 +563,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             experiments: Vec::new(),
             duplicates_skipped: 0,
         };
-        let mut group_fps: HashSet<String> = HashSet::new();
+        let mut group_fps: HashSet<u64> = HashSet::new();
         for idx in &chosen {
             if (group.experiments.len() as u64) >= room {
                 break;
@@ -573,15 +576,15 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 plan,
                 &mut self.agents.llm,
             );
-            let fp = write.genome.fingerprint();
-            if self.population.contains_fingerprint(&fp)
+            let fp = write.genome.fingerprint_hash();
+            if self.population.contains_genome(fp, &write.genome)
                 || reserved_fps.contains(&fp)
                 || group_fps.contains(&fp)
             {
                 group.duplicates_skipped += 1;
                 continue;
             }
-            group_fps.insert(fp.clone());
+            group_fps.insert(fp);
             group.experiments.push(PlannedExperiment {
                 base_id: base.id.clone(),
                 reference_id: reference.id.clone(),
@@ -661,7 +664,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                     base_id: e.base_id.clone(),
                     reference_id: e.reference_id.clone(),
                     description: e.description.clone(),
-                    fingerprint: e.fingerprint.clone(),
+                    fingerprint: e.fingerprint,
                     log_pos: *log_pos,
                     genome: e.write.genome.clone(),
                     applied: e.write.applied.clone(),

@@ -157,10 +157,10 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
         let lanes = self.config.eval_parallelism.max(1) as usize;
         let cap = lanes * self.config.inflight_per_lane.max(1) as usize;
         let mut queue: VecDeque<(PlannedExperiment, usize)> = VecDeque::new();
-        // fingerprints of queued + in-flight children — the replan
+        // content hashes of queued + in-flight children — the replan
         // path's reservation set (the ledger itself is checked inside
         // plan_group)
-        let mut reserved: HashSet<String> = HashSet::new();
+        let mut reserved: HashSet<u64> = HashSet::new();
         let mut in_flight: Vec<InFlightChild> = Vec::new();
         let mut stalls = 0u32;
         let mut planning_dead = false;
@@ -177,7 +177,7 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
             planning_dead = resume.planning_dead;
             skip_depth = resume.skip_depth;
             for (experiment, log_pos) in resume.pending {
-                reserved.insert(experiment.fingerprint.clone());
+                reserved.insert(experiment.fingerprint);
                 queue.push_back((experiment, log_pos));
             }
         }
@@ -220,7 +220,7 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                 });
                 self.journal_plan(log_pos);
                 for experiment in group.experiments {
-                    reserved.insert(experiment.fingerprint.clone());
+                    reserved.insert(experiment.fingerprint);
                     queue.push_back((experiment, log_pos));
                 }
             }

@@ -33,7 +33,11 @@ use crate::util::json::{
 };
 
 pub const CHECKPOINT_FILE: &str = "checkpoint.json";
-const VERSION: u64 = 1;
+/// Bumped 1 → 2 when `PendingPlan.fingerprint` changed from the
+/// rendered string fingerprint to the hex-encoded u64 content hash —
+/// older stores fail with the explicit version error instead of an
+/// opaque hex-parse error.
+const VERSION: u64 = 2;
 
 /// Scheduler counters snapshot (mirrors the run's private
 /// `SchedCounters` — see `scientist::pipeline`).
@@ -54,7 +58,9 @@ pub struct PendingPlan {
     pub base_id: String,
     pub reference_id: String,
     pub description: String,
-    pub fingerprint: String,
+    /// Genome content hash (the planner's dedup key); travels as a
+    /// hex string like the RNG words — u64s don't fit [`Json::Num`].
+    pub fingerprint: u64,
     pub log_pos: usize,
     pub genome: KernelGenome,
     pub applied: Vec<String>,
@@ -112,7 +118,7 @@ impl PendingPlan {
             ("base", Json::Str(self.base_id.clone())),
             ("reference", Json::Str(self.reference_id.clone())),
             ("description", Json::Str(self.description.clone())),
-            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("fingerprint", u64_hex(self.fingerprint)),
             ("log_pos", Json::Num(self.log_pos as f64)),
             ("genome", self.genome.to_json()),
             ("applied", str_arr(&self.applied)),
@@ -128,7 +134,11 @@ impl PendingPlan {
             base_id: req_str(v, "base")?.to_string(),
             reference_id: req_str(v, "reference")?.to_string(),
             description: req_str(v, "description")?.to_string(),
-            fingerprint: req_str(v, "fingerprint")?.to_string(),
+            fingerprint: parse_u64_hex(
+                v.get("fingerprint")
+                    .ok_or("checkpoint: pending missing fingerprint")?,
+            )
+            .map_err(|e| format!("checkpoint pending fingerprint: {e}"))?,
             log_pos: req_u64(v, "log_pos")? as usize,
             genome: KernelGenome::from_json(
                 v.get("genome").ok_or("checkpoint: pending missing genome")?,

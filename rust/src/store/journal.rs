@@ -126,6 +126,76 @@ impl JournalRecord {
         }
     }
 
+    /// Stream this record as one JSONL line (no trailing newline) into
+    /// `out`, byte-identical to `self.to_json().to_string()` — same
+    /// sorted key order, same escaping and number formatting — but
+    /// with no intermediate [`Json`] tree or per-entry `String`
+    /// (§Perf; the store's append path reuses one buffer). The tree
+    /// form stays as the parse-side contract and golden reference
+    /// (`streamed_record_matches_tree_emitter`).
+    pub fn write_json(&self, out: &mut String) {
+        fn opt_u64(out: &mut String, v: Option<u64>) {
+            match v {
+                Some(v) => json::push_num_value(out, v as f64),
+                None => out.push_str("null"),
+            }
+        }
+        match self {
+            JournalRecord::Plan(p) => {
+                out.push_str("{\"avenues\":[");
+                for (i, a) in p.avenues.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    json::push_str_value(out, a);
+                }
+                out.push_str("],\"base\":");
+                json::push_str_value(out, &p.base_id);
+                out.push_str(",\"chosen\":[");
+                for (i, c) in p.chosen.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    json::push_str_value(out, c);
+                }
+                out.push_str("],\"iteration\":");
+                json::push_num_value(out, p.iteration as f64);
+                out.push_str(",\"log_pos\":");
+                json::push_num_value(out, p.log_pos as f64);
+                out.push_str(",\"policy\":");
+                match p.policy {
+                    Some(pol) => json::push_str_value(out, policy_token(pol)),
+                    None => out.push_str("null"),
+                }
+                out.push_str(",\"rationale\":");
+                json::push_str_value(out, &p.rationale);
+                out.push_str(",\"reference\":");
+                json::push_str_value(out, &p.reference_id);
+                out.push_str(",\"t\":\"plan\"}");
+            }
+            JournalRecord::Exp(e) => {
+                out.push_str("{\"cached\":");
+                out.push_str(if e.cached { "true" } else { "false" });
+                out.push_str(",\"completed_at_s\":");
+                match e.completed_at_s {
+                    Some(t) => json::push_num_value(out, t),
+                    None => out.push_str("null"),
+                }
+                out.push_str(",\"ind\":");
+                e.individual.write_json(out);
+                out.push_str(",\"lane\":");
+                opt_u64(out, e.lane.map(u64::from));
+                out.push_str(",\"plan\":");
+                opt_u64(out, e.plan.map(|p| p as u64));
+                out.push_str(",\"submission_index\":");
+                opt_u64(out, e.submission_index);
+                out.push_str(",\"submitted_at\":");
+                json::push_num_value(out, e.submitted_at as f64);
+                out.push_str(",\"t\":\"exp\"}");
+            }
+        }
+    }
+
     pub fn from_json(v: &Json) -> Result<JournalRecord, String> {
         let tag = v
             .get("t")
@@ -185,8 +255,9 @@ pub struct RebuiltLedger {
     pub logs: Vec<IterationLog>,
     /// Platform submission log (committed submissions, in order).
     pub log_entries: Vec<SubmissionRecord>,
-    /// Eval-cache contents (fingerprint → outcome of every evaluation).
-    pub cache_entries: Vec<(String, EvalOutcome)>,
+    /// Eval-cache contents (genome content hash → outcome of every
+    /// evaluation).
+    pub cache_entries: Vec<(u64, EvalOutcome)>,
     /// Genomes aligned with `log_entries` (the lane-replay input).
     pub committed_genomes: Vec<KernelGenome>,
 }
@@ -227,7 +298,7 @@ pub fn rebuild(
     let mut population = Population::new(feedback_configs);
     let mut curve = ConvergenceCurve::default();
     let mut log_entries: Vec<SubmissionRecord> = Vec::new();
-    let mut cache_entries: Vec<(String, EvalOutcome)> = Vec::new();
+    let mut cache_entries: Vec<(u64, EvalOutcome)> = Vec::new();
     let mut committed_genomes: Vec<KernelGenome> = Vec::new();
     for rec in records {
         let JournalRecord::Exp(e) = rec else { continue };
@@ -254,8 +325,10 @@ pub fn rebuild(
                 lane,
                 outcome: e.individual.outcome.clone(),
             });
-            cache_entries
-                .push((e.individual.genome.fingerprint(), e.individual.outcome.clone()));
+            cache_entries.push((
+                e.individual.genome.fingerprint_hash(),
+                e.individual.outcome.clone(),
+            ));
             committed_genomes.push(e.individual.genome.clone());
         }
         if let Some(plan) = e.plan {
@@ -306,4 +379,96 @@ pub fn parse_journal(text: &str) -> Result<(Vec<JournalRecord>, bool), String> {
         }
     }
     Ok((records, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+
+    fn sample_records() -> Vec<JournalRecord> {
+        vec![
+            JournalRecord::Plan(PlanRecord {
+                iteration: 3,
+                log_pos: 2,
+                base_id: "00007".into(),
+                reference_id: "00004".into(),
+                policy: Some(ReferencePolicy::DivergentPath),
+                rationale: "divergent \"path\" → branch\nline".into(),
+                avenues: vec!["a".into(), "b\tc".into()],
+                chosen: vec!["x".into()],
+            }),
+            JournalRecord::Plan(PlanRecord {
+                iteration: 1,
+                log_pos: 0,
+                base_id: "00002".into(),
+                reference_id: "00001".into(),
+                policy: None,
+                rationale: String::new(),
+                avenues: vec![],
+                chosen: vec![],
+            }),
+            JournalRecord::Exp(ExperimentRecord {
+                individual: Individual {
+                    id: "00009".into(),
+                    parents: vec!["00007".into(), "00004".into()],
+                    genome: seeds::human_oracle(),
+                    experiment: "exp désc 😀".into(),
+                    report: "ok".into(),
+                    outcome: EvalOutcome::Timings(vec![90.5, 100.0, 3.25, 7.0, 1e6, 0.125]),
+                },
+                submitted_at: 9,
+                submission_index: Some(8),
+                cached: false,
+                lane: Some(2),
+                completed_at_s: Some(810.0),
+                plan: Some(2),
+            }),
+            JournalRecord::Exp(ExperimentRecord {
+                individual: Individual {
+                    id: "00010".into(),
+                    parents: vec![],
+                    genome: seeds::naive_hip(),
+                    experiment: String::new(),
+                    report: String::new(),
+                    outcome: EvalOutcome::CompileFailure("LDS \\ overflow".into()),
+                },
+                submitted_at: 10,
+                submission_index: None,
+                cached: true,
+                lane: None,
+                completed_at_s: None,
+                plan: None,
+            }),
+        ]
+    }
+
+    #[test]
+    fn streamed_record_matches_tree_emitter() {
+        // the store's append path streams; byte-identity with the tree
+        // emitter keeps the journal format (and journal_bytes
+        // accounting) exactly what from_json/parse_journal expect
+        for (i, rec) in sample_records().iter().enumerate() {
+            let mut streamed = String::new();
+            rec.write_json(&mut streamed);
+            assert_eq!(streamed, rec.to_json().to_string(), "record {i}");
+        }
+    }
+
+    #[test]
+    fn streamed_record_roundtrips_through_parse() {
+        let mut text = String::new();
+        for rec in sample_records() {
+            rec.write_json(&mut text);
+            text.push('\n');
+        }
+        let (records, torn) = parse_journal(&text).unwrap();
+        assert!(!torn);
+        assert_eq!(records.len(), 4);
+        let JournalRecord::Exp(e) = &records[2] else {
+            panic!("tag lost");
+        };
+        assert_eq!(e.individual.id, "00009");
+        assert_eq!(e.lane, Some(2));
+    }
 }

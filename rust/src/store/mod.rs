@@ -30,7 +30,7 @@ pub mod checkpoint;
 pub mod journal;
 pub mod replay;
 
-use std::io::Write;
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 pub use checkpoint::{Checkpoint, PendingPlan, SchedSnapshot};
@@ -41,9 +41,22 @@ pub const JOURNAL_FILE: &str = "journal.jsonl";
 const CAMPAIGN_MANIFEST: &str = "campaign.json";
 
 /// Append handle on a run's store directory.
+///
+/// Appends go through a persistent [`BufWriter`] and a reusable
+/// serialization buffer (§Perf): one streamed JSONL emission per
+/// entry — no per-entry `Json` tree or `String` — flushed to the OS
+/// at the end of every append. That flush keeps the pre-streaming
+/// flush points exactly: one `write` syscall per record, so a record
+/// is in the OS page cache (and survives a process kill) the moment
+/// `append` returns — the "journaled as it lands" crash property
+/// `replay` depends on. Fsync still happens only at checkpoints
+/// ([`RunStore::write_checkpoint`]), so a checkpoint never names
+/// journal bytes that are not durably on disk.
 pub struct RunStore {
     dir: PathBuf,
-    journal: std::fs::File,
+    journal: BufWriter<std::fs::File>,
+    /// Reused per-append serialization buffer.
+    line: String,
     journal_bytes: u64,
 }
 
@@ -70,7 +83,8 @@ impl RunStore {
             .map_err(|e| format!("{}: {e}", path.display()))?;
         Ok(RunStore {
             dir: dir.to_path_buf(),
-            journal,
+            journal: BufWriter::new(journal),
+            line: String::new(),
             journal_bytes: 0,
         })
     }
@@ -112,7 +126,8 @@ impl RunStore {
         Ok((
             RunStore {
                 dir: dir.to_path_buf(),
-                journal,
+                journal: BufWriter::new(journal),
+                line: String::new(),
                 journal_bytes: cp.journal_bytes,
             },
             cp,
@@ -127,11 +142,16 @@ impl RunStore {
     pub fn commit_truncation(&mut self) -> Result<(), String> {
         use std::io::Seek;
         let path = self.dir.join(JOURNAL_FILE);
+        // nothing has been appended yet (resume truncates before any
+        // append), but drain the writer defensively before touching
+        // the file cursor underneath it
         self.journal
-            .set_len(self.journal_bytes)
+            .flush()
             .map_err(|e| format!("{}: {e}", path.display()))?;
-        self.journal
-            .seek(std::io::SeekFrom::Start(self.journal_bytes))
+        let file = self.journal.get_mut();
+        file.set_len(self.journal_bytes)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        file.seek(std::io::SeekFrom::Start(self.journal_bytes))
             .map_err(|e| format!("{}: {e}", path.display()))?;
         Ok(())
     }
@@ -146,24 +166,42 @@ impl RunStore {
         self.journal_bytes
     }
 
-    /// Append one record to the journal. Fail-stop on I/O errors (see
-    /// module docs).
+    /// Append one record to the journal: streamed into the reusable
+    /// line buffer ([`JournalRecord::write_json`] — no intermediate
+    /// `Json` tree or `String`), written through the persistent
+    /// writer, and flushed to the OS before returning (one syscall per
+    /// record, the pre-streaming flush cadence — see the struct docs
+    /// for why the crash-record property needs it). Fail-stop on I/O
+    /// errors (see module docs).
     pub fn append(&mut self, record: &JournalRecord) {
-        let mut line = record.to_json().to_string();
-        line.push('\n');
+        self.line.clear();
+        record.write_json(&mut self.line);
+        self.line.push('\n');
         self.journal
-            .write_all(line.as_bytes())
+            .write_all(self.line.as_bytes())
             .expect("run store: journal write failed (fail-stop)");
-        self.journal_bytes += line.len() as u64;
+        self.journal_bytes += self.line.len() as u64;
+        self.flush();
+    }
+
+    /// Drain buffered journal bytes to the OS (no fsync). Every append
+    /// ends with this; exposed for symmetry and for readers that
+    /// inspect the journal file while the store is open.
+    pub fn flush(&mut self) {
+        self.journal
+            .flush()
+            .expect("run store: journal flush failed (fail-stop)");
     }
 
     /// Atomically persist a checkpoint stamped with the current journal
-    /// length. The journal is fsynced first: a checkpoint must never
-    /// name bytes the journal hasn't durably reached, or a power loss
-    /// between the two would make the store unresumable. Fail-stop on
-    /// I/O errors.
+    /// length. The journal is flushed and fsynced first: a checkpoint
+    /// must never name bytes the journal hasn't durably reached, or a
+    /// power loss between the two would make the store unresumable.
+    /// Fail-stop on I/O errors.
     pub fn write_checkpoint(&mut self, mut cp: Checkpoint) {
+        self.flush();
         self.journal
+            .get_ref()
             .sync_all()
             .expect("run store: journal fsync failed (fail-stop)");
         cp.journal_bytes = self.journal_bytes;
@@ -255,6 +293,8 @@ mod tests {
             plan: None,
         });
         store.append(&record);
+        // append flushes to the OS before returning — the line is
+        // immediately visible to readers of the file
         let on_disk = std::fs::read_to_string(dir.join(JOURNAL_FILE)).unwrap();
         assert_eq!(on_disk.len() as u64, store.journal_bytes());
         let (records, torn) = journal::parse_journal(&on_disk).unwrap();

@@ -440,6 +440,272 @@ fn prop_surrogate_escaped_text_parses_to_the_same_scalars() {
 }
 
 #[test]
+fn prop_u64_and_string_fingerprints_agree() {
+    // the hot paths key on the u64 content hash; the string form stays
+    // for display/persistence. The two must agree on identity: equal
+    // strings ⟺ equal hashes, over random pairs, exact clones, and
+    // single-edit neighbors (the adversarial near-miss case)
+    let mut rng = Rng::seed_from_u64(140);
+    let mut genomes: Vec<KernelGenome> = Vec::new();
+    for _ in 0..80 {
+        let g = random_genome(&mut rng);
+        genomes.push(g.clone());
+        if rng.chance(0.3) {
+            genomes.push(g.clone()); // exact duplicate pair
+        }
+        for (_, n) in edit::valid_neighbors(&g).into_iter().take(3) {
+            genomes.push(n);
+        }
+    }
+    for _ in 0..2000 {
+        let a = &genomes[rng.below(genomes.len())];
+        let b = &genomes[rng.below(genomes.len())];
+        assert_eq!(
+            a.fingerprint() == b.fingerprint(),
+            a.fingerprint_hash() == b.fingerprint_hash(),
+            "hash/string disagreement:\n{a:?}\n{b:?}"
+        );
+        // and both track genome equality exactly
+        assert_eq!(a.fingerprint() == b.fingerprint(), a == b);
+    }
+}
+
+/// The scan-based archive the indexed [`Population`] replaced: every
+/// query recomputed from the raw member list, exactly as the old
+/// implementation did (first-minimum wins; stable sort order on ties;
+/// specialist scan in insertion order with first-beating-config
+/// weights). The reference for the observational-equivalence property.
+mod naive_archive {
+    use gpu_kernel_scientist::population::Individual;
+
+    pub fn by_id<'a>(members: &'a [Individual], id: &str) -> Option<&'a Individual> {
+        members.iter().find(|m| m.id == id)
+    }
+
+    pub fn successful(members: &[Individual]) -> Vec<&Individual> {
+        members.iter().filter(|m| m.outcome.is_success()).collect()
+    }
+
+    pub fn best(members: &[Individual]) -> Option<&Individual> {
+        successful(members)
+            .into_iter()
+            .min_by(|a, b| a.score().unwrap().total_cmp(&b.score().unwrap()))
+    }
+
+    pub fn leaderboard(members: &[Individual]) -> Vec<String> {
+        let mut ok = successful(members);
+        ok.sort_by(|a, b| a.score().unwrap().total_cmp(&b.score().unwrap()));
+        ok.into_iter().map(|m| m.id.clone()).collect()
+    }
+
+    pub fn config_winners(members: &[Individual], n: usize) -> Vec<Option<String>> {
+        let mut winners: Vec<Option<(String, f64)>> = vec![None; n];
+        for m in successful(members) {
+            if let Some(ts) = m.outcome.timings() {
+                for (i, &t) in ts.iter().enumerate().take(n) {
+                    if winners[i].as_ref().map(|(_, best)| t < *best).unwrap_or(true) {
+                        winners[i] = Some((m.id.clone(), t));
+                    }
+                }
+            }
+        }
+        winners.into_iter().map(|w| w.map(|(id, _)| id)).collect()
+    }
+
+    pub fn ancestors<'a>(members: &'a [Individual], id: &str) -> Vec<&'a Individual> {
+        let mut out: Vec<&Individual> = Vec::new();
+        let mut cur = by_id(members, id);
+        while let Some(ind) = cur {
+            if let Some(parent_id) = ind.parents.first() {
+                cur = by_id(members, parent_id);
+                if let Some(p) = cur {
+                    if out.iter().any(|x| x.id == p.id) {
+                        break; // cycle guard (old code shape)
+                    }
+                    out.push(p);
+                }
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    pub fn common_ancestor<'a>(
+        members: &'a [Individual],
+        a: &str,
+        b: &str,
+    ) -> Option<&'a Individual> {
+        let anc_a = ancestors(members, a);
+        let anc_b: std::collections::HashSet<&str> =
+            ancestors(members, b).iter().map(|m| m.id.as_str()).collect();
+        anc_a.into_iter().find(|m| anc_b.contains(m.id.as_str()))
+    }
+
+    pub fn find_duplicate<'a>(
+        members: &'a [Individual],
+        g: &gpu_kernel_scientist::genome::KernelGenome,
+    ) -> Option<&'a Individual> {
+        let fp = g.fingerprint();
+        members.iter().find(|m| m.genome.fingerprint() == fp)
+    }
+
+    /// The old selector's per-config-specialist scan: members (in
+    /// insertion order) beating `base` on >= 1 config, tagged with the
+    /// first beating config index.
+    pub fn config_beaters<'a>(
+        members: &'a [Individual],
+        base: &Individual,
+    ) -> Vec<(usize, &'a Individual)> {
+        let mut out = Vec::new();
+        let Some(base_ts) = base.outcome.timings() else {
+            return out;
+        };
+        'members: for m in successful(members) {
+            if m.id == base.id {
+                continue;
+            }
+            if let Some(ts) = m.outcome.timings() {
+                for (i, (&t, &bt)) in ts.iter().zip(base_ts.iter()).enumerate() {
+                    if t < bt {
+                        out.push((i, m));
+                        continue 'members;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_indexed_archive_matches_naive_reference() {
+    use gpu_kernel_scientist::population::{EvalOutcome, Individual, Population};
+    use gpu_kernel_scientist::workload::FEEDBACK_CONFIGS;
+    let mut rng = Rng::seed_from_u64(141);
+    for case in 0..60 {
+        let nc = FEEDBACK_CONFIGS.len();
+        let n = 2 + rng.below(50);
+        let mut members: Vec<Individual> = Vec::new();
+        let mut pop = Population::new(FEEDBACK_CONFIGS.to_vec());
+        for i in 0..n {
+            let id = format!("{:05}", i + 1);
+            let parents = if i == 0 || rng.chance(0.2) {
+                vec![]
+            } else {
+                // first parent always an earlier member; optional
+                // second (reference) parent
+                let mut ps = vec![format!("{:05}", 1 + rng.below(i))];
+                if rng.chance(0.4) {
+                    ps.push(format!("{:05}", 1 + rng.below(i)));
+                }
+                ps
+            };
+            // duplicate genomes on purpose: dedup tie-breaks matter
+            let genome = if i > 0 && rng.chance(0.3) {
+                members[rng.below(i)].genome.clone()
+            } else {
+                random_genome(&mut rng)
+            };
+            // quantized timings so exact score/timing ties are common
+            let outcome = match rng.below(5) {
+                0 => EvalOutcome::CompileFailure("nope".into()),
+                1 => EvalOutcome::IncorrectResult("race".into()),
+                _ => EvalOutcome::Timings(
+                    (0..nc).map(|_| 50.0 * (1 + rng.below(6)) as f64).collect(),
+                ),
+            };
+            let ind = Individual {
+                id,
+                parents,
+                genome,
+                experiment: format!("exp {i}"),
+                report: String::new(),
+                outcome,
+            };
+            members.push(ind.clone());
+            pop.add(ind);
+        }
+
+        // point queries agree member-for-member
+        assert_eq!(pop.best().map(|m| &m.id), naive_archive::best(&members).map(|m| &m.id));
+        let lb: Vec<String> = pop.leaderboard_members().map(|m| m.id.clone()).collect();
+        assert_eq!(lb, naive_archive::leaderboard(&members), "case {case}");
+        let ok: Vec<&str> = pop.successful().iter().map(|m| m.id.as_str()).collect();
+        let ok_naive: Vec<&str> =
+            naive_archive::successful(&members).iter().map(|m| m.id.as_str()).collect();
+        assert_eq!(ok, ok_naive);
+        assert_eq!(pop.successful_count(), ok_naive.len());
+        assert_eq!(
+            pop.config_winners(),
+            naive_archive::config_winners(&members, nc),
+            "case {case}"
+        );
+        for m in &members {
+            assert_eq!(
+                pop.by_id(&m.id).map(|x| &x.id),
+                naive_archive::by_id(&members, &m.id).map(|x| &x.id)
+            );
+            let anc: Vec<&str> =
+                pop.ancestors(&m.id).iter().map(|x| x.id.as_str()).collect();
+            let anc_naive: Vec<&str> = naive_archive::ancestors(&members, &m.id)
+                .iter()
+                .map(|x| x.id.as_str())
+                .collect();
+            assert_eq!(anc, anc_naive, "case {case} ancestors of {}", m.id);
+            assert_eq!(
+                pop.find_duplicate(&m.genome).map(|x| &x.id),
+                naive_archive::find_duplicate(&members, &m.genome).map(|x| &x.id),
+                "case {case} dup of {}",
+                m.id
+            );
+            assert!(pop.contains_genome(m.genome.fingerprint_hash(), &m.genome));
+        }
+        assert_eq!(pop.by_id("99999").map(|m| &m.id), None);
+        // a genome absent from the archive misses in both
+        let novel = loop {
+            let g = random_genome(&mut rng);
+            if naive_archive::find_duplicate(&members, &g).is_none() {
+                break g;
+            }
+        };
+        assert!(pop.find_duplicate(&novel).is_none());
+        assert!(!pop.contains_genome(novel.fingerprint_hash(), &novel));
+        // pairwise lineage queries on sampled pairs
+        for _ in 0..10 {
+            let a = &members[rng.below(n)].id;
+            let b = &members[rng.below(n)].id;
+            assert_eq!(
+                pop.common_ancestor(a, b).map(|m| &m.id),
+                naive_archive::common_ancestor(&members, a, b).map(|m| &m.id),
+                "case {case} common_ancestor({a}, {b})"
+            );
+        }
+        // the specialist query agrees for the best member and a random
+        // successful one (content, order, first-config attribution)
+        let mut bases: Vec<&Individual> = Vec::new();
+        if let Some(best) = pop.best() {
+            bases.push(best);
+        }
+        if !ok.is_empty() {
+            bases.push(pop.nth_successful(rng.below(ok.len())));
+        }
+        for base in bases {
+            let got: Vec<(usize, &str)> = pop
+                .config_beaters(base)
+                .into_iter()
+                .map(|(i, m)| (i, m.id.as_str()))
+                .collect();
+            let want: Vec<(usize, &str)> = naive_archive::config_beaters(&members, base)
+                .into_iter()
+                .map(|(i, m)| (i, m.id.as_str()))
+                .collect();
+            assert_eq!(got, want, "case {case} beaters of {}", base.id);
+        }
+    }
+}
+
+#[test]
 fn prop_population_jsonl_roundtrip_random() {
     use gpu_kernel_scientist::population::{EvalOutcome, Individual, Population};
     use gpu_kernel_scientist::workload::FEEDBACK_CONFIGS;
