@@ -1,0 +1,127 @@
+//! Ablation: **analytic pre-screen tier on vs off** (DESIGN.md §10).
+//!
+//! The screen tier scores every planned candidate with the workload's
+//! calibrated cost model — microseconds of arithmetic against ~90
+//! simulated seconds for a platform submission — and only the top
+//! keep-fraction of each rung ever occupies an evaluation lane. This
+//! bench quantifies the multi-fidelity trade at an **equal submission
+//! quota**:
+//!
+//! * **Assessment throughput.** Candidates assessed per unit simulated
+//!   wall clock. The baseline assesses only what it submits; the
+//!   screened run additionally assesses (and discards) every rejected
+//!   candidate at analytic cost. Asserted ≥ 2x with `keep = 0.4`.
+//! * **Solution quality.** Geomean-over-seeds best score must stay
+//!   within 5% of the unscreened baseline — the tier rejects on the
+//!   same cost surface the simulator measures, so pruning the slow
+//!   half of each rung should not cost the optimizer its winners.
+//!
+//! Run: `cargo bench --bench ablation_screening`
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::util::bench::header;
+use gpu_kernel_scientist::workload::{self, Workload};
+
+const SEEDS: u64 = 4;
+const BUDGET: u64 = 60;
+const LANES: u32 = 4;
+
+struct Leg {
+    best_us: f64,
+    wall_clock_s: f64,
+    submissions: u64,
+    screened: u64,
+    rejected: u64,
+}
+
+fn run_leg(seed: u64, screened: bool) -> Leg {
+    let mut cfg = RunConfig::default()
+        .with_seed(seed)
+        .with_budget(BUDGET)
+        .with_parallelism(LANES)
+        .with_pipeline(true);
+    if screened {
+        cfg = cfg.with_screen(5, 0.4);
+    }
+    let mut run = ScientistRun::new(cfg).expect("setup");
+    let outcome = run.run_to_completion().expect("run");
+    Leg {
+        best_us: outcome.best_geomean_us,
+        wall_clock_s: outcome.wall_clock_s,
+        submissions: outcome.submissions,
+        screened: outcome.pipeline.screened,
+        rejected: outcome.pipeline.screen_rejected,
+    }
+}
+
+/// Candidates assessed per simulated hour: every submission is a
+/// measured assessment; every screen rejection is an analytic one.
+fn assess_rate(leg: &Leg) -> f64 {
+    (leg.submissions + leg.rejected) as f64 / (leg.wall_clock_s / 3600.0)
+}
+
+fn main() {
+    header("ablation — analytic pre-screen tier (multi-fidelity evaluation)");
+
+    // seed submissions bypass the tier (they are evaluated before any
+    // planning happens), so the conservation check needs their count
+    let n_seeds = workload::registry()
+        .into_iter()
+        .find(|w| w.name() == RunConfig::default().workload)
+        .expect("default workload is registered")
+        .starting_population()
+        .len() as u64;
+
+    let mut base_best = Vec::new();
+    let mut scr_best = Vec::new();
+    let mut base_rates = Vec::new();
+    let mut scr_rates = Vec::new();
+
+    println!(
+        "{:>6} {:>24} {:>32}",
+        "seed", "baseline (best, rate/h)", "screened (best, rate/h, scored)"
+    );
+    for seed in 0..SEEDS {
+        let base = run_leg(seed, false);
+        let scr = run_leg(seed, true);
+        assert_eq!(base.screened, 0, "baseline must not touch the tier");
+        assert_eq!(
+            scr.screened,
+            (scr.submissions - n_seeds) + scr.rejected,
+            "conservation: scored = promoted + rejected"
+        );
+        base_best.push(base.best_us);
+        scr_best.push(scr.best_us);
+        base_rates.push(assess_rate(&base));
+        scr_rates.push(assess_rate(&scr));
+        println!(
+            "{seed:>6} {:>13.1} us {:>7.1} {:>13.1} us {:>7.1} {:>7}",
+            base.best_us,
+            assess_rate(&base),
+            scr.best_us,
+            assess_rate(&scr),
+            scr.screened
+        );
+    }
+
+    let rate_ratio = geomean(&scr_rates) / geomean(&base_rates);
+    let best_ratio = geomean(&scr_best) / geomean(&base_best);
+    println!(
+        "\nassessment throughput: {rate_ratio:.2}x at equal quota ({BUDGET} submissions, {LANES} lanes)"
+    );
+    println!("best-score ratio (screened / baseline): {best_ratio:.3}");
+
+    assert!(
+        rate_ratio >= 2.0,
+        "screening must at least double candidates assessed per unit \
+         simulated wall clock (got {rate_ratio:.2}x)"
+    );
+    assert!(
+        best_ratio <= 1.05,
+        "screened best must stay within 5% of the unscreened baseline \
+         (got {best_ratio:.3})"
+    );
+    println!("ablation_screening shape: OK");
+}

@@ -152,6 +152,7 @@ fn journal_serialization(budget: Duration) -> BenchResult {
                 lane: Some((i % 4) as u32),
                 completed_at_s: Some(90.0 * (i as f64 + 1.0)),
                 plan: if i > 2 { Some(i / 3) } else { None },
+                screened: i % 2 == 0,
             })
         })
         .collect();

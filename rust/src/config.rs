@@ -40,6 +40,21 @@ pub struct RunConfig {
     pub inflight_per_lane: u32,
     /// Simulator measurement noise (lognormal sigma).
     pub noise_sigma: f64,
+    /// Enable the analytic pre-screen tier (`[screen] enabled`,
+    /// DESIGN.md §10): planned candidates are scored with the
+    /// workload's cost model and only the top `screen_keep` fraction
+    /// of each rung is promoted into the expensive platform. Disabled
+    /// by default — an off run takes no screen code path, so its
+    /// trajectory is bit-identical to a build without the tier
+    /// (`tests/screen.rs`).
+    pub screen_enabled: bool,
+    /// Screen rung size (`[screen] rung`): candidates accumulated per
+    /// promotion decision in the pipeline scheduler. Lockstep screens
+    /// each planned batch as its own rung, ignoring this knob.
+    pub screen_rung: u32,
+    /// Fraction of each rung promoted (`[screen] keep_fraction`),
+    /// in (0, 1].
+    pub screen_keep: f64,
     pub selection_policy: SelectionPolicy,
     pub experiment_rule: ExperimentRule,
     pub knowledge: KnowledgeProfile,
@@ -81,6 +96,9 @@ impl Default for RunConfig {
             pipeline: false,
             inflight_per_lane: 1,
             noise_sigma: 0.02,
+            screen_enabled: false,
+            screen_rung: 8,
+            screen_keep: 0.5,
             selection_policy: SelectionPolicy::PaperLlm,
             experiment_rule: ExperimentRule::Paper,
             knowledge: KnowledgeProfile::Full,
@@ -123,6 +141,15 @@ impl RunConfig {
         self
     }
 
+    /// Enable the analytic pre-screen tier with the given rung size and
+    /// keep fraction (`[screen]`, DESIGN.md §10).
+    pub fn with_screen(mut self, rung: u32, keep_fraction: f64) -> Self {
+        self.screen_enabled = true;
+        self.screen_rung = rung;
+        self.screen_keep = keep_fraction;
+        self
+    }
+
     /// Parse from the TOML subset (see module docs). Unknown keys are
     /// errors — config typos should not fail silently.
     pub fn from_toml(text: &str) -> Result<RunConfig, String> {
@@ -137,7 +164,7 @@ impl RunConfig {
                 section = line[1..line.len() - 1].trim().to_string();
                 if !matches!(
                     section.as_str(),
-                    "run" | "platform" | "agents" | "llm" | "store"
+                    "run" | "platform" | "agents" | "llm" | "store" | "screen"
                 ) {
                     return Err(format!("line {}: unknown section [{section}]", lineno + 1));
                 }
@@ -204,6 +231,29 @@ impl RunConfig {
                 self.inflight_per_lane = depth;
             }
             "platform.noise_sigma" => self.noise_sigma = parse_f64(value)?,
+            "screen.enabled" => {
+                self.screen_enabled = match value {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(format!("bad screen enabled '{value}'")),
+                }
+            }
+            "screen.rung" => {
+                let rung = parse_u64(value)? as u32;
+                if rung == 0 {
+                    return Err("screen rung must be >= 1".into());
+                }
+                self.screen_rung = rung;
+            }
+            "screen.keep_fraction" => {
+                let keep = parse_f64(value)?;
+                if !(keep > 0.0 && keep <= 1.0) {
+                    return Err(format!(
+                        "screen keep_fraction must be in (0, 1], got '{value}'"
+                    ));
+                }
+                self.screen_keep = keep;
+            }
             "agents.selection_policy" => {
                 self.selection_policy = parse_selection_policy(value)?
             }
@@ -262,6 +312,9 @@ impl RunConfig {
                 Json::Num(self.inflight_per_lane as f64),
             ),
             ("noise_sigma", Json::Num(self.noise_sigma)),
+            ("screen_enabled", Json::Bool(self.screen_enabled)),
+            ("screen_rung", Json::Num(self.screen_rung as f64)),
+            ("screen_keep", Json::Num(self.screen_keep)),
             (
                 "selection_policy",
                 Json::Str(selection_policy_token(self.selection_policy).into()),
@@ -304,6 +357,9 @@ impl RunConfig {
             pipeline: req_bool(v, "pipeline")?,
             inflight_per_lane: u32_field("inflight_per_lane")?,
             noise_sigma: req_f64(v, "noise_sigma")?,
+            screen_enabled: req_bool(v, "screen_enabled")?,
+            screen_rung: u32_field("screen_rung")?,
+            screen_keep: req_f64(v, "screen_keep")?,
             selection_policy: parse_selection_policy(req_str(v, "selection_policy")?)?,
             experiment_rule: parse_experiment_rule(req_str(v, "experiment_rule")?)?,
             knowledge: parse_knowledge(req_str(v, "knowledge")?)?,
@@ -455,6 +511,34 @@ rubric_infidelity = 0.2
     }
 
     #[test]
+    fn toml_screen_knobs() {
+        let c = RunConfig::from_toml(
+            "[screen]\nenabled = true\nrung = 5\nkeep_fraction = 0.4\n",
+        )
+        .unwrap();
+        assert!(c.screen_enabled);
+        assert_eq!(c.screen_rung, 5);
+        assert_eq!(c.screen_keep, 0.4);
+        let d = RunConfig::default();
+        assert!(!d.screen_enabled, "screening is opt-in");
+        assert_eq!(d.screen_rung, 8);
+        assert_eq!(d.screen_keep, 0.5);
+        assert!(RunConfig::from_toml("[screen]\nenabled = maybe\n").is_err());
+        assert!(RunConfig::from_toml("[screen]\nrung = 0\n").is_err());
+        assert!(RunConfig::from_toml("[screen]\nkeep_fraction = 0.0\n").is_err());
+        assert!(RunConfig::from_toml("[screen]\nkeep_fraction = 1.5\n").is_err());
+        assert!(RunConfig::from_toml("[screen]\nkeep_fraction = nan\n").is_err());
+    }
+
+    #[test]
+    fn builder_sets_screen() {
+        let c = RunConfig::default().with_screen(6, 0.25);
+        assert!(c.screen_enabled);
+        assert_eq!(c.screen_rung, 6);
+        assert_eq!(c.screen_keep, 0.25);
+    }
+
+    #[test]
     fn builders_set_pipeline_and_parallelism() {
         let c = RunConfig::default().with_parallelism(4).with_pipeline(true);
         assert_eq!(c.eval_parallelism, 4);
@@ -517,6 +601,10 @@ pipeline = true
 inflight_per_lane = 2
 noise_sigma = 0.035
 cache = false
+[screen]
+enabled = true
+rung = 6
+keep_fraction = 0.3
 [agents]
 selection_policy = "greedy"
 experiment_rule = "random3"
@@ -544,6 +632,9 @@ checkpoint_every = 3
         assert_eq!(back.pipeline, c.pipeline);
         assert_eq!(back.inflight_per_lane, c.inflight_per_lane);
         assert_eq!(back.noise_sigma, c.noise_sigma);
+        assert_eq!(back.screen_enabled, c.screen_enabled);
+        assert_eq!(back.screen_rung, c.screen_rung);
+        assert_eq!(back.screen_keep, c.screen_keep);
         assert_eq!(back.selection_policy, c.selection_policy);
         assert_eq!(back.experiment_rule, c.experiment_rule);
         assert_eq!(back.knowledge, c.knowledge);

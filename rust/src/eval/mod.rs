@@ -20,6 +20,7 @@
 
 pub mod executor;
 pub mod platform;
+pub mod screen;
 pub mod verifier;
 
 use crate::genome::KernelGenome;
@@ -30,6 +31,7 @@ pub use platform::{
     BatchResult, CompletedEval, EvalPlatform, PlatformCheckpoint, PlatformConfig,
     SubmissionRecord,
 };
+pub use screen::{ScreenConfig, ScreenOutcome, ScreenStats, ScreenTier};
 pub use verifier::{TolerancePolicy, Verdict};
 
 /// Why a submission failed.

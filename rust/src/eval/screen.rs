@@ -1,0 +1,363 @@
+//! The analytic pre-screen tier (DESIGN.md §10): multi-fidelity
+//! evaluation in front of the full simulated platform.
+//!
+//! The paper's own bottleneck is evaluation latency — every hypothesis
+//! costs a 90 s-class submission slot (§ evaluation loop). This tier
+//! scores each planned candidate with the workload's **noiseless
+//! analytic cost model** ([`crate::workload::Workload::estimate`]) at
+//! negligible simulated cost, accumulates candidates into fixed-size
+//! *rungs*, and promotes only the top `keep_fraction` of each rung
+//! (successive halving) into the expensive tier
+//! ([`super::EvalPlatform::submit_stream`]). Rejected candidates never
+//! occupy an evaluation lane and never consume submission quota —
+//! exactly like the scheduler's replanned-duplicate path.
+//!
+//! Determinism: the screen score is a pure function of the genome (the
+//! cost model draws no RNG — `prop_estimate_is_pure` locks this), the
+//! comparator is [`f64::total_cmp`] with ties broken by submission
+//! order, and the tier touches neither the platform clock nor any
+//! backend RNG stream. A screening-off run therefore takes **no** code
+//! path through this module, and a screening-on run replays from
+//! (seed, config) at any lane count.
+//!
+//! NaN-safety (the PR 5 convention): a candidate whose cost model
+//! fails, or returns a non-finite or non-positive timing, is *never*
+//! promoted and *never* reaches the comparator — it is rejected at
+//! promotion time. Finite scores are debug-asserted at the tier
+//! boundary.
+
+use std::sync::Arc;
+
+use crate::genome::KernelGenome;
+use crate::gpu::MI300;
+use crate::workload::{GemmConfig, Workload};
+
+/// Promotion-policy knobs (the `[screen]` config table).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScreenConfig {
+    /// Candidates accumulated before a promotion decision. The
+    /// pipeline scheduler screens in rungs of this size; the lockstep
+    /// scheduler screens each planned batch as its own rung.
+    pub rung: u32,
+    /// Fraction of each rung promoted to full evaluation, in (0, 1].
+    /// `ceil(keep_fraction * rung_len)` survive (at least one, never
+    /// more than the rung's finite-scored candidates).
+    pub keep_fraction: f64,
+}
+
+impl Default for ScreenConfig {
+    fn default() -> Self {
+        ScreenConfig {
+            rung: 8,
+            keep_fraction: 0.5,
+        }
+    }
+}
+
+/// Conservation counters: `screened == promoted + rejected + pending`
+/// at every instant, so after a final flush every screened candidate is
+/// accounted promoted or rejected.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ScreenStats {
+    /// Candidates that entered the tier (scored by the cost model).
+    pub screened: u64,
+    /// Survivors forwarded to the full platform.
+    pub promoted: u64,
+    /// Candidates culled: below the rung's keep cut, or carrying an
+    /// invalid / non-finite cost-model score.
+    pub rejected: u64,
+}
+
+/// One promotion decision: the rung's survivors (in submission order)
+/// and its culled candidates.
+#[derive(Debug)]
+pub struct ScreenOutcome<T> {
+    pub promoted: Vec<T>,
+    pub rejected: Vec<T>,
+}
+
+impl<T> ScreenOutcome<T> {
+    fn empty() -> Self {
+        ScreenOutcome {
+            promoted: Vec::new(),
+            rejected: Vec::new(),
+        }
+    }
+}
+
+struct Candidate<T> {
+    /// Sanitized screen score (`None` = unscoreable: invalid genome or
+    /// non-finite cost-model output — rejected, never compared).
+    score: Option<f64>,
+    /// Submission order within the tier — the comparator's tie-break.
+    seq: u64,
+    payload: T,
+}
+
+/// The pre-screen tier: a rung accumulator generic over the scheduler's
+/// payload (the pipeline stores `(PlannedExperiment, log_pos)`).
+pub struct ScreenTier<T> {
+    cfg: ScreenConfig,
+    workload: Arc<dyn Workload>,
+    /// The workload's feedback-suite configs, fetched once — the screen
+    /// scores candidates on exactly the basis the platform times.
+    configs: Vec<GemmConfig>,
+    rung: Vec<Candidate<T>>,
+    seq: u64,
+    stats: ScreenStats,
+}
+
+impl<T> ScreenTier<T> {
+    pub fn new(cfg: ScreenConfig, workload: Arc<dyn Workload>) -> ScreenTier<T> {
+        assert!(cfg.rung >= 1, "screen rung must be >= 1");
+        assert!(
+            cfg.keep_fraction > 0.0 && cfg.keep_fraction <= 1.0,
+            "screen keep_fraction must be in (0, 1]"
+        );
+        let configs = workload.feedback_suite().configs;
+        ScreenTier {
+            cfg,
+            workload,
+            configs,
+            rung: Vec::new(),
+            seq: 0,
+            stats: ScreenStats::default(),
+        }
+    }
+
+    /// Analytic screen score for one candidate: geometric mean of the
+    /// cost model's `total_us` over the feedback suite. `None` when the
+    /// genome fails validation, the workload's compile gate, or the
+    /// cost model — or when any timing is non-finite or non-positive
+    /// (never promoted, never compared, never a panic).
+    pub fn score(&self, genome: &KernelGenome) -> Option<f64> {
+        if genome.validate().is_err() || self.workload.admits(genome).is_err() {
+            return None;
+        }
+        let mut log_sum = 0.0f64;
+        for cfg in &self.configs {
+            let t = self.workload.estimate(&MI300, genome, cfg).ok()?.total_us;
+            if !t.is_finite() || t <= 0.0 {
+                return None;
+            }
+            log_sum += t.ln();
+        }
+        let score = (log_sum / self.configs.len().max(1) as f64).exp();
+        score.is_finite().then_some(score)
+    }
+
+    /// Score `genome` and add it to the current rung. Returns the
+    /// promotion decision when this push completes a rung.
+    pub fn push(&mut self, genome: &KernelGenome, payload: T) -> Option<ScreenOutcome<T>> {
+        let score = self.score(genome);
+        self.push_scored(score, payload)
+    }
+
+    /// Add a pre-scored candidate (the schedulers score first to keep
+    /// the payload move disjoint from the genome borrow; property tests
+    /// inject adversarial scores here). Non-finite scores are
+    /// sanitized to `None` at this boundary.
+    pub fn push_scored(&mut self, score: Option<f64>, payload: T) -> Option<ScreenOutcome<T>> {
+        let score = score.filter(|s| s.is_finite());
+        self.stats.screened += 1;
+        let seq = self.seq;
+        self.seq += 1;
+        self.rung.push(Candidate {
+            score,
+            seq,
+            payload,
+        });
+        (self.rung.len() >= self.cfg.rung as usize).then(|| self.promote())
+    }
+
+    /// Re-insert a candidate restored from a checkpoint's screen queue:
+    /// its `screened` count is already in the restored scheduler
+    /// counters, and a checkpointed rung is always partial (promotion
+    /// drains a rung the instant it fills), so restoring never decides.
+    pub fn restore(&mut self, score: Option<f64>, payload: T) {
+        let score = score.filter(|s| s.is_finite());
+        let seq = self.seq;
+        self.seq += 1;
+        self.rung.push(Candidate {
+            score,
+            seq,
+            payload,
+        });
+        debug_assert!(
+            self.rung.len() < self.cfg.rung as usize,
+            "restored screen queue at or above the rung size"
+        );
+    }
+
+    /// Decide a partial rung (planning went dead or the budget ran
+    /// out): same keep rule, applied to however many candidates sit in
+    /// the rung. Empty outcome when the rung is empty.
+    pub fn flush(&mut self) -> ScreenOutcome<T> {
+        self.promote()
+    }
+
+    /// Candidates awaiting a promotion decision.
+    pub fn pending(&self) -> usize {
+        self.rung.len()
+    }
+
+    /// Payloads of the candidates awaiting a decision, in submission
+    /// order (checkpointing walks these).
+    pub fn pending_payloads(&self) -> impl Iterator<Item = &T> {
+        self.rung.iter().map(|c| &c.payload)
+    }
+
+    pub fn stats(&self) -> ScreenStats {
+        self.stats
+    }
+
+    /// Promotion rule: `keep = clamp(ceil(keep_fraction * n), 1, n)`
+    /// survivors by ascending screen score (`f64::total_cmp`, ties by
+    /// submission order), capped by the number of finite-scored
+    /// candidates — an unscoreable candidate is never promoted, even
+    /// from an otherwise-empty rung. Survivors return in submission
+    /// order, so the promotion never reorders the scheduler's queue
+    /// among survivors.
+    fn promote(&mut self) -> ScreenOutcome<T> {
+        let rung = std::mem::take(&mut self.rung);
+        let n = rung.len();
+        if n == 0 {
+            return ScreenOutcome::empty();
+        }
+        let keep_target =
+            ((self.cfg.keep_fraction * n as f64).ceil() as usize).clamp(1, n);
+        let mut order: Vec<usize> = (0..n).filter(|&i| rung[i].score.is_some()).collect();
+        order.sort_by(|&a, &b| {
+            let (sa, sb) = (rung[a].score.unwrap(), rung[b].score.unwrap());
+            // the tier boundary: only finite scores may be compared
+            debug_assert!(sa.is_finite() && sb.is_finite());
+            sa.total_cmp(&sb).then(rung[a].seq.cmp(&rung[b].seq))
+        });
+        order.truncate(keep_target);
+        let keep: std::collections::HashSet<usize> = order.into_iter().collect();
+        let mut out = ScreenOutcome::empty();
+        for (i, c) in rung.into_iter().enumerate() {
+            if keep.contains(&i) {
+                out.promoted.push(c.payload);
+            } else {
+                out.rejected.push(c.payload);
+            }
+        }
+        self.stats.promoted += out.promoted.len() as u64;
+        self.stats.rejected += out.rejected.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+    use crate::workload;
+
+    fn tier(rung: u32, keep: f64) -> ScreenTier<usize> {
+        ScreenTier::new(
+            ScreenConfig {
+                rung,
+                keep_fraction: keep,
+            },
+            workload::default_workload(),
+        )
+    }
+
+    #[test]
+    fn full_rung_promotes_the_top_keep_fraction() {
+        let mut t = tier(4, 0.5);
+        assert!(t.push_scored(Some(40.0), 0).is_none());
+        assert!(t.push_scored(Some(10.0), 1).is_none());
+        assert!(t.push_scored(Some(30.0), 2).is_none());
+        let out = t.push_scored(Some(20.0), 3).expect("rung full");
+        // lowest two scores survive, in submission order
+        assert_eq!(out.promoted, vec![1, 3]);
+        assert_eq!(out.rejected, vec![0, 2]);
+        assert_eq!(t.pending(), 0);
+        assert_eq!(
+            t.stats(),
+            ScreenStats {
+                screened: 4,
+                promoted: 2,
+                rejected: 2
+            }
+        );
+    }
+
+    #[test]
+    fn score_ties_break_by_submission_order() {
+        let mut t = tier(4, 0.5);
+        for i in 0..3 {
+            assert!(t.push_scored(Some(5.0), i).is_none());
+        }
+        let out = t.push_scored(Some(5.0), 3).unwrap();
+        assert_eq!(out.promoted, vec![0, 1], "earliest submissions win ties");
+    }
+
+    #[test]
+    fn unscoreable_candidates_are_never_promoted() {
+        let mut t = tier(4, 1.0);
+        t.push_scored(None, 0);
+        t.push_scored(Some(f64::NAN), 1);
+        t.push_scored(Some(f64::INFINITY), 2);
+        let out = t.push_scored(Some(7.0), 3).unwrap();
+        // keep_fraction = 1.0 but only the finite-scored candidate may
+        // survive
+        assert_eq!(out.promoted, vec![3]);
+        assert_eq!(out.rejected, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn flush_decides_a_partial_rung_with_the_same_rule() {
+        let mut t = tier(8, 0.5);
+        t.push_scored(Some(3.0), 0);
+        t.push_scored(Some(1.0), 1);
+        t.push_scored(Some(2.0), 2);
+        let out = t.flush();
+        // ceil(0.5 * 3) = 2 survivors
+        assert_eq!(out.promoted, vec![1, 2]);
+        assert_eq!(out.rejected, vec![0]);
+        assert!(t.flush().promoted.is_empty(), "empty rung flushes empty");
+    }
+
+    #[test]
+    fn score_is_the_feedback_suite_geomean_of_the_cost_model() {
+        let t = tier(4, 0.5);
+        let w = workload::default_workload();
+        let g = seeds::human_oracle();
+        let score = t.score(&g).expect("valid seed must score");
+        let timings: Vec<f64> = w
+            .feedback_suite()
+            .configs
+            .iter()
+            .map(|c| w.estimate(&MI300, &g, c).unwrap().total_us)
+            .collect();
+        let expected = crate::metrics::geomean(&timings);
+        assert!((score - expected).abs() < 1e-9 * expected);
+        // scoring is pure: same genome, same score
+        assert_eq!(t.score(&g), t.score(&g));
+    }
+
+    #[test]
+    fn invalid_genomes_score_none() {
+        let t = tier(4, 0.5);
+        let invalid = crate::genome::KernelGenome {
+            block_m: 48,
+            ..seeds::naive_hip()
+        };
+        assert_eq!(t.score(&invalid), None);
+    }
+
+    #[test]
+    fn restore_refills_a_partial_rung_without_counting() {
+        let mut t = tier(4, 0.5);
+        t.restore(Some(2.0), 7);
+        t.restore(Some(1.0), 8);
+        assert_eq!(t.pending(), 2);
+        assert_eq!(t.stats().screened, 0, "restored candidates were already counted");
+        let pend: Vec<usize> = t.pending_payloads().copied().collect();
+        assert_eq!(pend, vec![7, 8]);
+    }
+}

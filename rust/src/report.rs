@@ -84,7 +84,7 @@ pub fn render_pipeline(stats: &crate::scientist::PipelineStats) -> String {
     } else {
         "lockstep"
     };
-    format!(
+    let mut s = format!(
         "scheduler: {mode} over {} lane(s) | occupancy {:.0}% | in-flight mean {:.1} \
          (max {}) | {} planning rounds, {} duplicates replanned",
         stats.lanes,
@@ -93,16 +93,25 @@ pub fn render_pipeline(stats: &crate::scientist::PipelineStats) -> String {
         stats.max_in_flight,
         stats.planning_rounds,
         stats.replanned_duplicates
-    )
+    );
+    // only rendered when the screen tier saw work: a `[screen]`-off
+    // run's summary stays byte-identical to a build without the tier
+    if stats.screened > 0 {
+        s.push_str(&format!(
+            " | screen: {} scored, {} promoted, {} rejected",
+            stats.screened, stats.screen_promoted, stats.screen_rejected
+        ));
+    }
+    s
 }
 
 /// Render a campaign's per-workload summary as a markdown table.
 pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) -> String {
     let mut s = String::from("### Campaign summary\n\n");
     s.push_str(
-        "| Workload | Best | Feedback geomean (us) | Leaderboard (us) | Submissions | Cache h/m | Platform time (min) | Lane occupancy |\n",
+        "| Workload | Best | Feedback geomean (us) | Leaderboard (us) | Submissions | Cache h/m | Platform time (min) | Lane occupancy | Screened/promoted |\n",
     );
-    s.push_str("|---|---|---|---|---|---|---|---|\n");
+    s.push_str("|---|---|---|---|---|---|---|---|---|\n");
     for r in &outcome.results {
         let lb = r
             .outcome
@@ -110,7 +119,7 @@ pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) ->
             .map(|x| format!("{x:.1}"))
             .unwrap_or_else(|| "-".into());
         s.push_str(&format!(
-            "| {} | {} | {:.1} | {} | {} | {}/{} | {:.0} | {:.0}% |\n",
+            "| {} | {} | {:.1} | {} | {} | {}/{} | {:.0} | {:.0}% | {}/{} |\n",
             r.workload,
             r.outcome.best_id,
             r.outcome.best_geomean_us,
@@ -119,7 +128,9 @@ pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) ->
             r.cache_stats.0,
             r.cache_stats.1,
             r.outcome.wall_clock_s / 60.0,
-            r.outcome.pipeline.lane_occupancy * 100.0
+            r.outcome.pipeline.lane_occupancy * 100.0,
+            r.outcome.pipeline.screened,
+            r.outcome.pipeline.screen_promoted
         ));
     }
     s.push_str(&format!(
@@ -238,15 +249,29 @@ mod tests {
             max_in_flight: 4,
             planning_rounds: 11,
             replanned_duplicates: 2,
+            screened: 0,
+            screen_promoted: 0,
+            screen_rejected: 0,
         };
         let s = render_pipeline(&stats);
         assert!(s.contains("steady-state pipeline over 4 lane(s)"), "{s}");
         assert!(s.contains("occupancy 94%"), "{s}");
         assert!(s.contains("2 duplicates replanned"), "{s}");
+        // screening off: no screen fragment at all (report diffs of
+        // off runs against pre-screen baselines stay clean)
+        assert!(!s.contains("screen:"), "{s}");
         let lockstep = PipelineStats {
             pipelined: false,
-            ..stats
+            ..stats.clone()
         };
         assert!(render_pipeline(&lockstep).contains("lockstep"));
+        let screened = PipelineStats {
+            screened: 12,
+            screen_promoted: 7,
+            screen_rejected: 5,
+            ..stats
+        };
+        let s = render_pipeline(&screened);
+        assert!(s.contains("screen: 12 scored, 7 promoted, 5 rejected"), "{s}");
     }
 }

@@ -48,7 +48,7 @@ use pipeline::SchedCounters;
 
 use crate::agents::{AgentSuite, FindingsDoc, KernelWrite, Selection};
 use crate::config::RunConfig;
-use crate::eval::{EvalBackend, EvalPlatform, PlatformConfig};
+use crate::eval::{EvalBackend, EvalPlatform, PlatformConfig, ScreenConfig, ScreenTier};
 use crate::metrics::ConvergenceCurve;
 use crate::population::{EvalOutcome, Individual, Population};
 use crate::sim::SimBackend;
@@ -123,6 +123,11 @@ pub(crate) struct ResumeState {
     /// their depth samples are already in the restored counters, so the
     /// resumed feed skips re-sampling exactly that many dispatches.
     pub skip_depth: usize,
+    /// Candidates that sat in the screen tier's partial rung at the
+    /// checkpoint, in submission order. The resumed pipeline re-scores
+    /// them (the analytic model is pure, so scores recompute exactly)
+    /// and refills the rung before planning anything new (DESIGN.md §10).
+    pub screen_pending: Vec<(PlannedExperiment, usize)>,
 }
 
 /// Evaluation provenance of one ledger entry, journaled alongside it
@@ -138,6 +143,9 @@ pub(crate) struct Provenance {
     /// Producing planning round (`logs` position); `None` for seeds
     /// and bootstrap probes.
     pub plan: Option<usize>,
+    /// Whether this entry passed through the analytic screen tier
+    /// before submission (always false while `[screen]` is disabled).
+    pub screened: bool,
 }
 
 impl Provenance {
@@ -148,6 +156,7 @@ impl Provenance {
             cached: false,
             submission_index: Some(submitted_at - 1),
             plan: None,
+            screened: false,
         }
     }
 }
@@ -174,6 +183,45 @@ pub(crate) struct PlannedGroup {
     pub experiments: Vec<PlannedExperiment>,
     /// Writer children discarded as duplicates during this round.
     pub duplicates_skipped: u64,
+}
+
+/// Checkpoint form of one planned-but-uncommitted experiment.
+fn pending_plan(e: &PlannedExperiment, log_pos: usize) -> PendingPlan {
+    PendingPlan {
+        base_id: e.base_id.clone(),
+        reference_id: e.reference_id.clone(),
+        description: e.description.clone(),
+        fingerprint: e.fingerprint,
+        log_pos,
+        genome: e.write.genome.clone(),
+        applied: e.write.applied.clone(),
+        skipped: e.write.skipped.clone(),
+        repairs: e.write.repairs.clone(),
+        report: e.write.report.clone(),
+        diff: e.write.diff.clone(),
+    }
+}
+
+/// Rebuild a planned experiment (and its planning-round position) from
+/// its checkpointed form.
+fn planned_from_pending(p: &PendingPlan) -> (PlannedExperiment, usize) {
+    (
+        PlannedExperiment {
+            base_id: p.base_id.clone(),
+            reference_id: p.reference_id.clone(),
+            description: p.description.clone(),
+            write: KernelWrite {
+                genome: p.genome.clone(),
+                applied: p.applied.clone(),
+                skipped: p.skipped.clone(),
+                repairs: p.repairs.clone(),
+                report: p.report.clone(),
+                diff: p.diff.clone(),
+            },
+            fingerprint: p.fingerprint,
+        },
+        p.log_pos,
+    )
 }
 
 impl ScientistRun<SimBackend> {
@@ -262,30 +310,13 @@ impl ScientistRun<SimBackend> {
             resume_state: Some(ResumeState {
                 stalls: cp.stalls,
                 planning_dead: cp.planning_dead,
-                pending: cp
-                    .pending
-                    .iter()
-                    .map(|p| {
-                        (
-                            PlannedExperiment {
-                                base_id: p.base_id.clone(),
-                                reference_id: p.reference_id.clone(),
-                                description: p.description.clone(),
-                                write: KernelWrite {
-                                    genome: p.genome.clone(),
-                                    applied: p.applied.clone(),
-                                    skipped: p.skipped.clone(),
-                                    repairs: p.repairs.clone(),
-                                    report: p.report.clone(),
-                                    diff: p.diff.clone(),
-                                },
-                                fingerprint: p.fingerprint,
-                            },
-                            p.log_pos,
-                        )
-                    })
-                    .collect(),
+                pending: cp.pending.iter().map(planned_from_pending).collect(),
                 skip_depth: cp.skip_depth,
+                screen_pending: cp
+                    .screen_pending
+                    .iter()
+                    .map(planned_from_pending)
+                    .collect(),
             }),
             halted: false,
         };
@@ -400,7 +431,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         run.submit_seeds()?;
         // the store's first checkpoint: a crash at any later point can
         // resume from at least the post-seed state
-        run.write_checkpoint(0, false, &[], 0)?;
+        run.write_checkpoint(0, false, &[], 0, &[])?;
         Ok(run)
     }
 
@@ -490,6 +521,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 lane,
                 completed_at_s,
                 plan: prov.plan,
+                screened: prov.screened,
             });
             self.store.as_mut().expect("store checked above").append(&record);
         }
@@ -614,7 +646,9 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
     }
 
     /// Journal one planning round's transcript (no-op without a store).
-    fn journal_plan(&mut self, log_pos: usize) {
+    /// `screened` is how many of the round's children entered the
+    /// analytic screen tier (0 while `[screen]` is disabled).
+    fn journal_plan(&mut self, log_pos: usize, screened: u64) {
         let Some(store) = self.store.as_mut() else { return };
         let log = &self.logs[log_pos];
         store.append(&JournalRecord::Plan(PlanRecord {
@@ -626,20 +660,23 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             rationale: log.selection.rationale.clone(),
             avenues: log.avenue_names.clone(),
             chosen: log.chosen_experiments.clone(),
+            screened,
         }));
     }
 
     /// Snapshot everything a resume needs and write it to the store
     /// (no-op without one). `pending` lists planned-but-uncommitted
     /// experiments in dispatch order; `skip_depth` of them were in
-    /// flight. See DESIGN.md §9 for what goes where (journal vs
-    /// checkpoint).
+    /// flight; `screen_pending` lists the screen tier's partial rung in
+    /// submission order (always empty in lockstep, whose rungs are
+    /// batch-scoped). See DESIGN.md §9/§10 for what goes where.
     fn write_checkpoint(
         &mut self,
         stalls: u32,
         planning_dead: bool,
         pending: &[(&PlannedExperiment, usize)],
         skip_depth: usize,
+        screen_pending: &[(&PlannedExperiment, usize)],
     ) -> Result<(), String> {
         if self.store.is_none() {
             return Ok(());
@@ -660,21 +697,13 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             platform,
             pending: pending
                 .iter()
-                .map(|(e, log_pos)| PendingPlan {
-                    base_id: e.base_id.clone(),
-                    reference_id: e.reference_id.clone(),
-                    description: e.description.clone(),
-                    fingerprint: e.fingerprint,
-                    log_pos: *log_pos,
-                    genome: e.write.genome.clone(),
-                    applied: e.write.applied.clone(),
-                    skipped: e.write.skipped.clone(),
-                    repairs: e.write.repairs.clone(),
-                    report: e.write.report.clone(),
-                    diff: e.write.diff.clone(),
-                })
+                .map(|(e, log_pos)| pending_plan(e, *log_pos))
                 .collect(),
             skip_depth,
+            screen_pending: screen_pending
+                .iter()
+                .map(|(e, log_pos)| pending_plan(e, *log_pos))
+                .collect(),
             best_id: best.map(|b| b.id.clone()),
             best_geomean_us: self.population.best().and_then(|b| b.score()),
         };
@@ -696,9 +725,38 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         }
         self.iteration += 1;
         let no_reservations = HashSet::new();
-        let group = self.plan_group(self.budget_left(), &no_reservations)?;
+        let mut group = self.plan_group(self.budget_left(), &no_reservations)?;
         self.sched.planning_rounds += 1;
         self.sched.replanned_duplicates += group.duplicates_skipped;
+
+        // Lockstep screening is batch-scoped: the planned group is its
+        // own rung (the `screen.rung` knob only shapes the pipeline
+        // scheduler's rolling rung), so lockstep checkpoints still
+        // never carry pending screen work and the barrier shape is
+        // preserved (DESIGN.md §10). Rejected children are dropped —
+        // lockstep holds no reservations to release.
+        let planned = group.experiments.len() as u64;
+        if self.config.screen_enabled && !group.experiments.is_empty() {
+            let mut tier: ScreenTier<PlannedExperiment> = ScreenTier::new(
+                ScreenConfig {
+                    rung: group.experiments.len() as u32,
+                    keep_fraction: self.config.screen_keep,
+                },
+                self.workload.clone(),
+            );
+            let mut outcome = None;
+            for e in std::mem::take(&mut group.experiments) {
+                let score = tier.score(&e.write.genome);
+                if let Some(out) = tier.push_scored(score, e) {
+                    outcome = Some(out);
+                }
+            }
+            let out = outcome.expect("a rung sized to the group fills on its last push");
+            self.sched.screened += planned;
+            self.sched.screen_promoted += out.promoted.len() as u64;
+            self.sched.screen_rejected += out.rejected.len() as u64;
+            group.experiments = out.promoted;
+        }
 
         let batch: Vec<crate::genome::KernelGenome> = group
             .experiments
@@ -721,6 +779,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 cached: result.cached,
                 submission_index: result.submission_index,
                 plan: Some(log_pos),
+                screened: self.config.screen_enabled,
             };
             submitted_ids.push(self.record_experiment(experiment, result.outcome, prov));
         }
@@ -735,7 +794,12 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             chosen_experiments: group.chosen_experiments,
             submitted_ids,
         });
-        self.journal_plan(log_pos);
+        let screened = if self.config.screen_enabled {
+            planned
+        } else {
+            0
+        };
+        self.journal_plan(log_pos, screened);
         self.logs.last()
     }
 
@@ -808,10 +872,10 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
             }
             steps += 1;
             if steps % every == 0 {
-                self.write_checkpoint(stalls, false, &[], 0)?;
+                self.write_checkpoint(stalls, false, &[], 0, &[])?;
             }
         }
-        self.write_checkpoint(stalls, false, &[], 0)
+        self.write_checkpoint(stalls, false, &[], 0, &[])
     }
 
     /// Whether the `halt_after` test knob says to abort now (simulated

@@ -46,7 +46,7 @@
 use std::collections::{HashSet, VecDeque};
 
 use super::{IterationLog, PlannedExperiment, ScientistRun};
-use crate::eval::EvalBackend;
+use crate::eval::{EvalBackend, ScreenConfig, ScreenOutcome, ScreenTier};
 
 /// Scheduler-level throughput statistics, reported in
 /// [`super::RunOutcome`] for both the lockstep and pipeline drivers.
@@ -69,6 +69,14 @@ pub struct PipelineStats {
     /// Duplicate children discarded at planning time and replanned
     /// instead of submitted.
     pub replanned_duplicates: u64,
+    /// Candidates scored by the analytic pre-screen tier (DESIGN.md
+    /// §10); 0 when `[screen]` is disabled.
+    pub screened: u64,
+    /// Screened candidates promoted into the full platform.
+    pub screen_promoted: u64,
+    /// Screened candidates rejected at the screen tier — they never
+    /// occupied a lane or consumed quota, like replanned duplicates.
+    pub screen_rejected: u64,
 }
 
 /// Raw counters both schedulers accumulate on the run; snapshot into
@@ -77,6 +85,9 @@ pub struct PipelineStats {
 pub(crate) struct SchedCounters {
     pub planning_rounds: u64,
     pub replanned_duplicates: u64,
+    pub screened: u64,
+    pub screen_promoted: u64,
+    pub screen_rejected: u64,
     depth_total: u64,
     depth_samples: u64,
     max_in_flight: u64,
@@ -106,6 +117,9 @@ impl SchedCounters {
         crate::store::SchedSnapshot {
             planning_rounds: self.planning_rounds,
             replanned_duplicates: self.replanned_duplicates,
+            screened: self.screened,
+            screen_promoted: self.screen_promoted,
+            screen_rejected: self.screen_rejected,
             depth_total: self.depth_total,
             depth_samples: self.depth_samples,
             max_in_flight: self.max_in_flight,
@@ -117,6 +131,9 @@ impl SchedCounters {
         SchedCounters {
             planning_rounds: s.planning_rounds,
             replanned_duplicates: s.replanned_duplicates,
+            screened: s.screened,
+            screen_promoted: s.screen_promoted,
+            screen_rejected: s.screen_rejected,
             depth_total: s.depth_total,
             depth_samples: s.depth_samples,
             max_in_flight: s.max_in_flight,
@@ -136,7 +153,30 @@ impl SchedCounters {
             max_in_flight: self.max_in_flight,
             planning_rounds: self.planning_rounds,
             replanned_duplicates: self.replanned_duplicates,
+            screened: self.screened,
+            screen_promoted: self.screen_promoted,
+            screen_rejected: self.screen_rejected,
         }
+    }
+}
+
+/// Fold one screen-tier promotion decision into the scheduler state:
+/// survivors join the submission queue (in submission order), culled
+/// candidates release their fingerprint reservation — mirroring the
+/// replanned-duplicate path, they never occupy a lane.
+fn absorb_screen_outcome(
+    out: ScreenOutcome<(PlannedExperiment, usize)>,
+    queue: &mut VecDeque<(PlannedExperiment, usize)>,
+    reserved: &mut HashSet<u64>,
+    sched: &mut SchedCounters,
+) {
+    sched.screen_promoted += out.promoted.len() as u64;
+    sched.screen_rejected += out.rejected.len() as u64;
+    for item in out.promoted {
+        queue.push_back(item);
+    }
+    for (experiment, _) in out.rejected {
+        reserved.remove(&experiment.fingerprint);
     }
 }
 
@@ -172,6 +212,20 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
         // counters, so the first `skip_depth` dispatches don't
         // re-sample (DESIGN.md §9).
         let mut skip_depth = 0usize;
+        // The analytic pre-screen tier (DESIGN.md §10). `None` when
+        // `[screen]` is disabled: an off run takes no code path through
+        // the tier — no extra work, no reordering, no RNG draws — so
+        // its trajectory is bit-identical to a build without it.
+        let mut screen: Option<ScreenTier<(PlannedExperiment, usize)>> =
+            self.config.screen_enabled.then(|| {
+                ScreenTier::new(
+                    ScreenConfig {
+                        rung: self.config.screen_rung,
+                        keep_fraction: self.config.screen_keep,
+                    },
+                    self.workload.clone(),
+                )
+            });
         if let Some(resume) = self.resume_state.take() {
             stalls = resume.stalls;
             planning_dead = resume.planning_dead;
@@ -179,6 +233,21 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
             for (experiment, log_pos) in resume.pending {
                 reserved.insert(experiment.fingerprint);
                 queue.push_back((experiment, log_pos));
+            }
+            // refill the partial screen rung exactly as checkpointed:
+            // scores recompute identically (the cost model is pure) and
+            // the restored counters already include these candidates
+            for (experiment, log_pos) in resume.screen_pending {
+                reserved.insert(experiment.fingerprint);
+                match screen.as_mut() {
+                    Some(tier) => {
+                        let score = tier.score(&experiment.write.genome);
+                        tier.restore(score, (experiment, log_pos));
+                    }
+                    // unreachable with a checkpoint-persisted config;
+                    // promote unscreened rather than drop planned work
+                    None => queue.push_back((experiment, log_pos)),
+                }
             }
         }
         let every = self.config.checkpoint_every.max(1);
@@ -191,9 +260,13 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
             // refill: plan whenever the queue cannot feed the free
             // lane capacity and budget remains
             while !planning_dead && stalls < 8 && queue.len() + in_flight.len() < cap {
+                // candidates awaiting a screen decision are counted as
+                // committed (conservative: a rejection frees the room
+                // back to the planner on a later refill)
                 let committed = self.platform.submissions()
                     + in_flight.len() as u64
-                    + queue.len() as u64;
+                    + queue.len() as u64
+                    + screen.as_ref().map_or(0, |t| t.pending() as u64);
                 let room = self.config.max_submissions.saturating_sub(committed);
                 if room == 0 {
                     break;
@@ -218,10 +291,38 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                     chosen_experiments: group.chosen_experiments,
                     submitted_ids: Vec::new(),
                 });
-                self.journal_plan(log_pos);
+                let screened_now = if screen.is_some() {
+                    group.experiments.len() as u64
+                } else {
+                    0
+                };
+                self.journal_plan(log_pos, screened_now);
                 for experiment in group.experiments {
                     reserved.insert(experiment.fingerprint);
-                    queue.push_back((experiment, log_pos));
+                    match screen.as_mut() {
+                        None => queue.push_back((experiment, log_pos)),
+                        Some(tier) => {
+                            self.sched.screened += 1;
+                            let score = tier.score(&experiment.write.genome);
+                            if let Some(out) = tier.push_scored(score, (experiment, log_pos)) {
+                                absorb_screen_outcome(
+                                    out,
+                                    &mut queue,
+                                    &mut reserved,
+                                    &mut self.sched,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            // a partial rung strands candidates once planning can no
+            // longer feed it (dead, stalled, or out of budget): when
+            // nothing is queued or in flight to change that, decide it
+            // now with the same keep rule
+            if let Some(tier) = screen.as_mut() {
+                if queue.is_empty() && in_flight.is_empty() && tier.pending() > 0 {
+                    absorb_screen_outcome(tier.flush(), &mut queue, &mut reserved, &mut self.sched);
                 }
             }
             // feed: move planned experiments onto lanes up to the cap
@@ -260,6 +361,7 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                 cached: done.cached,
                 submission_index: done.submission_index,
                 plan: Some(child.log_pos),
+                screened: screen.is_some(),
             };
             let id = self.record_experiment(child.experiment, done.outcome, prov);
             self.logs[child.log_pos].submitted_ids.push(id);
@@ -276,10 +378,24 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                     .map(|c| (&c.experiment, c.log_pos))
                     .chain(queue.iter().map(|(e, p)| (e, *p)))
                     .collect();
-                self.write_checkpoint(stalls, planning_dead, &pending, in_flight.len())?;
+                let screen_pending: Vec<(&PlannedExperiment, usize)> = screen
+                    .as_ref()
+                    .map(|t| t.pending_payloads().map(|(e, p)| (e, *p)).collect())
+                    .unwrap_or_default();
+                self.write_checkpoint(
+                    stalls,
+                    planning_dead,
+                    &pending,
+                    in_flight.len(),
+                    &screen_pending,
+                )?;
             }
         }
-        self.write_checkpoint(stalls, planning_dead, &[], 0)
+        // the loop only breaks with the queue, lanes, and screen rung
+        // all drained (the flush step decides any stranded rung before
+        // the drain step can observe an empty pipeline)
+        debug_assert!(screen.iter().all(|t| t.pending() == 0));
+        self.write_checkpoint(stalls, planning_dead, &[], 0, &[])
     }
 }
 

@@ -36,8 +36,10 @@ pub const CHECKPOINT_FILE: &str = "checkpoint.json";
 /// Bumped 1 → 2 when `PendingPlan.fingerprint` changed from the
 /// rendered string fingerprint to the hex-encoded u64 content hash —
 /// older stores fail with the explicit version error instead of an
-/// opaque hex-parse error.
-const VERSION: u64 = 2;
+/// opaque hex-parse error. Bumped 2 → 3 when the analytic screen tier
+/// (DESIGN.md §10) added `screen_pending`, the screen counters in
+/// `sched`, and the `[screen]` knobs in `config`.
+const VERSION: u64 = 3;
 
 /// Scheduler counters snapshot (mirrors the run's private
 /// `SchedCounters` — see `scientist::pipeline`).
@@ -48,6 +50,9 @@ pub struct SchedSnapshot {
     pub depth_total: u64,
     pub depth_samples: u64,
     pub max_in_flight: u64,
+    pub screened: u64,
+    pub screen_promoted: u64,
+    pub screen_rejected: u64,
 }
 
 /// One planned-but-uncommitted experiment (queued or in flight at
@@ -88,6 +93,11 @@ pub struct Checkpoint {
     /// How many `pending` entries were already in flight (their depth
     /// samples are in `sched`; the resumed feed skips re-sampling them).
     pub skip_depth: usize,
+    /// The screen tier's partial rung at checkpoint time, in submission
+    /// order (DESIGN.md §10). The resumed pipeline re-scores and
+    /// re-fills the rung from these; its counters already include them.
+    /// Always empty in lockstep runs (batch-scoped rungs).
+    pub screen_pending: Vec<PendingPlan>,
     /// Informational leaderboard summary (rendered by `replay`; never
     /// used for restore).
     pub best_id: Option<String>,
@@ -175,6 +185,15 @@ impl Checkpoint {
                     ("depth_total", Json::Num(self.sched.depth_total as f64)),
                     ("depth_samples", Json::Num(self.sched.depth_samples as f64)),
                     ("max_in_flight", Json::Num(self.sched.max_in_flight as f64)),
+                    ("screened", Json::Num(self.sched.screened as f64)),
+                    (
+                        "screen_promoted",
+                        Json::Num(self.sched.screen_promoted as f64),
+                    ),
+                    (
+                        "screen_rejected",
+                        Json::Num(self.sched.screen_rejected as f64),
+                    ),
                 ]),
             ),
             ("llm_rng", rng_words(&self.llm_rng)),
@@ -204,6 +223,10 @@ impl Checkpoint {
                 Json::Arr(self.pending.iter().map(|p| p.to_json()).collect()),
             ),
             ("skip_depth", Json::Num(self.skip_depth as f64)),
+            (
+                "screen_pending",
+                Json::Arr(self.screen_pending.iter().map(|p| p.to_json()).collect()),
+            ),
             (
                 "best_id",
                 self.best_id
@@ -250,6 +273,9 @@ impl Checkpoint {
                 depth_total: req_u64(sched, "depth_total")?,
                 depth_samples: req_u64(sched, "depth_samples")?,
                 max_in_flight: req_u64(sched, "max_in_flight")?,
+                screened: req_u64(sched, "screened")?,
+                screen_promoted: req_u64(sched, "screen_promoted")?,
+                screen_rejected: req_u64(sched, "screen_rejected")?,
             },
             llm_rng: parse_rng_words(v.get("llm_rng"), "llm_rng")?,
             findings: v
@@ -281,6 +307,13 @@ impl Checkpoint {
                 .map(PendingPlan::from_json)
                 .collect::<Result<Vec<_>, _>>()?,
             skip_depth: req_u64(v, "skip_depth")? as usize,
+            screen_pending: v
+                .get("screen_pending")
+                .and_then(|x| x.as_arr())
+                .ok_or("checkpoint: missing screen_pending")?
+                .iter()
+                .map(PendingPlan::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
             best_id: match v.get("best_id") {
                 None | Some(Json::Null) => None,
                 Some(s) => Some(

@@ -47,6 +47,10 @@ pub struct PlanRecord {
     pub rationale: String,
     pub avenues: Vec<String>,
     pub chosen: Vec<String>,
+    /// How many of this round's children entered the analytic screen
+    /// tier (DESIGN.md §10); 0 while `[screen]` is disabled. Absent in
+    /// pre-screen journals (parsed as 0).
+    pub screened: u64,
 }
 
 /// One ledger entry (`"t":"exp"`).
@@ -68,6 +72,9 @@ pub struct ExperimentRecord {
     /// Back-reference to the producing plan's `log_pos` (`None` for
     /// seeds and bootstrap probes).
     pub plan: Option<usize>,
+    /// Passed through the analytic screen tier before submission
+    /// (DESIGN.md §10). Absent in pre-screen journals (parsed false).
+    pub screened: bool,
 }
 
 fn policy_token(p: ReferencePolicy) -> &'static str {
@@ -109,6 +116,7 @@ impl JournalRecord {
                 ("rationale", Json::Str(p.rationale.clone())),
                 ("avenues", str_arr(&p.avenues)),
                 ("chosen", str_arr(&p.chosen)),
+                ("screened", Json::Num(p.screened as f64)),
             ]),
             JournalRecord::Exp(e) => Json::obj(vec![
                 ("t", Json::Str("exp".into())),
@@ -122,6 +130,7 @@ impl JournalRecord {
                 ("lane", opt_num(e.lane.map(|l| l as f64))),
                 ("completed_at_s", opt_num(e.completed_at_s)),
                 ("plan", opt_num(e.plan.map(|p| p as f64))),
+                ("screened", Json::Bool(e.screened)),
             ]),
         }
     }
@@ -171,6 +180,8 @@ impl JournalRecord {
                 json::push_str_value(out, &p.rationale);
                 out.push_str(",\"reference\":");
                 json::push_str_value(out, &p.reference_id);
+                out.push_str(",\"screened\":");
+                json::push_num_value(out, p.screened as f64);
                 out.push_str(",\"t\":\"plan\"}");
             }
             JournalRecord::Exp(e) => {
@@ -187,6 +198,8 @@ impl JournalRecord {
                 opt_u64(out, e.lane.map(u64::from));
                 out.push_str(",\"plan\":");
                 opt_u64(out, e.plan.map(|p| p as u64));
+                out.push_str(",\"screened\":");
+                out.push_str(if e.screened { "true" } else { "false" });
                 out.push_str(",\"submission_index\":");
                 opt_u64(out, e.submission_index);
                 out.push_str(",\"submitted_at\":");
@@ -216,6 +229,12 @@ impl JournalRecord {
                 rationale: req_str(v, "rationale")?.to_string(),
                 avenues: parse_str_arr(v.get("avenues"), "avenues")?,
                 chosen: parse_str_arr(v.get("chosen"), "chosen")?,
+                // tolerant: journals written before the screen tier
+                // have no "screened" key — nothing was screened
+                screened: match v.get("screened") {
+                    None | Some(Json::Null) => 0,
+                    Some(x) => x.as_u64().ok_or("journal: bad screened count")?,
+                },
             })),
             "exp" => Ok(JournalRecord::Exp(ExperimentRecord {
                 individual: Individual::from_json(
@@ -240,6 +259,10 @@ impl JournalRecord {
                 plan: match v.get("plan") {
                     None | Some(Json::Null) => None,
                     Some(x) => Some(x.as_u64().ok_or("journal: bad plan")? as usize),
+                },
+                screened: match v.get("screened") {
+                    None | Some(Json::Null) => false,
+                    Some(x) => x.as_bool().ok_or("journal: bad screened flag")?,
                 },
             })),
             other => Err(format!("journal: unknown record tag '{other}'")),
@@ -397,6 +420,7 @@ mod tests {
                 rationale: "divergent \"path\" → branch\nline".into(),
                 avenues: vec!["a".into(), "b\tc".into()],
                 chosen: vec!["x".into()],
+                screened: 3,
             }),
             JournalRecord::Plan(PlanRecord {
                 iteration: 1,
@@ -407,6 +431,7 @@ mod tests {
                 rationale: String::new(),
                 avenues: vec![],
                 chosen: vec![],
+                screened: 0,
             }),
             JournalRecord::Exp(ExperimentRecord {
                 individual: Individual {
@@ -423,6 +448,7 @@ mod tests {
                 lane: Some(2),
                 completed_at_s: Some(810.0),
                 plan: Some(2),
+                screened: true,
             }),
             JournalRecord::Exp(ExperimentRecord {
                 individual: Individual {
@@ -439,6 +465,7 @@ mod tests {
                 lane: None,
                 completed_at_s: None,
                 plan: None,
+                screened: false,
             }),
         ]
     }
@@ -453,6 +480,32 @@ mod tests {
             rec.write_json(&mut streamed);
             assert_eq!(streamed, rec.to_json().to_string(), "record {i}");
         }
+    }
+
+    #[test]
+    fn pre_screen_journal_lines_parse_with_zero_defaults() {
+        // journals written before the screen tier have no "screened"
+        // key; they must parse as unscreened, not error
+        let mut line = String::new();
+        sample_records()[0].write_json(&mut line);
+        let stripped = line.replace(",\"screened\":3", "");
+        assert_ne!(stripped, line, "fixture lost its screened key");
+        let JournalRecord::Plan(p) =
+            JournalRecord::from_json(&json::parse(&stripped).unwrap()).unwrap()
+        else {
+            panic!("tag lost");
+        };
+        assert_eq!(p.screened, 0);
+        let mut line = String::new();
+        sample_records()[2].write_json(&mut line);
+        let stripped = line.replace(",\"screened\":true", "");
+        assert_ne!(stripped, line, "fixture lost its screened key");
+        let JournalRecord::Exp(e) =
+            JournalRecord::from_json(&json::parse(&stripped).unwrap()).unwrap()
+        else {
+            panic!("tag lost");
+        };
+        assert!(!e.screened);
     }
 
     #[test]

@@ -291,6 +291,7 @@ mod tests {
             lane: Some(0),
             completed_at_s: Some(90.0),
             plan: None,
+            screened: false,
         });
         store.append(&record);
         // append flushes to the OS before returning — the line is

@@ -54,6 +54,13 @@ pub fn pipeline_config(workload: &str, seed: u64, budget: u64, lanes: u32) -> Ru
         .with_pipeline(true)
 }
 
+/// A [`pipeline_config`] with the analytic screen tier enabled
+/// (DESIGN.md §10): rung of 4, keep half — small enough that tiny test
+/// budgets still fill rungs and exercise promotion.
+pub fn screened_pipeline_config(workload: &str, seed: u64, budget: u64, lanes: u32) -> RunConfig {
+    pipeline_config(workload, seed, budget, lanes).with_screen(4, 0.5)
+}
+
 /// Construct + run a simulated scientist loop to completion.
 pub fn run_scientist(cfg: RunConfig) -> (ScientistRun<SimBackend>, RunOutcome) {
     let mut run = ScientistRun::new(cfg).expect("scientist setup");
@@ -168,6 +175,18 @@ mod tests {
         assert_eq!(cfg.seed, 3);
         assert_eq!(cfg.max_submissions, 18);
         assert_eq!(cfg.noise_sigma, RunConfig::default().noise_sigma);
+    }
+
+    #[test]
+    fn screened_pipeline_config_enables_the_screen_knobs_only() {
+        let cfg = screened_pipeline_config("fp8-gemm", 11, 40, 2);
+        assert!(cfg.screen_enabled);
+        assert_eq!(cfg.screen_rung, 4);
+        assert_eq!(cfg.screen_keep, 0.5);
+        let base = pipeline_config("fp8-gemm", 11, 40, 2);
+        assert!(cfg.pipeline && cfg.eval_parallelism == base.eval_parallelism);
+        assert_eq!(cfg.seed, base.seed);
+        assert_eq!(cfg.max_submissions, base.max_submissions);
     }
 
     #[test]

@@ -379,6 +379,7 @@ fn prop_ledger_entry_and_genome_json_roundtrip_lossless() {
             } else {
                 None
             },
+            screened: rng.chance(0.5),
         });
         let emitted = record.to_json().to_string();
         let back = JournalRecord::from_json(&json::parse(&emitted).expect("parse"))
@@ -403,6 +404,7 @@ fn prop_ledger_entry_and_genome_json_roundtrip_lossless() {
             rationale: random_text(&mut rng),
             avenues: (0..rng.below(4)).map(|_| random_text(&mut rng)).collect(),
             chosen: (0..rng.below(3)).map(|_| random_text(&mut rng)).collect(),
+            screened: rng.below(4) as u64,
         });
         let emitted = plan.to_json().to_string();
         let back = JournalRecord::from_json(&json::parse(&emitted).expect("parse plan"))
@@ -741,4 +743,154 @@ fn prop_population_jsonl_roundtrip_random() {
             assert_eq!(a, b);
         }
     }
+}
+
+#[test]
+fn prop_screen_promotion_is_exactly_the_top_keep_fraction() {
+    // randomized rungs with adversarial scores (None / NaN / inf mixed
+    // with finite): the survivors are exactly the naive reference's top
+    // keep-fraction by `f64::total_cmp` with submission-order ties,
+    // returned in submission order; non-finite candidates are never
+    // promoted and never panic the comparator
+    use gpu_kernel_scientist::eval::{ScreenConfig, ScreenTier};
+    use gpu_kernel_scientist::workload::default_workload;
+    let mut rng = Rng::seed_from_u64(110);
+    for case in 0..CASES {
+        let n = 1 + rng.below(12);
+        let keep = rng.range_f64(0.05, 1.0);
+        let scores: Vec<Option<f64>> = (0..n)
+            .map(|_| match rng.below(8) {
+                0 => None,
+                1 => Some(f64::NAN),
+                2 => Some(f64::INFINITY),
+                3 => Some(f64::NEG_INFINITY),
+                // duplicates on purpose: the tie-break must matter
+                4 => Some(50.0),
+                _ => Some(rng.range_f64(1.0, 1000.0)),
+            })
+            .collect();
+        let mut tier: ScreenTier<usize> = ScreenTier::new(
+            ScreenConfig {
+                rung: n as u32,
+                keep_fraction: keep,
+            },
+            default_workload(),
+        );
+        let mut decided = None;
+        for (i, s) in scores.iter().enumerate() {
+            if let Some(out) = tier.push_scored(*s, i) {
+                decided = Some(out);
+            }
+        }
+        let out = decided.expect("a rung of n fills after n pushes");
+        // conservation: every candidate decided exactly once
+        assert_eq!(out.promoted.len() + out.rejected.len(), n, "case {case}");
+        let stats = tier.stats();
+        assert_eq!(stats.screened, n as u64, "case {case}");
+        assert_eq!(stats.promoted + stats.rejected, stats.screened, "case {case}");
+        assert_eq!(tier.pending(), 0, "case {case}");
+        // naive reference: finite-scored candidates ranked by
+        // (total_cmp score, submission seq), top clamp(ceil(keep*n), 1, n)
+        let mut finite: Vec<usize> = (0..n)
+            .filter(|&i| scores[i].is_some_and(f64::is_finite))
+            .collect();
+        finite.sort_by(|&a, &b| scores[a].unwrap().total_cmp(&scores[b].unwrap()).then(a.cmp(&b)));
+        let keep_target = ((keep * n as f64).ceil() as usize).clamp(1, n);
+        finite.truncate(keep_target);
+        finite.sort_unstable(); // survivors return in submission order
+        assert_eq!(
+            out.promoted, finite,
+            "case {case} keep={keep} scores={scores:?}"
+        );
+        for &i in &out.promoted {
+            assert!(
+                scores[i].is_some_and(f64::is_finite),
+                "case {case}: non-finite candidate {i} promoted"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_screen_conservation_holds_at_every_instant() {
+    // screened == promoted + rejected + pending after every push, and
+    // a final flush decides everything: screened == promoted + rejected
+    use gpu_kernel_scientist::eval::{ScreenConfig, ScreenTier};
+    use gpu_kernel_scientist::workload::default_workload;
+    let mut rng = Rng::seed_from_u64(111);
+    for case in 0..60 {
+        let rung = 1 + rng.below(5) as u32;
+        let keep = rng.range_f64(0.1, 1.0);
+        let total = 1 + rng.below(40);
+        let mut tier: ScreenTier<usize> = ScreenTier::new(
+            ScreenConfig {
+                rung,
+                keep_fraction: keep,
+            },
+            default_workload(),
+        );
+        for i in 0..total {
+            let s = if rng.chance(0.2) {
+                None
+            } else {
+                Some(rng.range_f64(1.0, 500.0))
+            };
+            let _ = tier.push_scored(s, i);
+            let st = tier.stats();
+            assert_eq!(
+                st.screened,
+                st.promoted + st.rejected + tier.pending() as u64,
+                "case {case} after push {i}"
+            );
+        }
+        let _ = tier.flush();
+        let st = tier.stats();
+        assert_eq!(tier.pending(), 0, "case {case}");
+        assert_eq!(st.screened, total as u64, "case {case}");
+        assert_eq!(st.promoted + st.rejected, st.screened, "case {case}");
+    }
+}
+
+#[test]
+fn prop_screen_score_matches_the_cost_model_geomean() {
+    // the screen score is the pure feedback-suite geomean of the
+    // analytic cost model: recomputing it is exact (the resume path
+    // relies on this), invalid/inadmissible genomes score None, and a
+    // Some score is always finite and positive
+    use gpu_kernel_scientist::eval::{ScreenConfig, ScreenTier};
+    use gpu_kernel_scientist::workload::{default_workload, Workload};
+    let mut rng = Rng::seed_from_u64(112);
+    let w = default_workload();
+    let tier: ScreenTier<usize> = ScreenTier::new(ScreenConfig::default(), w.clone());
+    let mut scored = 0usize;
+    for _ in 0..CASES {
+        let g = random_genome(&mut rng);
+        let score = tier.score(&g);
+        assert_eq!(score, tier.score(&g), "scoring must be pure");
+        if g.validate().is_err() || w.admits(&g).is_err() {
+            assert_eq!(score, None, "{g:?}");
+            continue;
+        }
+        let Some(s) = score else {
+            // score may only be refused if the cost model itself failed
+            // or produced a non-finite/non-positive timing somewhere
+            let bad = w.feedback_suite().configs.iter().any(|c| {
+                !w.estimate(&MI300, &g, c)
+                    .is_ok_and(|t| t.total_us.is_finite() && t.total_us > 0.0)
+            });
+            assert!(bad, "score None but the cost model succeeded: {g:?}");
+            continue;
+        };
+        assert!(s.is_finite() && s > 0.0, "{g:?}");
+        let timings: Vec<f64> = w
+            .feedback_suite()
+            .configs
+            .iter()
+            .map(|c| w.estimate(&MI300, &g, c).unwrap().total_us)
+            .collect();
+        let expected = geomean(&timings);
+        assert!((s - expected).abs() <= 1e-9 * expected, "{s} vs {expected}");
+        scored += 1;
+    }
+    assert!(scored > CASES / 4, "too few scoreable cases: {scored}");
 }

@@ -309,6 +309,56 @@ fn resume_discards_a_torn_journal_tail() {
 }
 
 #[test]
+fn mid_rung_crash_resume_is_bit_identical_with_screening() {
+    // The screen tier's partial rung is scheduler state: a crash with
+    // candidates awaiting a promotion decision must checkpoint them
+    // (store::Checkpoint::screen_pending), and the resumed run —
+    // re-scoring them with the pure cost model — must match the
+    // uninterrupted one bit for bit, screened/promoted counters
+    // included. Several halt points so at least one lands mid-rung.
+    let mk = |dir: &Path| {
+        let mut cfg = store_config("fp8-gemm", 41, 26, 2, true, dir).with_screen(4, 0.5);
+        cfg.checkpoint_every = 1;
+        cfg
+    };
+    let full_dir = scratch_dir("screen-full");
+    let mut full = ScientistRun::new(mk(&full_dir)).unwrap();
+    let full_out = full.run_to_completion().unwrap();
+    assert!(full_out.pipeline.screened > 0, "screening must engage");
+    assert_eq!(
+        full_out.pipeline.screened,
+        full_out.pipeline.screen_promoted + full_out.pipeline.screen_rejected,
+        "every screened candidate is decided by the end of the run"
+    );
+    let mut any_mid_rung = false;
+    for halt_after in [8u64, 10, 12, 14] {
+        let crash_dir = scratch_dir("screen-crash");
+        let mut crash_cfg = mk(&crash_dir);
+        crash_cfg.halt_after = Some(halt_after);
+        let mut crashed = ScientistRun::new(crash_cfg).unwrap();
+        let _ = crashed.run_to_completion().unwrap();
+        assert!(crashed.halted(), "halt={halt_after}");
+        drop(crashed);
+        let cp = store::Checkpoint::load(&crash_dir).unwrap();
+        any_mid_rung |= !cp.screen_pending.is_empty();
+        let mut resumed = ScientistRun::resume(&crash_dir).unwrap();
+        let resumed_out = resumed.run_to_completion().unwrap();
+        assert_bit_identical(
+            &format!("screened halt={halt_after}"),
+            &full,
+            &full_out,
+            &resumed,
+            &resumed_out,
+        );
+    }
+    assert!(
+        any_mid_rung,
+        "no halt point caught candidates in the screen rung — the mid-rung \
+         path went untested; retune halt_after/rung"
+    );
+}
+
+#[test]
 fn store_instrumentation_never_perturbs_the_trajectory() {
     // a run with a store attached is bit-identical to one without
     use gpu_kernel_scientist::test_support::trajectory;

@@ -1,0 +1,187 @@
+//! The screening test layer (DESIGN.md §10):
+//!
+//! 1. **Off means off.** With `[screen]` disabled (the default), every
+//!    workload × both schedulers × several lane counts must produce
+//!    runs bit-identical to a build that never had the tier — even
+//!    when the (inert) screen knobs are set to non-default values.
+//! 2. **On means deterministic.** With screening enabled, trajectories
+//!    stay invariant across eval parallelism and cache on/off on a
+//!    noiseless platform (lockstep), and same-config runs stay
+//!    bit-identical under noise (pipeline).
+//! 3. **Counters are conserved** and fully explain the submission
+//!    ledger: every non-seed submission was promoted by the tier.
+
+use gpu_kernel_scientist::test_support as ts;
+use gpu_kernel_scientist::workload::{self, Workload};
+
+#[test]
+fn disabled_screening_is_bit_identical_for_every_workload_and_scheduler() {
+    // the control config carries *non-default* screen knobs with the
+    // tier disabled: proves the knobs are inert unless `enabled = true`
+    for w in workload::registry() {
+        let name = w.name();
+        for pipeline in [false, true] {
+            for lanes in 1..=3u32 {
+                let base = {
+                    let mut cfg = ts::tiny_run_config(9, 22).with_workload(name);
+                    cfg.eval_parallelism = lanes;
+                    cfg.pipeline = pipeline;
+                    cfg
+                };
+                let knobbed = {
+                    let mut cfg = base.clone();
+                    cfg.screen_rung = 7;
+                    cfg.screen_keep = 0.25;
+                    assert!(!cfg.screen_enabled);
+                    cfg
+                };
+                let (run_a, out_a) = ts::run_scientist(base);
+                let (run_b, out_b) = ts::run_scientist(knobbed);
+                let tag = format!("{name} pipeline={pipeline} lanes={lanes}");
+                assert_eq!(ts::trajectory(&run_a), ts::trajectory(&run_b), "{tag}");
+                assert_eq!(out_a.best_id, out_b.best_id, "{tag}");
+                assert_eq!(out_a.best_geomean_us, out_b.best_geomean_us, "{tag}");
+                assert_eq!(out_a.submissions, out_b.submissions, "{tag}");
+                assert_eq!(out_a.wall_clock_s, out_b.wall_clock_s, "{tag}");
+                assert_eq!(out_a.pipeline, out_b.pipeline, "{tag}");
+                assert_eq!(out_a.pipeline.screened, 0, "{tag}: tier ran while off");
+                assert_eq!(out_a.pipeline.screen_promoted, 0, "{tag}");
+                assert_eq!(out_a.pipeline.screen_rejected, 0, "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn screened_lockstep_trajectory_is_invariant_across_parallelism_and_cache() {
+    // the screen score is analytic (cost model only, no RNG, no
+    // measurement), so on a noiseless platform the screened trajectory
+    // must survive the same matrix the unscreened determinism suite runs
+    for w in workload::registry() {
+        let name = w.name();
+        let run_point = |parallelism: u32, cache: bool| {
+            let mut cfg = ts::noiseless_config(name, 13, 24).with_screen(4, 0.5);
+            cfg.eval_parallelism = parallelism;
+            cfg.eval_cache = cache;
+            let (run, o) = ts::run_scientist(cfg);
+            (ts::trajectory(&run), o.best_id, o.best_geomean_us, o.pipeline)
+        };
+        let base = run_point(1, true);
+        assert!(!base.0.is_empty(), "{name}: empty trajectory");
+        assert!(base.3.screened > 0, "{name}: screen tier never scored");
+        let mut lanes = vec![1, 2, 4];
+        let env = ts::env_parallelism();
+        if !lanes.contains(&env) {
+            lanes.push(env);
+        }
+        for p in lanes {
+            for cache in [true, false] {
+                if p == 1 && cache {
+                    continue; // the base point itself
+                }
+                let point = run_point(p, cache);
+                assert_eq!(
+                    point, base,
+                    "{name}: screened run diverged at parallelism={p} cache={cache}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn screened_pipeline_runs_are_reproducible_per_lane_count() {
+    // pipeline mode keeps its noise model; the guarantee under noise is
+    // same-seed same-config bit-identity, per lane count
+    for lanes in [1u32, 2, 4] {
+        let run_once = || {
+            let cfg = ts::screened_pipeline_config("fp8-gemm", 29, 30, lanes);
+            let (run, o) = ts::run_scientist(cfg);
+            (ts::trajectory(&run), o.best_id, o.best_geomean_us, o.pipeline)
+        };
+        assert_eq!(run_once(), run_once(), "screened pipeline at {lanes} lanes");
+    }
+}
+
+#[test]
+fn screened_pipeline_is_cache_invariant_when_noiseless() {
+    let run_point = |cache: bool| {
+        let mut cfg = ts::screened_pipeline_config("row-softmax", 5, 28, 2);
+        cfg.noise_sigma = 0.0;
+        cfg.eval_cache = cache;
+        let (run, o) = ts::run_scientist(cfg);
+        (ts::trajectory(&run), o.best_id, o.best_geomean_us, o.pipeline)
+    };
+    let on = run_point(true);
+    assert!(on.3.screened > 0, "screen tier never scored");
+    assert_eq!(on, run_point(false), "cache toggled the screened trajectory");
+}
+
+#[test]
+fn screen_counters_are_conserved_and_explain_the_ledger() {
+    // pipeline: every non-seed submission must have been promoted by
+    // the tier, and nothing the tier saw may go unaccounted
+    for w in workload::registry() {
+        let name = w.name();
+        let cfg = ts::screened_pipeline_config(name, 41, 32, 2);
+        let (run, out) = ts::run_scientist(cfg);
+        let s = &out.pipeline;
+        assert!(s.screened > 0, "{name}: tier never scored");
+        assert!(s.screen_rejected > 0, "{name}: keep=0.5 never rejected");
+        assert_eq!(
+            s.screened,
+            s.screen_promoted + s.screen_rejected,
+            "{name}: conservation (no pending work may survive the run)"
+        );
+        let n_seeds = w.starting_population().len() as u64;
+        assert_eq!(
+            run.population.len() as u64 - n_seeds,
+            s.screen_promoted,
+            "{name}: submitted children != promoted candidates"
+        );
+    }
+}
+
+#[test]
+fn screened_lockstep_counters_are_conserved() {
+    // lockstep rungs are batch-scoped (one rung per planned group), so
+    // conservation must hold there too, with zero pending at the end
+    let mut cfg = ts::noiseless_config("bf16-gemm", 3, 26).with_screen(4, 0.5);
+    cfg.eval_parallelism = 2;
+    let (run, out) = ts::run_scientist(cfg);
+    let s = &out.pipeline;
+    assert!(!s.pipelined);
+    assert!(s.screened > 0);
+    assert_eq!(s.screened, s.screen_promoted + s.screen_rejected);
+    let n_seeds = workload::registry()
+        .into_iter()
+        .find(|w| w.name() == "bf16-gemm")
+        .expect("registered workload")
+        .starting_population()
+        .len() as u64;
+    assert_eq!(run.population.len() as u64 - n_seeds, s.screen_promoted);
+}
+
+#[test]
+fn screening_prunes_but_never_worsens_the_best_on_a_noiseless_run() {
+    // acceptance-level sanity: the analytic tier may only reject
+    // candidates, and the survivors still improve on the seeds
+    for w in workload::registry() {
+        let name = w.name();
+        let cfg = ts::noiseless_config(name, 17, 24).with_screen(4, 0.5);
+        let (run, out) = ts::run_scientist(cfg);
+        let n_seeds = w.starting_population().len();
+        let best_seed = run
+            .population
+            .members()
+            .iter()
+            .take(n_seeds)
+            .filter_map(|m| m.score())
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            out.best_geomean_us <= best_seed,
+            "{name}: screened best {} worse than best seed {best_seed}",
+            out.best_geomean_us
+        );
+    }
+}
