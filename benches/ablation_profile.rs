@@ -1,0 +1,110 @@
+//! Ablation: **profile-guided avenue priors on vs off** (DESIGN.md §11).
+//!
+//! Every submission is profiled into a bottleneck class either way —
+//! the `[profile] guided` knob only controls whether the designer
+//! conditions its avenue priors on the base genome's classified
+//! bottleneck. This bench quantifies what that feedback loop buys at an
+//! **equal submission quota**: how many submissions each leg needs to
+//! reach the same best score.
+//!
+//! Per seed, both legs run to the full budget and the target is the
+//! *worse* of the two final bests, so both curves provably reach it
+//! (when guidance wins on quality — the usual case — the target is
+//! exactly the timing-only run's best, the ISSUE's criterion). Seed
+//! evaluations are identical across legs, so the scored quantity is
+//! *planned* submissions to target (first-reaching index minus the
+//! seed count). Asserted: guided needs ≥ 15% fewer, geomean over
+//! seeds. Also locks the knob surface: the timing-only outcome carries
+//! no bottleneck mix, the guided one a populated mix.
+//!
+//! Run: `cargo bench --bench ablation_profile`
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::util::bench::header;
+use gpu_kernel_scientist::workload::{self, Workload};
+
+const SEEDS: u64 = 6;
+const BUDGET: u64 = 60;
+const LANES: u32 = 4;
+
+struct Leg {
+    best_us: f64,
+    curve: gpu_kernel_scientist::metrics::ConvergenceCurve,
+    mix: Option<gpu_kernel_scientist::sim::ProfileMix>,
+}
+
+fn run_leg(seed: u64, guided: bool) -> Leg {
+    let cfg = RunConfig::default()
+        .with_seed(seed)
+        .with_budget(BUDGET)
+        .with_parallelism(LANES)
+        .with_pipeline(true)
+        .with_profile_guided(guided);
+    let mut run = ScientistRun::new(cfg).expect("setup");
+    let outcome = run.run_to_completion().expect("run");
+    Leg {
+        best_us: outcome.best_geomean_us,
+        curve: outcome.curve,
+        mix: outcome.profile_mix,
+    }
+}
+
+fn main() {
+    header("ablation — profile-guided avenue priors (bottleneck feedback)");
+
+    let n_seeds = workload::registry()
+        .into_iter()
+        .find(|w| w.name() == RunConfig::default().workload)
+        .expect("default workload is registered")
+        .starting_population()
+        .len();
+
+    let mut timing_subs = Vec::new();
+    let mut guided_subs = Vec::new();
+
+    println!(
+        "{:>6} {:>14} {:>26} {:>26}",
+        "seed", "target", "timing-only (best, subs)", "guided (best, subs)"
+    );
+    for seed in 0..SEEDS {
+        let timing = run_leg(seed, false);
+        let guided = run_leg(seed, true);
+        assert!(
+            timing.mix.is_none(),
+            "timing-only outcome must not surface a bottleneck mix"
+        );
+        let mix = guided.mix.as_ref().expect("guided outcome carries a mix");
+        assert!(mix.total() > 0, "guided mix counted nothing");
+
+        // the worse of the two finals — reached by both curves
+        let target = timing.best_us.max(guided.best_us);
+        let planned = |leg: &Leg| {
+            let first = leg
+                .curve
+                .first_reaching(target)
+                .expect("both legs reach the worse final");
+            first.saturating_sub(n_seeds).max(1)
+        };
+        let (t, g) = (planned(&timing), planned(&guided));
+        timing_subs.push(t as f64);
+        guided_subs.push(g as f64);
+        println!(
+            "{seed:>6} {target:>11.1} us {:>14.1} us {:>7} {:>14.1} us {:>7}",
+            timing.best_us, t, guided.best_us, g
+        );
+    }
+
+    let ratio = geomean(&guided_subs) / geomean(&timing_subs);
+    println!(
+        "\nplanned submissions to target (guided / timing-only): {ratio:.3} \
+         at equal quota ({BUDGET} submissions, {LANES} lanes; target <= 0.85)"
+    );
+    assert!(
+        ratio <= 0.85,
+        "profile guidance must cut submissions-to-target by >= 15% \
+         (got {ratio:.3}x of the timing-only run)"
+    );
+    println!("ablation_profile shape: OK");
+}

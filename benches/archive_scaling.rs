@@ -101,6 +101,7 @@ fn measure(n: usize, budget: Duration) -> SizePoint {
             &pop,
             &suite.knowledge,
             &mut suite.llm,
+            None,
         );
         let chosen = designer.choose(&design.plans, &mut suite.llm);
         std::hint::black_box((sel, chosen));
@@ -153,6 +154,7 @@ fn journal_serialization(budget: Duration) -> BenchResult {
                 completed_at_s: Some(90.0 * (i as f64 + 1.0)),
                 plan: if i > 2 { Some(i / 3) } else { None },
                 screened: i % 2 == 0,
+                profile: None,
             })
         })
         .collect();

@@ -68,6 +68,7 @@ fn main() {
             &pop,
             &suite.knowledge,
             &mut suite.llm,
+            None,
         ));
     });
     report(&r);

@@ -16,6 +16,15 @@ use super::knowledge::{Avenue, KnowledgeBase};
 use super::llm::SurrogateLlm;
 use crate::genome::{edit::GenomeEdit, KernelGenome};
 use crate::population::Population;
+use crate::sim::Bottleneck;
+
+/// Flat prior bonus (percent-gain scale) granted to avenues that
+/// attack the base kernel's classified bottleneck when the designer
+/// runs profile-guided (DESIGN.md §11). Bounded: large enough to
+/// reorder mid-tier avenues (whose mean priors sit tens of percent
+/// apart), small enough that a dominant avenue like MFMA adoption
+/// still wins regardless of classification.
+pub const PROFILE_PRIOR_BONUS: f64 = 35.0;
 
 /// One experiment plan (the YAML blocks of App. A.2).
 #[derive(Debug, Clone)]
@@ -87,6 +96,13 @@ impl Designer {
     /// lineage lose innovation points (the LLM sees the one-step
     /// experiment analyses in context and avoids re-proposing stale
     /// ideas); untried avenues gain a small bonus.
+    ///
+    /// `bottleneck` is the base kernel's classified profile bottleneck
+    /// when the run is profile-guided (`[profile] guided`, DESIGN.md
+    /// §11): avenues that attack it gain [`PROFILE_PRIOR_BONUS`] in
+    /// both the avenue ranking and the plan draw. `None` — timing-only
+    /// feedback — adds exactly zero and consumes no extra randomness,
+    /// so unguided designs are bit-identical to the pre-profile ones.
     pub fn design(
         &self,
         base_id: &str,
@@ -94,7 +110,14 @@ impl Designer {
         pop: &Population,
         kb: &KnowledgeBase,
         llm: &mut SurrogateLlm,
+        bottleneck: Option<Bottleneck>,
     ) -> DesignOutput {
+        let boost = |a: &Avenue| -> f64 {
+            match bottleneck {
+                Some(b) if a.attacks().contains(&b) => PROFILE_PRIOR_BONUS,
+                _ => 0.0,
+            }
+        };
         let mut available = kb.available_avenues(base);
         // rank by perturbed prior mean gain, keep up to n_avenues
         let mut scored: Vec<(Avenue, f64)> = available
@@ -102,7 +125,8 @@ impl Designer {
             .map(|a| {
                 let (lo, hi) = a.prior_gain();
                 let wobble = llm.rng().range_f64(0.85, 1.15);
-                (a, (lo + hi) * 0.5 * wobble)
+                let score = (lo + hi) * 0.5 * wobble + boost(&a);
+                (a, score)
             })
             .collect();
         scored.sort_by(|a, b| b.1.total_cmp(&a.1));
@@ -128,7 +152,8 @@ impl Designer {
                 .filter(|a| !used.contains(*a))
                 .map(|a| {
                     let (lo, hi) = a.prior_gain();
-                    (*a, (lo + hi) * 0.5 + a.innovation() as f64 * 0.3)
+                    let score = (lo + hi) * 0.5 + a.innovation() as f64 * 0.3 + boost(a);
+                    (*a, score)
                 })
                 .collect();
             if candidates.is_empty() {
@@ -240,7 +265,7 @@ mod tests {
     fn produces_five_plans_for_naive_base() {
         let (pop, kb, mut llm) = setup();
         let d = Designer::default();
-        let out = d.design("00001", &seeds::naive_hip(), &pop, &kb, &mut llm);
+        let out = d.design("00001", &seeds::naive_hip(), &pop, &kb, &mut llm, None);
         assert!(out.avenues.len() >= 5, "avenues: {:?}", out.avenues);
         assert_eq!(out.plans.len(), 5);
         for p in &out.plans {
@@ -254,8 +279,8 @@ mod tests {
     #[test]
     fn plans_use_distinct_avenues() {
         let (pop, kb, mut llm) = setup();
-        let out =
-            Designer::default().design("00001", &seeds::naive_hip(), &pop, &kb, &mut llm);
+        let out = Designer::default()
+            .design("00001", &seeds::naive_hip(), &pop, &kb, &mut llm, None);
         let mut avs: Vec<Avenue> = out.plans.iter().map(|p| p.avenue).collect();
         avs.sort_by_key(|a| format!("{a:?}"));
         avs.dedup();
@@ -339,7 +364,7 @@ mod tests {
         let mut llm = SurrogateLlm::new(5, LlmConfig::default());
         let mut tried_scores = Vec::new();
         for _ in 0..30 {
-            let out = d.design("00001", &seeds::mfma_seed(), &pop, &kb, &mut llm);
+            let out = d.design("00001", &seeds::mfma_seed(), &pop, &kb, &mut llm, None);
             for p in out.plans {
                 if p.avenue == Avenue::DoubleBuffering {
                     tried_scores.push(p.innovation as f64);
@@ -353,6 +378,58 @@ mod tests {
                 "mean={mean}"
             );
         }
+    }
+
+    #[test]
+    fn unguided_design_is_bit_identical_to_the_pre_profile_path() {
+        // bottleneck: None must add exactly zero and consume no extra
+        // randomness — two identically seeded designers stay in
+        // lockstep across repeated unguided designs
+        let (pop, kb, _) = setup();
+        let mut a = SurrogateLlm::with_seed(21);
+        let mut b = SurrogateLlm::with_seed(21);
+        let d = Designer::default();
+        for _ in 0..10 {
+            let oa = d.design("00001", &seeds::naive_hip(), &pop, &kb, &mut a, None);
+            let ob = d.design("00001", &seeds::naive_hip(), &pop, &kb, &mut b, None);
+            assert_eq!(oa.avenues, ob.avenues);
+            let pa: Vec<Avenue> = oa.plans.iter().map(|p| p.avenue).collect();
+            let pb: Vec<Avenue> = ob.plans.iter().map(|p| p.avenue).collect();
+            assert_eq!(pa, pb);
+        }
+        assert_eq!(a.rng_state(), b.rng_state());
+    }
+
+    #[test]
+    fn bottleneck_conditioning_steers_the_plan_draw() {
+        // with only 2 plan slots, the bonus must pull a matching
+        // avenue into the draft more often than timing-only feedback
+        use crate::sim::Bottleneck;
+        let d = Designer {
+            n_plans: 2,
+            ..Designer::default()
+        };
+        let (pop, kb, _) = setup();
+        let memory_plans = |bottleneck: Option<Bottleneck>| -> usize {
+            let mut llm = SurrogateLlm::with_seed(7);
+            let mut hits = 0;
+            for _ in 0..40 {
+                let out =
+                    d.design("00001", &seeds::naive_hip(), &pop, &kb, &mut llm, bottleneck);
+                hits += out
+                    .plans
+                    .iter()
+                    .filter(|p| p.avenue.attacks().contains(&Bottleneck::Memory))
+                    .count();
+            }
+            hits
+        };
+        let guided = memory_plans(Some(Bottleneck::Memory));
+        let unguided = memory_plans(None);
+        assert!(
+            guided > unguided,
+            "guided {guided} memory plans vs unguided {unguided}"
+        );
     }
 
     fn plan(avenue: Avenue, performance: (f64, f64), innovation: u8) -> ExperimentPlan {

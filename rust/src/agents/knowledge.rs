@@ -19,6 +19,7 @@ use crate::genome::{
     Swizzle, Writeback,
 };
 use crate::rng::Rng;
+use crate::sim::Bottleneck;
 
 /// Bootstrap findings (the distilled hardware-probing results).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -234,6 +235,39 @@ impl Avenue {
             Avenue::GridMappingSwizzle => 65,
             Avenue::KInnermostFix => 35,
             Avenue::AccumulatorInRegs => 40,
+        }
+    }
+
+    /// Which classified bottlenecks this avenue attacks (DESIGN.md
+    /// §11). The profile-guided designer grants a bounded prior bonus
+    /// to avenues matching the base kernel's classified bottleneck;
+    /// the mapping is digested knowledge, same standing as
+    /// [`Avenue::prior_gain`].
+    pub fn attacks(&self) -> &'static [Bottleneck] {
+        use Bottleneck as B;
+        match self {
+            // compute-pipe avenues: faster math per element
+            Avenue::MatrixCoreAdoption => &[B::Compute],
+            Avenue::PrecisionFp16Library => &[B::Compute],
+            Avenue::KLoopUnrolling => &[B::Compute],
+            // traffic avenues: fewer / wider / better-staged global
+            // accesses (writeback counts as memory)
+            Avenue::LdsStagingAdoption => &[B::Memory],
+            Avenue::DoubleBuffering => &[B::Memory],
+            Avenue::WiderVectorLoads => &[B::Memory],
+            Avenue::CooperativeStore => &[B::Memory],
+            Avenue::ScaleCacheLds => &[B::Memory],
+            Avenue::AsyncScaleRepurpose => &[B::Memory],
+            Avenue::KInnermostFix => &[B::Memory],
+            Avenue::GridMappingSwizzle => &[B::Memory, B::Occupancy],
+            // LDS-stall avenues: bank-conflict mitigation
+            Avenue::LdsConflictPadding => &[B::Lds],
+            Avenue::XorSwizzleLayout => &[B::Lds],
+            Avenue::AccumulatorInRegs => &[B::Compute, B::Lds],
+            // occupancy / shape avenues
+            Avenue::IncreaseOccupancy => &[B::Occupancy],
+            Avenue::RegisterPressureRelief => &[B::Compute, B::Occupancy],
+            Avenue::TileSizeTuning => &[B::Memory, B::Occupancy, B::Launch],
         }
     }
 
@@ -529,6 +563,28 @@ mod tests {
             assert!(!edits.is_empty(), "{a:?} produced no edits");
             let child = crate::genome::edit::apply_edits(&g, &edits);
             assert_ne!(child, g, "{a:?} was a no-op");
+        }
+    }
+
+    #[test]
+    fn every_avenue_attacks_some_bottleneck() {
+        for a in Avenue::ALL {
+            let attacked = a.attacks();
+            assert!(!attacked.is_empty(), "{a:?} attacks nothing");
+            // no duplicates — a matching avenue gets one bonus, not N
+            let mut seen = Vec::new();
+            for b in attacked {
+                assert!(!seen.contains(b), "{a:?} lists {b:?} twice");
+                seen.push(*b);
+            }
+        }
+        // every bottleneck class has at least one attacker, so a
+        // guided designer always has somewhere to steer
+        for b in Bottleneck::ALL {
+            assert!(
+                Avenue::ALL.iter().any(|a| a.attacks().contains(&b)),
+                "no avenue attacks {b:?}"
+            );
         }
     }
 

@@ -78,6 +78,13 @@ impl SurrogateLlm {
 
     /// Temperature-weighted choice over scored items (higher score =
     /// more likely). At temperature 0 this is argmax.
+    ///
+    /// Non-finite scores (a NaN ratio, an infinite prior) never poison
+    /// the draw: they take zero weight in the softmax and lose every
+    /// argmax comparison. If *no* score is finite the choice degrades
+    /// deterministically to the first item — the sampled path still
+    /// consumes its one RNG draw so the decision stream stays aligned
+    /// with a finite-score call sequence.
     pub fn sample_weighted<T>(&mut self, items: &[(T, f64)]) -> usize
     where
         T: Clone,
@@ -87,23 +94,49 @@ impl SurrogateLlm {
             return items
                 .iter()
                 .enumerate()
+                .filter(|(_, (_, s))| s.is_finite())
                 .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
                 .map(|(i, _)| i)
-                .unwrap();
+                .unwrap_or(0);
         }
-        // softmax over score / temperature
+        // softmax over score / temperature, max-folded over the finite
+        // scores only (folding past a NaN would NaN the whole fold)
         let t = self.config.temperature;
-        let max = items.iter().map(|(_, s)| *s).fold(f64::MIN, f64::max);
-        let weights: Vec<f64> = items.iter().map(|(_, s)| ((s - max) / t).exp()).collect();
+        let max = items
+            .iter()
+            .map(|(_, s)| *s)
+            .filter(|s| s.is_finite())
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !max.is_finite() {
+            let _ = self.rng.f64();
+            return 0;
+        }
+        let weights: Vec<f64> = items
+            .iter()
+            .map(|(_, s)| {
+                if s.is_finite() {
+                    ((s - max) / t).exp()
+                } else {
+                    0.0
+                }
+            })
+            .collect();
         let total: f64 = weights.iter().sum();
         let mut draw = self.rng.f64() * total;
+        let mut last_weighted = 0;
         for (i, w) in weights.iter().enumerate() {
+            if *w <= 0.0 {
+                continue;
+            }
+            last_weighted = i;
             draw -= w;
             if draw <= 0.0 {
                 return i;
             }
         }
-        items.len() - 1
+        // explicit fallthrough: the draw outran the re-summed total by
+        // rounding — the last item that held any weight takes it
+        last_weighted
     }
 
     /// Perturb a prior gain estimate the way an LLM's stated range
@@ -206,5 +239,69 @@ mod tests {
         for _ in 0..50 {
             assert_eq!(a.sample_weighted(&items), b.sample_weighted(&items));
         }
+    }
+
+    #[test]
+    fn sample_weighted_survives_nan_scores() {
+        let mut llm = SurrogateLlm::with_seed(10);
+        let items = vec![
+            ("nan", f64::NAN),
+            ("ok", 1.0),
+            ("inf", f64::INFINITY),
+            ("also_ok", 1.2),
+            ("neg_inf", f64::NEG_INFINITY),
+        ];
+        for _ in 0..50 {
+            let i = llm.sample_weighted(&items);
+            assert!(
+                i == 1 || i == 3,
+                "non-finite item {i} drawn — poisoned softmax"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_weighted_all_nan_degrades_deterministically() {
+        let mut a = SurrogateLlm::with_seed(11);
+        let mut b = SurrogateLlm::with_seed(11);
+        let poisoned = vec![("x", f64::NAN), ("y", f64::NAN)];
+        let clean = vec![("x", 1.0), ("y", 2.0)];
+        assert_eq!(a.sample_weighted(&poisoned), 0, "all-NaN falls to item 0");
+        // stream parity: the degraded call burned exactly one draw,
+        // same as a healthy sampled call would have
+        let _ = b.sample_weighted(&clean);
+        assert_eq!(a.rng_state(), b.rng_state(), "degraded call desynced the stream");
+    }
+
+    #[test]
+    fn sample_weighted_single_item_and_all_equal() {
+        let mut llm = SurrogateLlm::with_seed(12);
+        let one = vec![("only", 7.0)];
+        for _ in 0..10 {
+            assert_eq!(llm.sample_weighted(&one), 0);
+        }
+        let equal = vec![("a", 3.0), ("b", 3.0), ("c", 3.0)];
+        let mut counts = [0usize; 3];
+        for _ in 0..300 {
+            counts[llm.sample_weighted(&equal)] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > 50, "item {i} drawn only {c}/300 under equal scores");
+        }
+    }
+
+    #[test]
+    fn zero_temperature_argmax_ignores_nan() {
+        let mut llm = SurrogateLlm::new(
+            13,
+            LlmConfig {
+                temperature: 0.0,
+                ..Default::default()
+            },
+        );
+        let items = vec![("nan", f64::NAN), ("best", 0.9), ("inf", f64::INFINITY)];
+        assert_eq!(llm.sample_weighted(&items), 1);
+        let hopeless = vec![("nan", f64::NAN), ("also_nan", f64::NAN)];
+        assert_eq!(llm.sample_weighted(&hopeless), 0);
     }
 }

@@ -82,6 +82,17 @@ pub struct RunConfig {
     /// crash — once the platform has committed `N` submissions. The
     /// resume-equivalence suite and CI smoke are built on it.
     pub halt_after: Option<u64>,
+    /// Profile-guided experiment design (`[profile] guided`,
+    /// DESIGN.md §11): the base kernel's bottleneck classification
+    /// conditions the designer's avenue priors, and run outcomes /
+    /// reports surface the bottleneck mix. Off by default — a disabled
+    /// run takes no guided code path (the designer sees `None`, no
+    /// extra RNG draws), so its trajectory and reports are
+    /// bit-identical to a build without the profile layer
+    /// (`tests/determinism.rs`). Per-experiment `ProfileReport`s are
+    /// journaled regardless: the profile is a pure recomputation from
+    /// the cost model, so attaching it never perturbs a run.
+    pub profile_guided: bool,
 }
 
 impl Default for RunConfig {
@@ -108,6 +119,7 @@ impl Default for RunConfig {
             store_dir: None,
             checkpoint_every: 1,
             halt_after: None,
+            profile_guided: false,
         }
     }
 }
@@ -150,6 +162,13 @@ impl RunConfig {
         self
     }
 
+    /// Toggle profile-guided experiment design (`[profile] guided`,
+    /// DESIGN.md §11).
+    pub fn with_profile_guided(mut self, guided: bool) -> Self {
+        self.profile_guided = guided;
+        self
+    }
+
     /// Parse from the TOML subset (see module docs). Unknown keys are
     /// errors — config typos should not fail silently.
     pub fn from_toml(text: &str) -> Result<RunConfig, String> {
@@ -164,7 +183,7 @@ impl RunConfig {
                 section = line[1..line.len() - 1].trim().to_string();
                 if !matches!(
                     section.as_str(),
-                    "run" | "platform" | "agents" | "llm" | "store" | "screen"
+                    "run" | "platform" | "agents" | "llm" | "store" | "screen" | "profile"
                 ) {
                     return Err(format!("line {}: unknown section [{section}]", lineno + 1));
                 }
@@ -254,6 +273,13 @@ impl RunConfig {
                 }
                 self.screen_keep = keep;
             }
+            "profile.guided" => {
+                self.profile_guided = match value {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(format!("bad profile guided '{value}'")),
+                }
+            }
             "agents.selection_policy" => {
                 self.selection_policy = parse_selection_policy(value)?
             }
@@ -330,6 +356,7 @@ impl RunConfig {
             ("bootstrap_probing", Json::Bool(self.bootstrap_probing)),
             ("include_mfma_seed", Json::Bool(self.include_mfma_seed)),
             ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
+            ("profile_guided", Json::Bool(self.profile_guided)),
         ])
     }
 
@@ -373,6 +400,7 @@ impl RunConfig {
             store_dir: None,
             checkpoint_every: req_u64(v, "checkpoint_every")?,
             halt_after: None,
+            profile_guided: req_bool(v, "profile_guided")?,
         })
     }
 }
@@ -531,6 +559,24 @@ rubric_infidelity = 0.2
     }
 
     #[test]
+    fn toml_profile_knob() {
+        let c = RunConfig::from_toml("[profile]\nguided = true\n").unwrap();
+        assert!(c.profile_guided);
+        assert!(
+            !RunConfig::default().profile_guided,
+            "profile guidance is opt-in"
+        );
+        assert!(RunConfig::from_toml("[profile]\nguided = maybe\n").is_err());
+        assert!(RunConfig::from_toml("[profile]\nsteered = true\n").is_err());
+    }
+
+    #[test]
+    fn builder_sets_profile_guided() {
+        let c = RunConfig::default().with_profile_guided(true);
+        assert!(c.profile_guided);
+    }
+
+    #[test]
     fn builder_sets_screen() {
         let c = RunConfig::default().with_screen(6, 0.25);
         assert!(c.screen_enabled);
@@ -616,6 +662,8 @@ rubric_infidelity = 0.11
 [store]
 dir = "runs/x"
 checkpoint_every = 3
+[profile]
+guided = true
 "#,
         )
         .unwrap();
@@ -644,6 +692,7 @@ checkpoint_every = 3
         assert_eq!(back.bootstrap_probing, c.bootstrap_probing);
         assert_eq!(back.include_mfma_seed, c.include_mfma_seed);
         assert_eq!(back.checkpoint_every, c.checkpoint_every);
+        assert_eq!(back.profile_guided, c.profile_guided);
         // runtime-local knobs are deliberately not persisted
         assert!(back.store_dir.is_none());
         assert!(back.halt_after.is_none());

@@ -79,6 +79,17 @@ pub trait EvalBackend {
         90.0
     }
 
+    /// Bottleneck-classified profile of one genome over the feedback
+    /// suite (DESIGN.md §11). Must be a **pure** function of the genome
+    /// — no RNG draw, no counted measurement — so the platform can
+    /// attach profiles unconditionally without perturbing any
+    /// trajectory. `None` — the default — means the backend has no
+    /// counter model (the PJRT runtime times opaque artifacts);
+    /// submissions then journal without a profile.
+    fn profile(&self, _genome: &KernelGenome) -> Option<crate::sim::ProfileReport> {
+        None
+    }
+
     /// The workload this backend evaluates. The default is the paper's
     /// fp8 GEMM — backends that don't know better (the PJRT runtime
     /// serves the compiled fp8 catalog) inherit it; the simulator
@@ -149,6 +160,10 @@ impl EvalBackend for crate::sim::SimBackend {
 
     fn fork_lane(&mut self, lane: u64) -> Option<Self> {
         Some(crate::sim::SimBackend::lane_clone(self, lane))
+    }
+
+    fn profile(&self, genome: &KernelGenome) -> Option<crate::sim::ProfileReport> {
+        crate::sim::SimBackend::profile(self, genome)
     }
 
     fn workload(&self) -> std::sync::Arc<dyn crate::workload::Workload> {

@@ -21,6 +21,7 @@ use super::{EvalBackend, EvalError};
 use crate::genome::KernelGenome;
 use crate::metrics::geomean;
 use crate::population::EvalOutcome;
+use crate::sim::ProfileReport;
 use crate::workload::BenchmarkSuite;
 
 /// Platform policy knobs.
@@ -63,6 +64,10 @@ pub struct SubmissionRecord {
     /// (DESIGN.md §9).
     pub lane: u32,
     pub outcome: EvalOutcome,
+    /// Bottleneck-classified counter profile (DESIGN.md §11). A pure
+    /// function of the submitted genome — `None` when the backend has
+    /// no counter model or the genome failed its gates.
+    pub profile: Option<ProfileReport>,
 }
 
 /// Per-genome result of a [`EvalPlatform::submit_batch`] call, in
@@ -158,6 +163,9 @@ enum PendingKind {
         /// submission must also rewind the backend to here (threaded
         /// dispatches never touch the parent — `None`).
         prev_backend_state: Option<crate::util::json::Json>,
+        /// Profile computed at submit time (the genome is not retained
+        /// in flight), committed to the log line at poll time.
+        profile: Option<ProfileReport>,
     },
     /// Served from the result cache at submit time (free).
     Cached { outcome: EvalOutcome },
@@ -296,7 +304,8 @@ impl<B: EvalBackend> EvalPlatform<B> {
             genome,
         );
         self.cache.insert(genome.fingerprint_hash(), outcome.clone());
-        self.account_submission(outcome.clone());
+        let profile = self.backend.profile(genome);
+        self.account_submission(outcome.clone(), profile);
         outcome
     }
 
@@ -399,7 +408,9 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 Slot::Run(j) => {
                     let outcome = outcomes[j].clone();
                     self.cache.insert(job_fps[j], outcome.clone());
-                    let (index, completed_at_s) = self.account_submission(outcome.clone());
+                    let profile = self.backend.profile(&jobs[j]);
+                    let (index, completed_at_s) =
+                        self.account_submission(outcome.clone(), profile);
                     results.push(BatchResult {
                         outcome,
                         cached: false,
@@ -538,6 +549,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
             }
             StreamState::Idle => unreachable!("stream mode decided above"),
         };
+        let profile = self.backend.profile(genome);
         self.pending.push(PendingEval {
             ticket,
             completed_at_s,
@@ -549,6 +561,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 prev_lane_clock,
                 prev_busy_lane_s,
                 prev_backend_state,
+                profile,
             },
         });
         ticket
@@ -603,6 +616,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 submission_index,
                 fingerprint,
                 inline_outcome,
+                profile,
                 ..
             } => {
                 let outcome = match inline_outcome {
@@ -630,6 +644,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
                     completed_at_s: p.completed_at_s,
                     lane: lane as u32,
                     outcome: outcome.clone(),
+                    profile,
                 });
                 Some(CompletedEval {
                     ticket: p.ticket,
@@ -711,12 +726,14 @@ impl<B: EvalBackend> EvalPlatform<B> {
     }
 
     /// Fraction of total lane-time spent evaluating: busy lane-seconds
-    /// over `lanes x` simulated makespan. 1.0 = perfectly saturated
-    /// lanes (also reported for an empty platform, vacuously).
+    /// over `lanes x` simulated makespan. A zero makespan (zero-budget
+    /// or all-cache-hit run) reports 0.0 — no lane-time existed to
+    /// occupy, and anything else would leak a NaN or a vacuous 100%
+    /// into the reports.
     pub fn lane_occupancy(&self) -> f64 {
         let makespan = self.wall_clock_s();
         if makespan <= 0.0 {
-            return 1.0;
+            return 0.0;
         }
         self.busy_lane_s / (self.lane_busy_until.len() as f64 * makespan)
     }
@@ -739,7 +756,11 @@ impl<B: EvalBackend> EvalPlatform<B> {
 
     /// Record one completed submission: quota, earliest-free-lane wall
     /// clock, and the log line. Returns (log index, completion time).
-    fn account_submission(&mut self, outcome: EvalOutcome) -> (u64, f64) {
+    fn account_submission(
+        &mut self,
+        outcome: EvalOutcome,
+        profile: Option<ProfileReport>,
+    ) -> (u64, f64) {
         let cost = self.backend.submission_cost_s();
         let lane = self.earliest_free_lane();
         self.lane_busy_until[lane] += cost;
@@ -751,8 +772,17 @@ impl<B: EvalBackend> EvalPlatform<B> {
             completed_at_s,
             lane: lane as u32,
             outcome,
+            profile,
         });
         (index, completed_at_s)
+    }
+
+    /// Bottleneck-classified profile of one genome, straight off the
+    /// backend's counter model (pure — no RNG draw, no quota, no
+    /// platform time). Journaling uses this for cache-served results,
+    /// whose log line never existed.
+    pub fn profile_of(&self, genome: &KernelGenome) -> Option<ProfileReport> {
+        self.backend.profile(genome)
     }
 
     /// Read-only cache probe (planning aid for batch callers: a cached

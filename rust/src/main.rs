@@ -19,7 +19,9 @@
 //! paper's fp8 GEMM. `run` and `campaign` also accept
 //! `--parallelism <lanes>` (overrides `platform.parallelism`),
 //! `--pipeline true|false` (the steady-state scheduler, DESIGN.md §8),
-//! `--store <dir>` (the durable run ledger, `[store] dir`), and
+//! `--profile-guided true|false` (bottleneck-conditioned experiment
+//! design, DESIGN.md §11), `--store <dir>` (the durable run ledger,
+//! `[store] dir`), and
 //! `--halt-after <N>` (testing: simulate a crash after N submissions);
 //! like `--workload`, the flags win over the config file.
 //!
@@ -105,6 +107,16 @@ fn load_config(flags: &HashMap<String, String>) -> Result<RunConfig, String> {
                 .map_err(|_| "bad --halt-after (want a submission count)")?,
         );
     }
+    if let Some(guided) = flags.get("profile-guided") {
+        cfg.profile_guided = match guided.as_str() {
+            // a bare trailing `--profile-guided` parses as an empty value
+            "true" | "" => true,
+            "false" => false,
+            other => {
+                return Err(format!("bad --profile-guided '{other}' (want true|false)"))
+            }
+        };
+    }
     Ok(cfg)
 }
 
@@ -137,6 +149,12 @@ fn print_run_report(
         outcome.wall_clock_s / 60.0
     );
     println!("{}", report::render_pipeline(&outcome.pipeline));
+    // empty unless `[profile] guided` produced a mix: an unguided run's
+    // report stays byte-identical to pre-profile output
+    let profiles = report::render_profiles(outcome.profile_mix.as_ref());
+    if !profiles.is_empty() {
+        print!("{profiles}");
+    }
     println!("{}", report::render_convergence("scientist", &outcome.curve));
     if flags.contains_key("lineage") {
         println!("== lineage ==\n{}", report::lineage::render_tree(&run.population));
@@ -431,6 +449,7 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), String> {
         .ok_or_else(|| format!("unknown seed kernel '{which}' for workload {workload_name}"))?;
     println!("{}", render::render_hip_sketch(&genome));
     println!("{workload_name} breakdown on the feedback configs:");
+    let mut timings = Vec::new();
     for cfg in &workload.feedback_suite().configs {
         let t = workload
             .estimate(&MI300, &genome, cfg)
@@ -439,7 +458,10 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), String> {
             "  {cfg}: {:9.1} us (compute {:8.1}, mem {:8.1}, wb {:6.1}, eff {:.3})",
             t.total_us, t.compute_us, t.mem_us, t.writeback_us, t.compute_efficiency
         );
+        timings.push(t);
     }
+    let profile = gpu_kernel_scientist::sim::ProfileReport::from_timings(&timings);
+    println!("profile: {}", profile.render());
     Ok(())
 }
 
@@ -495,7 +517,7 @@ fn main() {
                 "usage: kernel-scientist <run|campaign|resume|replay|workloads|table1|leaderboard|baseline|inspect|eval-pjrt> \
                  [--workload name] [--workloads a,b,c] [--lineage true] \
                  [--seed N] [--budget N] [--parallelism N] [--pipeline true|false] \
-                 [--store dir] [--halt-after N] \
+                 [--profile-guided true|false] [--store dir] [--halt-after N] \
                  [--config file.toml] [--tuner random|hillclimb|anneal] \
                  [--seed-kernel name] [--artifacts dir] [--save-population file.jsonl]"
             );

@@ -105,13 +105,43 @@ pub fn render_pipeline(stats: &crate::scientist::PipelineStats) -> String {
     s
 }
 
-/// Render a campaign's per-workload summary as a markdown table.
+/// One-line bottleneck-mix summary over a run's profiled submissions
+/// (DESIGN.md §11). Empty when the run carried no mix (`[profile]`
+/// off) or the mix saw no profiled work — so guided-off report output
+/// stays byte-identical to a build without the profile layer.
+pub fn render_profiles(mix: Option<&crate::sim::ProfileMix>) -> String {
+    match mix {
+        Some(m) if m.total() > 0 => format!(
+            "bottlenecks: {} ({} profiled submissions)\n",
+            m.render(),
+            m.total()
+        ),
+        _ => String::new(),
+    }
+}
+
+/// Render a campaign's per-workload summary as a markdown table. The
+/// bottleneck-mix column appears only when at least one run carried a
+/// profile mix (`[profile] guided`): an all-off campaign's table stays
+/// byte-identical to pre-profile output.
 pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) -> String {
+    let with_mix = outcome
+        .results
+        .iter()
+        .any(|r| r.outcome.profile_mix.is_some());
     let mut s = String::from("### Campaign summary\n\n");
     s.push_str(
-        "| Workload | Best | Feedback geomean (us) | Leaderboard (us) | Submissions | Cache h/m | Platform time (min) | Lane occupancy | Screened/promoted |\n",
+        "| Workload | Best | Feedback geomean (us) | Leaderboard (us) | Submissions | Cache h/m | Platform time (min) | Lane occupancy | Screened/promoted |",
     );
-    s.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    if with_mix {
+        s.push_str(" Bottlenecks |");
+    }
+    s.push('\n');
+    s.push_str("|---|---|---|---|---|---|---|---|---|");
+    if with_mix {
+        s.push_str("---|");
+    }
+    s.push('\n');
     for r in &outcome.results {
         let lb = r
             .outcome
@@ -119,7 +149,7 @@ pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) ->
             .map(|x| format!("{x:.1}"))
             .unwrap_or_else(|| "-".into());
         s.push_str(&format!(
-            "| {} | {} | {:.1} | {} | {} | {}/{} | {:.0} | {:.0}% | {}/{} |\n",
+            "| {} | {} | {:.1} | {} | {} | {}/{} | {:.0} | {:.0}% | {}/{} |",
             r.workload,
             r.outcome.best_id,
             r.outcome.best_geomean_us,
@@ -132,6 +162,16 @@ pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) ->
             r.outcome.pipeline.screened,
             r.outcome.pipeline.screen_promoted
         ));
+        if with_mix {
+            let mix = r
+                .outcome
+                .profile_mix
+                .as_ref()
+                .map(|m| m.render())
+                .unwrap_or_else(|| "-".into());
+            s.push_str(&format!(" {mix} |"));
+        }
+        s.push('\n');
     }
     s.push_str(&format!(
         "\ntotal submissions: {}; campaign wall clock (concurrent): {:.0} min\n",
@@ -225,6 +265,7 @@ mod tests {
                     lane_occupancy: 0.9,
                     ..Default::default()
                 },
+                profile_mix: None,
             },
         };
         let out = CampaignOutcome {
@@ -236,6 +277,57 @@ mod tests {
         assert!(s.contains("total submissions: 24"), "{s}");
         assert!(s.contains("2/10"), "{s}");
         assert!(s.contains("| 90% |"), "{s}");
+        // no run carried a profile mix: the column must not exist
+        assert!(!s.contains("Bottlenecks"), "{s}");
+    }
+
+    #[test]
+    fn campaign_table_adds_bottleneck_column_only_when_profiled() {
+        use crate::scientist::campaign::{CampaignOutcome, WorkloadRunResult};
+        use crate::scientist::{PipelineStats, RunOutcome};
+        use crate::sim::{Bottleneck, ProfileMix};
+        let mut mix = ProfileMix::default();
+        mix.add(Bottleneck::Memory);
+        mix.add(Bottleneck::Memory);
+        mix.add(Bottleneck::Compute);
+        let out = CampaignOutcome {
+            results: vec![WorkloadRunResult {
+                workload: "fp8-gemm".into(),
+                cache_stats: (0, 5),
+                outcome: RunOutcome {
+                    workload: "fp8-gemm".into(),
+                    best_geomean_us: 400.0,
+                    best_id: "00009".into(),
+                    submissions: 12,
+                    wall_clock_s: 1080.0,
+                    curve: ConvergenceCurve::default(),
+                    leaderboard_us: None,
+                    pipeline: PipelineStats::default(),
+                    profile_mix: Some(mix),
+                },
+            }],
+        };
+        let s = render_campaign(&out);
+        assert!(s.contains("Bottlenecks |"), "{s}");
+        assert!(s.contains("| memory 2, compute 1 |"), "{s}");
+    }
+
+    #[test]
+    fn profile_summary_renders_only_for_populated_mixes() {
+        use crate::sim::{Bottleneck, ProfileMix};
+        assert_eq!(render_profiles(None), "");
+        let empty = ProfileMix::default();
+        assert_eq!(
+            render_profiles(Some(&empty)),
+            "",
+            "a zero-count mix renders nothing"
+        );
+        let mut mix = ProfileMix::default();
+        mix.add(Bottleneck::Lds);
+        mix.add(Bottleneck::Memory);
+        mix.add(Bottleneck::Memory);
+        let s = render_profiles(Some(&mix));
+        assert_eq!(s, "bottlenecks: memory 2, lds 1 (3 profiled submissions)\n");
     }
 
     #[test]
@@ -273,5 +365,21 @@ mod tests {
         };
         let s = render_pipeline(&screened);
         assert!(s.contains("screen: 12 scored, 7 promoted, 5 rejected"), "{s}");
+    }
+
+    #[test]
+    fn pipeline_summary_survives_zero_occupancy() {
+        // a zero-makespan run (all-cache-hit or zero budget) reports
+        // 0.0 occupancy from the platform — the summary must print 0%,
+        // never NaN%
+        use crate::scientist::PipelineStats;
+        let stats = PipelineStats {
+            lanes: 1,
+            lane_occupancy: 0.0,
+            ..Default::default()
+        };
+        let s = render_pipeline(&stats);
+        assert!(s.contains("occupancy 0%"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
     }
 }

@@ -83,6 +83,12 @@ pub struct RunOutcome {
     /// Scheduler-level throughput stats: lane occupancy, pipeline
     /// depth, planning rounds (DESIGN.md §8).
     pub pipeline: PipelineStats,
+    /// Bottleneck mix over every profiled submission (DESIGN.md §11).
+    /// `None` unless `[profile] guided` is on — the mix is derived
+    /// from always-journaled per-run profiles, but surfacing it in
+    /// outcomes/reports is part of the knob's surface area so that
+    /// guided-off output stays byte-identical to pre-profile builds.
+    pub profile_mix: Option<crate::sim::ProfileMix>,
 }
 
 /// A full scientist run: platform + population + agents + loop state.
@@ -513,6 +519,13 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 .last()
                 .expect("entry just added")
                 .clone();
+            // the profile is committed with the platform's log line;
+            // cache-served results have no log line, so recompute from
+            // the genome (pure — same classification either way)
+            let profile = match prov.submission_index {
+                Some(i) => self.platform.log()[i as usize].profile.clone(),
+                None => self.platform.profile_of(&individual.genome),
+            };
             let record = JournalRecord::Exp(ExperimentRecord {
                 individual,
                 submitted_at: prov.submitted_at,
@@ -522,6 +535,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 completed_at_s,
                 plan: prov.plan,
                 screened: prov.screened,
+                profile,
             });
             self.store.as_mut().expect("store checked above").append(&record);
         }
@@ -562,13 +576,23 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         let base = self.population.by_id(&selection.base_id)?;
         let reference = self.population.by_id(&selection.reference_id)?;
 
-        // Stage 2 — Experiment Designer
+        // Stage 2 — Experiment Designer. With `[profile] guided` on,
+        // the base kernel's classified bottleneck conditions the
+        // avenue priors (DESIGN.md §11); off, the designer sees `None`
+        // and the round is bit-identical to the pre-profile path (the
+        // profile itself is a pure recomputation — no RNG, no quota).
+        let base_bottleneck = if self.config.profile_guided {
+            self.platform.profile_of(&base.genome).map(|p| p.bottleneck)
+        } else {
+            None
+        };
         let design = self.agents.designer.design(
             &base.id,
             &base.genome,
             &self.population,
             &self.agents.knowledge,
             &mut self.agents.llm,
+            base_bottleneck,
         );
         if design.plans.is_empty() {
             return None;
@@ -814,6 +838,17 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             .platform
             .leaderboard_score(&best.genome, &self.workload.leaderboard_suite())
             .ok();
+        let profile_mix = if self.config.profile_guided {
+            let mut mix = crate::sim::ProfileMix::default();
+            for rec in self.platform.log() {
+                if let Some(p) = &rec.profile {
+                    mix.add(p.bottleneck);
+                }
+            }
+            Some(mix)
+        } else {
+            None
+        };
         Ok(RunOutcome {
             workload: self.workload.name().to_string(),
             best_geomean_us: best.score().unwrap(),
@@ -827,6 +862,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 self.config.eval_parallelism,
                 self.platform.lane_occupancy(),
             ),
+            profile_mix,
         })
     }
 }

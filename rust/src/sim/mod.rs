@@ -21,6 +21,9 @@
 //! ```
 
 pub mod calibration;
+pub mod profile;
+
+pub use profile::{Bottleneck, ProfileMix, ProfileReport};
 
 use std::sync::Arc;
 
@@ -213,6 +216,20 @@ impl SimBackend {
     /// Noiseless breakdown (used by reports, never by agents).
     pub fn breakdown(&self, g: &KernelGenome, cfg: &GemmConfig) -> Result<KernelTiming, Invalid> {
         self.workload.estimate(&self.arch, g, cfg)
+    }
+
+    /// Profile a genome over the workload's feedback suite: noiseless
+    /// breakdowns only — **no RNG draw, no measurement counted** — so
+    /// profiling never perturbs the backend's noise stream. `None` when
+    /// the genome is invalid for the cost model (such submissions carry
+    /// no timings either).
+    pub fn profile(&self, g: &KernelGenome) -> Option<ProfileReport> {
+        let suite = self.workload.feedback_suite();
+        let mut timings = Vec::with_capacity(suite.configs.len());
+        for cfg in &suite.configs {
+            timings.push(self.workload.estimate(&self.arch, g, cfg).ok()?);
+        }
+        Some(ProfileReport::from_timings(&timings))
     }
 
     pub fn measurements_taken(&self) -> u64 {

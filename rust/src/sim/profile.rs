@@ -1,0 +1,389 @@
+//! Profile reports: the bottleneck-classified counter snapshot the
+//! platform attaches to every submission (DESIGN.md §11).
+//!
+//! The paper's scientist conditions its designer on *timing data only*;
+//! GEAK-agent-style loops classify the bottleneck from profiler
+//! counters and steer avenue choice with it. The sim backend already
+//! computes every ingredient — [`KernelTiming`] carries the mechanistic
+//! compute/memory/LDS/occupancy/launch breakdown — but discarded it
+//! after producing a scalar time. A [`ProfileReport`] is that breakdown
+//! kept: per-component microseconds summed over the feedback suite,
+//! plus a deterministic [`Bottleneck`] classification with a ranked
+//! secondary.
+//!
+//! Purity contract: a report is a **pure function of the noiseless
+//! [`KernelTiming`]s** — no RNG draw is ever consumed deriving one, so
+//! attaching reports cannot perturb any measurement stream or
+//! trajectory. That is what lets the platform compute them
+//! unconditionally (journals always carry profiles) while the
+//! `[profile] guided` knob only gates what *reads* them.
+
+use super::KernelTiming;
+use crate::util::json::{push_num_value, push_str_value, req_f64, req_str, Json};
+
+/// The classified dominant cost component of a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Bottleneck {
+    /// HBM / L2-fabric traffic (global loads + writeback) dominates.
+    Memory,
+    /// The compute pipe itself dominates.
+    Compute,
+    /// LDS bank-conflict stalls on the compute pipe dominate.
+    Lds,
+    /// Grid-utilization serialization (partial last wave of
+    /// workgroups) dominates.
+    Occupancy,
+    /// Kernel launch + dispatch overhead dominates (tiny problems).
+    Launch,
+}
+
+impl Bottleneck {
+    /// Classification order — also the tie-break order when two
+    /// components cost exactly the same (first listed wins).
+    pub const ALL: [Bottleneck; 5] = [
+        Bottleneck::Memory,
+        Bottleneck::Compute,
+        Bottleneck::Lds,
+        Bottleneck::Occupancy,
+        Bottleneck::Launch,
+    ];
+
+    /// Stable wire tag (journal / checkpoint / report).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Bottleneck::Memory => "memory",
+            Bottleneck::Compute => "compute",
+            Bottleneck::Lds => "lds",
+            Bottleneck::Occupancy => "occupancy",
+            Bottleneck::Launch => "launch",
+        }
+    }
+
+    /// Decode a [`Bottleneck::tag`].
+    pub fn from_tag(s: &str) -> Result<Bottleneck, String> {
+        match s {
+            "memory" => Ok(Bottleneck::Memory),
+            "compute" => Ok(Bottleneck::Compute),
+            "lds" => Ok(Bottleneck::Lds),
+            "occupancy" => Ok(Bottleneck::Occupancy),
+            "launch" => Ok(Bottleneck::Launch),
+            other => Err(format!("unknown bottleneck '{other}'")),
+        }
+    }
+
+    /// Position in [`Bottleneck::ALL`] (the [`ProfileMix`] index).
+    pub fn index(&self) -> usize {
+        match self {
+            Bottleneck::Memory => 0,
+            Bottleneck::Compute => 1,
+            Bottleneck::Lds => 2,
+            Bottleneck::Occupancy => 3,
+            Bottleneck::Launch => 4,
+        }
+    }
+}
+
+/// A secondary bottleneck is only reported when it carries at least
+/// this share of the total attributed cost — below it the ranking is
+/// noise, not signal.
+pub const SECONDARY_SHARE: f64 = 0.15;
+
+/// Per-submission profile: component costs (microseconds, summed over
+/// the feedback suite) plus the classification they imply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileReport {
+    pub compute_us: f64,
+    pub lds_us: f64,
+    pub mem_us: f64,
+    pub occupancy_us: f64,
+    pub launch_us: f64,
+    pub bottleneck: Bottleneck,
+    /// Second-ranked component, if it carries ≥ [`SECONDARY_SHARE`] of
+    /// the total attributed cost.
+    pub secondary: Option<Bottleneck>,
+}
+
+/// Attribute one timing to the five cost components, in
+/// [`Bottleneck::ALL`] order. The attribution reconstructs the cost
+/// model's own terms from the fields [`KernelTiming`] exposes:
+/// `t_exec = compute x (1 + lds_pressure)` splits into pipe time and
+/// LDS stall time; grid serialization is the extra time the
+/// `1/grid_utilization` divisor adds over the busy components.
+pub fn components(t: &KernelTiming) -> [f64; 5] {
+    let mem = t.mem_us + t.writeback_us;
+    let compute = t.compute_us;
+    let lds = t.compute_us * t.lds_pressure;
+    let busy = compute + lds + mem;
+    let occupancy = if t.grid_utilization > 0.0 {
+        busy * (1.0 / t.grid_utilization - 1.0)
+    } else {
+        0.0
+    };
+    [mem, compute, lds, occupancy, t.launch_us]
+}
+
+/// Rank component costs and classify. Deterministic: ties broken by
+/// [`Bottleneck::ALL`] order (stable sort), `total_cmp` so even
+/// degenerate non-finite costs order reproducibly.
+pub fn classify(costs: &[f64; 5]) -> (Bottleneck, Option<Bottleneck>) {
+    let mut ranked: Vec<(Bottleneck, f64)> = Bottleneck::ALL
+        .iter()
+        .copied()
+        .zip(costs.iter().copied())
+        .collect();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let total: f64 = costs.iter().sum();
+    let secondary = if total > 0.0 && ranked[1].1 >= SECONDARY_SHARE * total {
+        Some(ranked[1].0)
+    } else {
+        None
+    };
+    (ranked[0].0, secondary)
+}
+
+impl ProfileReport {
+    /// Profile one noiseless timing.
+    pub fn from_timing(t: &KernelTiming) -> ProfileReport {
+        ProfileReport::from_timings(std::slice::from_ref(t))
+    }
+
+    /// Profile a submission: sum component costs over the feedback
+    /// suite's noiseless timings, then classify the sums.
+    pub fn from_timings(timings: &[KernelTiming]) -> ProfileReport {
+        let mut sums = [0.0f64; 5];
+        for t in timings {
+            let c = components(t);
+            for (s, v) in sums.iter_mut().zip(c.iter()) {
+                *s += v;
+            }
+        }
+        let (bottleneck, secondary) = classify(&sums);
+        ProfileReport {
+            mem_us: sums[0],
+            compute_us: sums[1],
+            lds_us: sums[2],
+            occupancy_us: sums[3],
+            launch_us: sums[4],
+            bottleneck,
+            secondary,
+        }
+    }
+
+    /// One-line rendering for reports / `inspect`.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "bottleneck {} (mem {:.1} us, compute {:.1} us, lds {:.1} us, \
+             occupancy {:.1} us, launch {:.1} us)",
+            self.bottleneck.tag(),
+            self.mem_us,
+            self.compute_us,
+            self.lds_us,
+            self.occupancy_us,
+            self.launch_us
+        );
+        if let Some(b) = self.secondary {
+            s.push_str(&format!(", secondary {}", b.tag()));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bottleneck", Json::Str(self.bottleneck.tag().to_string())),
+            ("compute_us", Json::Num(self.compute_us)),
+            ("launch_us", Json::Num(self.launch_us)),
+            ("lds_us", Json::Num(self.lds_us)),
+            ("mem_us", Json::Num(self.mem_us)),
+            ("occupancy_us", Json::Num(self.occupancy_us)),
+            (
+                "secondary",
+                self.secondary
+                    .map(|b| Json::Str(b.tag().to_string()))
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Streamed emission, byte-identical to `to_json().to_string()`
+    /// (keys in alphabetical order) — the journal's zero-alloc path.
+    pub fn write_json(&self, out: &mut String) {
+        out.push_str("{\"bottleneck\":");
+        push_str_value(out, self.bottleneck.tag());
+        out.push_str(",\"compute_us\":");
+        push_num_value(out, self.compute_us);
+        out.push_str(",\"launch_us\":");
+        push_num_value(out, self.launch_us);
+        out.push_str(",\"lds_us\":");
+        push_num_value(out, self.lds_us);
+        out.push_str(",\"mem_us\":");
+        push_num_value(out, self.mem_us);
+        out.push_str(",\"occupancy_us\":");
+        push_num_value(out, self.occupancy_us);
+        out.push_str(",\"secondary\":");
+        match self.secondary {
+            Some(b) => push_str_value(out, b.tag()),
+            None => out.push_str("null"),
+        }
+        out.push('}');
+    }
+
+    pub fn from_json(v: &Json) -> Result<ProfileReport, String> {
+        Ok(ProfileReport {
+            compute_us: req_f64(v, "compute_us")?,
+            lds_us: req_f64(v, "lds_us")?,
+            mem_us: req_f64(v, "mem_us")?,
+            occupancy_us: req_f64(v, "occupancy_us")?,
+            launch_us: req_f64(v, "launch_us")?,
+            bottleneck: Bottleneck::from_tag(req_str(v, "bottleneck")?)?,
+            secondary: match v.get("secondary") {
+                None | Some(Json::Null) => None,
+                Some(s) => Some(Bottleneck::from_tag(
+                    s.as_str().ok_or("profile: bad secondary")?,
+                )?),
+            },
+        })
+    }
+}
+
+/// Bottleneck counts across a run's submissions (the campaign table's
+/// mix column). Indexed by [`Bottleneck::index`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ProfileMix {
+    pub counts: [u64; 5],
+}
+
+impl ProfileMix {
+    pub fn add(&mut self, b: Bottleneck) {
+        self.counts[b.index()] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// `"memory 12, compute 3"` — nonzero counts in [`Bottleneck::ALL`]
+    /// order; `"-"` when empty.
+    pub fn render(&self) -> String {
+        let mut parts = Vec::new();
+        for b in Bottleneck::ALL {
+            let n = self.counts[b.index()];
+            if n > 0 {
+                parts.push(format!("{} {n}", b.tag()));
+            }
+        }
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(", ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+    use crate::gpu::MI300;
+    use crate::workload::{GemmConfig, FEEDBACK_CONFIGS};
+
+    fn timing(g: &crate::genome::KernelGenome, cfg: &GemmConfig) -> KernelTiming {
+        super::super::estimate(&MI300, g, cfg).unwrap()
+    }
+
+    #[test]
+    fn naive_kernel_is_memory_bound() {
+        // no LDS staging, narrow loads: fabric traffic dominates
+        let timings: Vec<KernelTiming> = FEEDBACK_CONFIGS
+            .iter()
+            .map(|c| timing(&seeds::naive_hip(), c))
+            .collect();
+        let p = ProfileReport::from_timings(&timings);
+        assert_eq!(p.bottleneck, Bottleneck::Memory);
+        assert!(p.mem_us > p.compute_us);
+    }
+
+    #[test]
+    fn classification_matches_the_largest_component() {
+        for (_, g) in seeds::all_seeds() {
+            for cfg in FEEDBACK_CONFIGS {
+                let t = timing(&g, &cfg);
+                let p = ProfileReport::from_timing(&t);
+                let costs = [p.mem_us, p.compute_us, p.lds_us, p.occupancy_us, p.launch_us];
+                let max = costs.iter().cloned().fold(f64::MIN, f64::max);
+                assert_eq!(
+                    costs[p.bottleneck.index()], max,
+                    "{g:?} {cfg}: primary is not the max component"
+                );
+                if let Some(s) = p.secondary {
+                    assert_ne!(s, p.bottleneck);
+                    let total: f64 = costs.iter().sum();
+                    assert!(costs[s.index()] >= SECONDARY_SHARE * total);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_problem_is_launch_bound() {
+        // a synthetic timing where only launch matters
+        let t = KernelTiming {
+            compute_us: 0.01,
+            lds_pressure: 0.0,
+            mem_us: 0.01,
+            writeback_us: 0.0,
+            launch_us: 5.0,
+            total_us: 5.02,
+            compute_efficiency: 0.01,
+            occupancy_waves: 1,
+            grid_utilization: 1.0,
+        };
+        let p = ProfileReport::from_timing(&t);
+        assert_eq!(p.bottleneck, Bottleneck::Launch);
+        assert_eq!(p.secondary, None, "nothing else is within the share floor");
+    }
+
+    #[test]
+    fn ties_break_in_declaration_order() {
+        let (b, _) = classify(&[1.0, 1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(b, Bottleneck::Memory, "first of ALL wins exact ties");
+        let (b, s) = classify(&[0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(b, Bottleneck::Memory);
+        assert_eq!(s, None, "zero total reports no secondary");
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless_and_streaming_matches() {
+        for (_, g) in seeds::all_seeds() {
+            let timings: Vec<KernelTiming> =
+                FEEDBACK_CONFIGS.iter().map(|c| timing(&g, c)).collect();
+            let p = ProfileReport::from_timings(&timings);
+            let emitted = p.to_json().to_string();
+            let mut streamed = String::new();
+            p.write_json(&mut streamed);
+            assert_eq!(streamed, emitted, "streamed == tree emitter");
+            let back =
+                ProfileReport::from_json(&crate::util::json::parse(&emitted).unwrap()).unwrap();
+            assert_eq!(back, p, "{g:?}");
+        }
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        for b in Bottleneck::ALL {
+            assert_eq!(Bottleneck::from_tag(b.tag()).unwrap(), b);
+            assert_eq!(Bottleneck::ALL[b.index()], b);
+        }
+        assert!(Bottleneck::from_tag("register").is_err());
+    }
+
+    #[test]
+    fn profile_mix_renders_nonzero_counts_in_order() {
+        let mut mix = ProfileMix::default();
+        assert_eq!(mix.render(), "-");
+        mix.add(Bottleneck::Compute);
+        mix.add(Bottleneck::Memory);
+        mix.add(Bottleneck::Memory);
+        assert_eq!(mix.total(), 3);
+        assert_eq!(mix.render(), "memory 2, compute 1");
+    }
+}

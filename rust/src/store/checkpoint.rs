@@ -38,8 +38,12 @@ pub const CHECKPOINT_FILE: &str = "checkpoint.json";
 /// older stores fail with the explicit version error instead of an
 /// opaque hex-parse error. Bumped 2 → 3 when the analytic screen tier
 /// (DESIGN.md §10) added `screen_pending`, the screen counters in
-/// `sched`, and the `[screen]` knobs in `config`.
-const VERSION: u64 = 3;
+/// `sched`, and the `[screen]` knobs in `config`. Bumped 3 → 4 when
+/// the profile layer (DESIGN.md §11) added per-experiment
+/// `ProfileReport`s to journal `exp` records and the `[profile]` knob
+/// to `config` — a resume must not silently drop profile-era ledger
+/// state onto a pre-profile replayer or vice versa.
+const VERSION: u64 = 4;
 
 /// Scheduler counters snapshot (mirrors the run's private
 /// `SchedCounters` — see `scientist::pipeline`).

@@ -24,6 +24,7 @@ use crate::genome::KernelGenome;
 use crate::metrics::ConvergenceCurve;
 use crate::population::{EvalOutcome, Individual, Population};
 use crate::scientist::IterationLog;
+use crate::sim::ProfileReport;
 use crate::util::json::{self, parse_str_arr, req_bool, req_str, req_u64, str_arr, Json};
 use crate::workload::GemmConfig;
 
@@ -75,6 +76,10 @@ pub struct ExperimentRecord {
     /// Passed through the analytic screen tier before submission
     /// (DESIGN.md §10). Absent in pre-screen journals (parsed false).
     pub screened: bool,
+    /// Bottleneck-classified counter profile (DESIGN.md §11). `None`
+    /// when the backend has no counter model or the genome failed its
+    /// gates. Absent in pre-profile journals (parsed `None`).
+    pub profile: Option<ProfileReport>,
 }
 
 fn policy_token(p: ReferencePolicy) -> &'static str {
@@ -131,6 +136,13 @@ impl JournalRecord {
                 ("completed_at_s", opt_num(e.completed_at_s)),
                 ("plan", opt_num(e.plan.map(|p| p as f64))),
                 ("screened", Json::Bool(e.screened)),
+                (
+                    "profile",
+                    e.profile
+                        .as_ref()
+                        .map(|p| p.to_json())
+                        .unwrap_or(Json::Null),
+                ),
             ]),
         }
     }
@@ -198,6 +210,11 @@ impl JournalRecord {
                 opt_u64(out, e.lane.map(u64::from));
                 out.push_str(",\"plan\":");
                 opt_u64(out, e.plan.map(|p| p as u64));
+                out.push_str(",\"profile\":");
+                match &e.profile {
+                    Some(p) => p.write_json(out),
+                    None => out.push_str("null"),
+                }
                 out.push_str(",\"screened\":");
                 out.push_str(if e.screened { "true" } else { "false" });
                 out.push_str(",\"submission_index\":");
@@ -263,6 +280,12 @@ impl JournalRecord {
                 screened: match v.get("screened") {
                     None | Some(Json::Null) => false,
                     Some(x) => x.as_bool().ok_or("journal: bad screened flag")?,
+                },
+                // tolerant: journals written before the profile layer
+                // have no "profile" key — no counter snapshot exists
+                profile: match v.get("profile") {
+                    None | Some(Json::Null) => None,
+                    Some(p) => Some(ProfileReport::from_json(p)?),
                 },
             })),
             other => Err(format!("journal: unknown record tag '{other}'")),
@@ -347,6 +370,7 @@ pub fn rebuild(
                 completed_at_s,
                 lane,
                 outcome: e.individual.outcome.clone(),
+                profile: e.profile.clone(),
             });
             cache_entries.push((
                 e.individual.genome.fingerprint_hash(),
@@ -449,6 +473,15 @@ mod tests {
                 completed_at_s: Some(810.0),
                 plan: Some(2),
                 screened: true,
+                profile: Some(ProfileReport {
+                    compute_us: 10.5,
+                    lds_us: 2.25,
+                    mem_us: 41.0,
+                    occupancy_us: 0.125,
+                    launch_us: 1.5,
+                    bottleneck: crate::sim::Bottleneck::Memory,
+                    secondary: Some(crate::sim::Bottleneck::Compute),
+                }),
             }),
             JournalRecord::Exp(ExperimentRecord {
                 individual: Individual {
@@ -466,6 +499,7 @@ mod tests {
                 completed_at_s: None,
                 plan: None,
                 screened: false,
+                profile: None,
             }),
         ]
     }
@@ -509,6 +543,31 @@ mod tests {
     }
 
     #[test]
+    fn pre_profile_journal_lines_parse_with_none_profile() {
+        // journals written before the profile layer have no "profile"
+        // key; they must parse as profile-less, not error
+        let records = sample_records();
+        let JournalRecord::Exp(e) = &records[2] else {
+            panic!("fixture moved");
+        };
+        let mut profile_json = String::new();
+        e.profile.as_ref().unwrap().write_json(&mut profile_json);
+        let mut line = String::new();
+        records[2].write_json(&mut line);
+        let stripped = line.replace(&format!(",\"profile\":{profile_json}"), "");
+        assert_ne!(stripped, line, "fixture lost its profile key");
+        let JournalRecord::Exp(parsed) =
+            JournalRecord::from_json(&json::parse(&stripped).unwrap()).unwrap()
+        else {
+            panic!("tag lost");
+        };
+        assert_eq!(parsed.profile, None);
+        // other fields survive the stripped parse unchanged
+        assert_eq!(parsed.submission_index, e.submission_index);
+        assert!(parsed.screened);
+    }
+
+    #[test]
     fn streamed_record_roundtrips_through_parse() {
         let mut text = String::new();
         for rec in sample_records() {
@@ -523,5 +582,10 @@ mod tests {
         };
         assert_eq!(e.individual.id, "00009");
         assert_eq!(e.lane, Some(2));
+        let original = sample_records();
+        let JournalRecord::Exp(o) = &original[2] else {
+            panic!("fixture moved");
+        };
+        assert_eq!(e.profile, o.profile, "profile survives the round-trip");
     }
 }

@@ -292,6 +292,7 @@ mod tests {
             completed_at_s: Some(90.0),
             plan: None,
             screened: false,
+            profile: None,
         });
         store.append(&record);
         // append flushes to the OS before returning — the line is

@@ -60,6 +60,74 @@ fn trajectory_is_invariant_across_parallelism_and_cache_for_every_workload() {
 }
 
 #[test]
+fn profile_guided_off_is_bit_identical_to_default_for_every_workload_and_scheduler() {
+    // off-means-off (DESIGN.md §11): a config that parsed
+    // `[profile] guided = false` must drive the exact same trajectory
+    // as one that never mentioned the profile section — for every
+    // workload, under both schedulers. The profile layer computes its
+    // reports unconditionally, so this locks in that computing them
+    // perturbs nothing (no RNG draw, no quota, no ordering change).
+    for w in workload::registry() {
+        for pipeline in [false, true] {
+            let point = |via_toml: bool| {
+                let mut cfg = ts::noiseless_config(w.name(), 13, 24);
+                cfg.pipeline = pipeline;
+                if via_toml {
+                    let knob = gpu_kernel_scientist::config::RunConfig::from_toml(
+                        "[profile]\nguided = false\n",
+                    )
+                    .expect("knob parses");
+                    cfg.profile_guided = knob.profile_guided;
+                }
+                let (run, o) = ts::run_scientist(cfg);
+                assert!(
+                    o.profile_mix.is_none(),
+                    "{}: an unguided outcome must carry no bottleneck mix",
+                    w.name()
+                );
+                (ts::trajectory(&run), o.best_id, o.best_geomean_us)
+            };
+            assert_eq!(
+                point(false),
+                point(true),
+                "{}: [profile] guided=false diverged from default (pipeline={pipeline})",
+                w.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn profile_guided_runs_are_reproducible_and_the_knob_is_alive() {
+    // guided-on must stay deterministic per seed, carry a populated
+    // bottleneck mix, and actually steer at least one workload's
+    // trajectory away from the unguided run (a knob that changes
+    // nothing when on is dead code)
+    let mut any_diverged = false;
+    for w in workload::registry() {
+        let point = |guided: bool| {
+            let mut cfg = ts::noiseless_config(w.name(), 13, 24);
+            cfg.profile_guided = guided;
+            let (run, o) = ts::run_scientist(cfg);
+            (ts::trajectory(&run), o.best_id, o.profile_mix)
+        };
+        let on = point(true);
+        let again = point(true);
+        assert_eq!(on.0, again.0, "{}: guided trajectory not reproducible", w.name());
+        assert_eq!(on.1, again.1, "{}", w.name());
+        let mix = on.2.as_ref().expect("guided outcome carries a mix");
+        assert!(mix.total() > 0, "{}: guided mix counted nothing", w.name());
+        if on.0 != point(false).0 {
+            any_diverged = true;
+        }
+    }
+    assert!(
+        any_diverged,
+        "profile guidance never changed any workload's trajectory"
+    );
+}
+
+#[test]
 fn trajectories_differ_between_workloads() {
     // the matrix above would pass vacuously if every workload produced
     // the same ledger; make sure the families genuinely diverge

@@ -165,7 +165,7 @@ fn prop_designer_choice_always_distinct_and_bounded() {
             continue;
         }
         let mut llm = SurrogateLlm::with_seed(i);
-        let out = designer.design("00001", &g, &pop, &kb, &mut llm);
+        let out = designer.design("00001", &g, &pop, &kb, &mut llm, None);
         assert!(out.plans.len() <= 5);
         assert!(out.avenues.len() <= 10);
         let chosen = designer.choose(&out.plans, &mut llm);
@@ -380,6 +380,28 @@ fn prop_ledger_entry_and_genome_json_roundtrip_lossless() {
                 None
             },
             screened: rng.chance(0.5),
+            profile: if rng.chance(0.5) {
+                use gpu_kernel_scientist::sim::{profile, ProfileReport};
+                let costs = [
+                    rng.range_f64(0.0, 5e4),
+                    rng.range_f64(0.0, 5e4),
+                    rng.range_f64(0.0, 5e4),
+                    rng.range_f64(0.0, 5e4),
+                    rng.range_f64(0.0, 5e4),
+                ];
+                let (bottleneck, secondary) = profile::classify(&costs);
+                Some(ProfileReport {
+                    mem_us: costs[0],
+                    compute_us: costs[1],
+                    lds_us: costs[2],
+                    occupancy_us: costs[3],
+                    launch_us: costs[4],
+                    bottleneck,
+                    secondary,
+                })
+            } else {
+                None
+            },
         });
         let emitted = record.to_json().to_string();
         let back = JournalRecord::from_json(&json::parse(&emitted).expect("parse"))
@@ -743,6 +765,89 @@ fn prop_population_jsonl_roundtrip_random() {
             assert_eq!(a, b);
         }
     }
+}
+
+#[test]
+fn prop_profile_classification_matches_reference_recomputation() {
+    // a ProfileReport is a pure function of the noiseless KernelTimings
+    // (DESIGN.md §11): over randomized valid genomes, the classification
+    // must equal an independent recomputation of the attribution from
+    // the raw timing fields, and the report must survive JSON
+    // round-trips losslessly (tree and streamed emitters byte-equal)
+    use gpu_kernel_scientist::sim::{profile, Bottleneck, KernelTiming, ProfileReport};
+    use gpu_kernel_scientist::util::json;
+    use gpu_kernel_scientist::workload::FEEDBACK_CONFIGS;
+    let mut rng = Rng::seed_from_u64(150);
+    let mut checked = 0;
+    for _ in 0..CASES {
+        let g = random_genome(&mut rng);
+        if g.validate().is_err() {
+            continue;
+        }
+        let timings: Vec<KernelTiming> = FEEDBACK_CONFIGS
+            .iter()
+            .map(|c| sim::estimate(&MI300, &g, c).expect("valid genome must time"))
+            .collect();
+        let p = ProfileReport::from_timings(&timings);
+
+        // independent reference: re-derive the five component sums
+        // straight from the timing fields, then rank them by hand
+        let mut sums = [0.0f64; 5];
+        for t in &timings {
+            let mem = t.mem_us + t.writeback_us;
+            let compute = t.compute_us;
+            let lds = t.compute_us * t.lds_pressure;
+            let busy = mem + compute + lds;
+            let occ = if t.grid_utilization > 0.0 {
+                busy * (1.0 / t.grid_utilization - 1.0)
+            } else {
+                0.0
+            };
+            sums[0] += mem;
+            sums[1] += compute;
+            sums[2] += lds;
+            sums[3] += occ;
+            sums[4] += t.launch_us;
+        }
+        let report_sums = [p.mem_us, p.compute_us, p.lds_us, p.occupancy_us, p.launch_us];
+        for (got, want) in report_sums.iter().zip(sums.iter()) {
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "{g:?}: component sums diverged ({report_sums:?} vs {sums:?})"
+            );
+        }
+        // primary: first maximum in Bottleneck::ALL order
+        let mut best = 0;
+        for i in 1..5 {
+            if sums[i] > sums[best] {
+                best = i;
+            }
+        }
+        assert_eq!(p.bottleneck, Bottleneck::ALL[best], "{g:?}");
+        // secondary: second-ranked component iff it clears the share floor
+        let mut ranked: Vec<usize> = (0..5).collect();
+        ranked.sort_by(|&a, &b| sums[b].total_cmp(&sums[a]));
+        let total: f64 = sums.iter().sum();
+        let want_secondary = if total > 0.0
+            && sums[ranked[1]] >= profile::SECONDARY_SHARE * total
+        {
+            Some(Bottleneck::ALL[ranked[1]])
+        } else {
+            None
+        };
+        assert_eq!(p.secondary, want_secondary, "{g:?}");
+
+        // JSON round-trip: tree emitter == streamed emitter, lossless
+        let emitted = p.to_json().to_string();
+        let mut streamed = String::new();
+        p.write_json(&mut streamed);
+        assert_eq!(streamed, emitted, "{g:?}");
+        let back =
+            ProfileReport::from_json(&json::parse(&emitted).expect("parse")).expect("round-trip");
+        assert_eq!(back, p, "{g:?}");
+        checked += 1;
+    }
+    assert!(checked > CASES / 4, "too few valid cases: {checked}");
 }
 
 #[test]

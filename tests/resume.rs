@@ -413,6 +413,92 @@ fn resume_of_a_completed_run_recomputes_the_same_outcome() {
 }
 
 #[test]
+fn mixed_version_ledger_replays_with_missing_profiles() {
+    // Backward compat (DESIGN.md §11): journals written before the
+    // profile layer carry no `profile` key on `exp` records. Rewrite
+    // every other exp line of a fresh store to that pre-profile wire
+    // format — the mixed-version ledger must parse (stripped records
+    // as `profile: None`) and replay to the exact same run (profiles
+    // are derived state, never trajectory-bearing). Only replay is in
+    // scope: a genuinely pre-profile *store* carries a VERSION-3
+    // checkpoint, which resume version-rejects up front by design —
+    // and replay is the path that reads the full journal.
+    use gpu_kernel_scientist::store::{journal, JournalRecord};
+    let dir = scratch_dir("mixed");
+    let cfg = store_config("fp8-gemm", 37, 18, 1, false, &dir);
+    let mut run = ScientistRun::new(cfg).unwrap();
+    let out = run.run_to_completion().unwrap();
+
+    let path = dir.join(store::JOURNAL_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    // the profile value is a flat object (no nested braces) or null,
+    // so the first '}' after the key closes it
+    let strip_profile = |line: &str| -> String {
+        let key = ",\"profile\":";
+        let Some(start) = line.find(key) else {
+            panic!("exp line without a profile key: {line}");
+        };
+        let rest = &line[start + key.len()..];
+        let len = if rest.starts_with('{') {
+            rest.find('}').expect("flat profile object") + 1
+        } else if rest.starts_with("null") {
+            4
+        } else {
+            panic!("unexpected profile value: {rest}");
+        };
+        format!("{}{}", &line[..start], &rest[len..])
+    };
+    let mut exp_seen = 0usize;
+    let mut rewritten = String::new();
+    for line in text.lines() {
+        if line.contains("\"t\":\"exp\"") {
+            exp_seen += 1;
+            if exp_seen % 2 == 1 {
+                rewritten.push_str(&strip_profile(line));
+                rewritten.push('\n');
+                continue;
+            }
+        }
+        rewritten.push_str(line);
+        rewritten.push('\n');
+    }
+    assert!(exp_seen > 2, "run too small to mix versions");
+    std::fs::write(&path, &rewritten).unwrap();
+
+    // stripped records parse with profile None; the untouched ones
+    // keep theirs (every successfully-estimated genome carries one)
+    let (records, torn) = journal::parse_journal(&rewritten).unwrap();
+    assert!(!torn);
+    let mut seen = 0usize;
+    let mut kept_some = 0usize;
+    for r in &records {
+        if let JournalRecord::Exp(e) = r {
+            seen += 1;
+            if seen % 2 == 1 {
+                assert!(e.profile.is_none(), "stripped record kept a profile");
+            } else if e.profile.is_some() {
+                kept_some += 1;
+            }
+        }
+    }
+    assert!(kept_some > 0, "no untouched record carried a profile");
+
+    let replayed = store::replay(&dir).expect("mixed-version replay");
+    assert!(!replayed.torn_tail);
+    assert_eq!(replayed.population.members(), run.population.members());
+    assert_eq!(replayed.curve.points, out.curve.points);
+    assert_eq!(replayed.submissions, out.submissions);
+    let render = |logs: &[gpu_kernel_scientist::scientist::IterationLog]| -> Vec<String> {
+        logs.iter().map(report::render_iteration).collect()
+    };
+    assert_eq!(
+        render(&replayed.logs),
+        render(&run.logs),
+        "mixed-version ledger: iteration transcripts"
+    );
+}
+
+#[test]
 fn resume_without_a_store_is_a_clear_error() {
     let dir = scratch_dir("empty");
     let err = ScientistRun::resume(&dir).unwrap_err();
