@@ -15,7 +15,12 @@
 //!   * the archive query mix (by_id, best, ancestors, config_winners,
 //!     duplicate probe) grows ≤ 2x from 1k to 50k members;
 //!   * journal-entry serialization streams allocation-free into a
-//!     reusable buffer (reported as ns/entry; asserted ≤ 50 µs).
+//!     reusable buffer (reported as ns/entry; asserted ≤ 50 µs);
+//!   * the federated archive (DESIGN.md §12) cold-loads a 50k-entry
+//!     compacted segment ≥ 10x faster than parsing the same archive
+//!     from JSONL (the segment path reads header + index only), and a
+//!     sibling run's lookups hit 100% of the published fingerprints —
+//!     written to `BENCH_federation.json` for the CI artifact.
 //!
 //! Run: `cargo bench --bench archive_scaling`
 
@@ -25,9 +30,12 @@ use gpu_kernel_scientist::agents::{AgentSuite, Designer, Selector};
 use gpu_kernel_scientist::population::{EvalOutcome, Individual, Population};
 use gpu_kernel_scientist::prelude::*;
 use gpu_kernel_scientist::rng::Rng;
-use gpu_kernel_scientist::store::{ExperimentRecord, JournalRecord};
-use gpu_kernel_scientist::test_support::random_genome;
+use gpu_kernel_scientist::store::{
+    federation, segment, ExperimentRecord, FedEntry, FederationSnapshot, JournalRecord,
+};
+use gpu_kernel_scientist::test_support::{random_genome, scratch_dir};
 use gpu_kernel_scientist::util::bench::{bench, header, report, BenchResult};
+use gpu_kernel_scientist::util::json::Json;
 use gpu_kernel_scientist::workload::FEEDBACK_CONFIGS;
 
 /// A realistic long-campaign archive: a branchy lineage forest over
@@ -155,6 +163,7 @@ fn journal_serialization(budget: Duration) -> BenchResult {
                 plan: if i > 2 { Some(i / 3) } else { None },
                 screened: i % 2 == 0,
                 profile: None,
+                federated: false,
             })
         })
         .collect();
@@ -169,6 +178,93 @@ fn journal_serialization(budget: Duration) -> BenchResult {
     });
     report(&r);
     r
+}
+
+/// The federated-archive scaling pass (DESIGN.md §12): a 50k-entry
+/// archive cold-loaded from JSONL (full parse: every genome object)
+/// vs from its compacted segment index (header + fingerprint/offset
+/// table only, CRC-checked) — the O(n-parse) vs O(index) claim — plus
+/// the cross-run hit rate a sibling run sees against the published
+/// fingerprints. Results land in `BENCH_federation.json`.
+fn federation_scaling(budget: Duration) {
+    const N: usize = 50_000;
+    println!("\n-- federated archive of {N} entries --");
+    let mut rng = Rng::seed_from_u64(77);
+    let digest = 0x00c0_ffee_0bad_f00du64;
+    let entries: Vec<FedEntry> = (0..N)
+        .map(|i| {
+            let genome = random_genome(&mut rng);
+            FedEntry {
+                workload: "fp8-gemm".into(),
+                digest,
+                // synthetic distinct fingerprints: collisions in the
+                // random-walk genomes must not shrink the archive
+                fingerprint: i as u64 + 1,
+                genome,
+                outcome: EvalOutcome::Timings(vec![rng.range_f64(300.0, 5000.0); 6]),
+            }
+        })
+        .collect();
+    let dir = scratch_dir("bench-federation");
+    federation::write_run_results(&dir, "fp8-gemm", 1, digest, &entries)
+        .expect("write archive");
+
+    let jsonl = bench("archive cold-load, JSONL full parse", budget, || {
+        let snap = FederationSnapshot::load(&dir).expect("jsonl load");
+        std::hint::black_box(snap.len());
+    });
+    report(&jsonl);
+
+    let compacted = federation::compact_dir(&dir).expect("compact");
+    assert_eq!(compacted, 1);
+    let seg_path = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .find(|p| p.extension().and_then(|e| e.to_str()) == Some("seg"))
+        .expect("segment file");
+    let seg = bench("archive cold-load, segment index only", budget, || {
+        let idx = segment::open_index(&seg_path).expect("segment open");
+        std::hint::black_box(idx.entries.len());
+    });
+    report(&seg);
+
+    // a sibling run consults the snapshot once, then probes per genome:
+    // every published fingerprint must hit, absent ones must miss
+    let snap = FederationSnapshot::load(&dir).expect("segment snapshot load");
+    let results = snap.results_for("fp8-gemm", digest);
+    let mut hits = 0usize;
+    for fp in 1..=N as u64 {
+        if results.contains_key(&fp) {
+            hits += 1;
+        }
+    }
+    let absent = ((N as u64 + 1)..=(N as u64 + 5_000)).filter(|fp| results.contains_key(fp)).count();
+    let hit_rate = hits as f64 / N as f64;
+    let speedup = jsonl.mean_ns / seg.mean_ns;
+    println!(
+        "\ncold-load at {N} entries: jsonl {:.1} ms, segment {:.2} ms — {speedup:.1}x \
+         (target >= 10x); cross-run hit rate {:.1}% (target 100%)",
+        jsonl.mean_ns / 1e6,
+        seg.mean_ns / 1e6,
+        hit_rate * 100.0
+    );
+    assert!(
+        speedup >= 10.0,
+        "segment cold-load must be >= 10x faster than JSONL parse at {N} entries \
+         (got {speedup:.1}x)"
+    );
+    assert_eq!(hits, N, "every published fingerprint must be servable");
+    assert_eq!(absent, 0, "unpublished fingerprints must never hit");
+
+    let doc = Json::obj(vec![
+        ("entries", Json::Num(N as f64)),
+        ("jsonl_cold_load_ms", Json::Num(jsonl.mean_ns / 1e6)),
+        ("segment_cold_load_ms", Json::Num(seg.mean_ns / 1e6)),
+        ("segment_speedup", Json::Num(speedup)),
+        ("cross_run_hit_rate", Json::Num(hit_rate)),
+    ]);
+    std::fs::write("BENCH_federation.json", doc.to_string()).expect("write BENCH_federation.json");
+    println!("federation scaling written to BENCH_federation.json");
 }
 
 fn main() {
@@ -230,6 +326,8 @@ fn main() {
         "journal entry serialization above 50 us: {} ns",
         j.mean_ns
     );
+
+    federation_scaling(budget);
 
     println!("\narchive_scaling targets: OK");
 }

@@ -93,6 +93,24 @@ pub struct RunConfig {
     /// journaled regardless: the profile is a pure recomputation from
     /// the cost model, so attaching it never perturbs a run.
     pub profile_guided: bool,
+    /// Federated archive directory (`[federation] dir`, DESIGN.md §12):
+    /// a cross-run store of evaluated (genome, workload, config-digest)
+    /// results. When set, the run consults it before burning a
+    /// submission on any genome a prior campaign already evaluated
+    /// under an identical eval-relevant config, and registers its own
+    /// results there on successful completion. `None` (the default)
+    /// takes no federation code path at all, so the trajectory is
+    /// bit-identical to a build without the layer (`tests/federation.rs`).
+    pub federation_dir: Option<String>,
+    /// Warm-start seeding (`[federation] warm_start_k`): inject up to
+    /// this many prior-campaign elites — mined across workloads and
+    /// filtered through the target workload's `admits` gate — as extra
+    /// seed candidates. 0 (the default) injects nothing.
+    pub federation_warm_start_k: u32,
+    /// Consult the federated store but never write to it
+    /// (`[federation] read_only`) — e.g. CI runs against a curated
+    /// archive.
+    pub federation_read_only: bool,
 }
 
 impl Default for RunConfig {
@@ -120,6 +138,9 @@ impl Default for RunConfig {
             checkpoint_every: 1,
             halt_after: None,
             profile_guided: false,
+            federation_dir: None,
+            federation_warm_start_k: 0,
+            federation_read_only: false,
         }
     }
 }
@@ -169,6 +190,19 @@ impl RunConfig {
         self
     }
 
+    /// Point the run at a federated archive directory (`[federation]`,
+    /// DESIGN.md §12).
+    pub fn with_federation(mut self, dir: &str) -> Self {
+        self.federation_dir = Some(dir.to_string());
+        self
+    }
+
+    /// Set the warm-start elite count (`[federation] warm_start_k`).
+    pub fn with_warm_start_k(mut self, k: u32) -> Self {
+        self.federation_warm_start_k = k;
+        self
+    }
+
     /// Parse from the TOML subset (see module docs). Unknown keys are
     /// errors — config typos should not fail silently.
     pub fn from_toml(text: &str) -> Result<RunConfig, String> {
@@ -184,6 +218,7 @@ impl RunConfig {
                 if !matches!(
                     section.as_str(),
                     "run" | "platform" | "agents" | "llm" | "store" | "screen" | "profile"
+                        | "federation"
                 ) {
                     return Err(format!("line {}: unknown section [{section}]", lineno + 1));
                 }
@@ -308,6 +343,22 @@ impl RunConfig {
                 }
                 self.checkpoint_every = every;
             }
+            "federation.dir" => {
+                if value.is_empty() {
+                    return Err("federation.dir must not be empty".into());
+                }
+                self.federation_dir = Some(value.to_string());
+            }
+            "federation.warm_start_k" => {
+                self.federation_warm_start_k = parse_u64(value)? as u32
+            }
+            "federation.read_only" => {
+                self.federation_read_only = match value {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(format!("bad federation read_only '{value}'")),
+                }
+            }
             _ => return Err(format!("unknown key '{key}'")),
         }
         Ok(())
@@ -322,7 +373,7 @@ impl RunConfig {
     /// resume CLI re-derives the directory from its argument).
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::obj(vec![
+        let mut pairs = vec![
             ("workload", Json::Str(self.workload.clone())),
             // hex: the seed derives every RNG stream and Json::Num is
             // f64-backed — a seed >= 2^53 must round-trip exactly or
@@ -357,7 +408,23 @@ impl RunConfig {
             ("include_mfma_seed", Json::Bool(self.include_mfma_seed)),
             ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
             ("profile_guided", Json::Bool(self.profile_guided)),
-        ])
+        ];
+        // emitted only when federation is on, keeping federation-off
+        // checkpoints byte-identical to pre-federation ones. Unlike
+        // `store_dir`, the federation dir IS persisted: a resumed run
+        // must re-attach the same archive or its trajectory diverges.
+        if let Some(dir) = &self.federation_dir {
+            pairs.push(("federation_dir", Json::Str(dir.clone())));
+            pairs.push((
+                "federation_warm_start_k",
+                Json::Num(self.federation_warm_start_k as f64),
+            ));
+            pairs.push((
+                "federation_read_only",
+                Json::Bool(self.federation_read_only),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     /// Rebuild from a [`RunConfig::to_json`] checkpoint entry.
@@ -401,6 +468,28 @@ impl RunConfig {
             checkpoint_every: req_u64(v, "checkpoint_every")?,
             halt_after: None,
             profile_guided: req_bool(v, "profile_guided")?,
+            // tolerant: pre-federation checkpoints carry none of these
+            federation_dir: match v.get("federation_dir") {
+                None | Some(crate::util::json::Json::Null) => None,
+                Some(s) => Some(
+                    s.as_str()
+                        .ok_or("config: bad federation_dir")?
+                        .to_string(),
+                ),
+            },
+            federation_warm_start_k: match v.get("federation_warm_start_k") {
+                None | Some(crate::util::json::Json::Null) => 0,
+                Some(x) => {
+                    let raw = x.as_f64().ok_or("config: bad federation_warm_start_k")? as u64;
+                    u32::try_from(raw).map_err(|_| {
+                        format!("config: federation_warm_start_k out of u32 range: {raw}")
+                    })?
+                }
+            },
+            federation_read_only: match v.get("federation_read_only") {
+                None | Some(crate::util::json::Json::Null) => false,
+                Some(x) => x.as_bool().ok_or("config: bad federation_read_only")?,
+            },
         })
     }
 }
@@ -574,6 +663,42 @@ rubric_infidelity = 0.2
     fn builder_sets_profile_guided() {
         let c = RunConfig::default().with_profile_guided(true);
         assert!(c.profile_guided);
+    }
+
+    #[test]
+    fn toml_federation_knobs() {
+        let c = RunConfig::from_toml(
+            "[federation]\ndir = \"fed/store\"\nwarm_start_k = 3\nread_only = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.federation_dir.as_deref(), Some("fed/store"));
+        assert_eq!(c.federation_warm_start_k, 3);
+        assert!(c.federation_read_only);
+        let d = RunConfig::default();
+        assert!(d.federation_dir.is_none(), "federation is opt-in");
+        assert_eq!(d.federation_warm_start_k, 0);
+        assert!(!d.federation_read_only);
+        assert!(RunConfig::from_toml("[federation]\ndir = \"\"\n").is_err());
+        assert!(RunConfig::from_toml("[federation]\nread_only = maybe\n").is_err());
+        assert!(RunConfig::from_toml("[federation]\nshare = true\n").is_err());
+    }
+
+    #[test]
+    fn config_json_carries_federation_only_when_on() {
+        // off: no federation keys at all — checkpoints stay
+        // byte-identical to pre-federation ones
+        let off = RunConfig::default().to_json().to_string();
+        assert!(!off.contains("federation"), "{off}");
+        // on: all three knobs round-trip (resume must re-attach the
+        // same archive)
+        let mut c = RunConfig::default().with_federation("fed/x").with_warm_start_k(2);
+        c.federation_read_only = true;
+        let back =
+            RunConfig::from_json(&crate::util::json::parse(&c.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.federation_dir.as_deref(), Some("fed/x"));
+        assert_eq!(back.federation_warm_start_k, 2);
+        assert!(back.federation_read_only);
     }
 
     #[test]

@@ -68,6 +68,11 @@ pub struct SubmissionRecord {
     /// function of the submitted genome — `None` when the backend has
     /// no counter model or the genome failed its gates.
     pub profile: Option<ProfileReport>,
+    /// Served from the cross-run federation store (DESIGN.md §12): the
+    /// submission consumed quota and lane time exactly like a genuine
+    /// evaluation but never ran the backend, so checkpoint restores
+    /// must not replay it onto a lane backend.
+    pub federated: bool,
 }
 
 /// Per-genome result of a [`EvalPlatform::submit_batch`] call, in
@@ -120,6 +125,10 @@ pub struct PlatformCheckpoint {
     /// Submission-log length at stream-worker spawn time: entries from
     /// here on replay onto re-forked lane backends at restore.
     pub stream_log_start: u64,
+    /// Committed federation-store hits (DESIGN.md §12). Counted only at
+    /// commit time, so — unlike cache stats — no in-flight rollback is
+    /// needed.
+    pub federated_hits: u64,
 }
 
 /// How stream submissions are evaluated (decided once, at the first
@@ -166,6 +175,9 @@ enum PendingKind {
         /// Profile computed at submit time (the genome is not retained
         /// in flight), committed to the log line at poll time.
         profile: Option<ProfileReport>,
+        /// Federation-store hit: `inline_outcome` carries the stored
+        /// result, no backend ever ran this dispatch (DESIGN.md §12).
+        federated: bool,
     },
     /// Served from the result cache at submit time (free).
     Cached { outcome: EvalOutcome },
@@ -211,6 +223,15 @@ pub struct EvalPlatform<B: EvalBackend> {
     /// are replayed per lane on restore); earlier entries ran inline on
     /// the parent backend (covered by its own state snapshot).
     stream_log_start: u64,
+    /// Cross-run federation results for this run's exact (workload,
+    /// config-digest) key, attached by the scientist when a
+    /// `[federation]` store is configured (DESIGN.md §12). `None` means
+    /// federation is off and every consult site is skipped — the
+    /// off-means-off bit-identity guarantee rests on this being the
+    /// only switch.
+    federated: Option<HashMap<u64, EvalOutcome>>,
+    /// Committed federation hits (counted at commit, never in flight).
+    federated_hits: u64,
 }
 
 impl<B: EvalBackend> EvalPlatform<B> {
@@ -231,7 +252,34 @@ impl<B: EvalBackend> EvalPlatform<B> {
             capture_backend_state: false,
             prespawn_state: None,
             stream_log_start: 0,
+            federated: None,
+            federated_hits: 0,
         }
+    }
+
+    /// Attach the cross-run federation results for this run's exact
+    /// (workload, config-digest) key. Every submission path consults
+    /// the map before burning a backend run; a hit consumes quota and
+    /// lane time exactly like a genuine evaluation (so run trajectories
+    /// stay identical) but skips the backend. Must be attached before
+    /// any submission; never call it when `[federation]` is off.
+    pub fn attach_federation(&mut self, results: HashMap<u64, EvalOutcome>) {
+        debug_assert!(
+            self.log.is_empty() && self.pending.is_empty(),
+            "attach_federation() after submissions began"
+        );
+        self.federated = Some(results);
+    }
+
+    /// Committed federation-store hits so far.
+    pub fn federated_hits(&self) -> u64 {
+        self.federated_hits
+    }
+
+    /// Federation consult: stored outcome for this fingerprint, if the
+    /// store is attached and has one.
+    fn federated_outcome(&self, fp: u64) -> Option<EvalOutcome> {
+        self.federated.as_ref().and_then(|m| m.get(&fp)).cloned()
     }
 
     /// Switch on checkpoint-state capture (see the field docs). Must be
@@ -297,6 +345,16 @@ impl<B: EvalBackend> EvalPlatform<B> {
             "platform quota exhausted ({} submissions)",
             self.submissions()
         );
+        // Federation consult: a stored result is committed with full
+        // quota/clock accounting (identical trajectory to a genuine
+        // run) but never touches the backend. No cache-stat counting —
+        // this path never counts lookups.
+        if let Some(outcome) = self.federated_outcome(genome.fingerprint_hash()) {
+            self.cache.insert(genome.fingerprint_hash(), outcome.clone());
+            let profile = self.backend.profile(genome);
+            self.account_submission(outcome.clone(), profile, true);
+            return outcome;
+        }
         let outcome = executor::evaluate_one(
             &mut self.backend,
             &self.feedback_suite,
@@ -305,7 +363,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
         );
         self.cache.insert(genome.fingerprint_hash(), outcome.clone());
         let profile = self.backend.profile(genome);
-        self.account_submission(outcome.clone(), profile);
+        self.account_submission(outcome.clone(), profile, false);
         outcome
     }
 
@@ -332,8 +390,17 @@ impl<B: EvalBackend> EvalPlatform<B> {
         enum Slot {
             Cached(EvalOutcome),
             Run(usize),
-            /// Duplicate (within this batch) of planned job `j`.
-            Alias(usize),
+            /// Duplicate (within this batch) of an already planned Run
+            /// or Fed slot with this fingerprint — resolved from the
+            /// cache at assembly (the original commits first).
+            Alias(u64),
+            /// Federation-store hit: consumes quota and lane time like
+            /// a genuine run, no backend dispatch (DESIGN.md §12).
+            Fed {
+                fp: u64,
+                outcome: EvalOutcome,
+                profile: Option<ProfileReport>,
+            },
         }
         let remaining = match self.config.submission_quota {
             Some(q) => q.saturating_sub(self.submissions()),
@@ -342,7 +409,8 @@ impl<B: EvalBackend> EvalPlatform<B> {
         let mut slots: Vec<Slot> = Vec::with_capacity(genomes.len());
         let mut jobs: Vec<KernelGenome> = Vec::new();
         let mut job_fps: Vec<u64> = Vec::new();
-        let mut planned_fps: HashMap<u64, usize> = HashMap::new();
+        let mut planned_fps: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        let mut planned_quota = 0u64;
         for genome in genomes {
             let fp = genome.fingerprint_hash();
             // Counted-stats invariant: every *processed* entry (one
@@ -352,8 +420,8 @@ impl<B: EvalBackend> EvalPlatform<B> {
             // truncation counts nothing — so with the cache enabled,
             // hits + misses == results returned by this path.
             if self.cache.enabled() {
-                if let Some(&j) = planned_fps.get(&fp) {
-                    slots.push(Slot::Alias(j));
+                if planned_fps.contains(&fp) {
+                    slots.push(Slot::Alias(fp));
                     continue;
                 }
                 if self.cache.peek(fp).is_some() {
@@ -362,15 +430,26 @@ impl<B: EvalBackend> EvalPlatform<B> {
                     continue;
                 }
             }
-            if (jobs.len() as u64) >= remaining {
+            if planned_quota >= remaining {
                 break; // quota exhausted: truncate the batch here, uncounted
             }
             if self.cache.enabled() {
                 let miss = self.cache.lookup(fp); // counted miss
                 debug_assert!(miss.is_none());
             }
+            // Federation consult after the counted miss, so a fed hit
+            // leaves the same cache-stat footprint the original run's
+            // genuine evaluation did.
+            if let Some(outcome) = self.federated_outcome(fp) {
+                let profile = self.backend.profile(genome);
+                slots.push(Slot::Fed { fp, outcome, profile });
+                planned_fps.insert(fp);
+                planned_quota += 1;
+                continue;
+            }
             slots.push(Slot::Run(jobs.len()));
-            planned_fps.insert(fp, jobs.len());
+            planned_fps.insert(fp);
+            planned_quota += 1;
             job_fps.push(fp);
             jobs.push(genome.clone());
         }
@@ -390,14 +469,15 @@ impl<B: EvalBackend> EvalPlatform<B> {
                     submission_index: None,
                     completed_at_s: self.wall_clock_s(),
                 }),
-                Slot::Alias(j) => {
-                    // By commit order the aliased job has already been
-                    // committed and cached; the lookup also counts the
-                    // hit in the cache stats.
+                Slot::Alias(fp) => {
+                    // By commit order the aliased Run or Fed slot has
+                    // already been committed and cached (aliases only
+                    // exist with the cache enabled); the lookup also
+                    // counts the hit in the cache stats.
                     let outcome = self
                         .cache
-                        .lookup(job_fps[j])
-                        .unwrap_or_else(|| outcomes[j].clone());
+                        .lookup(fp)
+                        .expect("aliased original commits before its duplicates");
                     results.push(BatchResult {
                         outcome,
                         cached: true,
@@ -405,12 +485,23 @@ impl<B: EvalBackend> EvalPlatform<B> {
                         completed_at_s: self.wall_clock_s(),
                     });
                 }
+                Slot::Fed { fp, outcome, profile } => {
+                    self.cache.insert(fp, outcome.clone());
+                    let (index, completed_at_s) =
+                        self.account_submission(outcome.clone(), profile, true);
+                    results.push(BatchResult {
+                        outcome,
+                        cached: false,
+                        submission_index: Some(index),
+                        completed_at_s,
+                    });
+                }
                 Slot::Run(j) => {
                     let outcome = outcomes[j].clone();
                     self.cache.insert(job_fps[j], outcome.clone());
                     let profile = self.backend.profile(&jobs[j]);
                     let (index, completed_at_s) =
-                        self.account_submission(outcome.clone(), profile);
+                        self.account_submission(outcome.clone(), profile, false);
                     results.push(BatchResult {
                         outcome,
                         cached: false,
@@ -498,6 +589,38 @@ impl<B: EvalBackend> EvalPlatform<B> {
             "platform quota exhausted ({} submissions, {pending_runs} in flight)",
             self.submissions()
         );
+        // Federation consult (after the counted miss above, so the
+        // cache-stat footprint matches the original run's genuine
+        // evaluation): a hit occupies a lane for the usual cost and
+        // consumes quota — identical trajectory bookkeeping — but never
+        // spawns stream workers and never dispatches to a backend.
+        if let Some(outcome) = self.federated_outcome(fp) {
+            let cost = self.backend.submission_cost_s();
+            let lane = self.earliest_free_lane();
+            let prev_lane_clock = self.lane_busy_until[lane];
+            let prev_busy_lane_s = self.busy_lane_s;
+            self.lane_busy_until[lane] += cost;
+            self.busy_lane_s += cost;
+            let completed_at_s = self.lane_busy_until[lane];
+            let submission_index = self.submissions() + pending_runs;
+            let profile = self.backend.profile(genome);
+            self.pending.push(PendingEval {
+                ticket,
+                completed_at_s,
+                kind: PendingKind::Run {
+                    lane,
+                    submission_index,
+                    fingerprint: fp,
+                    inline_outcome: Some(outcome),
+                    prev_lane_clock,
+                    prev_busy_lane_s,
+                    prev_backend_state: None,
+                    profile,
+                    federated: true,
+                },
+            });
+            return ticket;
+        }
         if matches!(self.stream, StreamState::Idle) {
             // capture the pre-fork backend state first: a checkpoint
             // needs it to re-fork identical lane workers on resume
@@ -562,6 +685,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 prev_busy_lane_s,
                 prev_backend_state,
                 profile,
+                federated: false,
             },
         });
         ticket
@@ -617,6 +741,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 fingerprint,
                 inline_outcome,
                 profile,
+                federated,
                 ..
             } => {
                 let outcome = match inline_outcome {
@@ -639,12 +764,16 @@ impl<B: EvalBackend> EvalPlatform<B> {
                     submission_index,
                     "stream completions commit to the log in submission order"
                 );
+                if federated {
+                    self.federated_hits += 1;
+                }
                 self.log.push(SubmissionRecord {
                     index: submission_index,
                     completed_at_s: p.completed_at_s,
                     lane: lane as u32,
                     outcome: outcome.clone(),
                     profile,
+                    federated,
                 });
                 Some(CompletedEval {
                     ticket: p.ticket,
@@ -760,6 +889,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
         &mut self,
         outcome: EvalOutcome,
         profile: Option<ProfileReport>,
+        federated: bool,
     ) -> (u64, f64) {
         let cost = self.backend.submission_cost_s();
         let lane = self.earliest_free_lane();
@@ -767,12 +897,16 @@ impl<B: EvalBackend> EvalPlatform<B> {
         self.busy_lane_s += cost;
         let completed_at_s = self.lane_busy_until[lane];
         let index = self.log.len() as u64;
+        if federated {
+            self.federated_hits += 1;
+        }
         self.log.push(SubmissionRecord {
             index,
             completed_at_s,
             lane: lane as u32,
             outcome,
             profile,
+            federated,
         });
         (index, completed_at_s)
     }
@@ -876,6 +1010,11 @@ impl<B: EvalBackend> EvalPlatform<B> {
             prespawn_backend: self.prespawn_state.clone(),
             stream_threaded: matches!(self.stream, StreamState::Threaded(_)),
             stream_log_start: self.stream_log_start,
+            // committed-only by construction (incremented at poll /
+            // account time), so no in-flight rollback is needed; the
+            // pending_misses rollback above already covers fed pending
+            // runs, which counted their miss at submit
+            federated_hits: self.federated_hits,
         })
     }
 
@@ -935,6 +1074,13 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 );
             }
             for (i, rec) in log.iter().enumerate().skip(cp.stream_log_start as usize) {
+                if rec.federated {
+                    // federation hits consumed a lane slot but no lane
+                    // backend ever evaluated them — replaying one would
+                    // advance the lane's noise stream and falsely flag
+                    // divergence
+                    continue;
+                }
                 let lane = rec.lane as usize;
                 if lane >= lane_backends.len() {
                     return Err(format!("log entry {i} names out-of-range lane {lane}"));
@@ -969,6 +1115,7 @@ impl<B: EvalBackend> EvalPlatform<B> {
         self.lane_busy_until = cp.lane_busy_until.clone();
         self.busy_lane_s = cp.busy_lane_s;
         self.next_ticket = cp.next_ticket;
+        self.federated_hits = cp.federated_hits;
         self.cache = EvalCache::restore(
             self.config.cache_results,
             cache_entries,
@@ -1606,5 +1753,129 @@ mod tests {
         let g5 = crate::metrics::geomean(t5.timings().unwrap());
         // not strictly comparable (different rng draws) but both sane
         assert!(g1 > 0.0 && g5 > 0.0);
+    }
+
+    #[test]
+    fn federated_stream_hit_reproduces_genuine_bookkeeping() {
+        // run 1 evaluates for real; run 2 replays run 1's results out of
+        // the federation store — every trajectory-visible number (clock,
+        // quota, cache stats, log shape) must come out identical
+        let jobs = crate::test_support::distinct_genomes(4);
+        let run = |fed: Option<HashMap<u64, EvalOutcome>>| {
+            let mut p = EvalPlatform::new(
+                SimBackend::new(77),
+                PlatformConfig {
+                    parallelism: 2,
+                    ..Default::default()
+                },
+            );
+            if let Some(map) = fed {
+                p.attach_federation(map);
+            }
+            for g in &jobs {
+                p.submit_stream(g);
+            }
+            let mut outcomes = Vec::new();
+            while let Some(done) = p.poll_completed() {
+                outcomes.push((done.outcome, done.submission_index));
+            }
+            let log = p.log().to_vec();
+            (outcomes, p.wall_clock_s(), p.submissions(), p.cache_stats(), p.federated_hits(), log)
+        };
+        let (outs1, clock1, subs1, stats1, hits1, log1) = run(None);
+        assert_eq!(hits1, 0);
+        assert!(log1.iter().all(|r| !r.federated));
+        let store: HashMap<u64, EvalOutcome> = jobs
+            .iter()
+            .zip(&outs1)
+            .map(|(g, (o, _))| (g.fingerprint_hash(), o.clone()))
+            .collect();
+        let (outs2, clock2, subs2, stats2, hits2, log2) = run(Some(store));
+        assert_eq!(outs1, outs2, "stored results replay bit-identically");
+        assert_eq!(clock1, clock2, "fed hits consume identical lane time");
+        assert_eq!(subs1, subs2, "fed hits consume identical quota");
+        assert_eq!(stats1, stats2, "fed hits leave the same counted-miss footprint");
+        assert_eq!(hits2, jobs.len() as u64);
+        assert!(log2.iter().all(|r| r.federated));
+    }
+
+    #[test]
+    fn federated_batch_hit_consumes_quota_and_aliases_duplicates() {
+        let g = seeds::mfma_seed();
+        let mut first = EvalPlatform::new(SimBackend::new(51), PlatformConfig::default());
+        let orig = first.submit(&g);
+        let mut store = HashMap::new();
+        store.insert(g.fingerprint_hash(), orig.clone());
+        let mut p = EvalPlatform::new(
+            SimBackend::new(51),
+            PlatformConfig {
+                submission_quota: Some(1),
+                ..Default::default()
+            },
+        );
+        p.attach_federation(store);
+        let results = p.submit_batch(&[g.clone(), g.clone()]);
+        assert_eq!(results.len(), 2);
+        assert!(!results[0].cached, "a fed hit is a committed submission, not a cache hit");
+        assert_eq!(results[0].outcome, orig);
+        assert_eq!(results[0].submission_index, Some(0));
+        assert!(results[1].cached, "in-batch duplicate of a fed hit aliases it for free");
+        assert_eq!(results[1].outcome, orig);
+        assert_eq!(p.submissions(), 1);
+        assert!(p.quota_exhausted(), "a fed hit consumes quota like a genuine run");
+        assert_eq!(p.federated_hits(), 1);
+        assert!(p.log()[0].federated);
+        assert!(p.wall_clock_s() > 0.0, "and lane time");
+    }
+
+    #[test]
+    fn checkpoint_restore_skips_federated_log_entries() {
+        // entry 1 comes from the store: no lane backend ever ran it, so
+        // the restore replay must step over it — and post-restore
+        // execution must still match the uninterrupted run exactly
+        let jobs = crate::test_support::distinct_genomes(4);
+        let mut prior = EvalPlatform::new(SimBackend::new(33), PlatformConfig::default());
+        let stored = prior.submit(&jobs[1]);
+        let mut store = HashMap::new();
+        store.insert(jobs[1].fingerprint_hash(), stored);
+        let mk = |fed: HashMap<u64, EvalOutcome>| {
+            let mut p = EvalPlatform::new(
+                SimBackend::new(33),
+                PlatformConfig {
+                    parallelism: 2,
+                    ..Default::default()
+                },
+            );
+            p.enable_state_capture();
+            p.attach_federation(fed);
+            p
+        };
+        let mut live = mk(store.clone());
+        for g in &jobs[..3] {
+            live.submit_stream(g);
+        }
+        while live.poll_completed().is_some() {}
+        assert_eq!(live.federated_hits(), 1);
+        assert!(live.log()[1].federated);
+        let cp = live.checkpoint_state().unwrap();
+        assert_eq!(cp.federated_hits, 1);
+        let committed: Vec<KernelGenome> = jobs[..3].to_vec();
+        let log = live.log().to_vec();
+        let cache_entries: Vec<(u64, EvalOutcome)> = log
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (committed[i].fingerprint_hash(), r.outcome.clone()))
+            .collect();
+        let mut resumed = mk(store);
+        resumed
+            .restore_checkpoint(&cp, log, cache_entries, &committed)
+            .unwrap();
+        assert_eq!(resumed.federated_hits(), 1);
+        live.submit_stream(&jobs[3]);
+        resumed.submit_stream(&jobs[3]);
+        let a = live.poll_completed().unwrap();
+        let b = resumed.poll_completed().unwrap();
+        assert_eq!(a.outcome, b.outcome, "post-restore evaluation stays bit-identical");
+        assert_eq!(live.wall_clock_s(), resumed.wall_clock_s());
     }
 }

@@ -13,6 +13,8 @@
 //!   baseline    run a baseline tuner (random | hillclimb | anneal)
 //!   inspect     print a genome's HIP-like sketch + simulator breakdown
 //!   eval-pjrt   check + time the compiled artifact catalog over PJRT
+//!   compact     rewrite JSONL journals (run, campaign, or federated
+//!               store) into indexed binary segments (DESIGN.md §12)
 //!
 //! `run`, `campaign`, `baseline`, and `inspect` accept `--workload
 //! <name>` (any registry key from `workloads`); the default is the
@@ -22,7 +24,10 @@
 //! `--profile-guided true|false` (bottleneck-conditioned experiment
 //! design, DESIGN.md §11), `--store <dir>` (the durable run ledger,
 //! `[store] dir`), and
-//! `--halt-after <N>` (testing: simulate a crash after N submissions);
+//! `--halt-after <N>` (testing: simulate a crash after N submissions),
+//! and the federated-archive knobs `--federation-dir <dir>`,
+//! `--warm-start-k <N>`, `--federation-read-only true|false`
+//! (`[federation]`, DESIGN.md §12);
 //! like `--workload`, the flags win over the config file.
 //!
 //! Arguments use `--key value` pairs (offline build: no clap; parsing
@@ -117,6 +122,29 @@ fn load_config(flags: &HashMap<String, String>) -> Result<RunConfig, String> {
             }
         };
     }
+    if let Some(dir) = flags.get("federation-dir") {
+        if dir.is_empty() {
+            return Err("bad --federation-dir (want a directory)".into());
+        }
+        cfg.federation_dir = Some(dir.clone());
+    }
+    if let Some(k) = flags.get("warm-start-k") {
+        cfg.federation_warm_start_k = k
+            .parse()
+            .map_err(|_| "bad --warm-start-k (want an elite count)")?;
+    }
+    if let Some(ro) = flags.get("federation-read-only") {
+        cfg.federation_read_only = match ro.as_str() {
+            // a bare trailing `--federation-read-only` parses as empty
+            "true" | "" => true,
+            "false" => false,
+            other => {
+                return Err(format!(
+                    "bad --federation-read-only '{other}' (want true|false)"
+                ))
+            }
+        };
+    }
     Ok(cfg)
 }
 
@@ -154,6 +182,12 @@ fn print_run_report(
     let profiles = report::render_profiles(outcome.profile_mix.as_ref());
     if !profiles.is_empty() {
         print!("{profiles}");
+    }
+    // empty unless the federated archive contributed: an off run's
+    // report stays byte-identical to pre-federation output
+    let federation = report::render_federation(outcome.federation.as_ref());
+    if !federation.is_empty() {
+        print!("{federation}");
     }
     println!("{}", report::render_convergence("scientist", &outcome.curve));
     if flags.contains_key("lineage") {
@@ -465,6 +499,41 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_compact(flags: &HashMap<String, String>) -> Result<(), String> {
+    use gpu_kernel_scientist::store;
+    match (flags.get("store"), flags.get("federation-dir")) {
+        (Some(dir), None) => {
+            let path = Path::new(dir);
+            // campaign stores compact every member ledger
+            if let Some(workloads) = store::read_campaign_manifest(path)? {
+                for w in &workloads {
+                    let member = path.join(w);
+                    let did = store::compact_run_store(&member)?;
+                    println!(
+                        "{}: {}",
+                        member.display(),
+                        if did { "compacted" } else { "already segment-only" }
+                    );
+                }
+                return Ok(());
+            }
+            let did = store::compact_run_store(path)?;
+            println!(
+                "{dir}: {}",
+                if did { "compacted" } else { "already segment-only" }
+            );
+            Ok(())
+        }
+        (None, Some(dir)) => {
+            let n = store::federation::compact_dir(Path::new(dir))?;
+            println!("{dir}: {n} federation file(s) compacted");
+            Ok(())
+        }
+        (Some(_), Some(_)) => Err("compact takes --store OR --federation-dir, not both".into()),
+        (None, None) => Err("compact requires --store <dir> or --federation-dir <dir>".into()),
+    }
+}
+
 fn cmd_eval_pjrt(flags: &HashMap<String, String>) -> Result<(), String> {
     let dir = flags
         .get("artifacts")
@@ -512,12 +581,14 @@ fn main() {
         "baseline" => cmd_baseline(&flags),
         "inspect" => cmd_inspect(&flags),
         "eval-pjrt" => cmd_eval_pjrt(&flags),
+        "compact" => cmd_compact(&flags),
         _ => {
             eprintln!(
-                "usage: kernel-scientist <run|campaign|resume|replay|workloads|table1|leaderboard|baseline|inspect|eval-pjrt> \
+                "usage: kernel-scientist <run|campaign|resume|replay|workloads|table1|leaderboard|baseline|inspect|eval-pjrt|compact> \
                  [--workload name] [--workloads a,b,c] [--lineage true] \
                  [--seed N] [--budget N] [--parallelism N] [--pipeline true|false] \
                  [--profile-guided true|false] [--store dir] [--halt-after N] \
+                 [--federation-dir dir] [--warm-start-k N] [--federation-read-only true|false] \
                  [--config file.toml] [--tuner random|hillclimb|anneal] \
                  [--seed-kernel name] [--artifacts dir] [--save-population file.jsonl]"
             );

@@ -120,6 +120,20 @@ pub fn render_profiles(mix: Option<&crate::sim::ProfileMix>) -> String {
     }
 }
 
+/// One-line federated-archive summary (DESIGN.md §12). Empty when the
+/// run carried no federation stats (`[federation]` off) or the archive
+/// contributed nothing — so off-run report output stays byte-identical
+/// to a build without the federation layer.
+pub fn render_federation(stats: Option<&crate::store::FederationStats>) -> String {
+    match stats {
+        Some(s) if s.hits > 0 || s.warm_start_injected > 0 => format!(
+            "federation: {} cross-run cache hit(s), {} warm-start elite(s) injected\n",
+            s.hits, s.warm_start_injected
+        ),
+        _ => String::new(),
+    }
+}
+
 /// Render a campaign's per-workload summary as a markdown table. The
 /// bottleneck-mix column appears only when at least one run carried a
 /// profile mix (`[profile] guided`): an all-off campaign's table stays
@@ -266,6 +280,7 @@ mod tests {
                     ..Default::default()
                 },
                 profile_mix: None,
+                federation: None,
             },
         };
         let out = CampaignOutcome {
@@ -304,6 +319,7 @@ mod tests {
                     leaderboard_us: None,
                     pipeline: PipelineStats::default(),
                     profile_mix: Some(mix),
+                    federation: None,
                 },
             }],
         };
@@ -328,6 +344,25 @@ mod tests {
         mix.add(Bottleneck::Memory);
         let s = render_profiles(Some(&mix));
         assert_eq!(s, "bottlenecks: memory 2, lds 1 (3 profiled submissions)\n");
+    }
+
+    #[test]
+    fn federation_summary_renders_only_when_the_archive_contributed() {
+        use crate::store::FederationStats;
+        assert_eq!(render_federation(None), "");
+        assert_eq!(
+            render_federation(Some(&FederationStats::default())),
+            "",
+            "an attached-but-idle archive renders nothing"
+        );
+        let s = render_federation(Some(&FederationStats {
+            hits: 7,
+            warm_start_injected: 2,
+        }));
+        assert_eq!(
+            s,
+            "federation: 7 cross-run cache hit(s), 2 warm-start elite(s) injected\n"
+        );
     }
 
     #[test]

@@ -25,9 +25,11 @@
 //! order — [`resume_campaign`] continues every member after a crash.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use super::{RunOutcome, ScientistRun};
 use crate::config::RunConfig;
+use crate::store::FederationSnapshot;
 use crate::workload::{self, Workload};
 
 /// Configuration of a multi-workload campaign.
@@ -99,6 +101,15 @@ pub fn run_campaign(config: &CampaignConfig) -> Result<CampaignOutcome, String> 
         // still leave a resumable campaign directory
         crate::store::write_campaign_manifest(Path::new(dir), &config.workloads)?;
     }
+    // Load the federated archive ONCE, before any member thread spawns,
+    // and Arc-share the snapshot: members that finish early publish new
+    // run files into the store directory, and a member that self-loaded
+    // mid-campaign would see a different archive depending on thread
+    // timing — breaking campaign determinism (DESIGN.md §12).
+    let fed_snapshot: Option<Arc<FederationSnapshot>> = match &config.base.federation_dir {
+        Some(dir) => Some(Arc::new(FederationSnapshot::load(Path::new(dir))?)),
+        None => None,
+    };
     let runs: Vec<Result<WorkloadRunResult, String>> = std::thread::scope(|scope| {
         let handles: Vec<_> = config
             .workloads
@@ -115,8 +126,9 @@ pub fn run_campaign(config: &CampaignConfig) -> Result<CampaignOutcome, String> 
                         .map(|d| crate::store::campaign_member_dir(d, name)),
                     ..config.base.clone()
                 };
+                let snapshot = fed_snapshot.clone();
                 scope.spawn(move || -> Result<WorkloadRunResult, String> {
-                    let mut run = ScientistRun::new(cfg)?;
+                    let mut run = ScientistRun::new_with_snapshot(cfg, snapshot)?;
                     let outcome = run.run_to_completion()?;
                     Ok(WorkloadRunResult {
                         workload: name.clone(),
@@ -157,6 +169,11 @@ pub fn resume_campaign(dir: &Path, halt_after: Option<u64>) -> Result<CampaignOu
             .map(|name| {
                 let member = dir.join(name);
                 scope.spawn(move || -> Result<WorkloadRunResult, String> {
+                    // each member re-attaches the federated archive
+                    // itself inside `resume`; files published by sibling
+                    // members cannot perturb it (the eval-cache merge is
+                    // workload-filtered and warm-start seeding never
+                    // re-runs on resume), so no shared snapshot is needed
                     let mut run = ScientistRun::resume(&member)?;
                     run.config.halt_after = halt_after;
                     let outcome = run.run_to_completion()?;

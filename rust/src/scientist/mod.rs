@@ -53,7 +53,8 @@ use crate::metrics::ConvergenceCurve;
 use crate::population::{EvalOutcome, Individual, Population};
 use crate::sim::SimBackend;
 use crate::store::{
-    journal, Checkpoint, ExperimentRecord, JournalRecord, PendingPlan, PlanRecord, RunStore,
+    config_digest, federation, journal, Checkpoint, ExperimentRecord, FedEntry,
+    FederationSnapshot, FederationStats, JournalRecord, PendingPlan, PlanRecord, RunStore,
 };
 use crate::workload::{self, Workload};
 
@@ -89,6 +90,11 @@ pub struct RunOutcome {
     /// outcomes/reports is part of the knob's surface area so that
     /// guided-off output stays byte-identical to pre-profile builds.
     pub profile_mix: Option<crate::sim::ProfileMix>,
+    /// Federated-archive counters (DESIGN.md §12): cross-run cache hits
+    /// and warm-start elites injected. `None` when `[federation]` is
+    /// off, keeping off-run reports byte-identical to pre-federation
+    /// builds.
+    pub federation: Option<FederationStats>,
 }
 
 /// A full scientist run: platform + population + agents + loop state.
@@ -115,7 +121,24 @@ pub struct ScientistRun<B: EvalBackend> {
     /// Set when `config.halt_after` aborted the scheduler (simulated
     /// crash: no final checkpoint was written).
     halted: bool,
+    /// Live federation context; `None` unless the config names a
+    /// `[federation] dir` (DESIGN.md §12).
+    federation: Option<FederationCtx>,
 }
+
+/// Live federation state: the loaded cross-run snapshot, this run's
+/// (workload, config) digest, and the warm-start injection count.
+struct FederationCtx {
+    snapshot: Arc<FederationSnapshot>,
+    digest: u64,
+    warm_injected: u64,
+}
+
+/// Experiment-label prefix for warm-start elites. `resume` recovers
+/// the injection count by scanning the rebuilt ledger for it, so the
+/// label doubles as durable provenance — change it and old stores
+/// under-count warm starts after resume.
+const WARM_START_LABEL: &str = "federated warm-start elite";
 
 /// Mid-run scheduler state carried across a resume: the stall streak,
 /// whether planning had gone dead, and every planned-but-uncommitted
@@ -235,6 +258,20 @@ impl ScientistRun<SimBackend> {
     /// the configured workload's seed kernels (`config.workload`
     /// defaults to the paper's fp8 GEMM, reproducing §3 exactly).
     pub fn new(config: RunConfig) -> Result<Self, String> {
+        Self::new_with_snapshot(config, None)
+    }
+
+    /// Like [`ScientistRun::new`], but share a pre-loaded federation
+    /// snapshot. Campaigns load the federated store **once** before
+    /// spawning members and `Arc`-share it so every member sees the
+    /// same archive contents regardless of thread launch order
+    /// (DESIGN.md §12). `None` falls back to self-loading from
+    /// `config.federation_dir` (and to no federation when that is
+    /// unset).
+    pub fn new_with_snapshot(
+        config: RunConfig,
+        snapshot: Option<Arc<FederationSnapshot>>,
+    ) -> Result<Self, String> {
         let workload = workload::lookup(&config.workload)
             .ok_or_else(|| format!("unknown workload '{}'", config.workload))?;
         let backend = SimBackend::new(config.seed)
@@ -250,7 +287,7 @@ impl ScientistRun<SimBackend> {
             },
         )
         .with_feedback_suite(workload.feedback_suite());
-        Self::with_platform(config, platform)
+        Self::with_platform_snapshot(config, platform, snapshot)
     }
 
     /// Reconstruct a crashed (or halted) run from its store directory
@@ -325,7 +362,31 @@ impl ScientistRun<SimBackend> {
                     .collect(),
             }),
             halted: false,
+            federation: None,
         };
+        // Re-attach the federated archive from the persisted config
+        // BEFORE restoring the checkpoint: attachment requires a
+        // platform with no submission history, and the restored run
+        // must consult the same cross-run results the original did.
+        // The warm-start count is recovered from the ledger (injected
+        // elites journal with a recognizable experiment label).
+        if let Some(fdir) = run.config.federation_dir.clone() {
+            let snap = Arc::new(FederationSnapshot::load(Path::new(&fdir))?);
+            let digest = config_digest(&run.config, run.workload.cost_model_version());
+            run.platform
+                .attach_federation(snap.results_for(run.workload.name(), digest));
+            let warm_injected = run
+                .population
+                .members()
+                .iter()
+                .filter(|m| m.experiment.starts_with(WARM_START_LABEL))
+                .count() as u64;
+            run.federation = Some(FederationCtx {
+                snapshot: snap,
+                digest,
+                warm_injected,
+            });
+        }
         run.agents.llm.restore_rng(cp.llm_rng);
         run.agents.knowledge.findings = FindingsDoc::from_json(&cp.findings)?;
         run.platform.restore_checkpoint(
@@ -349,6 +410,16 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
     pub fn with_platform(
         config: RunConfig,
         platform: EvalPlatform<B>,
+    ) -> Result<Self, String> {
+        Self::with_platform_snapshot(config, platform, None)
+    }
+
+    /// [`ScientistRun::with_platform`] with an optional pre-loaded
+    /// federation snapshot (see [`ScientistRun::new_with_snapshot`]).
+    pub fn with_platform_snapshot(
+        config: RunConfig,
+        platform: EvalPlatform<B>,
+        snapshot: Option<Arc<FederationSnapshot>>,
     ) -> Result<Self, String> {
         // the backend is the single source of truth for what is being
         // evaluated; a config naming a different workload would submit
@@ -380,7 +451,28 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             store: None,
             resume_state: None,
             halted: false,
+            federation: None,
         };
+        // Attach the federated archive before ANY submission (seeds,
+        // probes, warm-start) so every genome this run ever evaluates
+        // can be served from cross-run history (DESIGN.md §12).
+        let snapshot = match (&run.config.federation_dir, snapshot) {
+            (Some(dir), None) => Some(Arc::new(FederationSnapshot::load(Path::new(dir))?)),
+            (Some(_), pre @ Some(_)) => pre,
+            // a snapshot with no [federation] dir configured is inert:
+            // off must mean off
+            (None, _) => None,
+        };
+        if let Some(snap) = snapshot {
+            let digest = config_digest(&run.config, run.workload.cost_model_version());
+            run.platform
+                .attach_federation(snap.results_for(run.workload.name(), digest));
+            run.federation = Some(FederationCtx {
+                snapshot: snap,
+                digest,
+                warm_injected: 0,
+            });
+        }
         if let Some(dir) = run.config.store_dir.clone() {
             // checkpoints need backend-state snapshots at dispatch
             // points; store-less runs never pay for them
@@ -468,6 +560,46 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 Provenance::seed(submitted_at),
             );
         }
+        // Warm-start seeding (DESIGN.md §12): inject prior-campaign
+        // elites mined from the federated archive as extra seed
+        // candidates. The mined list is already deterministic (geomean
+        // asc, fingerprint tie-break); injection rides the same seed
+        // provenance path, so downstream planning treats elites exactly
+        // like provided seeds.
+        let elites = match &self.federation {
+            Some(ctx) if self.config.federation_warm_start_k > 0 => ctx.snapshot.mine_elites(
+                self.workload.as_ref(),
+                self.config.federation_warm_start_k as usize,
+            ),
+            _ => Vec::new(),
+        };
+        let mut injected = 0u64;
+        for (_fp, genome, prior_geomean) in elites {
+            // budget the elite like any other submission; an exhausted
+            // quota is not an error here (unlike required seeds above)
+            if self.platform.quota_exhausted() {
+                break;
+            }
+            // a workload seed may already be someone's elite — skip
+            // duplicates rather than burn a submission re-proving them
+            if self.population.find_duplicate(&genome).is_some() {
+                continue;
+            }
+            let outcome = self.platform.submit(&genome);
+            let submitted_at = self.platform.submissions();
+            self.record_individual(
+                vec![],
+                genome,
+                format!("{WARM_START_LABEL} ({prior_geomean:.1} us prior geomean)"),
+                "transferred from the federated archive".into(),
+                outcome,
+                Provenance::seed(submitted_at),
+            );
+            injected += 1;
+        }
+        if let Some(ctx) = &mut self.federation {
+            ctx.warm_injected = injected;
+        }
         // the loop cannot plan before every seed result is back, so
         // both schedulers start from a post-seed barrier
         let submitted = self.platform.submissions() - before;
@@ -526,6 +658,13 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 Some(i) => self.platform.log()[i as usize].profile.clone(),
                 None => self.platform.profile_of(&individual.genome),
             };
+            // cross-run hit provenance travels with the entry so resume
+            // knows which log lines must not be replayed against the
+            // backend (the lane never actually evaluated them)
+            let federated = match prov.submission_index {
+                Some(i) => self.platform.log()[i as usize].federated,
+                None => false,
+            };
             let record = JournalRecord::Exp(ExperimentRecord {
                 individual,
                 submitted_at: prov.submitted_at,
@@ -536,6 +675,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 plan: prov.plan,
                 screened: prov.screened,
                 profile,
+                federated,
             });
             self.store.as_mut().expect("store checked above").append(&record);
         }
@@ -863,7 +1003,58 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 self.platform.lane_occupancy(),
             ),
             profile_mix,
+            federation: self.federation.as_ref().map(|ctx| FederationStats {
+                hits: self.platform.federated_hits(),
+                warm_start_injected: ctx.warm_injected,
+            }),
         })
+    }
+
+    /// Publish this run's distinct evaluated genomes to the federated
+    /// store (DESIGN.md §12). Called only on a successful, non-halted
+    /// completion: a partial run never writes a partial archive file.
+    /// The per-run filename is a pure function of (workload, seed,
+    /// digest), so re-running the identical config overwrites the file
+    /// with identical contents — publication is idempotent.
+    fn publish_federation(&self) -> Result<(), String> {
+        let Some(ctx) = &self.federation else {
+            return Ok(());
+        };
+        if self.config.federation_read_only {
+            return Ok(());
+        }
+        let dir = self
+            .config
+            .federation_dir
+            .as_ref()
+            .expect("federation ctx implies a configured dir");
+        // first occurrence per fingerprint wins, matching the reader's
+        // merge order; failures are published too — a sibling run
+        // learning "this genome does not compile" is as valuable as a
+        // timing
+        let mut seen = HashSet::new();
+        let mut entries = Vec::new();
+        for m in self.population.members() {
+            let fp = m.genome.fingerprint_hash();
+            if !seen.insert(fp) {
+                continue;
+            }
+            entries.push(FedEntry {
+                workload: self.workload.name().to_string(),
+                digest: ctx.digest,
+                fingerprint: fp,
+                genome: m.genome.clone(),
+                outcome: m.outcome.clone(),
+            });
+        }
+        federation::write_run_results(
+            Path::new(dir),
+            self.workload.name(),
+            self.config.seed,
+            ctx.digest,
+            &entries,
+        )?;
+        Ok(())
     }
 }
 
@@ -880,7 +1071,13 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
         } else {
             self.pump_lockstep()?;
         }
-        self.outcome()
+        let outcome = self.outcome()?;
+        // a halted (simulated-crash) run must not publish: the resumed
+        // continuation will, once it actually completes
+        if !self.halted {
+            self.publish_federation()?;
+        }
+        Ok(outcome)
     }
 
     /// The lockstep barrier loop, with store checkpoints at the

@@ -42,7 +42,12 @@ pub const CHECKPOINT_FILE: &str = "checkpoint.json";
 /// the profile layer (DESIGN.md §11) added per-experiment
 /// `ProfileReport`s to journal `exp` records and the `[profile]` knob
 /// to `config` — a resume must not silently drop profile-era ledger
-/// state onto a pre-profile replayer or vice versa.
+/// state onto a pre-profile replayer or vice versa. The federation
+/// layer (DESIGN.md §12) added `platform.federated_hits` and the
+/// journal `federated` flag *without* a bump: both parse tolerantly
+/// (absent → 0 / false), so pre-federation checkpoints restore
+/// unchanged and federation-off checkpoints are byte-identical to
+/// version-4 ones.
 const VERSION: u64 = 4;
 
 /// Scheduler counters snapshot (mirrors the run's private
@@ -202,9 +207,8 @@ impl Checkpoint {
             ),
             ("llm_rng", rng_words(&self.llm_rng)),
             ("findings", self.findings.clone()),
-            (
-                "platform",
-                Json::obj(vec![
+            ("platform", {
+                let mut pairs = vec![
                     (
                         "lane_busy_until",
                         Json::Arr(p.lane_busy_until.iter().map(|&t| Json::Num(t)).collect()),
@@ -220,8 +224,14 @@ impl Checkpoint {
                     ),
                     ("stream_threaded", Json::Bool(p.stream_threaded)),
                     ("stream_log_start", Json::Num(p.stream_log_start as f64)),
-                ]),
-            ),
+                ];
+                // emitted only when nonzero: federation-off checkpoints
+                // stay byte-identical to pre-federation ones
+                if p.federated_hits > 0 {
+                    pairs.push(("federated_hits", Json::Num(p.federated_hits as f64)));
+                }
+                Json::obj(pairs)
+            }),
             (
                 "pending",
                 Json::Arr(self.pending.iter().map(|p| p.to_json()).collect()),
@@ -302,6 +312,13 @@ impl Checkpoint {
                 },
                 stream_threaded: req_bool(p, "stream_threaded")?,
                 stream_log_start: req_u64(p, "stream_log_start")?,
+                federated_hits: match p.get("federated_hits") {
+                    None | Some(Json::Null) => 0,
+                    Some(x) => x
+                        .as_f64()
+                        .ok_or("checkpoint: bad federated_hits")?
+                        as u64,
+                },
             },
             pending: v
                 .get("pending")

@@ -80,6 +80,11 @@ pub struct ExperimentRecord {
     /// when the backend has no counter model or the genome failed its
     /// gates. Absent in pre-profile journals (parsed `None`).
     pub profile: Option<ProfileReport>,
+    /// Served from the federated cross-run store (DESIGN.md §12):
+    /// quota and clock advanced, no backend evaluated it. Emitted only
+    /// when true, so federation-off journals — and pre-federation
+    /// journals, which parse as false — stay byte-identical.
+    pub federated: bool,
 }
 
 fn policy_token(p: ReferencePolicy) -> &'static str {
@@ -103,6 +108,79 @@ fn opt_num(v: Option<f64>) -> Json {
     v.map(Json::Num).unwrap_or(Json::Null)
 }
 
+/// Streaming JSON-object writer shared by the `plan`/`exp` emitters:
+/// one comma/key/value grammar instead of the two hand-interleaved
+/// `push_str` chains PR 6/7 grew. Callers emit fields in sorted key
+/// order themselves — that ordering is the byte-identity contract with
+/// the tree emitter ([`JournalRecord::to_json`]), refereed by
+/// `streamed_record_matches_tree_emitter`. Keys must not need JSON
+/// escaping (ours are ASCII identifiers).
+struct FieldWriter<'a> {
+    out: &'a mut String,
+    first: bool,
+}
+
+impl<'a> FieldWriter<'a> {
+    fn new(out: &'a mut String) -> Self {
+        out.push('{');
+        FieldWriter { out, first: true }
+    }
+
+    /// Emit the separator + `"key":` prefix and hand back the buffer
+    /// for the value — the escape hatch nested `write_json` values
+    /// (individual, profile) stream through.
+    fn value_slot(&mut self, key: &str) -> &mut String {
+        if self.first {
+            self.first = false;
+        } else {
+            self.out.push(',');
+        }
+        self.out.push('"');
+        self.out.push_str(key);
+        self.out.push_str("\":");
+        self.out
+    }
+
+    fn num(&mut self, key: &str, v: f64) {
+        json::push_num_value(self.value_slot(key), v);
+    }
+
+    fn opt_num(&mut self, key: &str, v: Option<f64>) {
+        match v {
+            Some(v) => self.num(key, v),
+            None => self.null(key),
+        }
+    }
+
+    fn str(&mut self, key: &str, v: &str) {
+        json::push_str_value(self.value_slot(key), v);
+    }
+
+    fn bool(&mut self, key: &str, v: bool) {
+        self.value_slot(key).push_str(if v { "true" } else { "false" });
+    }
+
+    fn null(&mut self, key: &str) {
+        self.value_slot(key).push_str("null");
+    }
+
+    fn str_arr(&mut self, key: &str, items: &[String]) {
+        let out = self.value_slot(key);
+        out.push('[');
+        for (i, s) in items.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json::push_str_value(out, s);
+        }
+        out.push(']');
+    }
+
+    fn finish(self) {
+        self.out.push('}');
+    }
+}
+
 impl JournalRecord {
     pub fn to_json(&self) -> Json {
         match self {
@@ -123,27 +201,35 @@ impl JournalRecord {
                 ("chosen", str_arr(&p.chosen)),
                 ("screened", Json::Num(p.screened as f64)),
             ]),
-            JournalRecord::Exp(e) => Json::obj(vec![
-                ("t", Json::Str("exp".into())),
-                ("ind", e.individual.to_json()),
-                ("submitted_at", Json::Num(e.submitted_at as f64)),
-                (
-                    "submission_index",
-                    opt_num(e.submission_index.map(|i| i as f64)),
-                ),
-                ("cached", Json::Bool(e.cached)),
-                ("lane", opt_num(e.lane.map(|l| l as f64))),
-                ("completed_at_s", opt_num(e.completed_at_s)),
-                ("plan", opt_num(e.plan.map(|p| p as f64))),
-                ("screened", Json::Bool(e.screened)),
-                (
-                    "profile",
-                    e.profile
-                        .as_ref()
-                        .map(|p| p.to_json())
-                        .unwrap_or(Json::Null),
-                ),
-            ]),
+            JournalRecord::Exp(e) => {
+                let mut pairs = vec![
+                    ("t", Json::Str("exp".into())),
+                    ("ind", e.individual.to_json()),
+                    ("submitted_at", Json::Num(e.submitted_at as f64)),
+                    (
+                        "submission_index",
+                        opt_num(e.submission_index.map(|i| i as f64)),
+                    ),
+                    ("cached", Json::Bool(e.cached)),
+                    ("lane", opt_num(e.lane.map(|l| l as f64))),
+                    ("completed_at_s", opt_num(e.completed_at_s)),
+                    ("plan", opt_num(e.plan.map(|p| p as f64))),
+                    ("screened", Json::Bool(e.screened)),
+                    (
+                        "profile",
+                        e.profile
+                            .as_ref()
+                            .map(|p| p.to_json())
+                            .unwrap_or(Json::Null),
+                    ),
+                ];
+                // only-when-true: federation-off journal bytes are
+                // identical to a build without the federation layer
+                if e.federated {
+                    pairs.push(("federated", Json::Bool(true)));
+                }
+                Json::obj(pairs)
+            }
         }
     }
 
@@ -155,73 +241,43 @@ impl JournalRecord {
     /// form stays as the parse-side contract and golden reference
     /// (`streamed_record_matches_tree_emitter`).
     pub fn write_json(&self, out: &mut String) {
-        fn opt_u64(out: &mut String, v: Option<u64>) {
-            match v {
-                Some(v) => json::push_num_value(out, v as f64),
-                None => out.push_str("null"),
-            }
-        }
         match self {
             JournalRecord::Plan(p) => {
-                out.push_str("{\"avenues\":[");
-                for (i, a) in p.avenues.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    json::push_str_value(out, a);
-                }
-                out.push_str("],\"base\":");
-                json::push_str_value(out, &p.base_id);
-                out.push_str(",\"chosen\":[");
-                for (i, c) in p.chosen.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    json::push_str_value(out, c);
-                }
-                out.push_str("],\"iteration\":");
-                json::push_num_value(out, p.iteration as f64);
-                out.push_str(",\"log_pos\":");
-                json::push_num_value(out, p.log_pos as f64);
-                out.push_str(",\"policy\":");
+                let mut w = FieldWriter::new(out);
+                w.str_arr("avenues", &p.avenues);
+                w.str("base", &p.base_id);
+                w.str_arr("chosen", &p.chosen);
+                w.num("iteration", p.iteration as f64);
+                w.num("log_pos", p.log_pos as f64);
                 match p.policy {
-                    Some(pol) => json::push_str_value(out, policy_token(pol)),
-                    None => out.push_str("null"),
+                    Some(pol) => w.str("policy", policy_token(pol)),
+                    None => w.null("policy"),
                 }
-                out.push_str(",\"rationale\":");
-                json::push_str_value(out, &p.rationale);
-                out.push_str(",\"reference\":");
-                json::push_str_value(out, &p.reference_id);
-                out.push_str(",\"screened\":");
-                json::push_num_value(out, p.screened as f64);
-                out.push_str(",\"t\":\"plan\"}");
+                w.str("rationale", &p.rationale);
+                w.str("reference", &p.reference_id);
+                w.num("screened", p.screened as f64);
+                w.str("t", "plan");
+                w.finish();
             }
             JournalRecord::Exp(e) => {
-                out.push_str("{\"cached\":");
-                out.push_str(if e.cached { "true" } else { "false" });
-                out.push_str(",\"completed_at_s\":");
-                match e.completed_at_s {
-                    Some(t) => json::push_num_value(out, t),
-                    None => out.push_str("null"),
+                let mut w = FieldWriter::new(out);
+                w.bool("cached", e.cached);
+                w.opt_num("completed_at_s", e.completed_at_s);
+                if e.federated {
+                    w.bool("federated", true);
                 }
-                out.push_str(",\"ind\":");
-                e.individual.write_json(out);
-                out.push_str(",\"lane\":");
-                opt_u64(out, e.lane.map(u64::from));
-                out.push_str(",\"plan\":");
-                opt_u64(out, e.plan.map(|p| p as u64));
-                out.push_str(",\"profile\":");
+                e.individual.write_json(w.value_slot("ind"));
+                w.opt_num("lane", e.lane.map(f64::from));
+                w.opt_num("plan", e.plan.map(|p| p as f64));
                 match &e.profile {
-                    Some(p) => p.write_json(out),
-                    None => out.push_str("null"),
+                    Some(p) => p.write_json(w.value_slot("profile")),
+                    None => w.null("profile"),
                 }
-                out.push_str(",\"screened\":");
-                out.push_str(if e.screened { "true" } else { "false" });
-                out.push_str(",\"submission_index\":");
-                opt_u64(out, e.submission_index);
-                out.push_str(",\"submitted_at\":");
-                json::push_num_value(out, e.submitted_at as f64);
-                out.push_str(",\"t\":\"exp\"}");
+                w.bool("screened", e.screened);
+                w.opt_num("submission_index", e.submission_index.map(|i| i as f64));
+                w.num("submitted_at", e.submitted_at as f64);
+                w.str("t", "exp");
+                w.finish();
             }
         }
     }
@@ -286,6 +342,12 @@ impl JournalRecord {
                 profile: match v.get("profile") {
                     None | Some(Json::Null) => None,
                     Some(p) => Some(ProfileReport::from_json(p)?),
+                },
+                // tolerant: the key exists only on federated hits —
+                // pre-federation and federation-off journals omit it
+                federated: match v.get("federated") {
+                    None | Some(Json::Null) => false,
+                    Some(x) => x.as_bool().ok_or("journal: bad federated flag")?,
                 },
             })),
             other => Err(format!("journal: unknown record tag '{other}'")),
@@ -371,6 +433,7 @@ pub fn rebuild(
                 lane,
                 outcome: e.individual.outcome.clone(),
                 profile: e.profile.clone(),
+                federated: e.federated,
             });
             cache_entries.push((
                 e.individual.genome.fingerprint_hash(),
@@ -473,6 +536,7 @@ mod tests {
                 completed_at_s: Some(810.0),
                 plan: Some(2),
                 screened: true,
+                federated: false,
                 profile: Some(ProfileReport {
                     compute_us: 10.5,
                     lds_us: 2.25,
@@ -499,6 +563,7 @@ mod tests {
                 completed_at_s: None,
                 plan: None,
                 screened: false,
+                federated: false,
                 profile: None,
             }),
         ]
@@ -565,6 +630,42 @@ mod tests {
         // other fields survive the stripped parse unchanged
         assert_eq!(parsed.submission_index, e.submission_index);
         assert!(parsed.screened);
+    }
+
+    #[test]
+    fn federated_flag_emits_only_when_set_and_parses_tolerantly() {
+        let records = sample_records();
+        let JournalRecord::Exp(e) = &records[2] else {
+            panic!("fixture moved");
+        };
+        // non-federated entries never carry the key: federation-off
+        // journal bytes match a build without the federation layer
+        let mut base_line = String::new();
+        records[2].write_json(&mut base_line);
+        assert!(!base_line.contains("federated"), "{base_line}");
+        let JournalRecord::Exp(parsed) =
+            JournalRecord::from_json(&json::parse(&base_line).unwrap()).unwrap()
+        else {
+            panic!("tag lost");
+        };
+        assert!(!parsed.federated, "absent key parses as false");
+        // a federated hit emits the key, streamed == tree, roundtrips
+        let mut fed = e.clone();
+        fed.federated = true;
+        let fed_rec = JournalRecord::Exp(fed);
+        let mut line = String::new();
+        fed_rec.write_json(&mut line);
+        assert_eq!(line, fed_rec.to_json().to_string());
+        assert!(
+            line.contains(",\"federated\":true,\"ind\":"),
+            "sorted between completed_at_s and ind: {line}"
+        );
+        let JournalRecord::Exp(parsed) =
+            JournalRecord::from_json(&json::parse(&line).unwrap()).unwrap()
+        else {
+            panic!("tag lost");
+        };
+        assert!(parsed.federated);
     }
 
     #[test]

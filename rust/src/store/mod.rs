@@ -27,15 +27,19 @@
 //! durability subsystem that drops writes is worse than none.
 
 pub mod checkpoint;
+pub mod federation;
 pub mod journal;
 pub mod replay;
+pub mod segment;
 
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 pub use checkpoint::{Checkpoint, PendingPlan, SchedSnapshot};
+pub use federation::{config_digest, FedEntry, FederationSnapshot, FederationStats};
 pub use journal::{ExperimentRecord, JournalRecord, PlanRecord, RebuiltLedger};
 pub use replay::{replay, ReplayedRun};
+pub use segment::SEGMENT_FILE;
 
 pub const JOURNAL_FILE: &str = "journal.jsonl";
 const CAMPAIGN_MANIFEST: &str = "campaign.json";
@@ -72,6 +76,10 @@ impl RunStore {
         for stale in [
             checkpoint::CHECKPOINT_FILE.to_string(),
             format!("{}.tmp", checkpoint::CHECKPOINT_FILE),
+            // a compacted predecessor's segment: a fresh run's journal
+            // must never coexist with a stale segment of the old one
+            segment::SEGMENT_FILE.to_string(),
+            format!("{}.tmp", segment::SEGMENT_FILE),
         ] {
             let path = dir.join(&stale);
             if path.exists() {
@@ -101,6 +109,17 @@ impl RunStore {
     ) -> Result<(RunStore, Checkpoint, Vec<JournalRecord>), String> {
         let cp = Checkpoint::load(dir)?;
         let path = dir.join(JOURNAL_FILE);
+        // a compacted store holds `journal.seg` instead of the JSONL:
+        // rehydrate it (segments preserve exact line bytes, so the
+        // checkpoint's journal_bytes marker stays valid) and drop the
+        // segment — resumption appends, which would stale it
+        let seg_path = dir.join(segment::SEGMENT_FILE);
+        if !path.exists() && seg_path.exists() {
+            let text = segment::rehydrate_jsonl(&seg_path)?;
+            std::fs::write(&path, &text).map_err(|e| format!("{}: {e}", path.display()))?;
+            std::fs::remove_file(&seg_path)
+                .map_err(|e| format!("{}: {e}", seg_path.display()))?;
+        }
         let text = std::fs::read_to_string(&path)
             .map_err(|e| format!("{}: {e}", path.display()))?;
         if (text.len() as u64) < cp.journal_bytes {
@@ -210,6 +229,68 @@ impl RunStore {
     }
 }
 
+/// Compact a run store's `journal.jsonl` into its indexed binary
+/// segment form (`journal.seg`, [`segment`]): O(index) cold loads for
+/// fingerprint-addressed readers, exact-byte rehydration for `resume`.
+/// The JSONL original is removed only after the written segment
+/// verifies by read-back against the original bytes — the checkpoint's
+/// `journal_bytes` marker must survive a compact → resume round trip.
+/// Returns `false` when the store is already segment-only.
+pub fn compact_run_store(dir: &Path) -> Result<bool, String> {
+    let jsonl = dir.join(JOURNAL_FILE);
+    let seg = dir.join(segment::SEGMENT_FILE);
+    if !jsonl.exists() {
+        return if seg.exists() {
+            Ok(false)
+        } else {
+            Err(format!("{}: no journal to compact", dir.display()))
+        };
+    }
+    let text =
+        std::fs::read_to_string(&jsonl).map_err(|e| format!("{}: {e}", jsonl.display()))?;
+    // compaction is for settled stores: a torn final line means a
+    // crashed run that `resume` should repair first
+    let (records, torn) = journal::parse_journal(&text)?;
+    if torn {
+        return Err(format!(
+            "{}: journal has a torn final line — resume the run before compacting",
+            jsonl.display()
+        ));
+    }
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    if lines.len() != records.len() {
+        return Err(format!(
+            "{}: {} journal lines parsed to {} records",
+            jsonl.display(),
+            lines.len(),
+            records.len()
+        ));
+    }
+    let indexed: Vec<(u64, &str)> = lines
+        .iter()
+        .zip(&records)
+        .map(|(&line, rec)| {
+            let fp = match rec {
+                JournalRecord::Exp(e) => e.individual.genome.fingerprint_hash(),
+                // plan records are not genome-addressed
+                JournalRecord::Plan(_) => 0,
+            };
+            (fp, line)
+        })
+        .collect();
+    segment::write_segment(&seg, &indexed)?;
+    let rehydrated = segment::rehydrate_jsonl(&seg)?;
+    if rehydrated != text {
+        let _ = std::fs::remove_file(&seg);
+        return Err(format!(
+            "{}: segment read-back does not match the journal bytes",
+            seg.display()
+        ));
+    }
+    std::fs::remove_file(&jsonl).map_err(|e| format!("{}: {e}", jsonl.display()))?;
+    Ok(true)
+}
+
 /// Record a campaign's workload list (in request order) so `resume`
 /// and `replay` can reconstruct the whole campaign from its directory.
 pub fn write_campaign_manifest(dir: &Path, workloads: &[String]) -> Result<(), String> {
@@ -293,6 +374,7 @@ mod tests {
             plan: None,
             screened: false,
             profile: None,
+            federated: false,
         });
         store.append(&record);
         // append flushes to the OS before returning — the line is
@@ -307,5 +389,51 @@ mod tests {
         let (records, torn) = journal::parse_journal(&torn_text).unwrap();
         assert!(torn);
         assert_eq!(records.len(), 1);
+    }
+
+    #[test]
+    fn compact_run_store_preserves_exact_journal_bytes() {
+        use crate::genome::seeds;
+        use crate::population::{EvalOutcome, Individual};
+        let dir = scratch_dir("compact-store");
+        let mut store = RunStore::create(&dir).unwrap();
+        for i in 0..3u64 {
+            store.append(&JournalRecord::Exp(ExperimentRecord {
+                individual: Individual {
+                    id: format!("{:05}", i + 1),
+                    parents: vec![],
+                    genome: seeds::mfma_seed(),
+                    experiment: format!("exp {i}"),
+                    report: String::new(),
+                    outcome: EvalOutcome::Timings(vec![100.0 + i as f64; 6]),
+                },
+                submitted_at: i + 1,
+                submission_index: Some(i),
+                cached: false,
+                lane: Some(0),
+                completed_at_s: Some(90.0 * (i + 1) as f64),
+                plan: None,
+                screened: false,
+                profile: None,
+                federated: false,
+            }));
+        }
+        drop(store);
+        let original = std::fs::read_to_string(dir.join(JOURNAL_FILE)).unwrap();
+        assert!(compact_run_store(&dir).unwrap());
+        assert!(!dir.join(JOURNAL_FILE).exists());
+        let seg = dir.join(segment::SEGMENT_FILE);
+        assert!(seg.exists());
+        // the segment preserves exact bytes (resume's journal_bytes
+        // marker depends on it) and indexes every record's fingerprint
+        assert_eq!(segment::rehydrate_jsonl(&seg).unwrap(), original);
+        let idx = segment::open_index(&seg).unwrap();
+        assert_eq!(idx.entries.len(), 3);
+        let fp = seeds::mfma_seed().fingerprint_hash();
+        assert!(idx.entries.iter().all(|&(f, _)| f == fp));
+        // idempotent: an already-compacted store is a no-op, an empty
+        // dir is an error
+        assert!(!compact_run_store(&dir).unwrap());
+        assert!(compact_run_store(&scratch_dir("compact-empty")).is_err());
     }
 }

@@ -5,7 +5,7 @@
 
 use std::path::Path;
 
-use super::{checkpoint::Checkpoint, journal, JOURNAL_FILE};
+use super::{checkpoint::Checkpoint, journal, segment, JOURNAL_FILE};
 use crate::config::RunConfig;
 use crate::metrics::ConvergenceCurve;
 use crate::population::Population;
@@ -36,8 +36,14 @@ pub fn replay(dir: &Path) -> Result<ReplayedRun, String> {
     let workload = crate::workload::lookup(&cp.config.workload)
         .ok_or_else(|| format!("unknown workload '{}' in checkpoint", cp.config.workload))?;
     let path = dir.join(JOURNAL_FILE);
-    let text =
-        std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+    // a compacted store serves replay from its segment directly (no
+    // rehydration write — replay never modifies the store); segments
+    // are written whole, so a torn tail is impossible there
+    let text = if path.exists() {
+        std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?
+    } else {
+        segment::rehydrate_jsonl(&dir.join(segment::SEGMENT_FILE))?
+    };
     let (records, torn_tail) = journal::parse_journal(&text)?;
     let ledger = journal::rebuild(
         &records,

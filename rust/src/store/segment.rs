@@ -1,0 +1,400 @@
+//! Indexed binary journal segments: the `compact` representation of a
+//! JSONL ledger (DESIGN.md §12).
+//!
+//! A JSONL journal is the right *write* format — append-only,
+//! crash-tolerant, human-greppable — but the wrong *cold-load* format:
+//! opening a 1M-entry federated archive means parsing every line. A
+//! segment keeps the exact line bytes (so rehydration back to JSONL is
+//! byte-identical — the checkpoint `journal_bytes` contract survives
+//! compaction) but prefixes each record with its length and appends a
+//! fingerprint/offset index block, so a reader that only needs the
+//! index — "which fingerprints does this archive hold, and where" —
+//! touches O(index) bytes, never the records ([`open_index`]).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic "GKSSEG1\n" (version 1)
+//! 8       8     record_count: u64
+//! 16      8     index_offset: u64 (absolute)
+//! 24      4     records_crc: u32 (IEEE CRC-32 of bytes [32, index_offset))
+//! 28      4     index_crc:   u32 (IEEE CRC-32 of the index block)
+//! 32      ...   records: record_count x { len: u32, line: [u8; len] }
+//! index_offset  index: record_count x { fingerprint: u64, offset: u64 }
+//! ```
+//!
+//! `fingerprint` is the journaled genome's u64 content hash for `exp`
+//! records and 0 for `plan` records (0 is reserved: the genome hash's
+//! non-zero seed constant makes a zero fingerprint unreachable).
+//! `offset` is the absolute file offset of the record's length prefix.
+//!
+//! Torn or tampered segments are rejected, never partially served: the
+//! header is fixed-size, both regions are CRC-checked against it, and
+//! the file length must equal `index_offset + 16 * record_count`
+//! exactly. Writes go through a temp file + rename ([`write_segment`]),
+//! so a crash mid-compaction leaves the original JSONL untouched.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// Compacted journal file name inside a run store directory (the
+/// sibling of `journal.jsonl` — `compact` replaces one with the other).
+pub const SEGMENT_FILE: &str = "journal.seg";
+
+const MAGIC: &[u8; 8] = b"GKSSEG1\n";
+const HEADER_LEN: u64 = 32;
+const INDEX_ENTRY_LEN: u64 = 16;
+
+/// IEEE CRC-32 lookup table (reflected polynomial 0xEDB88320),
+/// computed at compile time — no external crate, no runtime init.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 == 1 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 (the zlib/PNG polynomial) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// The O(index) view of a segment: every record's fingerprint and file
+/// offset, without reading a single record byte.
+#[derive(Debug, Clone)]
+pub struct SegmentIndex {
+    /// `(fingerprint, record offset)` in record order. Fingerprint 0
+    /// marks a non-`exp` (plan) record.
+    pub entries: Vec<(u64, u64)>,
+}
+
+impl SegmentIndex {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().expect("bounds checked"))
+}
+
+fn get_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().expect("bounds checked"))
+}
+
+/// Write `records` — `(fingerprint, line)` pairs, line bytes exactly as
+/// they appeared in the JSONL journal (no trailing newline) — as a
+/// segment at `path`. Atomic: staged in `<path>.tmp`, renamed into
+/// place, so readers never observe a half-written segment.
+pub fn write_segment(path: &Path, records: &[(u64, &str)]) -> Result<(), String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(
+        HEADER_LEN as usize
+            + records
+                .iter()
+                .map(|(_, l)| l.len() + 4 + INDEX_ENTRY_LEN as usize)
+                .sum::<usize>(),
+    );
+    buf.extend_from_slice(&[0u8; HEADER_LEN as usize]); // header patched below
+    let mut index: Vec<(u64, u64)> = Vec::with_capacity(records.len());
+    for (fp, line) in records {
+        if line.len() as u64 > u32::MAX as u64 {
+            return Err(format!("segment record exceeds u32 length: {}", line.len()));
+        }
+        index.push((*fp, buf.len() as u64));
+        put_u32(&mut buf, line.len() as u32);
+        buf.extend_from_slice(line.as_bytes());
+    }
+    let index_offset = buf.len() as u64;
+    for &(fp, off) in &index {
+        put_u64(&mut buf, fp);
+        put_u64(&mut buf, off);
+    }
+    let records_crc = crc32(&buf[HEADER_LEN as usize..index_offset as usize]);
+    let index_crc = crc32(&buf[index_offset as usize..]);
+    buf[0..8].copy_from_slice(MAGIC);
+    buf[8..16].copy_from_slice(&(records.len() as u64).to_le_bytes());
+    buf[16..24].copy_from_slice(&index_offset.to_le_bytes());
+    buf[24..28].copy_from_slice(&records_crc.to_le_bytes());
+    buf[28..32].copy_from_slice(&index_crc.to_le_bytes());
+    let tmp = path.with_extension("seg.tmp");
+    std::fs::write(&tmp, &buf).map_err(|e| format!("{}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Parse and sanity-check a segment header. Returns
+/// `(record_count, index_offset, records_crc, index_crc)`.
+fn parse_header(h: &[u8], file_len: u64, path: &Path) -> Result<(u64, u64, u32, u32), String> {
+    if h.len() < HEADER_LEN as usize {
+        return Err(format!("{}: truncated segment header", path.display()));
+    }
+    if &h[0..8] != MAGIC {
+        return Err(format!("{}: not a GKSSEG1 segment", path.display()));
+    }
+    let record_count = get_u64(h, 8);
+    let index_offset = get_u64(h, 16);
+    let records_crc = get_u32(h, 24);
+    let index_crc = get_u32(h, 28);
+    if index_offset < HEADER_LEN {
+        return Err(format!("{}: index offset inside header", path.display()));
+    }
+    let expect_len = index_offset
+        .checked_add(record_count.checked_mul(INDEX_ENTRY_LEN).ok_or_else(|| {
+            format!("{}: index size overflows", path.display())
+        })?)
+        .ok_or_else(|| format!("{}: segment size overflows", path.display()))?;
+    if file_len != expect_len {
+        return Err(format!(
+            "{}: segment is {file_len} bytes but header covers {expect_len} — torn or truncated",
+            path.display()
+        ));
+    }
+    Ok((record_count, index_offset, records_crc, index_crc))
+}
+
+/// Open a segment's index **without reading the records region**: the
+/// fixed-size header plus `16 * record_count` index bytes are the only
+/// I/O — O(index) regardless of how many megabytes of records the
+/// segment holds. The index block is CRC-verified; the records region
+/// is not touched (full verification is [`read_lines`]'s job).
+pub fn open_index(path: &Path) -> Result<SegmentIndex, String> {
+    let mut file =
+        std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let file_len = file
+        .metadata()
+        .map_err(|e| format!("{}: {e}", path.display()))?
+        .len();
+    let mut header = [0u8; HEADER_LEN as usize];
+    file.read_exact(&mut header)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let (record_count, index_offset, _records_crc, index_crc) =
+        parse_header(&header, file_len, path)?;
+    file.seek(SeekFrom::Start(index_offset))
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut index_bytes = vec![0u8; (record_count * INDEX_ENTRY_LEN) as usize];
+    file.read_exact(&mut index_bytes)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    if crc32(&index_bytes) != index_crc {
+        return Err(format!("{}: index CRC mismatch", path.display()));
+    }
+    let mut entries = Vec::with_capacity(record_count as usize);
+    for i in 0..record_count as usize {
+        let at = i * INDEX_ENTRY_LEN as usize;
+        let fp = get_u64(&index_bytes, at);
+        let off = get_u64(&index_bytes, at + 8);
+        if off < HEADER_LEN || off + 4 > index_offset {
+            return Err(format!("{}: index entry {i} out of bounds", path.display()));
+        }
+        entries.push((fp, off));
+    }
+    Ok(SegmentIndex { entries })
+}
+
+/// Read one record by its index offset: a seek plus two small reads —
+/// the point-lookup path a fingerprint probe takes after [`open_index`].
+pub fn read_record_at(path: &Path, offset: u64) -> Result<String, String> {
+    let mut file =
+        std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    file.seek(SeekFrom::Start(offset))
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut len_bytes = [0u8; 4];
+    file.read_exact(&mut len_bytes)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    let mut line = vec![0u8; len];
+    file.read_exact(&mut line)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    String::from_utf8(line).map_err(|_| format!("{}: record is not UTF-8", path.display()))
+}
+
+/// Read every record line (full verification: header geometry plus
+/// both CRCs). The returned lines are byte-identical to the JSONL
+/// journal the segment was compacted from, in order — joining them
+/// with `'\n'` (plus a trailing newline) rehydrates the exact journal.
+pub fn read_lines(path: &Path) -> Result<Vec<String>, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let (record_count, index_offset, records_crc, index_crc) =
+        parse_header(&bytes, bytes.len() as u64, path)?;
+    let records_region = &bytes[HEADER_LEN as usize..index_offset as usize];
+    if crc32(records_region) != records_crc {
+        return Err(format!("{}: records CRC mismatch", path.display()));
+    }
+    if crc32(&bytes[index_offset as usize..]) != index_crc {
+        return Err(format!("{}: index CRC mismatch", path.display()));
+    }
+    let mut lines = Vec::with_capacity(record_count as usize);
+    let mut at = 0usize;
+    while at < records_region.len() {
+        if at + 4 > records_region.len() {
+            return Err(format!("{}: torn record length prefix", path.display()));
+        }
+        let len = get_u32(records_region, at) as usize;
+        at += 4;
+        if at + len > records_region.len() {
+            return Err(format!("{}: torn record body", path.display()));
+        }
+        let line = std::str::from_utf8(&records_region[at..at + len])
+            .map_err(|_| format!("{}: record is not UTF-8", path.display()))?;
+        lines.push(line.to_string());
+        at += len;
+    }
+    if lines.len() as u64 != record_count {
+        return Err(format!(
+            "{}: header promises {record_count} records, region holds {}",
+            path.display(),
+            lines.len()
+        ));
+    }
+    Ok(lines)
+}
+
+/// Rehydrate the exact JSONL text a segment was compacted from (one
+/// trailing newline per record — the journal's append invariant).
+pub fn rehydrate_jsonl(path: &Path) -> Result<String, String> {
+    let lines = read_lines(path)?;
+    let mut text = String::with_capacity(lines.iter().map(|l| l.len() + 1).sum());
+    for line in &lines {
+        text.push_str(line);
+        text.push('\n');
+    }
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::test_support::scratch_dir;
+
+    fn sample() -> Vec<(u64, String)> {
+        vec![
+            (0, r#"{"t":"plan","iteration":1}"#.to_string()),
+            (0x1234_5678_9abc_def0, r#"{"t":"exp","ind":"x"}"#.to_string()),
+            (u64::MAX, String::new()), // empty record line survives
+            (42, "päyload \u{1F600}".to_string()),
+        ]
+    }
+
+    fn write_sample(dir: &std::path::Path) -> std::path::PathBuf {
+        let path = dir.join(SEGMENT_FILE);
+        let records: Vec<(u64, &str)> =
+            sample().iter().map(|(fp, l)| (*fp, l.as_str())).collect();
+        write_segment(&path, &records).unwrap();
+        path
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // the IEEE check value ("123456789" -> 0xCBF43926) pins the
+        // polynomial/reflection conventions
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_preserves_lines_and_order() {
+        let dir = scratch_dir("segment-roundtrip");
+        let path = write_sample(&dir);
+        let lines = read_lines(&path).unwrap();
+        let expect: Vec<String> = sample().into_iter().map(|(_, l)| l).collect();
+        assert_eq!(lines, expect);
+        let text = rehydrate_jsonl(&path).unwrap();
+        assert_eq!(text, expect.join("\n") + "\n");
+    }
+
+    #[test]
+    fn index_carries_fingerprints_and_point_reads_resolve() {
+        let dir = scratch_dir("segment-index");
+        let path = write_sample(&dir);
+        let index = open_index(&path).unwrap();
+        let fps: Vec<u64> = index.entries.iter().map(|&(fp, _)| fp).collect();
+        assert_eq!(fps, vec![0, 0x1234_5678_9abc_def0, u64::MAX, 42]);
+        for (i, &(_, off)) in index.entries.iter().enumerate() {
+            assert_eq!(read_record_at(&path, off).unwrap(), sample()[i].1, "record {i}");
+        }
+    }
+
+    #[test]
+    fn empty_segment_roundtrips() {
+        let dir = scratch_dir("segment-empty");
+        let path = dir.join(SEGMENT_FILE);
+        write_segment(&path, &[]).unwrap();
+        assert!(open_index(&path).unwrap().is_empty());
+        assert_eq!(read_lines(&path).unwrap().len(), 0);
+        assert_eq!(rehydrate_jsonl(&path).unwrap(), "");
+    }
+
+    #[test]
+    fn torn_and_tampered_segments_are_rejected() {
+        let dir = scratch_dir("segment-torn");
+        let path = write_sample(&dir);
+        let good = std::fs::read(&path).unwrap();
+        // truncation anywhere: header geometry no longer matches
+        for cut in [good.len() - 1, good.len() - 20, 31, 8, 0] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(open_index(&path).is_err(), "cut at {cut} accepted by index");
+            assert!(read_lines(&path).is_err(), "cut at {cut} accepted by reader");
+        }
+        // a flipped record byte passes the index open (which never
+        // reads records) but fails the full read's CRC
+        let mut flipped = good.clone();
+        flipped[40] ^= 0xFF;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(open_index(&path).is_ok());
+        let err = read_lines(&path).unwrap_err();
+        assert!(err.contains("CRC"), "{err}");
+        // a flipped index byte fails even the O(index) open
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0xFF;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(open_index(&path).unwrap_err().contains("CRC"));
+        // wrong magic is rejected outright
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        std::fs::write(&path, &bad_magic).unwrap();
+        assert!(read_lines(&path).unwrap_err().contains("GKSSEG1"));
+        // trailing garbage is a geometry mismatch, not silently ignored
+        let mut padded = good.clone();
+        padded.push(0);
+        std::fs::write(&path, &padded).unwrap();
+        assert!(open_index(&path).is_err());
+    }
+
+    #[test]
+    fn write_is_atomic_no_tmp_left_behind() {
+        let dir = scratch_dir("segment-atomic");
+        let path = write_sample(&dir);
+        assert!(path.exists());
+        assert!(!path.with_extension("seg.tmp").exists());
+    }
+}

@@ -83,6 +83,15 @@ pub trait Workload: Send + Sync + std::fmt::Debug {
         Ok(())
     }
 
+    /// Version of this workload's analytic cost model. Part of the
+    /// federation config digest (DESIGN.md §12): bump it whenever
+    /// [`Workload::estimate`] changes behavior, so stale cross-run
+    /// cache entries recorded under the old model stop matching instead
+    /// of silently serving wrong timings.
+    fn cost_model_version(&self) -> u32 {
+        1
+    }
+
     /// Noiseless analytic cost model: the simulator calls this per
     /// (genome, config) measurement.
     fn estimate(

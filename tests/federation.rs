@@ -1,0 +1,292 @@
+//! Federated-archive suite (DESIGN.md §12): the cross-run eval cache,
+//! warm-start elite seeding, and indexed binary journal segments.
+//!
+//! The guarantees locked here:
+//!
+//! * **off means off** — with no `[federation]` config the run is
+//!   bit-identical to one from a build without the layer, and an
+//!   *empty* attached archive is equally inert, for every registered
+//!   workload under both schedulers;
+//! * **a second identical run burns zero evaluations** — every
+//!   committed submission is served from the archive with genuine
+//!   quota/wall-clock accounting, so the trajectory, leaderboard, and
+//!   cache stats are identical to the first run's;
+//! * **warm-start seeding is deterministic** and surfaces its count in
+//!   the run outcome;
+//! * **segments are interchangeable with JSONL** — `replay` renders
+//!   the same run before and after `compact`, and torn or tampered
+//!   segments are rejected, never silently truncated.
+
+use std::path::Path;
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::report;
+use gpu_kernel_scientist::scientist::ScientistRun;
+use gpu_kernel_scientist::store::{self, config_digest, segment, FederationSnapshot};
+use gpu_kernel_scientist::test_support::{noiseless_config, scratch_dir, trajectory};
+use gpu_kernel_scientist::workload::{registry, Workload};
+
+/// A federated variant of [`noiseless_config`]. Noiseless because the
+/// run-twice tests compare a fed-served second run against a genuinely
+/// evaluated first run: archive hits never advance the backend noise
+/// stream, so only exact measurements make the final leaderboard
+/// rescoring comparable.
+fn fed_config(workload: &str, seed: u64, budget: u64, dir: &Path) -> RunConfig {
+    noiseless_config(workload, seed, budget).with_federation(&dir.display().to_string())
+}
+
+#[test]
+fn an_empty_archive_is_inert_for_every_workload_and_scheduler() {
+    // off-vs-on-but-empty bit identity: attaching a federation dir with
+    // nothing in it must not perturb the trajectory, clocks, or cache
+    // stats — the off-means-off guarantee plus its boundary case
+    for w in registry() {
+        for (pipeline, lanes) in [(false, 1u32), (true, 2)] {
+            let label = format!(
+                "{} {}",
+                w.name(),
+                if pipeline { "pipeline" } else { "lockstep" }
+            );
+            let base = RunConfig::default()
+                .with_workload(w.name())
+                .with_seed(11)
+                .with_budget(14)
+                .with_parallelism(lanes)
+                .with_pipeline(pipeline);
+            let mut plain = ScientistRun::new(base.clone()).unwrap();
+            let plain_out = plain.run_to_completion().unwrap();
+            assert!(plain_out.federation.is_none(), "{label}: off carries no stats");
+
+            let dir = scratch_dir("fed-empty");
+            let fed_cfg = base.with_federation(&dir.display().to_string());
+            let mut fed = ScientistRun::new(fed_cfg).unwrap();
+            let fed_out = fed.run_to_completion().unwrap();
+            assert_eq!(trajectory(&plain), trajectory(&fed), "{label}: trajectory");
+            assert_eq!(plain_out.best_id, fed_out.best_id, "{label}");
+            assert_eq!(plain_out.best_geomean_us, fed_out.best_geomean_us, "{label}");
+            assert_eq!(plain_out.wall_clock_s, fed_out.wall_clock_s, "{label}");
+            assert_eq!(
+                plain.platform.cache_stats(),
+                fed.platform.cache_stats(),
+                "{label}: cache stats"
+            );
+            let stats = fed_out.federation.expect("federation on carries stats");
+            assert_eq!(stats.hits, 0, "{label}: an empty archive cannot hit");
+            assert_eq!(stats.warm_start_injected, 0, "{label}: k defaults to 0");
+            // the completed run published its results for future runs
+            let published = std::fs::read_dir(&dir).unwrap().count();
+            assert_eq!(published, 1, "{label}: one run file published");
+        }
+    }
+}
+
+#[test]
+fn a_second_identical_run_is_served_entirely_from_the_archive() {
+    for (pipeline, lanes) in [(false, 1u32), (true, 2)] {
+        let label = if pipeline { "pipeline" } else { "lockstep" };
+        let dir = scratch_dir("fed-twice");
+        let mk = || {
+            let mut cfg = fed_config("fp8-gemm", 7, 20, &dir)
+                .with_parallelism(lanes)
+                .with_pipeline(pipeline);
+            cfg.store_dir = Some(scratch_dir("fed-twice-store").display().to_string());
+            cfg
+        };
+
+        let mut first = ScientistRun::new(mk()).unwrap();
+        let first_out = first.run_to_completion().unwrap();
+        assert_eq!(
+            first_out.federation.unwrap().hits,
+            0,
+            "{label}: nothing to hit on the first run"
+        );
+        let first_store = first.config.store_dir.clone().unwrap();
+
+        let mut second = ScientistRun::new(mk()).unwrap();
+        let second_out = second.run_to_completion().unwrap();
+        let hits = second_out.federation.unwrap().hits;
+        assert!(hits > 0, "{label}: the archive must serve hits");
+        // the acceptance bar: zero re-evaluations — every committed
+        // submission of the second run came from the archive
+        assert_eq!(
+            hits,
+            second.platform.submissions(),
+            "{label}: every submission fed-served (100% cross-run hit rate)"
+        );
+        assert_eq!(trajectory(&first), trajectory(&second), "{label}: trajectory");
+        assert_eq!(first_out.best_id, second_out.best_id, "{label}");
+        assert_eq!(
+            first_out.best_geomean_us, second_out.best_geomean_us,
+            "{label}: identical leaderboard"
+        );
+        assert_eq!(first_out.leaderboard_us, second_out.leaderboard_us, "{label}");
+        assert_eq!(first_out.submissions, second_out.submissions, "{label}");
+        assert_eq!(
+            first_out.wall_clock_s, second_out.wall_clock_s,
+            "{label}: fed hits bill genuine lane time"
+        );
+        assert_eq!(
+            first.platform.cache_stats(),
+            second.platform.cache_stats(),
+            "{label}: fed hits count as misses exactly like genuine evals"
+        );
+        // hit provenance reaches the journal: the second run's ledger
+        // marks fed entries, the first run's has none
+        let journal_of = |dir: &str| {
+            std::fs::read_to_string(Path::new(dir).join(store::JOURNAL_FILE)).unwrap()
+        };
+        assert!(
+            !journal_of(&first_store).contains("\"federated\":true"),
+            "{label}: first run journals no fed entries"
+        );
+        assert!(
+            journal_of(&second.config.store_dir.clone().unwrap())
+                .contains("\"federated\":true"),
+            "{label}: second run journals hit provenance"
+        );
+        // publication is idempotent: the identical second run overwrote
+        // its own file — the archive still holds exactly one
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1, "{label}");
+    }
+}
+
+#[test]
+fn warm_start_seeding_is_deterministic_and_reported() {
+    // seed the archive from one campaign, then warm-start a different
+    // seed's run with its elites
+    let dir = scratch_dir("fed-warm");
+    let mut seeder = ScientistRun::new(fed_config("fp8-gemm", 1, 20, &dir)).unwrap();
+    seeder.run_to_completion().unwrap();
+
+    let mk = || {
+        // read-only so neither determinism leg perturbs the archive the
+        // other loads
+        let mut cfg = fed_config("fp8-gemm", 2, 24, &dir).with_warm_start_k(3);
+        cfg.federation_read_only = true;
+        cfg
+    };
+    let mut a = ScientistRun::new(mk()).unwrap();
+    let a_out = a.run_to_completion().unwrap();
+    let injected = a_out.federation.unwrap().warm_start_injected;
+    assert!(injected >= 1, "the prior campaign's elites must transfer");
+    assert!(injected <= 3, "never more than k");
+    let labeled = a
+        .population
+        .members()
+        .iter()
+        .filter(|m| m.experiment.starts_with("federated warm-start elite"))
+        .count() as u64;
+    assert_eq!(labeled, injected, "the count matches the ledger's labels");
+
+    let mut b = ScientistRun::new(mk()).unwrap();
+    let b_out = b.run_to_completion().unwrap();
+    assert_eq!(trajectory(&a), trajectory(&b), "warm-start is deterministic");
+    assert_eq!(a_out.federation, b_out.federation);
+    assert_eq!(a_out.best_id, b_out.best_id);
+    assert_eq!(a_out.best_geomean_us, b_out.best_geomean_us);
+
+    // read-only held: the archive still contains only the seeder's file
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1);
+}
+
+#[test]
+fn config_digest_tracks_eval_knobs_and_ignores_scheduling() {
+    let base = RunConfig::default();
+    let d = config_digest(&base, 1);
+    // excluded: knobs that cannot change what an evaluation returns
+    assert_eq!(d, config_digest(&base.clone().with_seed(99), 1), "seed");
+    assert_eq!(
+        d,
+        config_digest(&base.clone().with_parallelism(4).with_pipeline(true), 1),
+        "scheduling"
+    );
+    assert_eq!(d, config_digest(&base.clone().with_budget(999), 1), "budget");
+    // included: every eval-relevant knob flips the digest (the negative
+    // knob-flip guarantee — stale entries must stop matching)
+    let mut reps = base.clone();
+    reps.reps_per_config += 1;
+    assert_ne!(d, config_digest(&reps, 1), "reps");
+    let mut noise = base.clone();
+    noise.noise_sigma += 0.125;
+    assert_ne!(d, config_digest(&noise, 1), "noise");
+    let mut cache = base.clone();
+    cache.eval_cache = !cache.eval_cache;
+    assert_ne!(d, config_digest(&cache, 1), "cache");
+    assert_ne!(d, config_digest(&base.clone().with_screen(4, 0.5), 1), "screen");
+    let mut guided = base.clone();
+    guided.profile_guided = true;
+    assert_ne!(d, config_digest(&guided, 1), "profile");
+    assert_ne!(d, config_digest(&base, 2), "cost-model version");
+}
+
+#[test]
+fn replay_renders_identically_before_and_after_compaction() {
+    let dir = scratch_dir("fed-compact");
+    let mut cfg = noiseless_config("fp8-gemm", 23, 18);
+    cfg.store_dir = Some(dir.display().to_string());
+    let mut run = ScientistRun::new(cfg).unwrap();
+    run.run_to_completion().unwrap();
+
+    let before = store::replay(&dir).expect("jsonl replay");
+    assert!(store::compact_run_store(&dir).unwrap());
+    assert!(!dir.join(store::JOURNAL_FILE).exists());
+    assert!(dir.join(store::SEGMENT_FILE).exists());
+    let after = store::replay(&dir).expect("segment replay");
+
+    assert_eq!(before.population.members(), after.population.members());
+    assert_eq!(before.curve.points, after.curve.points);
+    assert_eq!(before.submissions, after.submissions);
+    let render = |logs: &[gpu_kernel_scientist::scientist::IterationLog]| -> Vec<String> {
+        logs.iter().map(report::render_iteration).collect()
+    };
+    assert_eq!(render(&before.logs), render(&after.logs));
+    // replay is read-only: the segment survives it
+    assert!(dir.join(store::SEGMENT_FILE).exists());
+    assert!(!dir.join(store::JOURNAL_FILE).exists());
+}
+
+#[test]
+fn torn_and_tampered_segments_are_rejected() {
+    let dir = scratch_dir("fed-torn");
+    let mut cfg = noiseless_config("row-softmax", 31, 14);
+    cfg.store_dir = Some(dir.display().to_string());
+    let mut run = ScientistRun::new(cfg).unwrap();
+    run.run_to_completion().unwrap();
+    assert!(store::compact_run_store(&dir).unwrap());
+    let seg = dir.join(store::SEGMENT_FILE);
+    let good = std::fs::read(&seg).unwrap();
+
+    // torn: a truncated segment fails the length check up front
+    std::fs::write(&seg, &good[..good.len() - 7]).unwrap();
+    assert!(segment::open_index(&seg).is_err(), "torn index must not open");
+    assert!(segment::read_lines(&seg).is_err(), "torn records must not read");
+    assert!(store::replay(&dir).is_err(), "replay must refuse a torn segment");
+
+    // tampered: flip one record byte — the records CRC catches it even
+    // though the header and index are intact
+    let mut bad = good.clone();
+    bad[64] ^= 0x01;
+    std::fs::write(&seg, &bad).unwrap();
+    assert!(segment::read_lines(&seg).is_err(), "corrupt records must not read");
+
+    // restored bytes read fine again
+    std::fs::write(&seg, &good).unwrap();
+    assert!(store::replay(&dir).is_ok());
+}
+
+#[test]
+fn federation_snapshot_merges_jsonl_and_segment_run_files() {
+    // a mixed archive — some runs compacted, some not — loads as one
+    // snapshot with identical contents either way
+    let dir = scratch_dir("fed-mixed");
+    for seed in [3u64, 4] {
+        let mut run = ScientistRun::new(fed_config("fp8-gemm", seed, 16, &dir)).unwrap();
+        run.run_to_completion().unwrap();
+    }
+    let before = FederationSnapshot::load(&dir).unwrap();
+    assert!(before.len() > 0);
+    let compacted = store::federation::compact_dir(&dir).unwrap();
+    assert_eq!(compacted, 2, "both run files compact");
+    let after = FederationSnapshot::load(&dir).unwrap();
+    assert_eq!(before.entries(), after.entries(), "compaction preserves the archive");
+}

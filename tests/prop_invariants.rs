@@ -402,6 +402,7 @@ fn prop_ledger_entry_and_genome_json_roundtrip_lossless() {
             } else {
                 None
             },
+            federated: rng.chance(0.2),
         });
         let emitted = record.to_json().to_string();
         let back = JournalRecord::from_json(&json::parse(&emitted).expect("parse"))

@@ -499,6 +499,57 @@ fn mixed_version_ledger_replays_with_missing_profiles() {
 }
 
 #[test]
+fn resume_under_federation_is_bit_identical() {
+    // Crash-and-resume a run whose submissions are served from the
+    // federated archive (DESIGN.md §12). Restore must NOT replay fed
+    // journal entries against the backend (no lane ever evaluated
+    // them), and the re-attached archive must keep serving the
+    // continuation — counters included.
+    let fed_dir = scratch_dir("fed-archive");
+    let mut seed_cfg = RunConfig::default()
+        .with_workload("fp8-gemm")
+        .with_seed(7)
+        .with_budget(20);
+    seed_cfg.noise_sigma = 0.0; // fed hits never advance the noise stream
+    seed_cfg.federation_dir = Some(fed_dir.display().to_string());
+    let mut seeder = ScientistRun::new(seed_cfg).unwrap();
+    seeder.run_to_completion().unwrap();
+
+    let full_dir = scratch_dir("fed-full");
+    let crash_dir = scratch_dir("fed-crash");
+    let mk = |dir: &Path| {
+        let mut cfg = store_config("fp8-gemm", 7, 20, 1, false, dir);
+        cfg.noise_sigma = 0.0;
+        cfg.federation_dir = Some(fed_dir.display().to_string());
+        // keep the archive fixed: neither leg may republish under the
+        // other's feet
+        cfg.federation_read_only = true;
+        cfg
+    };
+    let mut full = ScientistRun::new(mk(&full_dir)).unwrap();
+    let full_out = full.run_to_completion().unwrap();
+    assert!(
+        full_out.federation.unwrap().hits > 0,
+        "the archive must actually serve this configuration"
+    );
+
+    let mut crash_cfg = mk(&crash_dir);
+    crash_cfg.halt_after = Some(11);
+    let mut crashed = ScientistRun::new(crash_cfg).unwrap();
+    let _ = crashed.run_to_completion().unwrap();
+    assert!(crashed.halted());
+    drop(crashed);
+
+    let mut resumed = ScientistRun::resume(&crash_dir).unwrap();
+    let resumed_out = resumed.run_to_completion().unwrap();
+    assert_bit_identical("federated resume", &full, &full_out, &resumed, &resumed_out);
+    assert_eq!(
+        full_out.federation, resumed_out.federation,
+        "fed hit counters survive the crash/restore cycle"
+    );
+}
+
+#[test]
 fn resume_without_a_store_is_a_clear_error() {
     let dir = scratch_dir("empty");
     let err = ScientistRun::resume(&dir).unwrap_err();
