@@ -1,0 +1,150 @@
+//! Ablation: **the static lint gate on vs off** (DESIGN.md §13).
+//!
+//! The gate runs `analysis::lint` over every planned child and turns
+//! would-be platform compile failures into zero-cost ledger records —
+//! the doomed genome never occupies an evaluation lane and never
+//! consumes quota. This bench quantifies what that buys at an **equal
+//! submission quota** (60 submissions, 4 lanes): the lane-seconds each
+//! leg burns on genomes that were statically doomed.
+//!
+//! Both legs share the surrogate-infidelity knobs the e2e robustness
+//! test uses, so the writer's repair loop leaks invalid children at a
+//! realistic rate. Every platform submission costs the backend's
+//! constant `submission_cost_s()` of lane time, so the wasted total is
+//! `cost × |compile failures in the submission log|`. Asserted:
+//!
+//!   * the gated leg wastes **zero** lane-seconds — the analyzer's
+//!     Error set provably covers the platform's reject set, so nothing
+//!     doomed may reach a lane;
+//!   * the ungated legs waste a nonzero total across seeds — the gate
+//!     has real work at this infidelity, and the margin (geomean of
+//!     the per-seed cost-shifted ratios) clears 1.0.
+//!
+//! Results land in `BENCH_lint.json` for the CI artifact.
+//!
+//! Run: `cargo bench --bench ablation_lint`
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::eval::EvalBackend;
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::population::EvalOutcome;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::util::bench::header;
+use gpu_kernel_scientist::util::json::Json;
+
+const SEEDS: u64 = 6;
+const BUDGET: u64 = 60;
+const LANES: u32 = 4;
+
+struct Leg {
+    /// Lane-seconds burned on platform compile failures.
+    wasted_s: f64,
+    /// Platform submissions that were compile failures.
+    doomed_subs: u64,
+    /// Children the gate rejected pre-submission (gated leg only).
+    lint_rejected: u64,
+    best_us: f64,
+}
+
+fn run_leg(seed: u64, gated: bool) -> Leg {
+    let mut cfg = RunConfig::default()
+        .with_seed(seed)
+        .with_budget(BUDGET)
+        .with_parallelism(LANES)
+        .with_pipeline(true)
+        .with_lint_gate(gated);
+    // same infidelity both legs: the *planner* output is what differs
+    cfg.llm.rubric_infidelity = 0.3;
+    cfg.llm.temperature = 2.0;
+    let mut run = ScientistRun::new(cfg).expect("setup");
+    let outcome = run.run_to_completion().expect("run");
+    let cost = run.platform.backend_mut().submission_cost_s();
+    let doomed = run
+        .platform
+        .log()
+        .iter()
+        .filter(|r| matches!(r.outcome, EvalOutcome::CompileFailure(_)))
+        .count() as u64;
+    Leg {
+        wasted_s: doomed as f64 * cost,
+        doomed_subs: doomed,
+        lint_rejected: outcome.pipeline.lint_rejected,
+        best_us: outcome.best_geomean_us,
+    }
+}
+
+fn main() {
+    header("ablation — static lint gate (lane-seconds on doomed genomes)");
+
+    let cost = SimBackend::new(1).submission_cost_s();
+    let mut ratios = Vec::new();
+    let mut ungated_total_s = 0.0;
+    let mut gated_total_s = 0.0;
+    let mut rejected_total = 0u64;
+
+    println!(
+        "{:>6} {:>22} {:>26} {:>10}",
+        "seed", "ungated (doomed, s)", "gated (rejected, s)", "ratio"
+    );
+    for seed in 0..SEEDS {
+        let ungated = run_leg(seed, false);
+        let gated = run_leg(seed, true);
+        assert_eq!(
+            gated.doomed_subs, 0,
+            "seed {seed}: the gate let {} doomed genome(s) onto a lane",
+            gated.doomed_subs
+        );
+        ungated_total_s += ungated.wasted_s;
+        gated_total_s += gated.wasted_s;
+        rejected_total += gated.lint_rejected;
+        // cost-shifted ratio: +1 submission of lane time on both sides
+        // keeps zero-failure seeds at exactly 1.0 instead of 0/0
+        let ratio = (ungated.wasted_s + cost) / (gated.wasted_s + cost);
+        ratios.push(ratio);
+        println!(
+            "{seed:>6} {:>12} {:>8.0}s {:>14} {:>10.0}s {ratio:>9.2}x   \
+             (bests {:.1} / {:.1} us)",
+            ungated.doomed_subs,
+            ungated.wasted_s,
+            gated.lint_rejected,
+            gated.wasted_s,
+            ungated.best_us,
+            gated.best_us,
+        );
+    }
+
+    let margin = geomean(&ratios);
+    println!(
+        "\nlane-seconds on doomed genomes at equal quota ({BUDGET} submissions, \
+         {LANES} lanes): ungated {ungated_total_s:.0}s vs gated {gated_total_s:.0}s \
+         — margin {margin:.2}x (target > 1.0)"
+    );
+    assert!(
+        ungated_total_s > 0.0,
+        "no ungated run wasted a lane on a doomed genome — the gate has \
+         nothing to show at this infidelity; raise the knobs"
+    );
+    assert!(
+        rejected_total > 0,
+        "the gate never rejected a child across {SEEDS} seeds"
+    );
+    assert!(
+        margin > 1.0,
+        "the gate must strictly reduce lane-seconds wasted on doomed \
+         genomes (got {margin:.2}x)"
+    );
+
+    let doc = Json::obj(vec![
+        ("seeds", Json::Num(SEEDS as f64)),
+        ("budget", Json::Num(BUDGET as f64)),
+        ("lanes", Json::Num(LANES as f64)),
+        ("submission_cost_s", Json::Num(cost)),
+        ("ungated_wasted_lane_s", Json::Num(ungated_total_s)),
+        ("gated_wasted_lane_s", Json::Num(gated_total_s)),
+        ("gate_rejections", Json::Num(rejected_total as f64)),
+        ("margin_geomean", Json::Num(margin)),
+    ]);
+    std::fs::write("BENCH_lint.json", doc.to_string()).expect("write BENCH_lint.json");
+    println!("lint ablation written to BENCH_lint.json");
+    println!("ablation_lint shape: OK");
+}

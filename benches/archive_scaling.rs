@@ -164,6 +164,7 @@ fn journal_serialization(budget: Duration) -> BenchResult {
                 screened: i % 2 == 0,
                 profile: None,
                 federated: false,
+                lint: Vec::new(),
             })
         })
         .collect();

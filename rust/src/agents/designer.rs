@@ -26,6 +26,15 @@ use crate::sim::Bottleneck;
 /// still wins regardless of classification.
 pub const PROFILE_PRIOR_BONUS: f64 = 35.0;
 
+/// Flat prior bonus (percent-gain scale) granted to avenues that
+/// attack a bottleneck surfaced by the static analyzer when the
+/// designer runs lint-guided (`[lint] guided`, DESIGN.md §13): the
+/// base's warn diagnostics plus its lint-rejected children's error
+/// diagnostics. Smaller than [`PROFILE_PRIOR_BONUS`] — static
+/// prediction is weaker evidence than a measured profile, and several
+/// lint attacks can stack where the profile contributes exactly one.
+pub const LINT_PRIOR_BONUS: f64 = 20.0;
+
 /// One experiment plan (the YAML blocks of App. A.2).
 #[derive(Debug, Clone)]
 pub struct ExperimentPlan {
@@ -112,11 +121,38 @@ impl Designer {
         llm: &mut SurrogateLlm,
         bottleneck: Option<Bottleneck>,
     ) -> DesignOutput {
+        self.design_guided(base_id, base, pop, kb, llm, bottleneck, &[])
+    }
+
+    /// [`Designer::design`] with an additional static-analysis prior
+    /// (`[lint] guided`, DESIGN.md §13): every avenue attacking any
+    /// bottleneck in `lint_attacks` gains [`LINT_PRIOR_BONUS`] on top
+    /// of the profile bonus. An empty slice — lint guidance off or
+    /// nothing diagnosed — adds exactly zero and consumes no extra
+    /// randomness, so ungated designs are bit-identical to
+    /// [`Designer::design`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn design_guided(
+        &self,
+        base_id: &str,
+        base: &KernelGenome,
+        pop: &Population,
+        kb: &KnowledgeBase,
+        llm: &mut SurrogateLlm,
+        bottleneck: Option<Bottleneck>,
+        lint_attacks: &[Bottleneck],
+    ) -> DesignOutput {
         let boost = |a: &Avenue| -> f64 {
-            match bottleneck {
+            let profile = match bottleneck {
                 Some(b) if a.attacks().contains(&b) => PROFILE_PRIOR_BONUS,
                 _ => 0.0,
-            }
+            };
+            let lint = if lint_attacks.iter().any(|b| a.attacks().contains(b)) {
+                LINT_PRIOR_BONUS
+            } else {
+                0.0
+            };
+            profile + lint
         };
         let mut available = kb.available_avenues(base);
         // rank by perturbed prior mean gain, keep up to n_avenues
@@ -166,7 +202,9 @@ impl Designer {
                 continue;
             }
             let mut innovation = llm.perturb_innovation(avenue.innovation());
-            let tried_before = tried.iter().any(|e| e.contains(avenue.name()));
+            // order-independent reduction: `any` over an unordered set
+            // yields the same boolean regardless of visit order
+            let tried_before = tried.iter().any(|e| e.contains(avenue.name())); // detlint: allow(DL003)
             if tried_before {
                 innovation = innovation.saturating_sub(25);
             } else {
@@ -429,6 +467,67 @@ mod tests {
         assert!(
             guided > unguided,
             "guided {guided} memory plans vs unguided {unguided}"
+        );
+    }
+
+    #[test]
+    fn empty_lint_attacks_are_bit_identical_to_plain_design() {
+        // design() delegates with an empty slice; an explicit empty
+        // slice must stay in RNG lockstep with it
+        let (pop, kb, _) = setup();
+        let mut a = SurrogateLlm::with_seed(31);
+        let mut b = SurrogateLlm::with_seed(31);
+        let d = Designer::default();
+        for _ in 0..10 {
+            let oa = d.design("00001", &seeds::naive_hip(), &pop, &kb, &mut a, None);
+            let ob = d.design_guided(
+                "00001",
+                &seeds::naive_hip(),
+                &pop,
+                &kb,
+                &mut b,
+                None,
+                &[],
+            );
+            assert_eq!(oa.avenues, ob.avenues);
+        }
+        assert_eq!(a.rng_state(), b.rng_state());
+    }
+
+    #[test]
+    fn lint_attacks_steer_the_plan_draw() {
+        use crate::sim::Bottleneck;
+        let d = Designer {
+            n_plans: 2,
+            ..Designer::default()
+        };
+        let (pop, kb, _) = setup();
+        let memory_plans = |attacks: &[Bottleneck]| -> usize {
+            let mut llm = SurrogateLlm::with_seed(13);
+            let mut hits = 0;
+            for _ in 0..40 {
+                let out = d.design_guided(
+                    "00001",
+                    &seeds::naive_hip(),
+                    &pop,
+                    &kb,
+                    &mut llm,
+                    None,
+                    attacks,
+                );
+                hits += out
+                    .plans
+                    .iter()
+                    .filter(|p| p.avenue.attacks().contains(&Bottleneck::Memory))
+                    .count();
+            }
+            hits
+        };
+        let guided = memory_plans(&[Bottleneck::Memory]);
+        let unguided = memory_plans(&[]);
+        assert!(
+            guided > unguided,
+            "lint-guided {guided} memory plans vs unguided {unguided}"
         );
     }
 

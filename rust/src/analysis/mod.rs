@@ -1,0 +1,385 @@
+//! Static kernel analysis: the deterministic diagnostic engine
+//! (DESIGN.md §13).
+//!
+//! The paper's loop pays an external evaluation for every hypothesis,
+//! so any verdict the system can derive *statically* is free quota.
+//! [`lint`] checks a [`KernelGenome`] against the architecture
+//! constants and the workload's compile gate and returns a
+//! stable-ordered list of [`Diagnostic`]s:
+//!
+//! * [`Severity::Error`] — the genome cannot run. Errors are produced
+//!   *by construction* from [`KernelGenome::validate`] and
+//!   [`crate::workload::Workload::admits`]: the engine calls them and
+//!   re-emits their verdicts under stable lint codes
+//!   ([`crate::genome::Invalid::code`]), so the lint-`Error` set
+//!   provably equals the validate∪admits reject set
+//!   (`tests/prop_invariants.rs` locks the equivalence).
+//! * [`Severity::Warn`] — legal but statically doomed: LDS budget
+//!   driving occupancy to the floor, MFMA fragment-shape mismatch,
+//!   tiles that do not divide the problem shape, register-spill
+//!   estimates, vector widths fighting coalescing ([`warnings`]).
+//!
+//! Each diagnostic names the profile [`Bottleneck`] component it
+//! attacks, which is what lets `[lint] guided` steer the designer's
+//! avenue priors through the existing [`crate::agents::knowledge::
+//! Avenue::attacks`] mapping.
+//!
+//! Purity contract (same standing as `sim::profile`): a diagnostic
+//! list is a pure function of (genome, arch, workload) — no RNG draw,
+//! no clock, no allocation-order dependence — so linting can never
+//! perturb a measurement stream or trajectory. The `[lint]` knobs only
+//! gate what *acts* on diagnostics, never what they contain.
+
+pub mod warnings;
+
+use crate::genome::KernelGenome;
+use crate::gpu::GpuArch;
+use crate::sim::Bottleneck;
+use crate::util::json::{push_str_value, req_str, Json};
+use crate::workload::Workload;
+
+/// Lint code of the workload compile-gate rejection
+/// ([`crate::workload::Workload::admits`] `Err`) — the one `Error`
+/// that does not originate in [`crate::genome::Invalid`].
+pub const ADMITS_CODE: &str = "L030-workload-inadmissible";
+
+/// How bad a diagnostic is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Severity {
+    /// The genome cannot compile/launch (or the workload's compile
+    /// gate rejects it). Exactly the `validate`/`admits` verdicts.
+    Error,
+    /// Legal, but statically predicted to waste a lane.
+    Warn,
+}
+
+impl Severity {
+    /// Stable wire tag (journal / CLI / report).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+        }
+    }
+
+    /// Decode a [`Severity::tag`].
+    pub fn from_tag(s: &str) -> Result<Severity, String> {
+        match s {
+            "error" => Ok(Severity::Error),
+            "warn" => Ok(Severity::Warn),
+            other => Err(format!("unknown severity '{other}'")),
+        }
+    }
+}
+
+/// One static finding about a genome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable lint code (e.g. `L001-lds-over-budget`). Wire format:
+    /// never renumber an existing code.
+    pub code: String,
+    pub severity: Severity,
+    /// Human message (CLI `lint`, reports, journal reject records).
+    pub message: String,
+    /// The profile cost component this finding concerns — the hook
+    /// `[lint] guided` boosts designer avenues through
+    /// [`crate::agents::knowledge::Avenue::attacks`].
+    pub attacks: Bottleneck,
+}
+
+impl Diagnostic {
+    fn new(
+        code: &str,
+        severity: Severity,
+        message: String,
+        attacks: Bottleneck,
+    ) -> Diagnostic {
+        Diagnostic {
+            code: code.to_string(),
+            severity,
+            message,
+            attacks,
+        }
+    }
+
+    /// One-line rendering: `error L001-lds-over-budget [lds]: ...`.
+    pub fn render(&self) -> String {
+        format!(
+            "{} {} [{}]: {}",
+            self.severity.tag(),
+            self.code,
+            self.attacks.tag(),
+            self.message
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("attacks", Json::Str(self.attacks.tag().to_string())),
+            ("code", Json::Str(self.code.clone())),
+            ("message", Json::Str(self.message.clone())),
+            ("severity", Json::Str(self.severity.tag().to_string())),
+        ])
+    }
+
+    /// Streamed emission, byte-identical to `to_json().to_string()`
+    /// (keys in alphabetical order).
+    pub fn write_json(&self, out: &mut String) {
+        out.push_str("{\"attacks\":");
+        push_str_value(out, self.attacks.tag());
+        out.push_str(",\"code\":");
+        push_str_value(out, &self.code);
+        out.push_str(",\"message\":");
+        push_str_value(out, &self.message);
+        out.push_str(",\"severity\":");
+        push_str_value(out, self.severity.tag());
+        out.push('}');
+    }
+
+    pub fn from_json(v: &Json) -> Result<Diagnostic, String> {
+        Ok(Diagnostic {
+            code: req_str(v, "code")?.to_string(),
+            severity: Severity::from_tag(req_str(v, "severity")?)?,
+            message: req_str(v, "message")?.to_string(),
+            attacks: Bottleneck::from_tag(req_str(v, "attacks")?)?,
+        })
+    }
+}
+
+/// The profile component a [`crate::genome::Invalid`] rejection
+/// concerns, keyed on its stable code. Digested knowledge, same
+/// standing as [`crate::agents::knowledge::Avenue::attacks`].
+fn invalid_attacks(e: &crate::genome::Invalid) -> Bottleneck {
+    use crate::genome::Invalid;
+    match e {
+        Invalid::LdsOverflow { .. } => Bottleneck::Lds,
+        Invalid::RegisterOverflow { .. } => Bottleneck::Compute,
+        Invalid::NonPow2Block(..) | Invalid::BlockOutOfRange(..) => Bottleneck::Occupancy,
+        Invalid::BadUnroll(_) => Bottleneck::Compute,
+        Invalid::BadVectorWidth(_) => Bottleneck::Memory,
+        Invalid::BadWaves(_) | Invalid::TooManyLanes(_) => Bottleneck::Occupancy,
+        Invalid::DoubleBufferWithoutStaging | Invalid::ScaleLdsWithoutStaging => {
+            Bottleneck::Memory
+        }
+        Invalid::SwizzleWithPadding => Bottleneck::Lds,
+        Invalid::MfmaRequiresLowPrecision => Bottleneck::Compute,
+    }
+}
+
+/// Lint a genome against an architecture and a workload.
+///
+/// Stable order: the `validate` error (first-failure, exactly as
+/// [`KernelGenome::validate`] reports it), then the `admits` error,
+/// then warnings in ascending code order. Deterministic and pure — the
+/// same inputs always produce the byte-identical list.
+pub fn lint(g: &KernelGenome, arch: &GpuArch, workload: &dyn Workload) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if let Err(e) = g.validate() {
+        out.push(Diagnostic::new(
+            e.code(),
+            Severity::Error,
+            e.to_string(),
+            invalid_attacks(&e),
+        ));
+    }
+    if let Err(msg) = workload.admits(g) {
+        out.push(Diagnostic::new(
+            ADMITS_CODE,
+            Severity::Error,
+            msg,
+            Bottleneck::Compute,
+        ));
+    }
+    warnings::collect(g, arch, workload, &mut out);
+    out
+}
+
+/// Does the genome carry at least one `Error` diagnostic? Equivalent
+/// to `validate().is_err() || admits(g).is_err()` by construction —
+/// the schedulers' pre-submission gate.
+pub fn has_error(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+/// Codes of the `Error` diagnostics, in diagnostic order (journal
+/// reject records carry these).
+pub fn error_codes(diags: &[Diagnostic]) -> Vec<String> {
+    diags
+        .iter()
+        .filter(|d| d.severity == Severity::Error)
+        .map(|d| d.code.clone())
+        .collect()
+}
+
+/// The bottleneck set `[lint] guided` feeds the designer: the base
+/// genome's *warning* components plus the *error* components of its
+/// statically doomed children (`siblings` — the already-failed
+/// offspring of the same base). Returned deduplicated in
+/// [`Bottleneck::ALL`] order, so the prior boost is a pure function of
+/// the population — no stored state, which is what keeps resume exact.
+pub fn guided_attacks<'a>(
+    base: &KernelGenome,
+    siblings: impl Iterator<Item = &'a KernelGenome>,
+    arch: &GpuArch,
+    workload: &dyn Workload,
+) -> Vec<Bottleneck> {
+    let mut hit = [false; 5];
+    for d in lint(base, arch, workload) {
+        if d.severity == Severity::Warn {
+            hit[d.attacks.index()] = true;
+        }
+    }
+    for s in siblings {
+        for d in lint(s, arch, workload) {
+            if d.severity == Severity::Error {
+                hit[d.attacks.index()] = true;
+            }
+        }
+    }
+    Bottleneck::ALL
+        .iter()
+        .copied()
+        .filter(|b| hit[b.index()])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{seeds, ComputePath, KernelGenome, Precision, ScaleCache};
+    use crate::gpu::MI300;
+    use crate::workload;
+
+    fn lint_default(g: &KernelGenome) -> Vec<Diagnostic> {
+        lint(g, &MI300, workload::default_workload().as_ref())
+    }
+
+    #[test]
+    fn valid_seed_has_no_errors() {
+        for (name, g) in seeds::all_seeds() {
+            let diags = lint_default(&g);
+            assert!(!has_error(&diags), "{name}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn validate_error_is_reemitted_under_its_code() {
+        let g = KernelGenome {
+            block_m: 48,
+            ..seeds::naive_hip()
+        };
+        let diags = lint_default(&g);
+        assert!(has_error(&diags));
+        let err = &diags[0];
+        assert_eq!(err.severity, Severity::Error);
+        assert_eq!(err.code, g.validate().unwrap_err().code());
+        assert_eq!(err.message, g.validate().unwrap_err().to_string());
+    }
+
+    #[test]
+    fn admits_rejection_is_an_error_with_the_admits_code() {
+        let w = workload::lookup("bf16-gemm").unwrap();
+        let g = seeds::human_oracle(); // fp8 operands: inadmissible
+        assert!(g.validate().is_ok() && w.admits(&g).is_err());
+        let diags = lint(&g, &MI300, w.as_ref());
+        assert!(has_error(&diags));
+        assert_eq!(diags[0].code, ADMITS_CODE);
+        assert_eq!(error_codes(&diags), vec![ADMITS_CODE.to_string()]);
+    }
+
+    #[test]
+    fn diagnostics_are_deterministic_and_stably_ordered() {
+        for (_, g) in seeds::all_seeds() {
+            let a = lint_default(&g);
+            let b = lint_default(&g);
+            assert_eq!(a, b);
+            // errors strictly precede warnings
+            let first_warn = a.iter().position(|d| d.severity == Severity::Warn);
+            if let Some(i) = first_warn {
+                assert!(a[i..].iter().all(|d| d.severity == Severity::Warn));
+            }
+            // warnings ascend by code
+            let warn_codes: Vec<&str> = a
+                .iter()
+                .filter(|d| d.severity == Severity::Warn)
+                .map(|d| d.code.as_str())
+                .collect();
+            let mut sorted = warn_codes.clone();
+            sorted.sort_unstable();
+            assert_eq!(warn_codes, sorted);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_lossless_and_streaming_matches() {
+        let doomed = KernelGenome {
+            compute: ComputePath::Mfma,
+            precision: Precision::Fp32,
+            ..seeds::mfma_seed()
+        };
+        for g in [seeds::naive_hip(), seeds::human_oracle(), doomed] {
+            for d in lint_default(&g) {
+                let emitted = d.to_json().to_string();
+                let mut streamed = String::new();
+                d.write_json(&mut streamed);
+                assert_eq!(streamed, emitted, "streamed == tree emitter");
+                let back =
+                    Diagnostic::from_json(&crate::util::json::parse(&emitted).unwrap())
+                        .unwrap();
+                assert_eq!(back, d);
+            }
+        }
+    }
+
+    #[test]
+    fn guided_attacks_collects_base_warns_and_sibling_errors() {
+        let w = workload::default_workload();
+        // a base with a known warning: direct-from-global narrow loads
+        let base = KernelGenome {
+            lds_staging: false,
+            double_buffer: false,
+            scale_cache: ScaleCache::GlobalReload,
+            vector_width: 1,
+            ..seeds::naive_hip()
+        };
+        let warn_attacks: Vec<Bottleneck> = lint(&base, &MI300, w.as_ref())
+            .into_iter()
+            .filter(|d| d.severity == Severity::Warn)
+            .map(|d| d.attacks)
+            .collect();
+        assert!(warn_attacks.contains(&Bottleneck::Memory), "{warn_attacks:?}");
+        // a sibling killed by the LDS budget
+        let sibling = KernelGenome {
+            block_m: 256,
+            block_n: 256,
+            block_k: 256,
+            lds_staging: true,
+            double_buffer: true,
+            precision: Precision::Fp32,
+            compute: ComputePath::Vectorized,
+            acc_in_regs: false,
+            waves_per_block: 8,
+            ..seeds::naive_hip()
+        };
+        assert!(sibling.validate().is_err());
+        let got = guided_attacks(&base, std::iter::once(&sibling), &MI300, w.as_ref());
+        assert!(got.contains(&Bottleneck::Memory), "{got:?}");
+        assert!(got.contains(&Bottleneck::Lds), "{got:?}");
+        // dedup + ALL order
+        let idx: Vec<usize> = got.iter().map(|b| b.index()).collect();
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(idx, sorted);
+        // no siblings, clean base ⇒ pure function of the base's warnings
+        let clean = guided_attacks(&base, std::iter::empty(), &MI300, w.as_ref());
+        assert_eq!(
+            clean,
+            Bottleneck::ALL
+                .iter()
+                .copied()
+                .filter(|b| warn_attacks.contains(b))
+                .collect::<Vec<_>>()
+        );
+    }
+}

@@ -111,6 +111,20 @@ pub struct RunConfig {
     /// (`[federation] read_only`) — e.g. CI runs against a curated
     /// archive.
     pub federation_read_only: bool,
+    /// Static lint gate (`[lint] gate`, DESIGN.md §13): planned
+    /// children carrying an `Error` diagnostic (exactly the
+    /// `validate`/`admits` reject set) are rejected before they occupy
+    /// a lane, releasing their reservation like a screen reject. Off by
+    /// default — a disabled run takes no lint code path, so its
+    /// trajectory is bit-identical to a build without the analyzer
+    /// (`tests/lint.rs`).
+    pub lint_gate: bool,
+    /// Lint-guided experiment design (`[lint] guided`, DESIGN.md §13):
+    /// the base kernel's warn diagnostics and its lint-rejected
+    /// children's error diagnostics feed the designer's avenue priors
+    /// through `Avenue::attacks()`, PR 7-style. Off by default with the
+    /// same bit-identity guarantee as `lint_gate`.
+    pub lint_guided: bool,
 }
 
 impl Default for RunConfig {
@@ -141,6 +155,8 @@ impl Default for RunConfig {
             federation_dir: None,
             federation_warm_start_k: 0,
             federation_read_only: false,
+            lint_gate: false,
+            lint_guided: false,
         }
     }
 }
@@ -203,6 +219,19 @@ impl RunConfig {
         self
     }
 
+    /// Toggle the static lint gate (`[lint] gate`, DESIGN.md §13).
+    pub fn with_lint_gate(mut self, gate: bool) -> Self {
+        self.lint_gate = gate;
+        self
+    }
+
+    /// Toggle lint-guided experiment design (`[lint] guided`,
+    /// DESIGN.md §13).
+    pub fn with_lint_guided(mut self, guided: bool) -> Self {
+        self.lint_guided = guided;
+        self
+    }
+
     /// Parse from the TOML subset (see module docs). Unknown keys are
     /// errors — config typos should not fail silently.
     pub fn from_toml(text: &str) -> Result<RunConfig, String> {
@@ -218,7 +247,7 @@ impl RunConfig {
                 if !matches!(
                     section.as_str(),
                     "run" | "platform" | "agents" | "llm" | "store" | "screen" | "profile"
-                        | "federation"
+                        | "federation" | "lint"
                 ) {
                     return Err(format!("line {}: unknown section [{section}]", lineno + 1));
                 }
@@ -359,6 +388,20 @@ impl RunConfig {
                     _ => return Err(format!("bad federation read_only '{value}'")),
                 }
             }
+            "lint.gate" => {
+                self.lint_gate = match value {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(format!("bad lint gate '{value}'")),
+                }
+            }
+            "lint.guided" => {
+                self.lint_guided = match value {
+                    "true" => true,
+                    "false" => false,
+                    _ => return Err(format!("bad lint guided '{value}'")),
+                }
+            }
             _ => return Err(format!("unknown key '{key}'")),
         }
         Ok(())
@@ -423,6 +466,14 @@ impl RunConfig {
                 "federation_read_only",
                 Json::Bool(self.federation_read_only),
             ));
+        }
+        // same only-when-on rule: lint-off checkpoints stay
+        // byte-identical to pre-lint ones
+        if self.lint_gate {
+            pairs.push(("lint_gate", Json::Bool(true)));
+        }
+        if self.lint_guided {
+            pairs.push(("lint_guided", Json::Bool(true)));
         }
         Json::obj(pairs)
     }
@@ -489,6 +540,15 @@ impl RunConfig {
             federation_read_only: match v.get("federation_read_only") {
                 None | Some(crate::util::json::Json::Null) => false,
                 Some(x) => x.as_bool().ok_or("config: bad federation_read_only")?,
+            },
+            // tolerant: pre-lint checkpoints carry neither key
+            lint_gate: match v.get("lint_gate") {
+                None | Some(crate::util::json::Json::Null) => false,
+                Some(x) => x.as_bool().ok_or("config: bad lint_gate")?,
+            },
+            lint_guided: match v.get("lint_guided") {
+                None | Some(crate::util::json::Json::Null) => false,
+                Some(x) => x.as_bool().ok_or("config: bad lint_guided")?,
             },
         })
     }
@@ -699,6 +759,40 @@ rubric_infidelity = 0.2
         assert_eq!(back.federation_dir.as_deref(), Some("fed/x"));
         assert_eq!(back.federation_warm_start_k, 2);
         assert!(back.federation_read_only);
+    }
+
+    #[test]
+    fn toml_lint_knobs() {
+        let c = RunConfig::from_toml("[lint]\ngate = true\nguided = true\n").unwrap();
+        assert!(c.lint_gate);
+        assert!(c.lint_guided);
+        let d = RunConfig::default();
+        assert!(!d.lint_gate, "the lint gate is opt-in");
+        assert!(!d.lint_guided, "lint guidance is opt-in");
+        assert!(RunConfig::from_toml("[lint]\ngate = maybe\n").is_err());
+        assert!(RunConfig::from_toml("[lint]\nstrict = true\n").is_err());
+    }
+
+    #[test]
+    fn builders_set_lint() {
+        let c = RunConfig::default().with_lint_gate(true).with_lint_guided(true);
+        assert!(c.lint_gate);
+        assert!(c.lint_guided);
+    }
+
+    #[test]
+    fn config_json_carries_lint_only_when_on() {
+        // off: no lint keys at all — checkpoints stay byte-identical
+        // to pre-lint ones
+        let off = RunConfig::default().to_json().to_string();
+        assert!(!off.contains("lint"), "{off}");
+        // on: both knobs round-trip
+        let c = RunConfig::default().with_lint_gate(true).with_lint_guided(true);
+        let back =
+            RunConfig::from_json(&crate::util::json::parse(&c.to_json().to_string()).unwrap())
+                .unwrap();
+        assert!(back.lint_gate);
+        assert!(back.lint_guided);
     }
 
     #[test]

@@ -172,6 +172,30 @@ pub enum Invalid {
     MfmaRequiresLowPrecision,
 }
 
+impl Invalid {
+    /// Stable lint-code string for this rejection (DESIGN.md §13).
+    /// `analysis::lint` re-emits every [`KernelGenome::validate`]
+    /// verdict under exactly this code, so the diagnostic engine and
+    /// the legacy error type cannot drift. Codes are part of the
+    /// journal wire format: never renumber an existing one.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Invalid::LdsOverflow { .. } => "L001-lds-over-budget",
+            Invalid::RegisterOverflow { .. } => "L002-vgpr-over-budget",
+            Invalid::NonPow2Block(..) => "L010-block-not-pow2",
+            Invalid::BlockOutOfRange(..) => "L011-block-out-of-range",
+            Invalid::BadUnroll(_) => "L012-bad-unroll",
+            Invalid::BadVectorWidth(_) => "L013-bad-vector-width",
+            Invalid::BadWaves(_) => "L014-bad-waves",
+            Invalid::TooManyLanes(_) => "L015-too-many-lanes",
+            Invalid::DoubleBufferWithoutStaging => "L020-double-buffer-without-staging",
+            Invalid::ScaleLdsWithoutStaging => "L021-scale-lds-without-staging",
+            Invalid::SwizzleWithPadding => "L022-swizzle-with-padding",
+            Invalid::MfmaRequiresLowPrecision => "L023-mfma-requires-low-precision",
+        }
+    }
+}
+
 impl std::fmt::Display for Invalid {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -260,24 +284,10 @@ impl KernelGenome {
     pub fn validate(&self) -> Result<(), Invalid> {
         for (name, v) in [("m", self.block_m), ("n", self.block_n), ("k", self.block_k)] {
             if !v.is_power_of_two() {
-                return Err(Invalid::NonPow2Block(
-                    match name {
-                        "m" => "m",
-                        "n" => "n",
-                        _ => "k",
-                    },
-                    v,
-                ));
+                return Err(Invalid::NonPow2Block(name, v));
             }
             if !(16..=256).contains(&v) {
-                return Err(Invalid::BlockOutOfRange(
-                    match name {
-                        "m" => "m",
-                        "n" => "n",
-                        _ => "k",
-                    },
-                    v,
-                ));
+                return Err(Invalid::BlockOutOfRange(name, v));
             }
         }
         if ![1, 2, 4, 8].contains(&self.unroll_k) {
@@ -597,6 +607,42 @@ mod tests {
             ..g.clone()
         };
         assert_ne!(g.fingerprint_hash(), flipped.fingerprint_hash());
+    }
+
+    #[test]
+    fn invalid_codes_are_stable_and_distinct() {
+        let variants = [
+            Invalid::NonPow2Block("m", 48),
+            Invalid::BlockOutOfRange("n", 512),
+            Invalid::LdsOverflow { need: 1, have: 0 },
+            Invalid::RegisterOverflow { need: 1, have: 0 },
+            Invalid::TooManyLanes(2048),
+            Invalid::BadUnroll(3),
+            Invalid::BadVectorWidth(5),
+            Invalid::BadWaves(7),
+            Invalid::DoubleBufferWithoutStaging,
+            Invalid::ScaleLdsWithoutStaging,
+            Invalid::SwizzleWithPadding,
+            Invalid::MfmaRequiresLowPrecision,
+        ];
+        let mut codes: Vec<&str> = variants.iter().map(|v| v.code()).collect();
+        // ISSUE 9's canonical example code must exist verbatim
+        assert!(codes.contains(&"L001-lds-over-budget"));
+        codes.sort_unstable();
+        let before = codes.len();
+        codes.dedup();
+        assert_eq!(codes.len(), before, "duplicate lint codes");
+        for v in &variants {
+            assert!(v.code().starts_with('L'), "{}", v.code());
+            // codes are wire-format identifiers: lowercase kebab + digits
+            assert!(
+                v.code()[1..]
+                    .chars()
+                    .all(|c| c.is_ascii_digit() || c.is_ascii_lowercase() || c == '-'),
+                "{}",
+                v.code()
+            );
+        }
     }
 
     #[test]

@@ -67,6 +67,7 @@
 //! ```
 
 pub mod agents;
+pub mod analysis;
 pub mod baselines;
 pub mod config;
 pub mod eval;
@@ -91,6 +92,7 @@ pub use crate::workload as workloads;
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
     pub use crate::agents::{AgentSuite, SurrogateLlm};
+    pub use crate::analysis::{lint, Diagnostic, Severity};
     pub use crate::config::RunConfig;
     pub use crate::eval::{EvalBackend, EvalPlatform};
     pub use crate::agents::{ExperimentRule, KnowledgeProfile, SelectionPolicy};

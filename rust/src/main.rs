@@ -12,6 +12,9 @@
 //!   leaderboard score the canonical genomes on the 18-size suite
 //!   baseline    run a baseline tuner (random | hillclimb | anneal)
 //!   inspect     print a genome's HIP-like sketch + simulator breakdown
+//!   lint        run the static diagnostic engine (DESIGN.md §13) over
+//!               a genome JSON file (`--genome`), a persisted run's
+//!               ledger (`--store`), or a workload's seed kernels
 //!   eval-pjrt   check + time the compiled artifact catalog over PJRT
 //!   compact     rewrite JSONL journals (run, campaign, or federated
 //!               store) into indexed binary segments (DESIGN.md §12)
@@ -25,9 +28,11 @@
 //! design, DESIGN.md §11), `--store <dir>` (the durable run ledger,
 //! `[store] dir`), and
 //! `--halt-after <N>` (testing: simulate a crash after N submissions),
-//! and the federated-archive knobs `--federation-dir <dir>`,
+//! the federated-archive knobs `--federation-dir <dir>`,
 //! `--warm-start-k <N>`, `--federation-read-only true|false`
-//! (`[federation]`, DESIGN.md §12);
+//! (`[federation]`, DESIGN.md §12), and the lint knobs
+//! `--lint-gate true|false` / `--lint-guided true|false` (`[lint]`,
+//! DESIGN.md §13);
 //! like `--workload`, the flags win over the config file.
 //!
 //! Arguments use `--key value` pairs (offline build: no clap; parsing
@@ -143,6 +148,22 @@ fn load_config(flags: &HashMap<String, String>) -> Result<RunConfig, String> {
                     "bad --federation-read-only '{other}' (want true|false)"
                 ))
             }
+        };
+    }
+    if let Some(gate) = flags.get("lint-gate") {
+        cfg.lint_gate = match gate.as_str() {
+            // a bare trailing `--lint-gate` parses as an empty value
+            "true" | "" => true,
+            "false" => false,
+            other => return Err(format!("bad --lint-gate '{other}' (want true|false)")),
+        };
+    }
+    if let Some(guided) = flags.get("lint-guided") {
+        cfg.lint_guided = match guided.as_str() {
+            // a bare trailing `--lint-guided` parses as an empty value
+            "true" | "" => true,
+            "false" => false,
+            other => return Err(format!("bad --lint-guided '{other}' (want true|false)")),
         };
     }
     Ok(cfg)
@@ -499,6 +520,73 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// The `lint` subcommand (DESIGN.md §13): run the static diagnostic
+/// engine over a genome JSON file, a persisted run's ledger, or —
+/// absent both — the workload's seed kernels. Pure reporting: the
+/// process exits 0 even when errors are found (the gate lives inside
+/// the schedulers, not here).
+fn cmd_lint(flags: &HashMap<String, String>) -> Result<(), String> {
+    use gpu_kernel_scientist::analysis;
+    let named_workload = |flags: &HashMap<String, String>| {
+        let name = flags
+            .get("workload")
+            .map(String::as_str)
+            .unwrap_or(gpu_kernel_scientist::workload::DEFAULT_WORKLOAD);
+        gpu_kernel_scientist::workload::lookup(name)
+            .ok_or_else(|| format!("unknown --workload '{name}'"))
+    };
+    match (flags.get("genome"), flags.get("store")) {
+        (Some(_), Some(_)) => Err("lint takes --genome OR --store, not both".into()),
+        (Some(path), None) => {
+            let workload = named_workload(flags)?;
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let v = gpu_kernel_scientist::util::json::parse(&text)
+                .map_err(|e| format!("{path}: {e}"))?;
+            let genome = KernelGenome::from_json(&v)?;
+            print!(
+                "{}",
+                report::render_lint(path, &analysis::lint(&genome, &MI300, workload.as_ref()))
+            );
+            Ok(())
+        }
+        (None, Some(dir)) => {
+            // every distinct ledger genome, against the run's own
+            // workload (persisted in its checkpoint — --workload is
+            // ignored here)
+            let r = gpu_kernel_scientist::store::replay(Path::new(dir))?;
+            let workload = gpu_kernel_scientist::workload::lookup(&r.workload)
+                .ok_or_else(|| format!("unknown workload '{}' in store", r.workload))?;
+            let mut seen = std::collections::HashSet::new();
+            let mut with_errors = 0usize;
+            for m in r.population.members() {
+                if !seen.insert(m.genome.fingerprint_hash()) {
+                    continue;
+                }
+                let diags = analysis::lint(&m.genome, &MI300, workload.as_ref());
+                if analysis::has_error(&diags) {
+                    with_errors += 1;
+                }
+                print!("{}", report::render_lint(&m.id, &diags));
+            }
+            println!(
+                "{dir}: {} distinct genome(s), {with_errors} with error(s)",
+                seen.len()
+            );
+            Ok(())
+        }
+        (None, None) => {
+            let workload = named_workload(flags)?;
+            for (name, genome) in workload.starting_population() {
+                print!(
+                    "{}",
+                    report::render_lint(name, &analysis::lint(&genome, &MI300, workload.as_ref()))
+                );
+            }
+            Ok(())
+        }
+    }
+}
+
 fn cmd_compact(flags: &HashMap<String, String>) -> Result<(), String> {
     use gpu_kernel_scientist::store;
     match (flags.get("store"), flags.get("federation-dir")) {
@@ -580,15 +668,17 @@ fn main() {
         "leaderboard" => cmd_leaderboard(),
         "baseline" => cmd_baseline(&flags),
         "inspect" => cmd_inspect(&flags),
+        "lint" => cmd_lint(&flags),
         "eval-pjrt" => cmd_eval_pjrt(&flags),
         "compact" => cmd_compact(&flags),
         _ => {
             eprintln!(
-                "usage: kernel-scientist <run|campaign|resume|replay|workloads|table1|leaderboard|baseline|inspect|eval-pjrt|compact> \
+                "usage: kernel-scientist <run|campaign|resume|replay|workloads|table1|leaderboard|baseline|inspect|lint|eval-pjrt|compact> \
                  [--workload name] [--workloads a,b,c] [--lineage true] \
                  [--seed N] [--budget N] [--parallelism N] [--pipeline true|false] \
                  [--profile-guided true|false] [--store dir] [--halt-after N] \
                  [--federation-dir dir] [--warm-start-k N] [--federation-read-only true|false] \
+                 [--lint-gate true|false] [--lint-guided true|false] [--genome file.json] \
                  [--config file.toml] [--tuner random|hillclimb|anneal] \
                  [--seed-kernel name] [--artifacts dir] [--save-population file.jsonl]"
             );

@@ -440,7 +440,8 @@ impl Population {
                 }
             }
         }
-        let mut out: Vec<(u32, usize)> = firsts.into_iter().collect();
+        // fully sorted on the next line, so drain order cannot leak
+        let mut out: Vec<(u32, usize)> = firsts.into_iter().collect(); // detlint: allow(DL003)
         out.sort_unstable_by_key(|&(idx, _)| idx);
         out.into_iter()
             .map(|(idx, cfg)| (cfg, &self.members[idx as usize]))

@@ -102,6 +102,37 @@ pub fn render_pipeline(stats: &crate::scientist::PipelineStats) -> String {
             stats.screened, stats.screen_promoted, stats.screen_rejected
         ));
     }
+    // same rule for the lint gate (DESIGN.md §13): gate-off summaries
+    // stay byte-identical to a build without the analysis layer
+    if stats.linted > 0 {
+        s.push_str(&format!(
+            " | lint: {} checked, {} rejected pre-submission",
+            stats.linted, stats.lint_rejected
+        ));
+    }
+    s
+}
+
+/// Render a genome's diagnostic list (the `lint` CLI subcommand,
+/// DESIGN.md §13): one [`crate::analysis::Diagnostic::render`] line per
+/// finding under a label, or an explicit clean verdict — an empty list
+/// must read as "checked and passed", never as "not checked".
+pub fn render_lint(label: &str, diags: &[crate::analysis::Diagnostic]) -> String {
+    use crate::analysis::Severity;
+    if diags.is_empty() {
+        return format!("{label}: clean (no diagnostics)\n");
+    }
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    let mut s = format!(
+        "{label}: {} diagnostic(s), {} error(s)\n",
+        diags.len(),
+        errors
+    );
+    for d in diags {
+        s.push_str("  ");
+        s.push_str(&d.render());
+        s.push('\n');
+    }
     s
 }
 
@@ -143,15 +174,25 @@ pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) ->
         .results
         .iter()
         .any(|r| r.outcome.profile_mix.is_some());
+    // the lint column follows the profile-mix rule: it appears only
+    // when at least one run's gate saw work, so a gate-off campaign's
+    // table stays byte-identical to pre-lint output
+    let with_lint = outcome.results.iter().any(|r| r.outcome.pipeline.linted > 0);
     let mut s = String::from("### Campaign summary\n\n");
     s.push_str(
         "| Workload | Best | Feedback geomean (us) | Leaderboard (us) | Submissions | Cache h/m | Platform time (min) | Lane occupancy | Screened/promoted |",
     );
+    if with_lint {
+        s.push_str(" Linted/rejected |");
+    }
     if with_mix {
         s.push_str(" Bottlenecks |");
     }
     s.push('\n');
     s.push_str("|---|---|---|---|---|---|---|---|---|");
+    if with_lint {
+        s.push_str("---|");
+    }
     if with_mix {
         s.push_str("---|");
     }
@@ -176,6 +217,12 @@ pub fn render_campaign(outcome: &crate::scientist::campaign::CampaignOutcome) ->
             r.outcome.pipeline.screened,
             r.outcome.pipeline.screen_promoted
         ));
+        if with_lint {
+            s.push_str(&format!(
+                " {}/{} |",
+                r.outcome.pipeline.linted, r.outcome.pipeline.lint_rejected
+            ));
+        }
         if with_mix {
             let mix = r
                 .outcome
@@ -379,6 +426,8 @@ mod tests {
             screened: 0,
             screen_promoted: 0,
             screen_rejected: 0,
+            linted: 0,
+            lint_rejected: 0,
         };
         let s = render_pipeline(&stats);
         assert!(s.contains("steady-state pipeline over 4 lane(s)"), "{s}");
@@ -387,6 +436,8 @@ mod tests {
         // screening off: no screen fragment at all (report diffs of
         // off runs against pre-screen baselines stay clean)
         assert!(!s.contains("screen:"), "{s}");
+        // lint gate off: same rule
+        assert!(!s.contains("lint:"), "{s}");
         let lockstep = PipelineStats {
             pipelined: false,
             ..stats.clone()
@@ -396,10 +447,73 @@ mod tests {
             screened: 12,
             screen_promoted: 7,
             screen_rejected: 5,
-            ..stats
+            ..stats.clone()
         };
         let s = render_pipeline(&screened);
         assert!(s.contains("screen: 12 scored, 7 promoted, 5 rejected"), "{s}");
+        let linted = PipelineStats {
+            linted: 9,
+            lint_rejected: 3,
+            ..stats
+        };
+        let s = render_pipeline(&linted);
+        assert!(s.contains("lint: 9 checked, 3 rejected pre-submission"), "{s}");
+    }
+
+    #[test]
+    fn lint_report_renders_diagnostics_or_a_clean_verdict() {
+        use crate::analysis::lint;
+        use crate::genome::{seeds, KernelGenome};
+        use crate::gpu::MI300;
+        use crate::workload;
+        let w = workload::default_workload();
+        // an invalid genome renders its error line under the label
+        let g = KernelGenome {
+            block_m: 48,
+            ..seeds::naive_hip()
+        };
+        let diags = lint(&g, &MI300, w.as_ref());
+        let s = render_lint("candidate", &diags);
+        assert!(s.starts_with("candidate: "), "{s}");
+        assert!(s.contains("error(s)\n"), "{s}");
+        assert!(s.contains("  error "), "{s}");
+        // an empty list is an explicit clean verdict
+        assert_eq!(render_lint("seed", &[]), "seed: clean (no diagnostics)\n");
+    }
+
+    #[test]
+    fn campaign_table_adds_lint_column_only_when_the_gate_saw_work() {
+        use crate::scientist::campaign::{CampaignOutcome, WorkloadRunResult};
+        use crate::scientist::{PipelineStats, RunOutcome};
+        let row = |linted: u64, lint_rejected: u64| WorkloadRunResult {
+            workload: "fp8-gemm".into(),
+            cache_stats: (0, 5),
+            outcome: RunOutcome {
+                workload: "fp8-gemm".into(),
+                best_geomean_us: 400.0,
+                best_id: "00009".into(),
+                submissions: 12,
+                wall_clock_s: 1080.0,
+                curve: ConvergenceCurve::default(),
+                leaderboard_us: None,
+                pipeline: PipelineStats {
+                    linted,
+                    lint_rejected,
+                    ..Default::default()
+                },
+                profile_mix: None,
+                federation: None,
+            },
+        };
+        let off = render_campaign(&CampaignOutcome {
+            results: vec![row(0, 0)],
+        });
+        assert!(!off.contains("Linted"), "{off}");
+        let on = render_campaign(&CampaignOutcome {
+            results: vec![row(9, 3)],
+        });
+        assert!(on.contains("Linted/rejected |"), "{on}");
+        assert!(on.contains("| 9/3 |"), "{on}");
     }
 
     #[test]

@@ -47,8 +47,10 @@ pub use pipeline::PipelineStats;
 use pipeline::SchedCounters;
 
 use crate::agents::{AgentSuite, FindingsDoc, KernelWrite, Selection};
+use crate::analysis::{self, Diagnostic, Severity};
 use crate::config::RunConfig;
 use crate::eval::{EvalBackend, EvalPlatform, PlatformConfig, ScreenConfig, ScreenTier};
+use crate::gpu::MI300;
 use crate::metrics::ConvergenceCurve;
 use crate::population::{EvalOutcome, Individual, Population};
 use crate::sim::SimBackend;
@@ -175,6 +177,11 @@ pub(crate) struct Provenance {
     /// Whether this entry passed through the analytic screen tier
     /// before submission (always false while `[screen]` is disabled).
     pub screened: bool,
+    /// Error codes of the lint diagnostics that rejected this entry at
+    /// the pre-submission gate (DESIGN.md §13); empty for everything
+    /// that actually reached the platform — and always empty while
+    /// `[lint] gate` is off.
+    pub lint: Vec<String>,
 }
 
 impl Provenance {
@@ -186,6 +193,7 @@ impl Provenance {
             submission_index: Some(submitted_at - 1),
             plan: None,
             screened: false,
+            lint: Vec::new(),
         }
     }
 }
@@ -212,6 +220,11 @@ pub(crate) struct PlannedGroup {
     pub experiments: Vec<PlannedExperiment>,
     /// Writer children discarded as duplicates during this round.
     pub duplicates_skipped: u64,
+    /// Children the static lint gate diverted away from submission,
+    /// with their `Error` diagnostics (DESIGN.md §13). Each scheduler
+    /// ledgers these as compile failures — no lane, no quota. Always
+    /// empty while `[lint] gate` is off.
+    pub lint_rejected: Vec<(PlannedExperiment, Vec<Diagnostic>)>,
 }
 
 /// Checkpoint form of one planned-but-uncommitted experiment.
@@ -676,6 +689,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 screened: prov.screened,
                 profile,
                 federated,
+                lint: prov.lint,
             });
             self.store.as_mut().expect("store checked above").append(&record);
         }
@@ -726,13 +740,34 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         } else {
             None
         };
-        let design = self.agents.designer.design(
+        // With `[lint] guided` on, the base's warning components and
+        // its failed children's error components boost the avenues
+        // that attack them (DESIGN.md §13). The set is a pure function
+        // of the population — recomputed here every round, so resume
+        // needs no extra state. Off, the slice is empty and
+        // `design_guided` is bit-identical to the plain path.
+        let lint_attacks = if self.config.lint_guided {
+            analysis::guided_attacks(
+                &base.genome,
+                self.population
+                    .members()
+                    .iter()
+                    .filter(|m| m.parents.first() == Some(&base.id))
+                    .map(|m| &m.genome),
+                &MI300,
+                self.workload.as_ref(),
+            )
+        } else {
+            Vec::new()
+        };
+        let design = self.agents.designer.design_guided(
             &base.id,
             &base.genome,
             &self.population,
             &self.agents.knowledge,
             &mut self.agents.llm,
             base_bottleneck,
+            &lint_attacks,
         );
         if design.plans.is_empty() {
             return None;
@@ -758,6 +793,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             chosen_experiments: Vec::new(),
             experiments: Vec::new(),
             duplicates_skipped: 0,
+            lint_rejected: Vec::new(),
         };
         let mut group_fps: HashSet<u64> = HashSet::new();
         for idx in &chosen {
@@ -780,14 +816,36 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 group.duplicates_skipped += 1;
                 continue;
             }
-            group_fps.insert(fp);
-            group.experiments.push(PlannedExperiment {
+            let experiment = PlannedExperiment {
                 base_id: base.id.clone(),
                 reference_id: reference.id.clone(),
                 description: plan.description.clone(),
                 write,
                 fingerprint: fp,
-            });
+            };
+            // The static gate (DESIGN.md §13): an error-diagnosed
+            // child can never run, so it is diverted to the reject
+            // list instead of a lane. It still reserves its
+            // fingerprint within the group (the writer cannot
+            // re-propose it this round) but does not consume `room` —
+            // like a screen reject, the budget flows back to planning.
+            if self.config.lint_gate {
+                self.sched.linted += 1;
+                let mut diags = analysis::lint(
+                    &experiment.write.genome,
+                    &MI300,
+                    self.workload.as_ref(),
+                );
+                if analysis::has_error(&diags) {
+                    self.sched.lint_rejected += 1;
+                    group_fps.insert(fp);
+                    diags.retain(|d| d.severity == Severity::Error);
+                    group.lint_rejected.push((experiment, diags));
+                    continue;
+                }
+            }
+            group_fps.insert(fp);
+            group.experiments.push(experiment);
         }
         Some(group)
     }
@@ -809,10 +867,44 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         )
     }
 
+    /// Ledger one lint-gate reject (DESIGN.md §13): the child joins
+    /// the population as a compile failure carrying its `Error`
+    /// diagnostics, without ever occupying a lane or consuming quota —
+    /// the designer sees the failed hypothesis, the budget does not
+    /// pay for it. `submitted_at` is pinned to the current submission
+    /// count so the curve and a journal replay stay aligned.
+    fn record_lint_reject(
+        &mut self,
+        experiment: PlannedExperiment,
+        errors: Vec<Diagnostic>,
+        log_pos: usize,
+    ) -> String {
+        let message = errors
+            .iter()
+            .map(|d| d.render())
+            .collect::<Vec<_>>()
+            .join("; ");
+        let prov = Provenance {
+            submitted_at: self.platform.submissions(),
+            cached: false,
+            submission_index: None,
+            plan: Some(log_pos),
+            screened: false,
+            lint: errors.into_iter().map(|d| d.code).collect(),
+        };
+        self.record_experiment(
+            experiment,
+            EvalOutcome::CompileFailure(format!("rejected by the lint gate: {message}")),
+            prov,
+        )
+    }
+
     /// Journal one planning round's transcript (no-op without a store).
     /// `screened` is how many of the round's children entered the
-    /// analytic screen tier (0 while `[screen]` is disabled).
-    fn journal_plan(&mut self, log_pos: usize, screened: u64) {
+    /// analytic screen tier (0 while `[screen]` is disabled); `linted`
+    /// is how many the lint gate rejected (0 while `[lint] gate` is
+    /// disabled — the field is then omitted from the record).
+    fn journal_plan(&mut self, log_pos: usize, screened: u64, linted: u64) {
         let Some(store) = self.store.as_mut() else { return };
         let log = &self.logs[log_pos];
         store.append(&JournalRecord::Plan(PlanRecord {
@@ -825,6 +917,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             avenues: log.avenue_names.clone(),
             chosen: log.chosen_experiments.clone(),
             screened,
+            linted,
         }));
     }
 
@@ -922,6 +1015,18 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             group.experiments = out.promoted;
         }
 
+        // Lint-gate rejects join the ledger BEFORE the batch: their
+        // journal records precede the batch's, so their ids lead
+        // `submitted_ids` exactly as a journal-order resume would
+        // reconstruct them. No-op (and no new code path) with the
+        // gate off — the reject list is then always empty.
+        let log_pos = self.logs.len();
+        let mut submitted_ids = Vec::new();
+        for (experiment, errors) in std::mem::take(&mut group.lint_rejected) {
+            submitted_ids.push(self.record_lint_reject(experiment, errors, log_pos));
+        }
+        let lint_rejected_now = submitted_ids.len() as u64;
+
         let batch: Vec<crate::genome::KernelGenome> = group
             .experiments
             .iter()
@@ -932,8 +1037,6 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             results.iter().filter(|r| !r.cached).count() as u64,
             self.config.eval_parallelism,
         );
-        let mut submitted_ids = Vec::new();
-        let log_pos = self.logs.len();
         for (experiment, result) in group.experiments.into_iter().zip(results) {
             let prov = Provenance {
                 submitted_at: result
@@ -944,6 +1047,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
                 submission_index: result.submission_index,
                 plan: Some(log_pos),
                 screened: self.config.screen_enabled,
+                lint: Vec::new(),
             };
             submitted_ids.push(self.record_experiment(experiment, result.outcome, prov));
         }
@@ -963,7 +1067,7 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         } else {
             0
         };
-        self.journal_plan(log_pos, screened);
+        self.journal_plan(log_pos, screened, lint_rejected_now);
         self.logs.last()
     }
 

@@ -77,6 +77,13 @@ pub struct PipelineStats {
     /// Screened candidates rejected at the screen tier — they never
     /// occupied a lane or consumed quota, like replanned duplicates.
     pub screen_rejected: u64,
+    /// Candidates checked by the static lint gate (DESIGN.md §13); 0
+    /// while `[lint] gate` is disabled.
+    pub linted: u64,
+    /// Lint-checked candidates carrying an `Error` diagnostic,
+    /// rejected before submission — they joined the ledger as compile
+    /// failures but never occupied a lane or consumed quota.
+    pub lint_rejected: u64,
 }
 
 /// Raw counters both schedulers accumulate on the run; snapshot into
@@ -88,6 +95,8 @@ pub(crate) struct SchedCounters {
     pub screened: u64,
     pub screen_promoted: u64,
     pub screen_rejected: u64,
+    pub linted: u64,
+    pub lint_rejected: u64,
     depth_total: u64,
     depth_samples: u64,
     max_in_flight: u64,
@@ -120,6 +129,8 @@ impl SchedCounters {
             screened: self.screened,
             screen_promoted: self.screen_promoted,
             screen_rejected: self.screen_rejected,
+            linted: self.linted,
+            lint_rejected: self.lint_rejected,
             depth_total: self.depth_total,
             depth_samples: self.depth_samples,
             max_in_flight: self.max_in_flight,
@@ -134,6 +145,8 @@ impl SchedCounters {
             screened: s.screened,
             screen_promoted: s.screen_promoted,
             screen_rejected: s.screen_rejected,
+            linted: s.linted,
+            lint_rejected: s.lint_rejected,
             depth_total: s.depth_total,
             depth_samples: s.depth_samples,
             max_in_flight: s.max_in_flight,
@@ -156,6 +169,8 @@ impl SchedCounters {
             screened: self.screened,
             screen_promoted: self.screen_promoted,
             screen_rejected: self.screen_rejected,
+            linted: self.linted,
+            lint_rejected: self.lint_rejected,
         }
     }
 }
@@ -296,7 +311,17 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                 } else {
                     0
                 };
-                self.journal_plan(log_pos, screened_now);
+                self.journal_plan(log_pos, screened_now, group.lint_rejected.len() as u64);
+                // Lint-gate rejects ledger immediately after their
+                // plan record: they hold no reservation and take no
+                // queue slot, so the journal order (plan, then its
+                // rejects, then completions) matches the live
+                // `submitted_ids` order a resume reconstructs. Empty
+                // — and no new code path — while the gate is off.
+                for (experiment, errors) in std::mem::take(&mut group.lint_rejected) {
+                    let id = self.record_lint_reject(experiment, errors, log_pos);
+                    self.logs[log_pos].submitted_ids.push(id);
+                }
                 for experiment in group.experiments {
                     reserved.insert(experiment.fingerprint);
                     match screen.as_mut() {
@@ -362,6 +387,7 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                 submission_index: done.submission_index,
                 plan: Some(child.log_pos),
                 screened: screen.is_some(),
+                lint: Vec::new(),
             };
             let id = self.record_experiment(child.experiment, done.outcome, prov);
             self.logs[child.log_pos].submitted_ids.push(id);

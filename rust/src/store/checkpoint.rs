@@ -47,7 +47,10 @@ pub const CHECKPOINT_FILE: &str = "checkpoint.json";
 /// journal `federated` flag *without* a bump: both parse tolerantly
 /// (absent → 0 / false), so pre-federation checkpoints restore
 /// unchanged and federation-off checkpoints are byte-identical to
-/// version-4 ones.
+/// version-4 ones. The lint layer (DESIGN.md §13) follows the same
+/// no-bump pattern: `sched.linted`/`sched.lint_rejected`, the journal
+/// `linted`/`lint` fields, and the `[lint]` config knobs all emit only
+/// when set and parse tolerantly when absent.
 const VERSION: u64 = 4;
 
 /// Scheduler counters snapshot (mirrors the run's private
@@ -62,6 +65,12 @@ pub struct SchedSnapshot {
     pub screened: u64,
     pub screen_promoted: u64,
     pub screen_rejected: u64,
+    /// Children checked by the lint gate (DESIGN.md §13); 0 while
+    /// `[lint] gate` is off. Emitted only when nonzero.
+    pub linted: u64,
+    /// Children the gate rejected pre-submission. Emitted only when
+    /// nonzero.
+    pub lint_rejected: u64,
 }
 
 /// One planned-but-uncommitted experiment (queued or in flight at
@@ -183,9 +192,8 @@ impl Checkpoint {
             ("iteration", Json::Num(self.iteration as f64)),
             ("stalls", Json::Num(self.stalls as f64)),
             ("planning_dead", Json::Bool(self.planning_dead)),
-            (
-                "sched",
-                Json::obj(vec![
+            ("sched", {
+                let mut pairs = vec![
                     ("planning_rounds", Json::Num(self.sched.planning_rounds as f64)),
                     (
                         "replanned_duplicates",
@@ -203,8 +211,20 @@ impl Checkpoint {
                         "screen_rejected",
                         Json::Num(self.sched.screen_rejected as f64),
                     ),
-                ]),
-            ),
+                ];
+                // emitted only when nonzero: lint-off checkpoints stay
+                // byte-identical to pre-lint ones
+                if self.sched.linted > 0 {
+                    pairs.push(("linted", Json::Num(self.sched.linted as f64)));
+                }
+                if self.sched.lint_rejected > 0 {
+                    pairs.push((
+                        "lint_rejected",
+                        Json::Num(self.sched.lint_rejected as f64),
+                    ));
+                }
+                Json::obj(pairs)
+            }),
             ("llm_rng", rng_words(&self.llm_rng)),
             ("findings", self.findings.clone()),
             ("platform", {
@@ -290,6 +310,15 @@ impl Checkpoint {
                 screened: req_u64(sched, "screened")?,
                 screen_promoted: req_u64(sched, "screen_promoted")?,
                 screen_rejected: req_u64(sched, "screen_rejected")?,
+                // tolerant: pre-lint checkpoints carry neither counter
+                linted: match sched.get("linted") {
+                    None | Some(Json::Null) => 0,
+                    Some(x) => x.as_u64().ok_or("checkpoint: bad linted")?,
+                },
+                lint_rejected: match sched.get("lint_rejected") {
+                    None | Some(Json::Null) => 0,
+                    Some(x) => x.as_u64().ok_or("checkpoint: bad lint_rejected")?,
+                },
             },
             llm_rng: parse_rng_words(v.get("llm_rng"), "llm_rng")?,
             findings: v

@@ -279,7 +279,7 @@ impl FederationSnapshot {
             }
         }
         let mut ranked: Vec<(u64, &FedEntry, f64)> = best
-            .into_iter()
+            .into_iter() // detlint: allow(DL003) — fully sorted below
             .filter(|&(_, (_, e))| {
                 e.genome.validate().is_ok() && workload.admits(&e.genome).is_ok()
             })
@@ -418,6 +418,9 @@ mod tests {
         c.eval_parallelism = 7;
         c.max_submissions = 3;
         c.pipeline = true;
+        // lint gates which genomes reach eval, never a genome's result
+        c.lint_gate = true;
+        c.lint_guided = true;
         assert_eq!(config_digest(&c, 1), d);
         // every eval-relevant knob separates
         let mut c = base.clone();

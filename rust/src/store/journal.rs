@@ -52,6 +52,11 @@ pub struct PlanRecord {
     /// tier (DESIGN.md §10); 0 while `[screen]` is disabled. Absent in
     /// pre-screen journals (parsed as 0).
     pub screened: u64,
+    /// How many of this round's children the static lint gate rejected
+    /// before submission (DESIGN.md §13); 0 while `[lint] gate` is
+    /// disabled. Emitted only when nonzero, so lint-off journals — and
+    /// pre-lint journals, which parse as 0 — stay byte-identical.
+    pub linted: u64,
 }
 
 /// One ledger entry (`"t":"exp"`).
@@ -85,6 +90,11 @@ pub struct ExperimentRecord {
     /// when true, so federation-off journals — and pre-federation
     /// journals, which parse as false — stay byte-identical.
     pub federated: bool,
+    /// Error-severity lint codes that rejected this entry at the gate
+    /// (DESIGN.md §13): no lane, no quota, no platform time. Emitted
+    /// only when non-empty, so lint-off journals — and pre-lint
+    /// journals, which parse as empty — stay byte-identical.
+    pub lint: Vec<String>,
 }
 
 fn policy_token(p: ReferencePolicy) -> &'static str {
@@ -184,23 +194,31 @@ impl<'a> FieldWriter<'a> {
 impl JournalRecord {
     pub fn to_json(&self) -> Json {
         match self {
-            JournalRecord::Plan(p) => Json::obj(vec![
-                ("t", Json::Str("plan".into())),
-                ("iteration", Json::Num(p.iteration as f64)),
-                ("log_pos", Json::Num(p.log_pos as f64)),
-                ("base", Json::Str(p.base_id.clone())),
-                ("reference", Json::Str(p.reference_id.clone())),
-                (
-                    "policy",
-                    p.policy
-                        .map(|pol| Json::Str(policy_token(pol).into()))
-                        .unwrap_or(Json::Null),
-                ),
-                ("rationale", Json::Str(p.rationale.clone())),
-                ("avenues", str_arr(&p.avenues)),
-                ("chosen", str_arr(&p.chosen)),
-                ("screened", Json::Num(p.screened as f64)),
-            ]),
+            JournalRecord::Plan(p) => {
+                let mut pairs = vec![
+                    ("t", Json::Str("plan".into())),
+                    ("iteration", Json::Num(p.iteration as f64)),
+                    ("log_pos", Json::Num(p.log_pos as f64)),
+                    ("base", Json::Str(p.base_id.clone())),
+                    ("reference", Json::Str(p.reference_id.clone())),
+                    (
+                        "policy",
+                        p.policy
+                            .map(|pol| Json::Str(policy_token(pol).into()))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("rationale", Json::Str(p.rationale.clone())),
+                    ("avenues", str_arr(&p.avenues)),
+                    ("chosen", str_arr(&p.chosen)),
+                    ("screened", Json::Num(p.screened as f64)),
+                ];
+                // only-when-nonzero: lint-off journal bytes are
+                // identical to a build without the analyzer
+                if p.linted > 0 {
+                    pairs.push(("linted", Json::Num(p.linted as f64)));
+                }
+                Json::obj(pairs)
+            }
             JournalRecord::Exp(e) => {
                 let mut pairs = vec![
                     ("t", Json::Str("exp".into())),
@@ -228,6 +246,10 @@ impl JournalRecord {
                 if e.federated {
                     pairs.push(("federated", Json::Bool(true)));
                 }
+                // only-when-non-empty: same rule for the lint gate
+                if !e.lint.is_empty() {
+                    pairs.push(("lint", str_arr(&e.lint)));
+                }
                 Json::obj(pairs)
             }
         }
@@ -248,6 +270,9 @@ impl JournalRecord {
                 w.str("base", &p.base_id);
                 w.str_arr("chosen", &p.chosen);
                 w.num("iteration", p.iteration as f64);
+                if p.linted > 0 {
+                    w.num("linted", p.linted as f64);
+                }
                 w.num("log_pos", p.log_pos as f64);
                 match p.policy {
                     Some(pol) => w.str("policy", policy_token(pol)),
@@ -268,6 +293,9 @@ impl JournalRecord {
                 }
                 e.individual.write_json(w.value_slot("ind"));
                 w.opt_num("lane", e.lane.map(f64::from));
+                if !e.lint.is_empty() {
+                    w.str_arr("lint", &e.lint);
+                }
                 w.opt_num("plan", e.plan.map(|p| p as f64));
                 match &e.profile {
                     Some(p) => p.write_json(w.value_slot("profile")),
@@ -307,6 +335,12 @@ impl JournalRecord {
                 screened: match v.get("screened") {
                     None | Some(Json::Null) => 0,
                     Some(x) => x.as_u64().ok_or("journal: bad screened count")?,
+                },
+                // tolerant: the key exists only on gated rounds —
+                // pre-lint and lint-off journals omit it
+                linted: match v.get("linted") {
+                    None | Some(Json::Null) => 0,
+                    Some(x) => x.as_u64().ok_or("journal: bad linted count")?,
                 },
             })),
             "exp" => Ok(JournalRecord::Exp(ExperimentRecord {
@@ -348,6 +382,12 @@ impl JournalRecord {
                 federated: match v.get("federated") {
                     None | Some(Json::Null) => false,
                     Some(x) => x.as_bool().ok_or("journal: bad federated flag")?,
+                },
+                // tolerant: the key exists only on lint-gate rejects —
+                // pre-lint and lint-off journals omit it
+                lint: match v.get("lint") {
+                    None | Some(Json::Null) => Vec::new(),
+                    some => parse_str_arr(some, "lint")?,
                 },
             })),
             other => Err(format!("journal: unknown record tag '{other}'")),
@@ -508,6 +548,7 @@ mod tests {
                 avenues: vec!["a".into(), "b\tc".into()],
                 chosen: vec!["x".into()],
                 screened: 3,
+                linted: 0,
             }),
             JournalRecord::Plan(PlanRecord {
                 iteration: 1,
@@ -519,6 +560,7 @@ mod tests {
                 avenues: vec![],
                 chosen: vec![],
                 screened: 0,
+                linted: 0,
             }),
             JournalRecord::Exp(ExperimentRecord {
                 individual: Individual {
@@ -537,6 +579,7 @@ mod tests {
                 plan: Some(2),
                 screened: true,
                 federated: false,
+                lint: Vec::new(),
                 profile: Some(ProfileReport {
                     compute_us: 10.5,
                     lds_us: 2.25,
@@ -564,6 +607,7 @@ mod tests {
                 plan: None,
                 screened: false,
                 federated: false,
+                lint: Vec::new(),
                 profile: None,
             }),
         ]
@@ -666,6 +710,58 @@ mod tests {
             panic!("tag lost");
         };
         assert!(parsed.federated);
+    }
+
+    #[test]
+    fn lint_fields_emit_only_when_set_and_parse_tolerantly() {
+        let records = sample_records();
+        // lint-off lines never carry the keys: lint-off journal bytes
+        // match a build without the analyzer
+        for rec in &records {
+            let mut line = String::new();
+            rec.write_json(&mut line);
+            assert!(!line.contains("lint"), "{line}");
+        }
+        let JournalRecord::Plan(p) = &records[0] else {
+            panic!("fixture moved");
+        };
+        let mut gated = p.clone();
+        gated.linted = 2;
+        let gated_rec = JournalRecord::Plan(gated);
+        let mut line = String::new();
+        gated_rec.write_json(&mut line);
+        assert_eq!(line, gated_rec.to_json().to_string());
+        assert!(
+            line.contains(",\"linted\":2,\"log_pos\":"),
+            "sorted between iteration and log_pos: {line}"
+        );
+        let JournalRecord::Plan(parsed) =
+            JournalRecord::from_json(&json::parse(&line).unwrap()).unwrap()
+        else {
+            panic!("tag lost");
+        };
+        assert_eq!(parsed.linted, 2);
+        // exp records: rejected codes round-trip, sorted after lane
+        let JournalRecord::Exp(e) = &records[2] else {
+            panic!("fixture moved");
+        };
+        let mut rej = e.clone();
+        rej.lint = vec!["L001-lds-over-budget".into(), "L030-workload-inadmissible".into()];
+        let rej_rec = JournalRecord::Exp(rej);
+        let mut line = String::new();
+        rej_rec.write_json(&mut line);
+        assert_eq!(line, rej_rec.to_json().to_string());
+        assert!(
+            line.contains(",\"lint\":[\"L001-lds-over-budget\""),
+            "{line}"
+        );
+        let JournalRecord::Exp(parsed) =
+            JournalRecord::from_json(&json::parse(&line).unwrap()).unwrap()
+        else {
+            panic!("tag lost");
+        };
+        assert_eq!(parsed.lint.len(), 2);
+        assert_eq!(parsed.lint[1], "L030-workload-inadmissible");
     }
 
     #[test]

@@ -375,6 +375,7 @@ mod tests {
             screened: false,
             profile: None,
             federated: false,
+            lint: Vec::new(),
         });
         store.append(&record);
         // append flushes to the OS before returning — the line is
@@ -416,6 +417,7 @@ mod tests {
                 screened: false,
                 profile: None,
                 federated: false,
+                lint: Vec::new(),
             }));
         }
         drop(store);

@@ -1,0 +1,194 @@
+//! The lint test layer (DESIGN.md §13):
+//!
+//! 1. **Off means off.** With `[lint]` absent or explicitly disabled
+//!    (the default), every workload × both schedulers must produce
+//!    runs bit-identical to a build that never had the analyzer — the
+//!    TOML section itself must be inert while both knobs are false.
+//! 2. **On means deterministic.** Gated + guided runs are a pure
+//!    function of (seed, config): running twice is bit-identical,
+//!    under both schedulers.
+//! 3. **The Error set is the reject set.** On real trajectories, a
+//!    member failed at the platform's compile gate iff the analyzer
+//!    reports at least one `Severity::Error` for its genome.
+//! 4. **Gate rejects are ledgered, never submitted.** Every rejected
+//!    child appears in the population as a lint-gate compile failure,
+//!    the counters account for them exactly, and no compile failure
+//!    ever reaches the platform's submission log while the gate is on.
+
+use gpu_kernel_scientist::analysis;
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::gpu::MI300;
+use gpu_kernel_scientist::population::EvalOutcome;
+use gpu_kernel_scientist::test_support as ts;
+use gpu_kernel_scientist::workload::{self, Workload};
+
+/// The marker `record_lint_reject` stamps into the ledger.
+const GATE_MSG: &str = "rejected by the lint gate";
+
+/// Raise the surrogate's infidelity so the writer's repair loop leaks
+/// invalid children at a useful rate (same knobs the e2e robustness
+/// test uses) — without this, tiny budgets rarely exercise the gate.
+fn spicy(mut cfg: RunConfig) -> RunConfig {
+    cfg.llm.rubric_infidelity = 0.3;
+    cfg.llm.temperature = 2.0;
+    cfg
+}
+
+#[test]
+fn disabled_lint_is_bit_identical_for_every_workload_and_scheduler() {
+    // the control config parses a `[lint]` TOML section with both
+    // knobs false: the section's presence must change nothing
+    for w in workload::registry() {
+        let name = w.name();
+        for pipeline in [false, true] {
+            let base = {
+                let mut cfg = ts::tiny_run_config(9, 22).with_workload(name);
+                cfg.eval_parallelism = if pipeline { 3 } else { 1 };
+                cfg.pipeline = pipeline;
+                cfg
+            };
+            let knobbed = {
+                let parsed = RunConfig::from_toml("[lint]\ngate = false\nguided = false\n")
+                    .expect("lint section parses");
+                assert!(!parsed.lint_gate && !parsed.lint_guided);
+                let mut cfg = parsed.with_seed(9).with_budget(22).with_workload(name);
+                cfg.eval_parallelism = base.eval_parallelism;
+                cfg.pipeline = pipeline;
+                cfg
+            };
+            let (run_a, out_a) = ts::run_scientist(base);
+            let (run_b, out_b) = ts::run_scientist(knobbed);
+            let tag = format!("{name} pipeline={pipeline}");
+            assert_eq!(ts::trajectory(&run_a), ts::trajectory(&run_b), "{tag}");
+            assert_eq!(out_a.best_id, out_b.best_id, "{tag}");
+            assert_eq!(out_a.best_geomean_us, out_b.best_geomean_us, "{tag}");
+            assert_eq!(out_a.submissions, out_b.submissions, "{tag}");
+            assert_eq!(out_a.wall_clock_s, out_b.wall_clock_s, "{tag}");
+            assert_eq!(out_a.pipeline, out_b.pipeline, "{tag}");
+            assert_eq!(out_a.pipeline.linted, 0, "{tag}: gate ran while off");
+            assert_eq!(out_a.pipeline.lint_rejected, 0, "{tag}");
+            assert!(
+                !run_a
+                    .population
+                    .members()
+                    .iter()
+                    .any(|m| matches!(&m.outcome, EvalOutcome::CompileFailure(r) if r.contains(GATE_MSG))),
+                "{tag}: gate reject in an ungated ledger"
+            );
+        }
+    }
+}
+
+#[test]
+fn gated_and_guided_runs_are_reproducible_per_scheduler() {
+    for pipeline in [false, true] {
+        let run_once = || {
+            let mut cfg = spicy(ts::tiny_run_config(29, 30))
+                .with_lint_gate(true)
+                .with_lint_guided(true);
+            cfg.pipeline = pipeline;
+            cfg.eval_parallelism = if pipeline { 3 } else { 1 };
+            let (run, o) = ts::run_scientist(cfg);
+            (ts::trajectory(&run), o.best_id, o.best_geomean_us, o.pipeline)
+        };
+        assert_eq!(run_once(), run_once(), "gated+guided pipeline={pipeline}");
+    }
+}
+
+#[test]
+fn guided_alone_is_reproducible_and_counts_nothing() {
+    // guidance without the gate: priors shift, but the gate counters
+    // must stay untouched and the run must still be pure in (seed, cfg)
+    let run_once = || {
+        let cfg = spicy(ts::tiny_run_config(17, 26)).with_lint_guided(true);
+        let (run, o) = ts::run_scientist(cfg);
+        (ts::trajectory(&run), o.best_geomean_us, o.pipeline)
+    };
+    let a = run_once();
+    assert_eq!(a, run_once(), "guided-only run diverged");
+    assert_eq!(a.2.linted, 0, "guidance alone must not run the gate");
+    assert_eq!(a.2.lint_rejected, 0);
+}
+
+#[test]
+fn lint_errors_equal_the_platform_reject_set_on_real_trajectories() {
+    // ungated runs: whatever the platform's compile gate rejected, the
+    // analyzer must flag as an Error on the same genome — and nothing
+    // else. Incorrect-result members (numeric hazards) must lint clean
+    // of errors: the analyzer is static and must not claim them.
+    for w in workload::registry() {
+        let name = w.name();
+        let cfg = spicy(ts::tiny_run_config(4, 40).with_workload(name));
+        let (run, _) = ts::run_scientist(cfg);
+        for m in run.population.members() {
+            let diags = analysis::lint(&m.genome, &MI300, run.workload.as_ref());
+            let flagged = analysis::has_error(&diags);
+            match &m.outcome {
+                EvalOutcome::CompileFailure(reason) => assert!(
+                    flagged,
+                    "{name} {}: platform rejected ({reason}) but lint sees no error",
+                    m.id
+                ),
+                _ => assert!(
+                    !flagged,
+                    "{name} {}: lint errors {:?} on a genome the platform accepted",
+                    m.id,
+                    analysis::error_codes(&diags)
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn gate_rejects_are_ledgered_and_never_reach_the_platform() {
+    for w in workload::registry() {
+        let name = w.name();
+        for pipeline in [false, true] {
+            let mut cfg = spicy(ts::tiny_run_config(41, 32).with_workload(name))
+                .with_lint_gate(true);
+            cfg.pipeline = pipeline;
+            cfg.eval_parallelism = if pipeline { 2 } else { 1 };
+            let (run, out) = ts::run_scientist(cfg);
+            let s = &out.pipeline;
+            let tag = format!("{name} pipeline={pipeline}");
+            assert!(s.linted > 0, "{tag}: gate never checked a child");
+            assert!(s.lint_rejected <= s.linted, "{tag}");
+            let n_seeds = w.starting_population().len() as u64;
+            // every recorded non-seed member passed through the gate
+            // (quota-dropped plans may be checked but never recorded)
+            assert!(
+                s.linted >= run.population.len() as u64 - n_seeds,
+                "{tag}: ledgered children the gate never saw"
+            );
+            let gate_rejects = run
+                .population
+                .members()
+                .iter()
+                .filter(|m| {
+                    matches!(&m.outcome, EvalOutcome::CompileFailure(r) if r.contains(GATE_MSG))
+                })
+                .count() as u64;
+            assert_eq!(gate_rejects, s.lint_rejected, "{tag}: counter vs ledger");
+            // completeness: with the gate on, nothing doomed may reach
+            // the platform — its log must hold no compile failure
+            assert!(
+                !run.platform
+                    .log()
+                    .iter()
+                    .any(|r| matches!(r.outcome, EvalOutcome::CompileFailure(_))),
+                "{tag}: a doomed genome slipped past the gate"
+            );
+            // and every ledgered compile failure is a gate reject
+            for m in run.population.members() {
+                if let EvalOutcome::CompileFailure(reason) = &m.outcome {
+                    assert!(
+                        reason.contains(GATE_MSG),
+                        "{tag} {}: platform compile failure in a gated run: {reason}",
+                        m.id
+                    );
+                }
+            }
+        }
+    }
+}

@@ -14,7 +14,7 @@ use gpu_kernel_scientist::metrics::geomean;
 use gpu_kernel_scientist::rng::Rng;
 use gpu_kernel_scientist::sim;
 use gpu_kernel_scientist::test_support::{random_genome, random_valid_genome};
-use gpu_kernel_scientist::workload::GemmConfig;
+use gpu_kernel_scientist::workload::{GemmConfig, Workload};
 
 const CASES: usize = 300;
 
@@ -403,6 +403,13 @@ fn prop_ledger_entry_and_genome_json_roundtrip_lossless() {
                 None
             },
             federated: rng.chance(0.2),
+            lint: if rng.chance(0.3) {
+                (0..1 + rng.below(3))
+                    .map(|_| random_text(&mut rng))
+                    .collect()
+            } else {
+                Vec::new()
+            },
         });
         let emitted = record.to_json().to_string();
         let back = JournalRecord::from_json(&json::parse(&emitted).expect("parse"))
@@ -428,6 +435,7 @@ fn prop_ledger_entry_and_genome_json_roundtrip_lossless() {
             avenues: (0..rng.below(4)).map(|_| random_text(&mut rng)).collect(),
             chosen: (0..rng.below(3)).map(|_| random_text(&mut rng)).collect(),
             screened: rng.below(4) as u64,
+            linted: rng.below(3) as u64,
         });
         let emitted = plan.to_json().to_string();
         let back = JournalRecord::from_json(&json::parse(&emitted).expect("parse plan"))
@@ -492,6 +500,78 @@ fn prop_u64_and_string_fingerprints_agree() {
         );
         // and both track genome equality exactly
         assert_eq!(a.fingerprint() == b.fingerprint(), a == b);
+    }
+}
+
+#[test]
+fn prop_lint_error_iff_validate_or_admits_rejects() {
+    // the analyzer's Error set must equal the platform's static reject
+    // set — `validate` ∪ `admits` — on arbitrary edit-walk genomes,
+    // against every registered workload (DESIGN.md §13). Both
+    // directions: an error implies a rejection and vice versa, and the
+    // first error code matches the rejecting verdict's stable code.
+    use gpu_kernel_scientist::analysis::{self, Severity};
+    let mut rng = Rng::seed_from_u64(0x11_47);
+    let registry = gpu_kernel_scientist::workload::registry();
+    for case in 0..CASES {
+        let g = random_genome(&mut rng);
+        let w = &registry[case % registry.len()];
+        let diags = analysis::lint(&g, &MI300, w.as_ref());
+        let rejected = g.validate().is_err() || w.admits(&g).is_err();
+        assert_eq!(
+            analysis::has_error(&diags),
+            rejected,
+            "case {case} on {}: lint/reject disagreement for {g:?}",
+            w.name()
+        );
+        match g.validate() {
+            Err(inv) => assert_eq!(
+                diags.first().map(|d| d.code.as_str()),
+                Some(inv.code()),
+                "case {case}: first error must carry the validate code"
+            ),
+            Ok(()) if w.admits(&g).is_err() => assert_eq!(
+                diags.first().map(|d| d.code.as_str()),
+                Some(analysis::ADMITS_CODE),
+                "case {case} on {}: admits rejection miscoded",
+                w.name()
+            ),
+            Ok(()) => assert!(
+                diags.iter().all(|d| d.severity == Severity::Warn),
+                "case {case}: error diagnostic on an accepted genome"
+            ),
+        }
+    }
+}
+
+#[test]
+fn prop_lint_is_deterministic_and_roundtrips_json() {
+    // diagnostics are a pure function of (genome, arch, workload), in
+    // a stable order, and survive the journal's JSON wire format
+    // losslessly — streamed emission byte-identical to the tree form
+    use gpu_kernel_scientist::analysis::{self, Diagnostic};
+    use gpu_kernel_scientist::util::json;
+    let mut rng = Rng::seed_from_u64(0x11_48);
+    let registry = gpu_kernel_scientist::workload::registry();
+    for case in 0..CASES {
+        let g = random_genome(&mut rng);
+        let w = &registry[case % registry.len()];
+        let diags = analysis::lint(&g, &MI300, w.as_ref());
+        assert_eq!(
+            diags,
+            analysis::lint(&g, &MI300, w.as_ref()),
+            "case {case}: lint is not pure"
+        );
+        for d in &diags {
+            let tree = d.to_json();
+            let back = Diagnostic::from_json(&tree).expect("diag roundtrip");
+            assert_eq!(&back, d, "case {case}: lossy diagnostic roundtrip");
+            let mut streamed = String::new();
+            d.write_json(&mut streamed);
+            assert_eq!(streamed, tree.to_string(), "case {case}: stream drifted");
+            let reparsed = json::parse(&streamed).expect("diag json parses");
+            assert_eq!(Diagnostic::from_json(&reparsed).unwrap(), *d);
+        }
     }
 }
 

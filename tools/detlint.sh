@@ -1,0 +1,132 @@
+#!/usr/bin/env bash
+# detlint — determinism source lint over rust/src/** (DESIGN.md §13).
+#
+# The simulator's trajectories must be a pure function of (seed,
+# config). This script greps for the three source patterns that can
+# silently break that property, using nothing beyond POSIX shell,
+# grep, find, and awk — it runs anywhere the repo checks out, with no
+# toolchain installed.
+#
+#   DL001  `partial_cmp` — NaN-unordered float comparison. Use
+#          `total_cmp` (or an integer ordering key) so a NaN-poisoned
+#          score cannot flip a sort.
+#   DL002  wall-clock reads (`Instant::now`, `SystemTime`) outside the
+#          sanctioned timing modules (util/timer.rs, util/bench.rs,
+#          runtime/mod.rs). Wall time anywhere else can leak into a
+#          trajectory.
+#   DL003  iteration over a `HashMap`/`HashSet` — visit order depends
+#          on the hasher and allocation history. Iterate an ordered
+#          collection instead, or sort the collected result and
+#          annotate the site.
+#
+# A finding is suppressed by ending the offending line with:
+#     // detlint: allow(DLnnn)
+# The annotation is deliberately per-line and per-code so every escape
+# is visible in review next to the code it excuses.
+#
+# Exit status: 0 when clean, 1 when any unannotated finding remains.
+
+set -u
+cd "$(dirname "$0")/.."
+
+SRC=rust/src
+fail=0
+
+report() { # code file:line message
+    printf 'detlint: %s %s: %s\n' "$1" "$2" "$3"
+    fail=1
+}
+
+# ---- DL001: partial_cmp ---------------------------------------------------
+while IFS=: read -r file line text; do
+    [ -z "${file:-}" ] && continue
+    case $text in *"detlint: allow(DL001)"*) continue ;; esac
+    report DL001 "$file:$line" "partial_cmp is NaN-unordered; use total_cmp or an ordering key"
+done <<EOF
+$(grep -rn --include='*.rs' 'partial_cmp' "$SRC" || true)
+EOF
+
+# ---- DL002: wall-clock reads outside the timing modules -------------------
+while IFS=: read -r file line text; do
+    [ -z "${file:-}" ] && continue
+    case $file in
+        "$SRC"/util/timer.rs | "$SRC"/util/bench.rs | "$SRC"/runtime/mod.rs) continue ;;
+    esac
+    case $text in *"detlint: allow(DL002)"*) continue ;; esac
+    report DL002 "$file:$line" "wall-clock read outside util/timer.rs, util/bench.rs, runtime/mod.rs"
+done <<EOF
+$(grep -rn --include='*.rs' -E 'Instant::now|SystemTime' "$SRC" || true)
+EOF
+
+# ---- DL003: HashMap/HashSet iteration -------------------------------------
+# Two-phase scan per file: collect every binding whose declaration names
+# a HashMap or HashSet (let bindings with a hash type or `Hash*::new()`
+# initializer, struct fields, fn params), then flag lines that iterate
+# one of those names — `name.iter()/into_iter()/keys()/values()/drain()`,
+# a continuation line `.into_iter()` whose previous line ends with the
+# name (rustfmt splits long chains that way), or `for .. in &name`.
+# Declarations precede uses in every scope we care about, so a single
+# forward pass suffices.
+while IFS= read -r f; do
+    findings=$(awk -v FILE="$f" '
+        function flag(msg) {
+            if ($0 !~ /detlint: allow\(DL003\)/) {
+                printf "%s:%d: %s\n", FILE, NR, msg
+            }
+        }
+        {
+            line = $0
+            # strip comments so commented-out code never declares a name
+            sub(/\/\/.*$/, "", line)
+            if (line ~ /Hash(Map|Set)/) {
+                name = ""
+                if (match(line, /let +(mut +)?[a-z_][a-z0-9_]*/) &&
+                    (line ~ /: *[^=;]*Hash(Map|Set)/ || line ~ /= *[A-Za-z:]*Hash(Map|Set) *::/)) {
+                    name = substr(line, RSTART, RLENGTH)
+                    sub(/^let +(mut +)?/, "", name)
+                } else if (match(line, /[a-z_][a-z0-9_]* *: *&?(mut +)?(std::collections::)?Hash(Map|Set)</)) {
+                    name = substr(line, RSTART, RLENGTH)
+                    sub(/ *:.*$/, "", name)
+                }
+                if (name != "") { names[name] = 1 }
+            } else if (match(line, /let +(mut +)?[a-z_][a-z0-9_]*/)) {
+                # a later `let` shadowing the name with a non-hash type
+                # retires it — the newest declaration wins
+                name = substr(line, RSTART, RLENGTH)
+                sub(/^let +(mut +)?/, "", name)
+                delete names[name]
+            }
+            hit = ""
+            for (nm in names) {
+                if (line ~ ("(^|[^A-Za-z0-9_.])" nm "\\.(iter|into_iter|keys|values|drain)\\(")) {
+                    hit = nm; break
+                }
+                if (line ~ ("for [^;]* in &?(mut +)?" nm "([^A-Za-z0-9_]|$)")) {
+                    hit = nm; break
+                }
+                if (line ~ /^ *\.(iter|into_iter|keys|values|drain)\(/ &&
+                    prev ~ ("(^|[^A-Za-z0-9_.])" nm " *$")) {
+                    hit = nm; break
+                }
+            }
+            if (hit != "") {
+                flag("iteration over hash collection `" hit "` is allocation-order dependent; iterate an ordered collection or sort the result")
+            }
+            prev = line
+        }
+    ' "$f")
+    if [ -n "$findings" ]; then
+        while IFS= read -r finding; do
+            report DL003 "${finding%%: *}" "${finding#*: }"
+        done <<INNER
+$findings
+INNER
+    fi
+done <<EOF
+$(find "$SRC" -name '*.rs' | sort)
+EOF
+
+if [ "$fail" -eq 0 ]; then
+    echo "detlint: clean"
+fi
+exit "$fail"
