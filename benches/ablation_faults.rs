@@ -1,0 +1,150 @@
+//! Ablation: **the fault-recovery policy on vs off under chaos**
+//! (DESIGN.md §14).
+//!
+//! Three legs at an equal submission quota (60 submissions, 4 lanes,
+//! pipeline scheduler):
+//!
+//!   * **clean** — fault model off: the PR-9 baseline;
+//!   * **recovery** — faults injected, recovery on: transient errors
+//!     retry with capped backoff, straggler timeouts and suspect
+//!     timings requeue, so every planned experiment still resolves;
+//!   * **no-recovery** — the same chaos with the policy off: every
+//!     fault-class completion abandons its experiment on the spot.
+//!
+//! Asserted across seeds:
+//!
+//!   * the recovery leg commits the clean leg's full quota — chaos
+//!     costs retries, never the submission budget;
+//!   * the no-recovery legs abandon a nonzero number of experiments
+//!     and strictly more than the recovery legs — recovery is what
+//!     turns losses into retries;
+//!   * the recovery leg's best score stays within 5% of the clean
+//!     baseline (geomean of per-seed ratios) — the salvaged retries
+//!     keep the optimization trajectory intact.
+//!
+//! Results land in `BENCH_faults.json` for the CI artifact.
+//!
+//! Run: `cargo bench --bench ablation_faults`
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::metrics::geomean;
+use gpu_kernel_scientist::prelude::*;
+use gpu_kernel_scientist::util::bench::header;
+use gpu_kernel_scientist::util::json::Json;
+
+const SEEDS: u64 = 6;
+const BUDGET: u64 = 60;
+const LANES: u32 = 4;
+
+struct Leg {
+    submissions: u64,
+    best_us: f64,
+    injected: u64,
+    retries: u64,
+    abandoned: u64,
+}
+
+fn run_leg(seed: u64, faults: bool, recovery: bool) -> Leg {
+    let mut cfg = RunConfig::default()
+        .with_seed(seed)
+        .with_budget(BUDGET)
+        .with_parallelism(LANES)
+        .with_pipeline(true);
+    if faults {
+        // chaos hot enough to bite every leg, mild enough that the
+        // recovery leg's salvage keeps the trajectory intact
+        cfg.faults.enabled = true;
+        cfg.faults.transient = 0.10;
+        cfg.faults.straggler = 0.06;
+        cfg.faults.corrupt = 0.06;
+        cfg.faults.lane_death = 0.0;
+        cfg.faults.backoff_base_s = 5.0;
+        cfg.faults.quarantine_after = 10;
+        cfg.faults.recovery = recovery;
+    }
+    let mut run = ScientistRun::new(cfg).expect("setup");
+    let outcome = run.run_to_completion().expect("run");
+    let summary = outcome.faults.unwrap_or_default();
+    Leg {
+        submissions: outcome.submissions,
+        best_us: outcome.best_geomean_us,
+        injected: summary.stats.injected(),
+        retries: summary.retries,
+        abandoned: summary.abandoned,
+    }
+}
+
+fn main() {
+    header("ablation — fault recovery under chaos (equal submission quota)");
+
+    let mut ratios = Vec::new();
+    let mut injected_total = 0u64;
+    let mut recovery_abandoned = 0u64;
+    let mut norec_abandoned = 0u64;
+
+    println!(
+        "{:>6} {:>12} {:>24} {:>24}",
+        "seed", "clean best", "recovery (inj/retry/ab)", "no-recovery (inj/ab)"
+    );
+    for seed in 0..SEEDS {
+        let clean = run_leg(seed, false, true);
+        let rec = run_leg(seed, true, true);
+        let norec = run_leg(seed, true, false);
+        assert_eq!(
+            rec.submissions, clean.submissions,
+            "seed {seed}: the recovery leg lost quota to chaos"
+        );
+        assert_eq!(
+            norec.retries, 0,
+            "seed {seed}: a no-recovery leg retried"
+        );
+        injected_total += rec.injected + norec.injected;
+        recovery_abandoned += rec.abandoned;
+        norec_abandoned += norec.abandoned;
+        let ratio = rec.best_us / clean.best_us;
+        ratios.push(ratio);
+        println!(
+            "{seed:>6} {:>10.1}us {:>10}/{}/{} {:>18}/{}   (ratio {ratio:.3})",
+            clean.best_us, rec.injected, rec.retries, rec.abandoned,
+            norec.injected, norec.abandoned,
+        );
+    }
+
+    let margin = geomean(&ratios);
+    println!(
+        "\nbest-score ratio recovery/clean at equal quota ({BUDGET} submissions, \
+         {LANES} lanes): geomean {margin:.3} (target <= 1.05) — abandoned: \
+         recovery {recovery_abandoned} vs no-recovery {norec_abandoned}"
+    );
+    assert!(
+        injected_total > 0,
+        "no leg saw a fault across {SEEDS} seeds — raise the chaos knobs"
+    );
+    assert!(
+        norec_abandoned > 0,
+        "no-recovery legs abandoned nothing: the ablation shows no contrast"
+    );
+    assert!(
+        recovery_abandoned < norec_abandoned,
+        "recovery must strictly reduce abandoned experiments \
+         ({recovery_abandoned} vs {norec_abandoned})"
+    );
+    assert!(
+        margin <= 1.05,
+        "recovery must keep the best score within 5% of fault-free \
+         (got {margin:.3})"
+    );
+
+    let doc = Json::obj(vec![
+        ("seeds", Json::Num(SEEDS as f64)),
+        ("budget", Json::Num(BUDGET as f64)),
+        ("lanes", Json::Num(LANES as f64)),
+        ("injected_total", Json::Num(injected_total as f64)),
+        ("recovery_abandoned", Json::Num(recovery_abandoned as f64)),
+        ("norec_abandoned", Json::Num(norec_abandoned as f64)),
+        ("best_ratio_geomean", Json::Num(margin)),
+    ]);
+    std::fs::write("BENCH_faults.json", doc.to_string()).expect("write BENCH_faults.json");
+    println!("faults ablation written to BENCH_faults.json");
+    println!("ablation_faults shape: OK");
+}

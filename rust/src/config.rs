@@ -4,6 +4,7 @@
 //! which is all our config files use).
 
 use crate::agents::{ExperimentRule, KnowledgeProfile, LlmConfig, SelectionPolicy};
+use crate::eval::FaultConfig;
 
 /// Full configuration of a scientist run.
 #[derive(Debug, Clone)]
@@ -125,6 +126,15 @@ pub struct RunConfig {
     /// through `Avenue::attacks()`, PR 7-style. Off by default with the
     /// same bit-identity guarantee as `lint_gate`.
     pub lint_guided: bool,
+    /// Fault injection + recovery (`[faults]`, DESIGN.md §14): a
+    /// deterministic fault model over the eval backend (transient
+    /// errors, stragglers, corrupted timings, lane death) plus the
+    /// recovery policy (backoff retries, timeout-requeue, outlier
+    /// confirmation, lane quarantine). Disabled by default — an off
+    /// run takes no fault code path and draws no fault RNG, so its
+    /// trajectory is bit-identical to a build without the layer
+    /// (`tests/faults.rs`).
+    pub faults: FaultConfig,
 }
 
 impl Default for RunConfig {
@@ -157,6 +167,7 @@ impl Default for RunConfig {
             federation_read_only: false,
             lint_gate: false,
             lint_guided: false,
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -232,6 +243,20 @@ impl RunConfig {
         self
     }
 
+    /// Enable deterministic fault injection with the layer's default
+    /// rates (`[faults] enabled`, DESIGN.md §14).
+    pub fn with_faults(mut self, enabled: bool) -> Self {
+        self.faults.enabled = enabled;
+        self
+    }
+
+    /// Replace the whole fault model + recovery policy (`[faults]`,
+    /// DESIGN.md §14).
+    pub fn with_fault_config(mut self, faults: FaultConfig) -> Self {
+        self.faults = faults;
+        self
+    }
+
     /// Parse from the TOML subset (see module docs). Unknown keys are
     /// errors — config typos should not fail silently.
     pub fn from_toml(text: &str) -> Result<RunConfig, String> {
@@ -247,7 +272,7 @@ impl RunConfig {
                 if !matches!(
                     section.as_str(),
                     "run" | "platform" | "agents" | "llm" | "store" | "screen" | "profile"
-                        | "federation" | "lint"
+                        | "federation" | "lint" | "faults"
                 ) {
                     return Err(format!("line {}: unknown section [{section}]", lineno + 1));
                 }
@@ -402,6 +427,46 @@ impl RunConfig {
                     _ => return Err(format!("bad lint guided '{value}'")),
                 }
             }
+            _ if key.starts_with("faults.") => {
+                let parse_bool = |v: &str| match v {
+                    "true" => Ok(true),
+                    "false" => Ok(false),
+                    _ => Err(format!("bad bool '{v}'")),
+                };
+                let parse_prob = |v: &str| -> Result<f64, String> {
+                    let p = parse_f64(v)?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("probability must be in [0, 1], got '{v}'"));
+                    }
+                    Ok(p)
+                };
+                let f = &mut self.faults;
+                match key {
+                    "faults.enabled" => f.enabled = parse_bool(value)?,
+                    "faults.transient" => f.transient = parse_prob(value)?,
+                    "faults.straggler" => f.straggler = parse_prob(value)?,
+                    "faults.straggler_factor" => f.straggler_factor = parse_f64(value)?,
+                    "faults.straggler_timeout" => f.straggler_timeout = parse_f64(value)?,
+                    "faults.corrupt" => f.corrupt = parse_prob(value)?,
+                    "faults.corrupt_factor" => f.corrupt_factor = parse_f64(value)?,
+                    "faults.lane_death" => f.lane_death = parse_prob(value)?,
+                    "faults.recovery" => f.recovery = parse_bool(value)?,
+                    "faults.max_retries" => f.max_retries = parse_u64(value)? as u32,
+                    "faults.backoff_base_s" => f.backoff_base_s = parse_f64(value)?,
+                    "faults.backoff_cap_s" => f.backoff_cap_s = parse_f64(value)?,
+                    "faults.confirm_outliers" => f.confirm_outliers = parse_bool(value)?,
+                    "faults.outlier_threshold" => f.outlier_threshold = parse_f64(value)?,
+                    "faults.quarantine_after" => {
+                        let k = parse_u64(value)? as u32;
+                        if k == 0 {
+                            return Err("quarantine_after must be >= 1".into());
+                        }
+                        f.quarantine_after = k;
+                    }
+                    "faults.probation_s" => f.probation_s = parse_f64(value)?,
+                    _ => return Err(format!("unknown key '{key}'")),
+                }
+            }
             _ => return Err(format!("unknown key '{key}'")),
         }
         Ok(())
@@ -474,6 +539,13 @@ impl RunConfig {
         }
         if self.lint_guided {
             pairs.push(("lint_guided", Json::Bool(true)));
+        }
+        // same only-when-on rule: faults-off checkpoints stay
+        // byte-identical to pre-faults ones. The whole model is
+        // persisted when on — a resumed chaos run must replay the
+        // exact same rates or its fault draws diverge.
+        if self.faults.enabled {
+            pairs.push(("faults", self.faults.to_json()));
         }
         Json::obj(pairs)
     }
@@ -549,6 +621,13 @@ impl RunConfig {
             lint_guided: match v.get("lint_guided") {
                 None | Some(crate::util::json::Json::Null) => false,
                 Some(x) => x.as_bool().ok_or("config: bad lint_guided")?,
+            },
+            // tolerant: pre-faults (and every faults-off) checkpoint
+            // carries no faults object
+            faults: match v.get("faults") {
+                None | Some(crate::util::json::Json::Null) => FaultConfig::default(),
+                Some(f) => FaultConfig::from_json(f)
+                    .map_err(|e| format!("config faults: {e}"))?,
             },
         })
     }
@@ -793,6 +872,59 @@ rubric_infidelity = 0.2
                 .unwrap();
         assert!(back.lint_gate);
         assert!(back.lint_guided);
+    }
+
+    #[test]
+    fn toml_faults_knobs() {
+        let c = RunConfig::from_toml(
+            "[faults]\nenabled = true\ntransient = 0.1\nmax_retries = 5\n\
+             quarantine_after = 2\nrecovery = false\nstraggler_factor = 6.0\n",
+        )
+        .unwrap();
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.transient, 0.1);
+        assert_eq!(c.faults.max_retries, 5);
+        assert_eq!(c.faults.quarantine_after, 2);
+        assert!(!c.faults.recovery);
+        assert_eq!(c.faults.straggler_factor, 6.0);
+        assert!(!RunConfig::default().faults.enabled, "fault injection is opt-in");
+        assert!(RunConfig::from_toml("[faults]\nenabled = maybe\n").is_err());
+        assert!(RunConfig::from_toml("[faults]\ntransient = 1.5\n").is_err());
+        assert!(RunConfig::from_toml("[faults]\nlane_death = -0.1\n").is_err());
+        assert!(RunConfig::from_toml("[faults]\nquarantine_after = 0\n").is_err());
+        assert!(RunConfig::from_toml("[faults]\nchaos = true\n").is_err());
+    }
+
+    #[test]
+    fn builders_set_faults() {
+        let c = RunConfig::default().with_faults(true);
+        assert!(c.faults.enabled);
+        let mut custom = crate::eval::FaultConfig::default();
+        custom.enabled = true;
+        custom.max_retries = 9;
+        let c = RunConfig::default().with_fault_config(custom);
+        assert_eq!(c.faults.max_retries, 9);
+    }
+
+    #[test]
+    fn config_json_carries_faults_only_when_on() {
+        // off: no faults object at all — checkpoints stay
+        // byte-identical to pre-faults ones
+        let off = RunConfig::default().to_json().to_string();
+        assert!(!off.contains("faults"), "{off}");
+        // on: the whole model round-trips (a resumed chaos run must
+        // replay the same rates)
+        let mut c = RunConfig::default().with_faults(true);
+        c.faults.transient = 0.2;
+        c.faults.max_retries = 7;
+        c.faults.recovery = false;
+        let back =
+            RunConfig::from_json(&crate::util::json::parse(&c.to_json().to_string()).unwrap())
+                .unwrap();
+        assert!(back.faults.enabled);
+        assert_eq!(back.faults.transient, 0.2);
+        assert_eq!(back.faults.max_retries, 7);
+        assert!(!back.faults.recovery);
     }
 
     #[test]

@@ -50,8 +50,12 @@ pub fn evaluate_one<B: EvalBackend>(
     genome: &KernelGenome,
 ) -> EvalOutcome {
     if let Err(e) = backend.check(genome) {
+        // the Compile/Unsupported distinction is preserved as stable
+        // outcome kinds (both permanent, but the retry policy and the
+        // journal must be able to tell them apart — DESIGN.md §14)
         return match e {
-            EvalError::Compile(m) | EvalError::Unsupported(m) => EvalOutcome::CompileFailure(m),
+            EvalError::Compile(m) => EvalOutcome::CompileFailure(m),
+            EvalError::Unsupported(m) => EvalOutcome::Unsupported(m),
             EvalError::Incorrect(m) => EvalOutcome::IncorrectResult(m),
         };
     }
@@ -64,9 +68,8 @@ pub fn evaluate_one<B: EvalBackend>(
                 Err(e) => {
                     return match e {
                         EvalError::Incorrect(m) => EvalOutcome::IncorrectResult(m),
-                        EvalError::Compile(m) | EvalError::Unsupported(m) => {
-                            EvalOutcome::CompileFailure(m)
-                        }
+                        EvalError::Compile(m) => EvalOutcome::CompileFailure(m),
+                        EvalError::Unsupported(m) => EvalOutcome::Unsupported(m),
                     }
                 }
             }

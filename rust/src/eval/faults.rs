@@ -1,0 +1,931 @@
+//! Deterministic fault injection and recovery state (DESIGN.md §14).
+//!
+//! Real evaluation services time out, drop submissions, straggle, and
+//! return outlier timings; the paper's scientist steers on "only
+//! observed timing data" from exactly such a service. This module
+//! models that flakiness **deterministically**: a [`FaultyBackend`]
+//! decorator over any [`EvalBackend`] decides, per dispatch, whether
+//! the evaluation suffers a transient error, a straggler latency
+//! multiplier, corrupted timings, or permanent lane death — and the
+//! platform's recovery layer ([`FaultState`]) tracks per-lane health,
+//! quarantine, and the retry/requeue bookkeeping the schedulers
+//! journal.
+//!
+//! Determinism contract (the chaos-run analog of `sim/mod.rs`'s noise
+//! stream): every fault decision is drawn from a **fresh per-dispatch
+//! RNG** seeded by `fault_seed ⊕ mix(fingerprint) ⊕ mix(attempt)` —
+//! the fault-model fork of the run seed, re-forked per dispatch the
+//! way the simulator forks its noise stream per lane. The draw is a
+//! pure function of (seed, genome, attempt): independent of dispatch
+//! order, of resume points, and of how many other dispatches happened
+//! first. Disabled, the decorator is pure delegation — zero RNG draws,
+//! zero extra state — which is what the off-means-off bit-identity
+//! guarantee rests on.
+//!
+//! In-flight aliasing note: both schedulers reserve fingerprints so a
+//! genome is never in flight twice; a fault-class outcome is therefore
+//! never the target of an in-flight alias (fault outcomes are excluded
+//! from the eval cache so retries re-evaluate — an alias resolving
+//! against an uncached faulted original would be a contract violation,
+//! and cannot arise under the reservation discipline).
+
+use crate::eval::EvalBackend;
+use crate::genome::KernelGenome;
+use crate::rng::Rng;
+use crate::util::json::{self, Json};
+
+/// The `[faults]` config table: injection rates and recovery policy.
+/// Off by default; every knob other than `enabled` is inert until the
+/// model is switched on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch. `false` (the default) means the decorator is
+    /// pure delegation and no recovery code path runs.
+    pub enabled: bool,
+    /// P(transient evaluation error) per dispatch.
+    pub transient: f64,
+    /// P(straggler) per dispatch: the evaluation takes
+    /// `straggler_factor x lognormal` as long.
+    pub straggler: f64,
+    /// Base latency multiplier for stragglers.
+    pub straggler_factor: f64,
+    /// Recovery: a dispatch whose latency multiplier reaches this
+    /// factor is timed out (charged `straggler_timeout x` the nominal
+    /// cost) and requeued instead of waited for.
+    pub straggler_timeout: f64,
+    /// P(corrupted timings) per dispatch: the reported timings are
+    /// scaled by `corrupt_factor` (or its inverse), modeling a broken
+    /// measurement harness.
+    pub corrupt: f64,
+    /// Multiplicative timing corruption magnitude.
+    pub corrupt_factor: f64,
+    /// P(permanent lane death) per dispatch: the submission is lost
+    /// and the lane retires for the rest of the run.
+    pub lane_death: f64,
+    /// Master recovery switch: retries, straggler timeouts, and lane
+    /// quarantine. With it off, faults simply consume quota (the
+    /// ablation bench's contrast leg).
+    pub recovery: bool,
+    /// Max retry attempts per experiment beyond the first.
+    pub max_retries: u32,
+    /// Exponential-backoff base delay (virtual seconds) for transient
+    /// failures: attempt `n` waits `base x 2^n`, capped.
+    pub backoff_base_s: f64,
+    /// Backoff cap (virtual seconds).
+    pub backoff_cap_s: f64,
+    /// Confirm outlier timings by repeat measurement before they enter
+    /// the archive: timings far from the analytic estimate come back
+    /// as [`crate::population::EvalOutcome::SuspectTimings`] and are
+    /// re-measured instead of recorded.
+    pub confirm_outliers: bool,
+    /// Two-sided geomean ratio (vs the cost-model estimate) beyond
+    /// which timings are suspect. Far above the simulator's noise
+    /// sigma, so only corruption trips it.
+    pub outlier_threshold: f64,
+    /// Quarantine a lane after this many consecutive faulted
+    /// dispatches.
+    pub quarantine_after: u32,
+    /// Quarantine duration (virtual seconds); the first job after
+    /// re-admission is probational — one more fault retires the lane.
+    pub probation_s: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enabled: false,
+            transient: 0.05,
+            straggler: 0.05,
+            straggler_factor: 4.0,
+            straggler_timeout: 2.5,
+            corrupt: 0.02,
+            corrupt_factor: 8.0,
+            lane_death: 0.002,
+            recovery: true,
+            max_retries: 3,
+            backoff_base_s: 30.0,
+            backoff_cap_s: 480.0,
+            confirm_outliers: true,
+            outlier_threshold: 4.0,
+            quarantine_after: 3,
+            probation_s: 600.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Serialize every knob (the config JSON embeds this only when
+    /// `enabled` — off-config JSON stays byte-identical to pre-faults
+    /// output).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backoff_base_s", Json::Num(self.backoff_base_s)),
+            ("backoff_cap_s", Json::Num(self.backoff_cap_s)),
+            ("confirm_outliers", Json::Bool(self.confirm_outliers)),
+            ("corrupt", Json::Num(self.corrupt)),
+            ("corrupt_factor", Json::Num(self.corrupt_factor)),
+            ("enabled", Json::Bool(self.enabled)),
+            ("lane_death", Json::Num(self.lane_death)),
+            ("max_retries", Json::Num(self.max_retries as f64)),
+            ("outlier_threshold", Json::Num(self.outlier_threshold)),
+            ("probation_s", Json::Num(self.probation_s)),
+            ("quarantine_after", Json::Num(self.quarantine_after as f64)),
+            ("recovery", Json::Bool(self.recovery)),
+            ("straggler", Json::Num(self.straggler)),
+            ("straggler_factor", Json::Num(self.straggler_factor)),
+            ("straggler_timeout", Json::Num(self.straggler_timeout)),
+            ("transient", Json::Num(self.transient)),
+        ])
+    }
+
+    /// Tolerant parse: absent keys keep their defaults (pre-faults
+    /// checkpoints and configs carry no `faults` object at all).
+    pub fn from_json(v: &Json) -> Result<FaultConfig, String> {
+        let d = FaultConfig::default();
+        let f = |k: &str, dv: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(dv);
+        let b = |k: &str, dv: bool| v.get(k).and_then(|x| x.as_bool()).unwrap_or(dv);
+        Ok(FaultConfig {
+            enabled: b("enabled", d.enabled),
+            transient: f("transient", d.transient),
+            straggler: f("straggler", d.straggler),
+            straggler_factor: f("straggler_factor", d.straggler_factor),
+            straggler_timeout: f("straggler_timeout", d.straggler_timeout),
+            corrupt: f("corrupt", d.corrupt),
+            corrupt_factor: f("corrupt_factor", d.corrupt_factor),
+            lane_death: f("lane_death", d.lane_death),
+            recovery: b("recovery", d.recovery),
+            max_retries: f("max_retries", d.max_retries as f64) as u32,
+            backoff_base_s: f("backoff_base_s", d.backoff_base_s),
+            backoff_cap_s: f("backoff_cap_s", d.backoff_cap_s),
+            confirm_outliers: b("confirm_outliers", d.confirm_outliers),
+            outlier_threshold: f("outlier_threshold", d.outlier_threshold),
+            quarantine_after: f("quarantine_after", d.quarantine_after as f64) as u32,
+            probation_s: f("probation_s", d.probation_s),
+        })
+    }
+
+    /// Capped exponential backoff delay (virtual seconds) before retry
+    /// attempt `attempt` of a transient failure.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        let exp = 2f64.powi(attempt.min(30) as i32);
+        (self.backoff_base_s * exp).min(self.backoff_cap_s)
+    }
+}
+
+/// What the fault model injects *instead of* running the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InjectedFault {
+    /// The evaluation errored transiently; a retry may succeed.
+    Transient,
+    /// The lane died mid-evaluation; the submission is lost and the
+    /// lane never comes back.
+    LaneDeath,
+}
+
+/// Per-dispatch fault decision, drawn before the evaluation runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DispatchPlan {
+    /// Hard fault replacing the evaluation entirely.
+    pub inject: Option<InjectedFault>,
+    /// Latency multiplier (1.0 = nominal; > 1.0 = straggler).
+    pub cost_factor: f64,
+    /// Multiplicative timing corruption, applied to a successful
+    /// evaluation's reported timings.
+    pub corrupt_factor: Option<f64>,
+}
+
+impl DispatchPlan {
+    /// The no-fault plan (what a healthy dispatch draws).
+    pub fn clean() -> DispatchPlan {
+        DispatchPlan {
+            inject: None,
+            cost_factor: 1.0,
+            corrupt_factor: None,
+        }
+    }
+}
+
+/// splitmix64 finalizer — decorrelates the fingerprint/attempt key
+/// before it perturbs the fault seed.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic fault-injecting decorator over any backend.
+///
+/// Disabled (the default), every trait method delegates verbatim to
+/// the inner backend and [`EvalBackend::fault_plan`] returns `None` —
+/// the wrapper is invisible, which keeps off-runs bit-identical to a
+/// build without this module. Enabled, [`EvalBackend::fork_lane`]
+/// returns `None` so the platform evaluates inline on the parent
+/// backend (fault dispatch decisions and lane-health bookkeeping live
+/// on the platform's virtual clock, not on worker threads), and
+/// `fault_plan` draws each dispatch's faults from its content-keyed
+/// per-dispatch stream (module docs).
+///
+/// State capture delegates to the inner backend in **both** modes:
+/// a checkpoint's backend blob is byte-identical to the unwrapped
+/// backend's, because the fault model itself carries no stream state
+/// to persist.
+pub struct FaultyBackend<B: EvalBackend> {
+    inner: B,
+    cfg: FaultConfig,
+    fault_seed: u64,
+}
+
+impl<B: EvalBackend> FaultyBackend<B> {
+    /// Wrap `inner`. `seed` is the run seed; the fault stream is a
+    /// fixed fork of it so fault draws never correlate with the
+    /// simulator's noise streams.
+    pub fn new(inner: B, cfg: FaultConfig, seed: u64) -> Self {
+        FaultyBackend {
+            inner,
+            cfg,
+            // constant stream tag: the fault model's fork of the run
+            // seed (never fed to any other RNG consumer)
+            fault_seed: mix(seed ^ 0xFA17_FA17_FA17_FA17),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+}
+
+impl<B: EvalBackend> EvalBackend for FaultyBackend<B> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn check(&mut self, genome: &KernelGenome) -> Result<(), super::EvalError> {
+        self.inner.check(genome)
+    }
+
+    fn measure(
+        &mut self,
+        genome: &KernelGenome,
+        cfg: &crate::workload::GemmConfig,
+    ) -> Result<f64, super::EvalError> {
+        self.inner.measure(genome, cfg)
+    }
+
+    fn submission_cost_s(&self) -> f64 {
+        self.inner.submission_cost_s()
+    }
+
+    fn profile(&self, genome: &KernelGenome) -> Option<crate::sim::ProfileReport> {
+        self.inner.profile(genome)
+    }
+
+    fn workload(&self) -> std::sync::Arc<dyn crate::workload::Workload> {
+        self.inner.workload()
+    }
+
+    fn fork_lane(&mut self, lane: u64) -> Option<Self> {
+        if self.cfg.enabled {
+            // force the inline stream path: fault decisions must
+            // happen on the platform's virtual clock, per dispatch
+            return None;
+        }
+        let cfg = self.cfg.clone();
+        let fault_seed = self.fault_seed;
+        self.inner.fork_lane(lane).map(|inner| FaultyBackend {
+            inner,
+            cfg,
+            fault_seed,
+        })
+    }
+
+    fn state_json(&self) -> Option<Json> {
+        self.inner.state_json()
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<(), String> {
+        self.inner.restore_state(state)
+    }
+
+    fn fault_plan(&mut self, fingerprint: u64, attempt: u32) -> Option<DispatchPlan> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        // fresh per-dispatch stream: a pure function of
+        // (seed, genome, attempt) — see the module docs
+        let key = self.fault_seed ^ mix(fingerprint) ^ mix(0xA77E_0000 | attempt as u64);
+        let mut rng = Rng::seed_from_u64(key);
+        let mut plan = DispatchPlan::clean();
+        // fixed draw order (lane death, transient, straggler, corrupt)
+        // so a config change to one rate never re-routes the draws of
+        // another fault class for the same dispatch key
+        if rng.chance(self.cfg.lane_death) {
+            plan.inject = Some(InjectedFault::LaneDeath);
+            return Some(plan);
+        }
+        if rng.chance(self.cfg.transient) {
+            plan.inject = Some(InjectedFault::Transient);
+            return Some(plan);
+        }
+        if rng.chance(self.cfg.straggler) {
+            plan.cost_factor = self.cfg.straggler_factor * rng.lognormal_factor(0.5);
+        }
+        if rng.chance(self.cfg.corrupt) {
+            plan.corrupt_factor = Some(if rng.chance(0.5) {
+                self.cfg.corrupt_factor
+            } else {
+                1.0 / self.cfg.corrupt_factor
+            });
+        }
+        Some(plan)
+    }
+}
+
+/// What one faulted dispatch turned out to be — carried in flight and
+/// resolved into events/stats/health at commit time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultTag {
+    /// Injected transient evaluation error.
+    Transient,
+    /// Permanent lane death (retires the lane at commit).
+    LaneDeath,
+    /// Straggler that hit the recovery timeout (requeued).
+    StragglerTimeout,
+    /// Straggler that ran slow but finished (no fault outcome).
+    Straggler,
+    /// Corrupted timings that slipped through (confirmation off).
+    Corrupt,
+    /// Corrupted/outlier timings caught by confirmation.
+    Suspect,
+}
+
+impl FaultTag {
+    /// Journal/event kind string (stable).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultTag::Transient => "transient",
+            FaultTag::LaneDeath => "lane_death",
+            FaultTag::StragglerTimeout => "straggler_timeout",
+            FaultTag::Straggler => "straggler",
+            FaultTag::Corrupt => "corrupt",
+            FaultTag::Suspect => "suspect",
+        }
+    }
+
+    pub fn from_kind(kind: &str) -> Option<FaultTag> {
+        Some(match kind {
+            "transient" => FaultTag::Transient,
+            "lane_death" => FaultTag::LaneDeath,
+            "straggler_timeout" => FaultTag::StragglerTimeout,
+            "straggler" => FaultTag::Straggler,
+            "corrupt" => FaultTag::Corrupt,
+            "suspect" => FaultTag::Suspect,
+            _ => return None,
+        })
+    }
+
+    /// Whether this dispatch counts against the lane's health (slow
+    /// and silently corrupted dispatches don't — the service can't
+    /// see them either).
+    pub fn counts_against_lane(&self) -> bool {
+        matches!(
+            self,
+            FaultTag::Transient
+                | FaultTag::LaneDeath
+                | FaultTag::StragglerTimeout
+                | FaultTag::Suspect
+        )
+    }
+}
+
+/// One lane's health record.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LaneHealth {
+    /// Faulted dispatches since the last clean one.
+    pub consecutive_faults: u32,
+    /// Quarantined until this virtual time (cleared, with `probation`
+    /// left set, when the lane is next selected past it).
+    pub quarantined_until: Option<f64>,
+    /// The next dispatch is probational: a fault retires the lane, a
+    /// clean completion re-admits it.
+    pub probation: bool,
+    /// Permanently out of service (lane death, or a probation fault).
+    pub retired: bool,
+}
+
+impl LaneHealth {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![(
+            "consecutive_faults",
+            Json::Num(self.consecutive_faults as f64),
+        )];
+        if let Some(q) = self.quarantined_until {
+            pairs.push(("quarantined_until", Json::Num(q)));
+        }
+        if self.probation {
+            pairs.push(("probation", Json::Bool(true)));
+        }
+        if self.retired {
+            pairs.push(("retired", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<LaneHealth, String> {
+        Ok(LaneHealth {
+            consecutive_faults: v
+                .get("consecutive_faults")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(0) as u32,
+            quarantined_until: v.get("quarantined_until").and_then(|x| x.as_f64()),
+            probation: v.get("probation").and_then(|x| x.as_bool()).unwrap_or(false),
+            retired: v.get("retired").and_then(|x| x.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+/// Committed fault counters (checkpointed; only-when-nonzero JSON so
+/// a faults-off checkpoint is byte-identical to pre-faults output —
+/// though faults-off runs never construct this at all).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    pub transients: u64,
+    pub lane_deaths: u64,
+    pub straggler_timeouts: u64,
+    pub stragglers: u64,
+    pub corrupted: u64,
+    pub suspects: u64,
+    pub quarantines: u64,
+    pub readmissions: u64,
+    pub retirements: u64,
+}
+
+impl FaultStats {
+    /// Fault-class dispatch outcomes (the ones the recovery layer must
+    /// resolve into a retry or an abandonment).
+    pub fn injected(&self) -> u64 {
+        self.transients + self.lane_deaths + self.straggler_timeouts + self.suspects
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = Vec::new();
+        let mut num = |k: &'static str, v: u64| {
+            if v > 0 {
+                pairs.push((k, Json::Num(v as f64)));
+            }
+        };
+        num("corrupted", self.corrupted);
+        num("lane_deaths", self.lane_deaths);
+        num("quarantines", self.quarantines);
+        num("readmissions", self.readmissions);
+        num("retirements", self.retirements);
+        num("straggler_timeouts", self.straggler_timeouts);
+        num("stragglers", self.stragglers);
+        num("suspects", self.suspects);
+        num("transients", self.transients);
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> FaultStats {
+        let n = |k: &str| v.get(k).and_then(|x| x.as_u64()).unwrap_or(0);
+        FaultStats {
+            transients: n("transients"),
+            lane_deaths: n("lane_deaths"),
+            straggler_timeouts: n("straggler_timeouts"),
+            stragglers: n("stragglers"),
+            corrupted: n("corrupted"),
+            suspects: n("suspects"),
+            quarantines: n("quarantines"),
+            readmissions: n("readmissions"),
+            retirements: n("retirements"),
+        }
+    }
+}
+
+/// One typed fault/recovery event, journaled as a `"t":"fault"` record
+/// (store layer) and surfaced to the scheduler through the platform's
+/// event outbox.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRecord {
+    /// Stable kind: a [`FaultTag::kind`] string, or the scheduler's
+    /// own `"retry"` / `"abandon"` / platform `"quarantine"` /
+    /// `"readmit"` / `"retire"`.
+    pub kind: String,
+    pub lane: Option<u32>,
+    pub submission_index: Option<u64>,
+    pub attempt: u32,
+    /// Virtual time of the commit that produced the event.
+    pub at_s: f64,
+}
+
+impl FaultRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("at_s", Json::Num(self.at_s))];
+        if self.attempt > 0 {
+            pairs.push(("attempt", Json::Num(self.attempt as f64)));
+        }
+        pairs.push(("kind", Json::Str(self.kind.clone())));
+        if let Some(l) = self.lane {
+            pairs.push(("lane", Json::Num(l as f64)));
+        }
+        if let Some(s) = self.submission_index {
+            pairs.push(("submission_index", Json::Num(s as f64)));
+        }
+        pairs.push(("t", Json::Str("fault".into())));
+        Json::obj(pairs)
+    }
+
+    /// Streamed emission, byte-identical to `to_json().to_string()`
+    /// (keys in sorted order) — the journal's zero-alloc path.
+    pub fn write_json(&self, out: &mut String) {
+        out.push_str("{\"at_s\":");
+        json::push_num_value(out, self.at_s);
+        if self.attempt > 0 {
+            out.push_str(",\"attempt\":");
+            json::push_num_value(out, self.attempt as f64);
+        }
+        out.push_str(",\"kind\":");
+        json::push_str_value(out, &self.kind);
+        if let Some(l) = self.lane {
+            out.push_str(",\"lane\":");
+            json::push_num_value(out, l as f64);
+        }
+        if let Some(s) = self.submission_index {
+            out.push_str(",\"submission_index\":");
+            json::push_num_value(out, s as f64);
+        }
+        out.push_str(",\"t\":\"fault\"}");
+    }
+
+    pub fn from_json(v: &Json) -> Result<FaultRecord, String> {
+        Ok(FaultRecord {
+            kind: v
+                .get("kind")
+                .and_then(|x| x.as_str())
+                .ok_or("fault record missing kind")?
+                .to_string(),
+            lane: v.get("lane").and_then(|x| x.as_u64()).map(|l| l as u32),
+            submission_index: v.get("submission_index").and_then(|x| x.as_u64()),
+            attempt: v.get("attempt").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+            at_s: v.get("at_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        })
+    }
+}
+
+/// The platform's recovery-layer state: config, per-lane health, the
+/// committed counters, and the event outbox the scheduler drains after
+/// each poll.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    pub cfg: FaultConfig,
+    pub lanes: Vec<LaneHealth>,
+    pub stats: FaultStats,
+    /// Typed events produced at commit time, drained (and journaled)
+    /// by the scheduler after each poll. Must be empty at checkpoint
+    /// time.
+    pub events: Vec<FaultRecord>,
+}
+
+impl FaultState {
+    pub fn new(cfg: FaultConfig, lanes: usize) -> FaultState {
+        FaultState {
+            cfg,
+            lanes: vec![LaneHealth::default(); lanes],
+            stats: FaultStats::default(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Lanes still in service.
+    pub fn live_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| !l.retired).count()
+    }
+
+    /// Resolve one committed dispatch into stats, lane health, and
+    /// events. `tag` is `None` for a clean dispatch.
+    pub fn on_commit(
+        &mut self,
+        lane: usize,
+        tag: Option<FaultTag>,
+        attempt: u32,
+        submission_index: u64,
+        at_s: f64,
+    ) {
+        match tag {
+            Some(t) => {
+                match t {
+                    FaultTag::Transient => self.stats.transients += 1,
+                    FaultTag::LaneDeath => self.stats.lane_deaths += 1,
+                    FaultTag::StragglerTimeout => self.stats.straggler_timeouts += 1,
+                    FaultTag::Straggler => self.stats.stragglers += 1,
+                    FaultTag::Corrupt => self.stats.corrupted += 1,
+                    FaultTag::Suspect => {
+                        self.stats.corrupted += 1;
+                        self.stats.suspects += 1;
+                    }
+                }
+                self.events.push(FaultRecord {
+                    kind: t.kind().into(),
+                    lane: Some(lane as u32),
+                    submission_index: Some(submission_index),
+                    attempt,
+                    at_s,
+                });
+                if t.counts_against_lane() {
+                    self.on_lane_fault(lane, t, attempt, at_s);
+                } else {
+                    self.on_lane_clean(lane, attempt, at_s);
+                }
+            }
+            None => self.on_lane_clean(lane, attempt, at_s),
+        }
+    }
+
+    fn on_lane_fault(&mut self, lane: usize, tag: FaultTag, attempt: u32, at_s: f64) {
+        let h = &mut self.lanes[lane];
+        h.consecutive_faults += 1;
+        if tag == FaultTag::LaneDeath {
+            // permanent death is part of the fault model, not the
+            // recovery policy: the lane is gone either way
+            h.retired = true;
+            self.stats.retirements += 1;
+            self.events.push(FaultRecord {
+                kind: "retire".into(),
+                lane: Some(lane as u32),
+                submission_index: None,
+                attempt,
+                at_s,
+            });
+            return;
+        }
+        if !self.cfg.recovery {
+            return;
+        }
+        if h.probation {
+            h.retired = true;
+            self.stats.retirements += 1;
+            self.events.push(FaultRecord {
+                kind: "retire".into(),
+                lane: Some(lane as u32),
+                submission_index: None,
+                attempt,
+                at_s,
+            });
+        } else if h.consecutive_faults >= self.cfg.quarantine_after {
+            h.quarantined_until = Some(at_s + self.cfg.probation_s);
+            h.probation = true;
+            h.consecutive_faults = 0;
+            self.stats.quarantines += 1;
+            self.events.push(FaultRecord {
+                kind: "quarantine".into(),
+                lane: Some(lane as u32),
+                submission_index: None,
+                attempt,
+                at_s,
+            });
+        }
+    }
+
+    fn on_lane_clean(&mut self, lane: usize, attempt: u32, at_s: f64) {
+        let h = &mut self.lanes[lane];
+        h.consecutive_faults = 0;
+        if h.probation {
+            h.probation = false;
+            self.stats.readmissions += 1;
+            self.events.push(FaultRecord {
+                kind: "readmit".into(),
+                lane: Some(lane as u32),
+                submission_index: None,
+                attempt,
+                at_s,
+            });
+        }
+    }
+}
+
+/// Run-level fault/recovery summary (RunOutcome + report): the
+/// platform's committed counters plus the scheduler's retry decisions.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSummary {
+    pub stats: FaultStats,
+    pub retries: u64,
+    pub abandoned: u64,
+    pub retired_lanes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::seeds;
+    use crate::sim::SimBackend;
+    use crate::workload::FEEDBACK_CONFIGS;
+
+    fn on_cfg() -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn disabled_wrapper_is_pure_delegation() {
+        let mut plain = SimBackend::new(9);
+        let mut wrapped = FaultyBackend::new(SimBackend::new(9), FaultConfig::default(), 9);
+        let g = seeds::mfma_seed();
+        assert!(wrapped.fault_plan(g.fingerprint_hash(), 0).is_none());
+        assert_eq!(plain.check(&g).is_ok(), wrapped.check(&g).is_ok());
+        for cfg in &FEEDBACK_CONFIGS[..2] {
+            assert_eq!(
+                EvalBackend::measure(&mut plain, &g, cfg).unwrap(),
+                EvalBackend::measure(&mut wrapped, &g, cfg).unwrap(),
+                "disabled decorator must not perturb the noise stream"
+            );
+        }
+        assert_eq!(
+            plain.state_json(),
+            wrapped.state_json(),
+            "state capture delegates: checkpoint blobs stay identical"
+        );
+        assert!(wrapped.fork_lane(0).is_some(), "disabled forks delegate");
+    }
+
+    #[test]
+    fn enabled_wrapper_refuses_lane_forks() {
+        let mut b = FaultyBackend::new(SimBackend::new(9), on_cfg(), 9);
+        assert!(b.fork_lane(0).is_none());
+    }
+
+    #[test]
+    fn fault_plan_is_a_pure_function_of_seed_genome_attempt() {
+        let mut a = FaultyBackend::new(SimBackend::new(1), on_cfg(), 42);
+        let mut b = FaultyBackend::new(SimBackend::new(2), on_cfg(), 42);
+        let g = seeds::mfma_seed();
+        let fp = g.fingerprint_hash();
+        // interleave unrelated draws on `a`: the plan must not change
+        a.fault_plan(12345, 3);
+        a.fault_plan(67890, 1);
+        for attempt in 0..4 {
+            assert_eq!(
+                a.fault_plan(fp, attempt),
+                b.fault_plan(fp, attempt),
+                "per-dispatch streams are order-independent"
+            );
+        }
+        // attempts draw distinct streams (retries re-roll the dice)
+        let plans: Vec<_> = (0..64).map(|i| a.fault_plan(fp, i).unwrap()).collect();
+        assert!(
+            plans.iter().any(|p| *p != plans[0]),
+            "attempt salt must vary the draw"
+        );
+    }
+
+    #[test]
+    fn fault_rates_are_roughly_honored() {
+        let cfg = FaultConfig {
+            enabled: true,
+            transient: 0.2,
+            straggler: 0.0,
+            corrupt: 0.0,
+            lane_death: 0.0,
+            ..Default::default()
+        };
+        let mut b = FaultyBackend::new(SimBackend::new(1), cfg, 7);
+        let n = 5000;
+        let injected = (0..n)
+            .filter(|&i| {
+                b.fault_plan(i as u64 * 0x9E37_79B9, 0)
+                    .unwrap()
+                    .inject
+                    .is_some()
+            })
+            .count();
+        let rate = injected as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.03, "transient rate ~0.2, got {rate}");
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let cfg = FaultConfig::default();
+        assert_eq!(cfg.backoff_s(0), 30.0);
+        assert_eq!(cfg.backoff_s(1), 60.0);
+        assert_eq!(cfg.backoff_s(2), 120.0);
+        assert_eq!(cfg.backoff_s(10), 480.0, "cap");
+    }
+
+    #[test]
+    fn lane_health_quarantines_then_retires_on_probation_fault() {
+        let mut fs = FaultState::new(on_cfg(), 2);
+        for i in 0..3 {
+            fs.on_commit(0, Some(FaultTag::Transient), 0, i, 90.0 * (i + 1) as f64);
+        }
+        assert_eq!(fs.stats.quarantines, 1);
+        assert!(fs.lanes[0].probation);
+        assert!(fs.lanes[0].quarantined_until.is_some());
+        assert!(!fs.lanes[0].retired);
+        // probation fault retires the lane
+        fs.lanes[0].quarantined_until = None;
+        fs.on_commit(0, Some(FaultTag::Transient), 1, 3, 900.0);
+        assert!(fs.lanes[0].retired);
+        assert_eq!(fs.stats.retirements, 1);
+        assert_eq!(fs.live_lanes(), 1);
+    }
+
+    #[test]
+    fn lane_health_readmits_after_a_clean_probation_job() {
+        let mut fs = FaultState::new(on_cfg(), 1);
+        for i in 0..3 {
+            fs.on_commit(0, Some(FaultTag::Transient), 0, i, 90.0);
+        }
+        assert!(fs.lanes[0].probation);
+        fs.lanes[0].quarantined_until = None;
+        fs.on_commit(0, None, 0, 3, 990.0);
+        assert!(!fs.lanes[0].probation);
+        assert_eq!(fs.stats.readmissions, 1);
+        assert_eq!(fs.lanes[0].consecutive_faults, 0);
+    }
+
+    #[test]
+    fn lane_death_always_retires_even_without_recovery() {
+        let cfg = FaultConfig {
+            recovery: false,
+            ..on_cfg()
+        };
+        let mut fs = FaultState::new(cfg, 2);
+        fs.on_commit(1, Some(FaultTag::LaneDeath), 0, 0, 90.0);
+        assert!(fs.lanes[1].retired);
+        assert_eq!(fs.stats.lane_deaths, 1);
+        assert_eq!(fs.stats.retirements, 1);
+    }
+
+    #[test]
+    fn fault_record_streamed_matches_tree_emitter() {
+        let records = [
+            FaultRecord {
+                kind: "transient".into(),
+                lane: Some(2),
+                submission_index: Some(17),
+                attempt: 1,
+                at_s: 270.0,
+            },
+            FaultRecord {
+                kind: "quarantine".into(),
+                lane: Some(0),
+                submission_index: None,
+                attempt: 0,
+                at_s: 90.0,
+            },
+            FaultRecord {
+                kind: "retry".into(),
+                lane: None,
+                submission_index: Some(3),
+                attempt: 2,
+                at_s: 180.5,
+            },
+        ];
+        for r in &records {
+            let mut streamed = String::new();
+            r.write_json(&mut streamed);
+            assert_eq!(streamed, r.to_json().to_string());
+            let parsed = FaultRecord::from_json(&crate::util::json::parse(&streamed).unwrap())
+                .unwrap();
+            assert_eq!(&parsed, r);
+        }
+    }
+
+    #[test]
+    fn fault_config_json_roundtrip_and_tolerant_parse() {
+        let cfg = FaultConfig {
+            enabled: true,
+            transient: 0.125,
+            max_retries: 5,
+            recovery: false,
+            ..Default::default()
+        };
+        let back = FaultConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // tolerant: an empty object is all defaults
+        let empty = FaultConfig::from_json(&crate::util::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(empty, FaultConfig::default());
+    }
+
+    #[test]
+    fn fault_stats_json_is_only_when_nonzero() {
+        let stats = FaultStats::default();
+        assert_eq!(stats.to_json().to_string(), "{}");
+        let some = FaultStats {
+            transients: 3,
+            quarantines: 1,
+            ..Default::default()
+        };
+        let v = some.to_json();
+        assert!(v.get("stragglers").is_none());
+        assert_eq!(FaultStats::from_json(&v), some);
+    }
+}

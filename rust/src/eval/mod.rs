@@ -19,6 +19,7 @@
 //! refill each lane the moment it frees (DESIGN.md §8).
 
 pub mod executor;
+pub mod faults;
 pub mod platform;
 pub mod screen;
 pub mod verifier;
@@ -27,6 +28,10 @@ use crate::genome::KernelGenome;
 use crate::workload::{GemmConfig, Workload};
 
 pub use executor::{evaluate_one, run_batch, EvalCache, StreamExecutor};
+pub use faults::{
+    DispatchPlan, FaultConfig, FaultRecord, FaultState, FaultStats, FaultSummary, FaultTag,
+    FaultyBackend, InjectedFault, LaneHealth,
+};
 pub use platform::{
     BatchResult, CompletedEval, EvalPlatform, PlatformCheckpoint, PlatformConfig,
     SubmissionRecord,
@@ -126,6 +131,18 @@ pub trait EvalBackend {
     /// as the checkpointed run's would have.
     fn restore_state(&mut self, _state: &crate::util::json::Json) -> Result<(), String> {
         Err("backend does not support checkpoint restore".into())
+    }
+
+    /// Per-dispatch fault decision (DESIGN.md §14), consulted by the
+    /// platform's stream path just before it charges a lane. `None` —
+    /// the default, and what every backend other than an **enabled**
+    /// [`faults::FaultyBackend`] returns — means the dispatch cannot
+    /// fault and the platform takes the exact pre-faults code path
+    /// (the off-means-off bit-identity switch). Must draw only from
+    /// the fault model's own content-keyed stream, never from any
+    /// measurement RNG.
+    fn fault_plan(&mut self, _fingerprint: u64, _attempt: u32) -> Option<faults::DispatchPlan> {
+        None
     }
 }
 

@@ -129,6 +129,13 @@ pub struct PlatformCheckpoint {
     /// commit time, so — unlike cache stats — no in-flight rollback is
     /// needed.
     pub federated_hits: u64,
+    /// Fault-model state (DESIGN.md §14): lane health, committed fault
+    /// counters, and the in-flight pending entries persisted **as
+    /// data** (faults-mode checkpoints do not unwind — see
+    /// [`EvalPlatform::checkpoint_state`]). `None` on every faults-off
+    /// run, keeping off-checkpoints byte-identical to pre-faults
+    /// output.
+    pub faults: Option<crate::util::json::Json>,
 }
 
 /// How stream submissions are evaluated (decided once, at the first
@@ -156,16 +163,21 @@ enum PendingKind {
     /// (evaluated at submit time), `None` while a worker runs it.
     Run {
         lane: usize,
-        submission_index: u64,
         /// Genome content hash ([`KernelGenome::fingerprint_hash`]) —
         /// the in-flight alias key (§Perf: no per-dispatch `String`).
         fingerprint: u64,
         inline_outcome: Option<EvalOutcome>,
-        /// Lane-clock and busy-time values as of just before this
-        /// dispatch: a checkpoint unwinds in-flight work by restoring
-        /// these recorded values (exact — no float subtraction).
+        /// Lane-seconds this dispatch occupies (the nominal submission
+        /// cost, or a fault-scaled value). Charged to `busy_lane_s` —
+        /// and the submission index assigned — at **commit** time
+        /// (poll), never at dispatch: with varying per-dispatch costs,
+        /// commits happen out of dispatch order, and committed-only
+        /// accounting is what keeps checkpoints exact (DESIGN.md §14).
+        cost_s: f64,
+        /// Lane-clock value as of just before this dispatch: a
+        /// faults-off checkpoint unwinds in-flight work by restoring
+        /// the recorded value (exact — no float subtraction).
         prev_lane_clock: f64,
-        prev_busy_lane_s: f64,
         /// Inline path only: parent backend state just before this
         /// dispatch's inline evaluation. Inline evaluation advances the
         /// parent's noise stream at *submit* time, so unwinding the
@@ -178,6 +190,11 @@ enum PendingKind {
         /// Federation-store hit: `inline_outcome` carries the stored
         /// result, no backend ever ran this dispatch (DESIGN.md §12).
         federated: bool,
+        /// Retry attempt number (0 = first try; DESIGN.md §14).
+        attempt: u32,
+        /// What the fault model did to this dispatch (`None` = clean),
+        /// resolved into stats/health/events at commit.
+        fault: Option<super::faults::FaultTag>,
     },
     /// Served from the result cache at submit time (free).
     Cached { outcome: EvalOutcome },
@@ -232,6 +249,12 @@ pub struct EvalPlatform<B: EvalBackend> {
     federated: Option<HashMap<u64, EvalOutcome>>,
     /// Committed federation hits (counted at commit, never in flight).
     federated_hits: u64,
+    /// Recovery-layer state (DESIGN.md §14): per-lane health, committed
+    /// fault counters, and the event outbox the scheduler drains after
+    /// each poll. `None` means the fault model is off and every consult
+    /// site is skipped — like `federated`, this is the only switch the
+    /// off-means-off bit-identity guarantee rests on.
+    faults: Option<super::faults::FaultState>,
 }
 
 impl<B: EvalBackend> EvalPlatform<B> {
@@ -254,6 +277,37 @@ impl<B: EvalBackend> EvalPlatform<B> {
             stream_log_start: 0,
             federated: None,
             federated_hits: 0,
+            faults: None,
+        }
+    }
+
+    /// Switch on the fault model's recovery layer (lane health,
+    /// quarantine, fault counters). Call before any submission, and
+    /// only when the backend is an enabled
+    /// [`super::faults::FaultyBackend`] — the platform consults
+    /// [`super::EvalBackend::fault_plan`] per stream dispatch and
+    /// resolves what it injected into this state at commit time.
+    pub fn enable_faults(&mut self, cfg: super::faults::FaultConfig) {
+        debug_assert!(
+            self.log.is_empty() && self.pending.is_empty(),
+            "enable_faults() after submissions began"
+        );
+        let lanes = self.lane_busy_until.len();
+        self.faults = Some(super::faults::FaultState::new(cfg, lanes));
+    }
+
+    /// Recovery-layer state, if the fault model is on.
+    pub fn fault_state(&self) -> Option<&super::faults::FaultState> {
+        self.faults.as_ref()
+    }
+
+    /// Drain the typed fault/recovery events produced since the last
+    /// drain (the scheduler journals them after each poll). Empty when
+    /// the fault model is off.
+    pub fn take_fault_events(&mut self) -> Vec<super::faults::FaultRecord> {
+        match &mut self.faults {
+            Some(fs) => std::mem::take(&mut fs.events),
+            None => Vec::new(),
         }
     }
 
@@ -553,6 +607,25 @@ impl<B: EvalBackend> EvalPlatform<B> {
     where
         B: Send + 'static,
     {
+        self.submit_stream_retry(genome, 0.0, 0)
+    }
+
+    /// [`EvalPlatform::submit_stream`] with recovery-layer controls
+    /// (DESIGN.md §14): the dispatch starts no earlier than
+    /// `not_before_s` on the virtual clock (retry backoff is charged
+    /// as lane idle time), and `attempt` salts the fault model's
+    /// per-dispatch stream so a retry re-rolls its faults. With
+    /// `(0.0, 0)` — and the fault model off — this **is** the plain
+    /// stream path, bit for bit.
+    pub fn submit_stream_retry(
+        &mut self,
+        genome: &KernelGenome,
+        not_before_s: f64,
+        attempt: u32,
+    ) -> u64
+    where
+        B: Send + 'static,
+    {
         let ticket = self.next_ticket;
         self.next_ticket += 1;
         let fp = genome.fingerprint_hash();
@@ -593,30 +666,30 @@ impl<B: EvalBackend> EvalPlatform<B> {
         // cache-stat footprint matches the original run's genuine
         // evaluation): a hit occupies a lane for the usual cost and
         // consumes quota — identical trajectory bookkeeping — but never
-        // spawns stream workers and never dispatches to a backend.
+        // spawns stream workers and never dispatches to a backend. It
+        // also never faults: a federation hit is a local store read,
+        // not a service round trip.
         if let Some(outcome) = self.federated_outcome(fp) {
             let cost = self.backend.submission_cost_s();
-            let lane = self.earliest_free_lane();
+            let (lane, start_s) = self.pick_lane(not_before_s);
             let prev_lane_clock = self.lane_busy_until[lane];
-            let prev_busy_lane_s = self.busy_lane_s;
-            self.lane_busy_until[lane] += cost;
-            self.busy_lane_s += cost;
-            let completed_at_s = self.lane_busy_until[lane];
-            let submission_index = self.submissions() + pending_runs;
+            self.lane_busy_until[lane] = start_s + cost;
+            let completed_at_s = start_s + cost;
             let profile = self.backend.profile(genome);
             self.pending.push(PendingEval {
                 ticket,
                 completed_at_s,
                 kind: PendingKind::Run {
                     lane,
-                    submission_index,
                     fingerprint: fp,
                     inline_outcome: Some(outcome),
+                    cost_s: cost,
                     prev_lane_clock,
-                    prev_busy_lane_s,
                     prev_backend_state: None,
                     profile,
                     federated: true,
+                    attempt,
+                    fault: None,
                 },
             });
             return ticket;
@@ -643,34 +716,116 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 None => StreamState::Inline,
             };
         }
-        let cost = self.backend.submission_cost_s();
-        let lane = self.earliest_free_lane();
+        let nominal = self.backend.submission_cost_s();
+        // Per-dispatch fault consult (DESIGN.md §14). The default
+        // fault_plan is None — with the model off nothing below this
+        // point differs from the pre-faults path.
+        let plan = self.backend.fault_plan(fp, attempt);
+        debug_assert!(
+            plan.is_none() || self.faults.is_some(),
+            "fault_plan fired without enable_faults()"
+        );
+        let mut cost = nominal;
+        let mut injected: Option<EvalOutcome> = None;
+        let mut fault_tag: Option<super::faults::FaultTag> = None;
+        let mut corrupt_factor = None;
+        if let Some(plan) = plan {
+            use super::faults::{FaultTag, InjectedFault};
+            match plan.inject {
+                Some(InjectedFault::LaneDeath) => {
+                    injected = Some(EvalOutcome::LaneFailure(
+                        "evaluation lane died mid-run; submission lost".into(),
+                    ));
+                    fault_tag = Some(FaultTag::LaneDeath);
+                }
+                Some(InjectedFault::Transient) => {
+                    injected = Some(EvalOutcome::TransientFailure(
+                        "transient evaluation-service error".into(),
+                    ));
+                    fault_tag = Some(FaultTag::Transient);
+                }
+                None => {
+                    let fcfg = &self.faults.as_ref().expect("asserted above").cfg;
+                    if fcfg.recovery && plan.cost_factor >= fcfg.straggler_timeout {
+                        // timeout-and-requeue: charge the capped cost
+                        // and hand the scheduler a retryable failure
+                        // instead of waiting the straggler out
+                        cost = nominal * fcfg.straggler_timeout;
+                        injected = Some(EvalOutcome::TransientFailure(format!(
+                            "straggler timed out at {:.1}x the nominal cost",
+                            fcfg.straggler_timeout
+                        )));
+                        fault_tag = Some(FaultTag::StragglerTimeout);
+                    } else {
+                        cost = nominal * plan.cost_factor;
+                        if plan.cost_factor > 1.0 {
+                            fault_tag = Some(FaultTag::Straggler);
+                        }
+                        corrupt_factor = plan.corrupt_factor;
+                    }
+                }
+            }
+        }
+        let (lane, start_s) = self.pick_lane(not_before_s);
         let prev_lane_clock = self.lane_busy_until[lane];
-        let prev_busy_lane_s = self.busy_lane_s;
-        self.lane_busy_until[lane] += cost;
-        self.busy_lane_s += cost;
-        let completed_at_s = self.lane_busy_until[lane];
-        let submission_index = self.submissions() + pending_runs;
-        let (inline_outcome, prev_backend_state) = match &self.stream {
-            StreamState::Threaded(executor) => {
-                executor.dispatch(lane, ticket, genome.clone());
-                (None, None)
+        self.lane_busy_until[lane] = start_s + cost;
+        let completed_at_s = start_s + cost;
+        let (inline_outcome, prev_backend_state) = if let Some(outcome) = injected {
+            // hard-faulted dispatches never run the evaluation: no
+            // measurement-RNG draw, no backend state change
+            (Some(outcome), None)
+        } else {
+            match &self.stream {
+                StreamState::Threaded(executor) => {
+                    debug_assert!(
+                        self.faults.is_none(),
+                        "an enabled fault model forces the inline stream path"
+                    );
+                    executor.dispatch(lane, ticket, genome.clone());
+                    (None, None)
+                }
+                StreamState::Inline => {
+                    let prev = if self.capture_backend_state {
+                        self.backend.state_json()
+                    } else {
+                        None
+                    };
+                    let mut outcome = executor::evaluate_one(
+                        &mut self.backend,
+                        &self.feedback_suite,
+                        self.config.reps_per_config,
+                        genome,
+                    );
+                    // fault model: corrupted measurement harness
+                    if let (Some(f), EvalOutcome::Timings(ts)) = (corrupt_factor, &mut outcome)
+                    {
+                        for t in ts.iter_mut() {
+                            *t *= f;
+                        }
+                        fault_tag = Some(super::faults::FaultTag::Corrupt);
+                    }
+                    // recovery: confirm outlier timings against the
+                    // analytic estimate before they can enter the
+                    // archive (DESIGN.md §14)
+                    if let Some(fs) = &self.faults {
+                        if fs.cfg.confirm_outliers {
+                            if let EvalOutcome::Timings(ts) = &outcome {
+                                if let Some(expected) = self.expected_us(genome) {
+                                    let measured = geomean(ts);
+                                    let ratio =
+                                        (measured / expected).max(expected / measured);
+                                    if ratio > fs.cfg.outlier_threshold {
+                                        outcome = EvalOutcome::SuspectTimings(ts.clone());
+                                        fault_tag = Some(super::faults::FaultTag::Suspect);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    (Some(outcome), prev)
+                }
+                StreamState::Idle => unreachable!("stream mode decided above"),
             }
-            StreamState::Inline => {
-                let prev = if self.capture_backend_state {
-                    self.backend.state_json()
-                } else {
-                    None
-                };
-                let outcome = executor::evaluate_one(
-                    &mut self.backend,
-                    &self.feedback_suite,
-                    self.config.reps_per_config,
-                    genome,
-                );
-                (Some(outcome), prev)
-            }
-            StreamState::Idle => unreachable!("stream mode decided above"),
         };
         let profile = self.backend.profile(genome);
         self.pending.push(PendingEval {
@@ -678,17 +833,82 @@ impl<B: EvalBackend> EvalPlatform<B> {
             completed_at_s,
             kind: PendingKind::Run {
                 lane,
-                submission_index,
                 fingerprint: fp,
                 inline_outcome,
+                cost_s: cost,
                 prev_lane_clock,
-                prev_busy_lane_s,
                 prev_backend_state,
                 profile,
                 federated: false,
+                attempt,
+                fault: fault_tag,
             },
         });
         ticket
+    }
+
+    /// Lane selection for one stream dispatch, starting no earlier
+    /// than `not_before_s`. Faults off: the shared earliest-free rule
+    /// (ties to the lowest index), exactly as every path always chose.
+    /// Faults on: retired lanes are skipped and a quarantined lane is
+    /// unavailable before its quarantine expires — selecting it past
+    /// that point clears the window and leaves the lane probational.
+    /// Panics loudly when every lane has retired: graceful degradation
+    /// has run out of lanes and the run cannot continue.
+    fn pick_lane(&mut self, not_before_s: f64) -> (usize, f64) {
+        let fs = match &mut self.faults {
+            None => {
+                let lane = self.earliest_free_lane();
+                return (lane, self.lane_busy_until[lane].max(not_before_s));
+            }
+            Some(fs) => fs,
+        };
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &busy) in self.lane_busy_until.iter().enumerate() {
+            let h = &fs.lanes[i];
+            if h.retired {
+                continue;
+            }
+            let free_at = busy.max(h.quarantined_until.unwrap_or(0.0));
+            // strict `<` keeps the lowest index on ties
+            if best.map(|(_, t)| free_at < t).unwrap_or(true) {
+                best = Some((i, free_at));
+            }
+        }
+        let (lane, free_at) = match best {
+            Some(b) => b,
+            None => panic!(
+                "all {} evaluation lanes retired — the fault model killed every lane; \
+                 aborting the run",
+                fs.lanes.len()
+            ),
+        };
+        // free_at >= quarantined_until by construction, so selection
+        // always clears the window; `probation` stays set until a
+        // clean completion readmits the lane
+        fs.lanes[lane].quarantined_until = None;
+        (lane, free_at.max(not_before_s))
+    }
+
+    /// Analytic cost-model estimate (geomean `total_us` over the
+    /// feedback suite) used as the outlier-confirmation reference —
+    /// the same recipe the screen tier scores with (DESIGN.md §10).
+    /// `None` when the workload cannot estimate this genome; the
+    /// confirmation check is then skipped.
+    fn expected_us(&self, genome: &KernelGenome) -> Option<f64> {
+        let workload = self.backend.workload();
+        let mut vals = Vec::with_capacity(self.feedback_suite.configs.len());
+        for cfg in &self.feedback_suite.configs {
+            let est = workload.estimate(&crate::gpu::MI300, genome, cfg).ok()?.total_us;
+            if !est.is_finite() || est <= 0.0 {
+                return None;
+            }
+            vals.push(est);
+        }
+        if vals.is_empty() {
+            return None;
+        }
+        Some(geomean(&vals))
     }
 
     /// Drain the in-flight stream submission with the **earliest
@@ -737,11 +957,13 @@ impl<B: EvalBackend> EvalPlatform<B> {
             }
             PendingKind::Run {
                 lane,
-                submission_index,
                 fingerprint,
                 inline_outcome,
+                cost_s,
                 profile,
                 federated,
+                attempt,
+                fault,
                 ..
             } => {
                 let outcome = match inline_outcome {
@@ -758,14 +980,23 @@ impl<B: EvalBackend> EvalPlatform<B> {
                         outcome
                     }
                 };
-                self.cache.insert(fingerprint, outcome.clone());
-                debug_assert_eq!(
-                    self.log.len() as u64,
-                    submission_index,
-                    "stream completions commit to the log in submission order"
-                );
+                // fault-class outcomes never enter the cache: a retry
+                // must re-evaluate, and a cached transient would leak
+                // into other consumers as if it were a result
+                if !outcome.is_fault() {
+                    self.cache.insert(fingerprint, outcome.clone());
+                }
+                // commit-time accounting: with per-dispatch costs able
+                // to vary (fault model), commits can happen out of
+                // dispatch order, so busy time and the log index are
+                // charged/assigned here — never at dispatch
+                self.busy_lane_s += cost_s;
+                let submission_index = self.log.len() as u64;
                 if federated {
                     self.federated_hits += 1;
+                }
+                if let Some(fs) = &mut self.faults {
+                    fs.on_commit(lane, fault, attempt, submission_index, p.completed_at_s);
                 }
                 self.log.push(SubmissionRecord {
                     index: submission_index,
@@ -930,23 +1161,27 @@ impl<B: EvalBackend> EvalPlatform<B> {
         self.cache.stats()
     }
 
-    /// Platform accounting for a run-store checkpoint, **rolled back to
-    /// the last committed completion** (DESIGN.md §9): in-flight stream
-    /// submissions are unwound exactly — lane clocks and busy time
-    /// restore the recorded pre-dispatch values, their quota/ticket/
-    /// cache-stat effects are subtracted — because the scheduler
-    /// re-submits the corresponding experiments on resume through the
-    /// normal path, which re-derives identical lanes, tickets, and
-    /// clocks. Errors when the backend cannot serialize its state.
+    /// Platform accounting for a run-store checkpoint (DESIGN.md §9).
     ///
-    /// Invariant the busy-time rollback relies on (and per-lane clocks
-    /// do not): committed submissions are a *global* dispatch-order
-    /// prefix of the in-flight ones, which holds because
-    /// [`super::EvalBackend::submission_cost_s`] is constant per
-    /// backend — uniform costs make virtual completion order equal
-    /// dispatch order. A backend with varying per-call costs would
-    /// need per-commit busy accounting instead of the oldest-pending
-    /// snapshot.
+    /// **Faults off** (the historical contract): rolled back to the
+    /// last committed completion — in-flight stream submissions are
+    /// unwound exactly (lane clocks restore the recorded pre-dispatch
+    /// values; quota/ticket/cache-stat effects are subtracted) because
+    /// the scheduler re-submits the corresponding experiments on
+    /// resume through the normal path, which re-derives identical
+    /// lanes, tickets, and clocks. Busy time needs no rollback at all:
+    /// it is charged at commit, so the live value is already
+    /// committed-only.
+    ///
+    /// **Faults on**: no unwind. With per-dispatch costs able to vary,
+    /// commits happen out of dispatch order and an unwind would have
+    /// to rewind the backend's noise stream non-sequentially — so the
+    /// checkpoint instead persists the live clocks/ticket/backend
+    /// state plus every in-flight entry **as already-evaluated data**
+    /// (DESIGN.md §14); a restore re-creates the pending set verbatim
+    /// and polls proceed as if the process never died.
+    ///
+    /// Errors when the backend cannot serialize its state.
     pub fn checkpoint_state(&self) -> Result<PlatformCheckpoint, String> {
         if !self.capture_backend_state {
             return Err(
@@ -954,6 +1189,9 @@ impl<B: EvalBackend> EvalPlatform<B> {
                  submitting anything a checkpoint must cover)"
                     .into(),
             );
+        }
+        if self.faults.is_some() {
+            return self.checkpoint_state_faults();
         }
         // Inline in-flight dispatches already advanced the parent's
         // noise stream at submit time; rewinding them means rewinding
@@ -973,26 +1211,22 @@ impl<B: EvalBackend> EvalPlatform<B> {
                 format!("backend '{}' does not support checkpointing", self.backend.name())
             })?;
         let mut lanes = self.lane_busy_until.clone();
-        let mut busy = self.busy_lane_s;
         let mut pending_hits = 0u64;
         let mut pending_misses = 0u64;
         // unwind in reverse dispatch order so stacked dispatches on one
-        // lane restore the oldest recorded value; busy time rolls back
-        // to the oldest in-flight run's recorded snapshot. Stat
-        // rollback mirrors submit_stream's counting exactly: a Run's
-        // miss (and a Cached entry's hit) is only ever counted when the
-        // cache is enabled — with it disabled, stats stay (0, 0).
+        // lane restore the oldest recorded value. Stat rollback mirrors
+        // submit_stream's counting exactly: a Run's miss (and a Cached
+        // entry's hit) is only ever counted when the cache is enabled —
+        // with it disabled, stats stay (0, 0).
         let counted = self.cache.enabled();
         for p in self.pending.iter().rev() {
             match &p.kind {
                 PendingKind::Run {
                     lane,
                     prev_lane_clock,
-                    prev_busy_lane_s,
                     ..
                 } => {
                     lanes[*lane] = *prev_lane_clock;
-                    busy = *prev_busy_lane_s;
                     pending_misses += counted as u64;
                 }
                 PendingKind::Cached { .. } => pending_hits += 1,
@@ -1002,7 +1236,9 @@ impl<B: EvalBackend> EvalPlatform<B> {
         let (hits, misses) = self.cache.stats();
         Ok(PlatformCheckpoint {
             lane_busy_until: lanes,
-            busy_lane_s: busy,
+            // busy time is committed-only by construction (charged at
+            // poll/account time) — no in-flight rollback needed
+            busy_lane_s: self.busy_lane_s,
             next_ticket: self.next_ticket - self.pending.len() as u64,
             cache_hits: hits - pending_hits,
             cache_misses: misses - pending_misses,
@@ -1015,6 +1251,101 @@ impl<B: EvalBackend> EvalPlatform<B> {
             // pending_misses rollback above already covers fed pending
             // runs, which counted their miss at submit
             federated_hits: self.federated_hits,
+            faults: None,
+        })
+    }
+
+    /// The faults-mode checkpoint (see [`EvalPlatform::checkpoint_state`]):
+    /// live accounting plus the pending set persisted as data. Every
+    /// in-flight run already carries its outcome (the fault model
+    /// forces the inline stream path), so no evaluation is ever
+    /// re-run — or unwound — across a kill/resume.
+    fn checkpoint_state_faults(&self) -> Result<PlatformCheckpoint, String> {
+        use crate::util::json::{self as json, Json};
+        let fs = self.faults.as_ref().expect("caller checked");
+        debug_assert!(
+            fs.events.is_empty(),
+            "fault events must be drained (journaled) before a checkpoint"
+        );
+        let backend = self.backend.state_json().ok_or_else(|| {
+            format!("backend '{}' does not support checkpointing", self.backend.name())
+        })?;
+        let mut pending = Vec::with_capacity(self.pending.len());
+        for p in &self.pending {
+            let entry = match &p.kind {
+                PendingKind::Run {
+                    lane,
+                    fingerprint,
+                    inline_outcome,
+                    cost_s,
+                    profile,
+                    federated,
+                    attempt,
+                    fault,
+                    ..
+                } => {
+                    let outcome = inline_outcome.as_ref().ok_or(
+                        "faults-mode checkpoint found a worker-dispatched job in flight \
+                         (the fault model must evaluate inline)",
+                    )?;
+                    let mut pairs = Vec::new();
+                    if *attempt > 0 {
+                        pairs.push(("attempt", Json::Num(*attempt as f64)));
+                    }
+                    pairs.push(("completed_at_s", Json::Num(p.completed_at_s)));
+                    pairs.push(("cost_s", Json::Num(*cost_s)));
+                    if let Some(tag) = fault {
+                        pairs.push(("fault", Json::Str(tag.kind().into())));
+                    }
+                    if *federated {
+                        pairs.push(("federated", Json::Bool(true)));
+                    }
+                    pairs.push(("fingerprint", json::u64_hex(*fingerprint)));
+                    pairs.push(("kind", Json::Str("run".into())));
+                    pairs.push(("lane", Json::Num(*lane as f64)));
+                    pairs.push(("outcome", outcome.to_json()));
+                    if let Some(pr) = profile {
+                        pairs.push(("profile", pr.to_json()));
+                    }
+                    pairs.push(("ticket", Json::Num(p.ticket as f64)));
+                    Json::obj(pairs)
+                }
+                PendingKind::Cached { outcome } => Json::obj(vec![
+                    ("completed_at_s", Json::Num(p.completed_at_s)),
+                    ("kind", Json::Str("cached".into())),
+                    ("outcome", outcome.to_json()),
+                    ("ticket", Json::Num(p.ticket as f64)),
+                ]),
+                PendingKind::Alias { fingerprint } => Json::obj(vec![
+                    ("completed_at_s", Json::Num(p.completed_at_s)),
+                    ("fingerprint", json::u64_hex(*fingerprint)),
+                    ("kind", Json::Str("alias".into())),
+                    ("ticket", Json::Num(p.ticket as f64)),
+                ]),
+            };
+            pending.push(entry);
+        }
+        let faults_obj = Json::obj(vec![
+            (
+                "lanes",
+                Json::Arr(fs.lanes.iter().map(|l| l.to_json()).collect()),
+            ),
+            ("pending", Json::Arr(pending)),
+            ("stats", fs.stats.to_json()),
+        ]);
+        let (hits, misses) = self.cache.stats();
+        Ok(PlatformCheckpoint {
+            lane_busy_until: self.lane_busy_until.clone(),
+            busy_lane_s: self.busy_lane_s,
+            next_ticket: self.next_ticket,
+            cache_hits: hits,
+            cache_misses: misses,
+            backend,
+            prespawn_backend: self.prespawn_state.clone(),
+            stream_threaded: matches!(self.stream, StreamState::Threaded(_)),
+            stream_log_start: self.stream_log_start,
+            federated_hits: self.federated_hits,
+            faults: Some(faults_obj),
         })
     }
 
@@ -1122,6 +1453,93 @@ impl<B: EvalBackend> EvalPlatform<B> {
             cp.cache_hits,
             cp.cache_misses,
         );
+        if let Some(fobj) = &cp.faults {
+            self.restore_faults(fobj)?;
+        }
+        Ok(())
+    }
+
+    /// Restore the faults-mode checkpoint object: lane health, fault
+    /// counters, and the in-flight pending set re-created verbatim as
+    /// already-evaluated data (the stream stays `Idle` and re-decides
+    /// the inline path on the next dispatch). Requires
+    /// [`EvalPlatform::enable_faults`] to have been called — resuming
+    /// a chaos run with the fault model off would silently change the
+    /// trajectory, so it fails loudly instead.
+    fn restore_faults(&mut self, fobj: &crate::util::json::Json) -> Result<(), String> {
+        use super::faults::{FaultStats, FaultTag, LaneHealth};
+        use crate::util::json::{self as json};
+        let fs = self.faults.as_mut().ok_or(
+            "checkpoint carries fault-model state but the fault model is off \
+             (resume with the original [faults] config)",
+        )?;
+        if let Some(lanes) = fobj.get("lanes").and_then(|v| v.as_arr()) {
+            if lanes.len() != fs.lanes.len() {
+                return Err(format!(
+                    "checkpoint has {} lane-health records for {} lanes",
+                    lanes.len(),
+                    fs.lanes.len()
+                ));
+            }
+            for (i, l) in lanes.iter().enumerate() {
+                fs.lanes[i] = LaneHealth::from_json(l)?;
+            }
+        }
+        if let Some(stats) = fobj.get("stats") {
+            fs.stats = FaultStats::from_json(stats);
+        }
+        if let Some(entries) = fobj.get("pending").and_then(|v| v.as_arr()) {
+            for e in entries {
+                let ticket = json::req_u64(e, "ticket")?;
+                let completed_at_s = json::req_f64(e, "completed_at_s")?;
+                let kind = match json::req_str(e, "kind")? {
+                    "run" => PendingKind::Run {
+                        lane: json::req_u64(e, "lane")? as usize,
+                        fingerprint: json::parse_u64_hex(
+                            e.get("fingerprint").ok_or("pending entry missing fingerprint")?,
+                        )?,
+                        inline_outcome: Some(EvalOutcome::from_json(
+                            e.get("outcome").ok_or("pending entry missing outcome")?,
+                        )?),
+                        cost_s: json::req_f64(e, "cost_s")?,
+                        // unused in faults mode: checkpoints persist
+                        // pending entries instead of unwinding them
+                        prev_lane_clock: 0.0,
+                        prev_backend_state: None,
+                        profile: e
+                            .get("profile")
+                            .map(ProfileReport::from_json)
+                            .transpose()?,
+                        federated: e
+                            .get("federated")
+                            .and_then(|x| x.as_bool())
+                            .unwrap_or(false),
+                        attempt: e.get("attempt").and_then(|x| x.as_u64()).unwrap_or(0)
+                            as u32,
+                        fault: e
+                            .get("fault")
+                            .and_then(|x| x.as_str())
+                            .and_then(FaultTag::from_kind),
+                    },
+                    "cached" => PendingKind::Cached {
+                        outcome: EvalOutcome::from_json(
+                            e.get("outcome").ok_or("pending entry missing outcome")?,
+                        )?,
+                    },
+                    "alias" => PendingKind::Alias {
+                        fingerprint: json::parse_u64_hex(
+                            e.get("fingerprint").ok_or("pending entry missing fingerprint")?,
+                        )?,
+                    },
+                    other => return Err(format!("unknown pending kind '{other}'")),
+                };
+                self.pending.push(PendingEval {
+                    ticket,
+                    completed_at_s,
+                    kind,
+                });
+            }
+        }
         Ok(())
     }
 

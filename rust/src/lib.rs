@@ -94,7 +94,7 @@ pub mod prelude {
     pub use crate::agents::{AgentSuite, SurrogateLlm};
     pub use crate::analysis::{lint, Diagnostic, Severity};
     pub use crate::config::RunConfig;
-    pub use crate::eval::{EvalBackend, EvalPlatform};
+    pub use crate::eval::{EvalBackend, EvalPlatform, FaultConfig, FaultyBackend};
     pub use crate::agents::{ExperimentRule, KnowledgeProfile, SelectionPolicy};
     pub use crate::genome::{seeds, KernelGenome};
     pub use crate::metrics::geomean;

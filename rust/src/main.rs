@@ -30,9 +30,12 @@
 //! `--halt-after <N>` (testing: simulate a crash after N submissions),
 //! the federated-archive knobs `--federation-dir <dir>`,
 //! `--warm-start-k <N>`, `--federation-read-only true|false`
-//! (`[federation]`, DESIGN.md §12), and the lint knobs
+//! (`[federation]`, DESIGN.md §12), the lint knobs
 //! `--lint-gate true|false` / `--lint-guided true|false` (`[lint]`,
-//! DESIGN.md §13);
+//! DESIGN.md §13), and the fault-injection knobs
+//! `--faults true|false` / `--fault-recovery true|false` (`[faults]`,
+//! DESIGN.md §14 — `--faults true` enables the deterministic chaos
+//! model at its default rates);
 //! like `--workload`, the flags win over the config file.
 //!
 //! Arguments use `--key value` pairs (offline build: no clap; parsing
@@ -166,6 +169,24 @@ fn load_config(flags: &HashMap<String, String>) -> Result<RunConfig, String> {
             other => return Err(format!("bad --lint-guided '{other}' (want true|false)")),
         };
     }
+    if let Some(faults) = flags.get("faults") {
+        cfg.faults.enabled = match faults.as_str() {
+            // a bare trailing `--faults` parses as an empty value
+            "true" | "" => true,
+            "false" => false,
+            other => return Err(format!("bad --faults '{other}' (want true|false)")),
+        };
+    }
+    if let Some(recovery) = flags.get("fault-recovery") {
+        cfg.faults.recovery = match recovery.as_str() {
+            // a bare trailing `--fault-recovery` parses as an empty value
+            "true" | "" => true,
+            "false" => false,
+            other => {
+                return Err(format!("bad --fault-recovery '{other}' (want true|false)"))
+            }
+        };
+    }
     Ok(cfg)
 }
 
@@ -180,8 +201,8 @@ fn print_run_header(cfg: &RunConfig) {
     );
 }
 
-fn print_run_report(
-    run: &gpu_kernel_scientist::scientist::ScientistRun<SimBackend>,
+fn print_run_report<B: gpu_kernel_scientist::eval::EvalBackend>(
+    run: &gpu_kernel_scientist::scientist::ScientistRun<B>,
     outcome: &gpu_kernel_scientist::scientist::RunOutcome,
     flags: &HashMap<String, String>,
 ) -> Result<(), String> {
@@ -209,6 +230,12 @@ fn print_run_report(
     let federation = report::render_federation(outcome.federation.as_ref());
     if !federation.is_empty() {
         print!("{federation}");
+    }
+    // empty unless `[faults]` injected something: a faults-off run's
+    // report stays byte-identical to pre-faults output
+    let faults = report::render_faults(outcome.faults.as_ref());
+    if !faults.is_empty() {
+        print!("{faults}");
     }
     println!("{}", report::render_convergence("scientist", &outcome.curve));
     if flags.contains_key("lineage") {
@@ -678,7 +705,8 @@ fn main() {
                  [--seed N] [--budget N] [--parallelism N] [--pipeline true|false] \
                  [--profile-guided true|false] [--store dir] [--halt-after N] \
                  [--federation-dir dir] [--warm-start-k N] [--federation-read-only true|false] \
-                 [--lint-gate true|false] [--lint-guided true|false] [--genome file.json] \
+                 [--lint-gate true|false] [--lint-guided true|false] \
+                 [--faults true|false] [--fault-recovery true|false] [--genome file.json] \
                  [--config file.toml] [--tuner random|hillclimb|anneal] \
                  [--seed-kernel name] [--artifacts dir] [--save-population file.jsonl]"
             );

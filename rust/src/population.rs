@@ -37,6 +37,20 @@ pub enum EvalOutcome {
     CompileFailure(String),
     /// Ran but produced wrong results.
     IncorrectResult(String),
+    /// The backend cannot evaluate this genome at all (permanent, like
+    /// a compile failure, but a distinct stable kind — the retry policy
+    /// and the journal must tell them apart, DESIGN.md §14).
+    Unsupported(String),
+    /// The evaluation service errored transiently (injected by the
+    /// fault model, DESIGN.md §14): retryable, never cached, never an
+    /// archive result.
+    TransientFailure(String),
+    /// The evaluation lane died mid-run: the submission is lost;
+    /// retryable on another lane.
+    LaneFailure(String),
+    /// Timings flagged as outliers by repeat-measure confirmation:
+    /// retryable, never enter the archive as real measurements.
+    SuspectTimings(Vec<f64>),
 }
 
 impl EvalOutcome {
@@ -49,6 +63,108 @@ impl EvalOutcome {
 
     pub fn is_success(&self) -> bool {
         matches!(self, EvalOutcome::Timings(_))
+    }
+
+    /// Fault-class outcomes (DESIGN.md §14): transient service-side
+    /// failures the recovery layer may retry. Never inserted into the
+    /// eval cache, never published to the federation archive, never
+    /// reconstructed into the cache on resume — a retry must genuinely
+    /// re-evaluate.
+    pub fn is_fault(&self) -> bool {
+        matches!(
+            self,
+            EvalOutcome::TransientFailure(_)
+                | EvalOutcome::LaneFailure(_)
+                | EvalOutcome::SuspectTimings(_)
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            EvalOutcome::Timings(t) => Json::obj(vec![
+                ("kind", Json::Str("timings".into())),
+                ("us", Json::Arr(t.iter().map(|&x| Json::Num(x)).collect())),
+            ]),
+            EvalOutcome::CompileFailure(msg) => Json::obj(vec![
+                ("kind", Json::Str("compile_failure".into())),
+                ("msg", Json::Str(msg.clone())),
+            ]),
+            EvalOutcome::IncorrectResult(msg) => Json::obj(vec![
+                ("kind", Json::Str("incorrect_result".into())),
+                ("msg", Json::Str(msg.clone())),
+            ]),
+            EvalOutcome::Unsupported(msg) => Json::obj(vec![
+                ("kind", Json::Str("unsupported".into())),
+                ("msg", Json::Str(msg.clone())),
+            ]),
+            EvalOutcome::TransientFailure(msg) => Json::obj(vec![
+                ("kind", Json::Str("transient_failure".into())),
+                ("msg", Json::Str(msg.clone())),
+            ]),
+            EvalOutcome::LaneFailure(msg) => Json::obj(vec![
+                ("kind", Json::Str("lane_failure".into())),
+                ("msg", Json::Str(msg.clone())),
+            ]),
+            EvalOutcome::SuspectTimings(t) => Json::obj(vec![
+                ("kind", Json::Str("suspect_timings".into())),
+                ("us", Json::Arr(t.iter().map(|&x| Json::Num(x)).collect())),
+            ]),
+        }
+    }
+
+    /// Stream the [`Self::to_json`] object into `out`, byte-identical
+    /// to `self.to_json().to_string()` (journal hot path, §Perf).
+    pub fn write_json(&self, out: &mut String) {
+        let timing_obj = |out: &mut String, kind: &str, t: &[f64]| {
+            out.push_str("{\"kind\":\"");
+            out.push_str(kind);
+            out.push_str("\",\"us\":[");
+            for (i, &x) in t.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                json::push_num_value(out, x);
+            }
+            out.push_str("]}");
+        };
+        let msg_obj = |out: &mut String, kind: &str, msg: &str| {
+            out.push_str("{\"kind\":\"");
+            out.push_str(kind);
+            out.push_str("\",\"msg\":");
+            json::push_str_value(out, msg);
+            out.push('}');
+        };
+        match self {
+            EvalOutcome::Timings(t) => timing_obj(out, "timings", t),
+            EvalOutcome::SuspectTimings(t) => timing_obj(out, "suspect_timings", t),
+            EvalOutcome::CompileFailure(msg) => msg_obj(out, "compile_failure", msg),
+            EvalOutcome::IncorrectResult(msg) => msg_obj(out, "incorrect_result", msg),
+            EvalOutcome::Unsupported(msg) => msg_obj(out, "unsupported", msg),
+            EvalOutcome::TransientFailure(msg) => msg_obj(out, "transient_failure", msg),
+            EvalOutcome::LaneFailure(msg) => msg_obj(out, "lane_failure", msg),
+        }
+    }
+
+    pub fn from_json(o: &Json) -> Result<EvalOutcome, String> {
+        let us = |o: &Json| -> Result<Vec<f64>, String> {
+            o.get("us")
+                .and_then(|x| x.as_arr())
+                .ok_or("missing us")?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| "bad timing".to_string()))
+                .collect()
+        };
+        let msg = |o: &Json| o.get("msg").and_then(|x| x.as_str()).unwrap_or("").to_string();
+        Ok(match o.get("kind").and_then(|x| x.as_str()) {
+            Some("timings") => EvalOutcome::Timings(us(o)?),
+            Some("suspect_timings") => EvalOutcome::SuspectTimings(us(o)?),
+            Some("compile_failure") => EvalOutcome::CompileFailure(msg(o)),
+            Some("incorrect_result") => EvalOutcome::IncorrectResult(msg(o)),
+            Some("unsupported") => EvalOutcome::Unsupported(msg(o)),
+            Some("transient_failure") => EvalOutcome::TransientFailure(msg(o)),
+            Some("lane_failure") => EvalOutcome::LaneFailure(msg(o)),
+            _ => return Err("bad outcome kind".into()),
+        })
     }
 }
 
@@ -75,20 +191,7 @@ impl Individual {
     }
 
     pub fn to_json(&self) -> Json {
-        let outcome = match &self.outcome {
-            EvalOutcome::Timings(t) => Json::obj(vec![
-                ("kind", Json::Str("timings".into())),
-                ("us", Json::Arr(t.iter().map(|&x| Json::Num(x)).collect())),
-            ]),
-            EvalOutcome::CompileFailure(msg) => Json::obj(vec![
-                ("kind", Json::Str("compile_failure".into())),
-                ("msg", Json::Str(msg.clone())),
-            ]),
-            EvalOutcome::IncorrectResult(msg) => Json::obj(vec![
-                ("kind", Json::Str("incorrect_result".into())),
-                ("msg", Json::Str(msg.clone())),
-            ]),
-        };
+        let outcome = self.outcome.to_json();
         Json::obj(vec![
             ("id", Json::Str(self.id.clone())),
             (
@@ -114,28 +217,7 @@ impl Individual {
         out.push_str(",\"id\":");
         json::push_str_value(out, &self.id);
         out.push_str(",\"outcome\":");
-        match &self.outcome {
-            EvalOutcome::Timings(t) => {
-                out.push_str("{\"kind\":\"timings\",\"us\":[");
-                for (i, &x) in t.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    json::push_num_value(out, x);
-                }
-                out.push_str("]}");
-            }
-            EvalOutcome::CompileFailure(msg) => {
-                out.push_str("{\"kind\":\"compile_failure\",\"msg\":");
-                json::push_str_value(out, msg);
-                out.push('}');
-            }
-            EvalOutcome::IncorrectResult(msg) => {
-                out.push_str("{\"kind\":\"incorrect_result\",\"msg\":");
-                json::push_str_value(out, msg);
-                out.push('}');
-            }
-        }
+        self.outcome.write_json(out);
         out.push_str(",\"parents\":[");
         for (i, p) in self.parents.iter().enumerate() {
             if i > 0 {
@@ -173,23 +255,7 @@ impl Individual {
             .unwrap_or("")
             .to_string();
         let o = v.get("outcome").ok_or("missing outcome")?;
-        let outcome = match o.get("kind").and_then(|x| x.as_str()) {
-            Some("timings") => EvalOutcome::Timings(
-                o.get("us")
-                    .and_then(|x| x.as_arr())
-                    .ok_or("missing us")?
-                    .iter()
-                    .map(|x| x.as_f64().ok_or("bad timing"))
-                    .collect::<Result<Vec<_>, _>>()?,
-            ),
-            Some("compile_failure") => EvalOutcome::CompileFailure(
-                o.get("msg").and_then(|x| x.as_str()).unwrap_or("").into(),
-            ),
-            Some("incorrect_result") => EvalOutcome::IncorrectResult(
-                o.get("msg").and_then(|x| x.as_str()).unwrap_or("").into(),
-            ),
-            _ => return Err("bad outcome kind".into()),
-        };
+        let outcome = EvalOutcome::from_json(o)?;
         Ok(Individual {
             id,
             parents,

@@ -110,6 +110,15 @@ pub fn render_pipeline(stats: &crate::scientist::PipelineStats) -> String {
             stats.linted, stats.lint_rejected
         ));
     }
+    // and for the recovery layer (DESIGN.md §14): a faults-off run —
+    // or a chaos run that happened to need no recovery — renders no
+    // fragment
+    if stats.fault_retries > 0 || stats.fault_abandoned > 0 {
+        s.push_str(&format!(
+            " | faults: {} retried, {} abandoned",
+            stats.fault_retries, stats.fault_abandoned
+        ));
+    }
     s
 }
 
@@ -162,6 +171,29 @@ pub fn render_federation(stats: Option<&crate::store::FederationStats>) -> Strin
             s.hits, s.warm_start_injected
         ),
         _ => String::new(),
+    }
+}
+
+/// One-line fault-injection + recovery summary (DESIGN.md §14). Empty
+/// when the run carried no fault state (`[faults]` off) — so off-run
+/// report output stays byte-identical to a build without the layer. A
+/// chaos run always renders, even when zero faults fired: "checked and
+/// clean" must never read as "not checked".
+pub fn render_faults(summary: Option<&crate::eval::FaultSummary>) -> String {
+    match summary {
+        Some(f) => format!(
+            "faults: {} injected ({} transient, {} lane death(s), {} straggler timeout(s), \
+             {} suspect timing(s)) | recovery: {} retried, {} abandoned, {} lane(s) retired\n",
+            f.stats.injected(),
+            f.stats.transients,
+            f.stats.lane_deaths,
+            f.stats.straggler_timeouts,
+            f.stats.suspects,
+            f.retries,
+            f.abandoned,
+            f.retired_lanes
+        ),
+        None => String::new(),
     }
 }
 
@@ -328,6 +360,7 @@ mod tests {
                 },
                 profile_mix: None,
                 federation: None,
+                faults: None,
             },
         };
         let out = CampaignOutcome {
@@ -367,6 +400,7 @@ mod tests {
                     pipeline: PipelineStats::default(),
                     profile_mix: Some(mix),
                     federation: None,
+                    faults: None,
                 },
             }],
         };
@@ -428,6 +462,8 @@ mod tests {
             screen_rejected: 0,
             linted: 0,
             lint_rejected: 0,
+            fault_retries: 0,
+            fault_abandoned: 0,
         };
         let s = render_pipeline(&stats);
         assert!(s.contains("steady-state pipeline over 4 lane(s)"), "{s}");
@@ -438,6 +474,8 @@ mod tests {
         assert!(!s.contains("screen:"), "{s}");
         // lint gate off: same rule
         assert!(!s.contains("lint:"), "{s}");
+        // faults off: same rule
+        assert!(!s.contains("faults:"), "{s}");
         let lockstep = PipelineStats {
             pipelined: false,
             ..stats.clone()
@@ -454,10 +492,49 @@ mod tests {
         let linted = PipelineStats {
             linted: 9,
             lint_rejected: 3,
-            ..stats
+            ..stats.clone()
         };
         let s = render_pipeline(&linted);
         assert!(s.contains("lint: 9 checked, 3 rejected pre-submission"), "{s}");
+        let faulted = PipelineStats {
+            fault_retries: 4,
+            fault_abandoned: 1,
+            ..stats
+        };
+        let s = render_pipeline(&faulted);
+        assert!(s.contains("faults: 4 retried, 1 abandoned"), "{s}");
+    }
+
+    #[test]
+    fn fault_summary_renders_only_when_the_layer_ran() {
+        use crate::eval::{FaultStats, FaultSummary};
+        assert_eq!(render_faults(None), "");
+        // a chaos run renders even when no fault fired: "checked and
+        // clean" must never read as "not checked"
+        let quiet = FaultSummary {
+            stats: FaultStats::default(),
+            retries: 0,
+            abandoned: 0,
+            retired_lanes: 0,
+        };
+        let s = render_faults(Some(&quiet));
+        assert!(s.starts_with("faults: 0 injected"), "{s}");
+        let busy = FaultSummary {
+            stats: FaultStats {
+                transients: 5,
+                lane_deaths: 1,
+                straggler_timeouts: 2,
+                suspects: 3,
+                ..Default::default()
+            },
+            retries: 9,
+            abandoned: 2,
+            retired_lanes: 1,
+        };
+        let s = render_faults(Some(&busy));
+        assert!(s.contains("11 injected"), "{s}");
+        assert!(s.contains("5 transient"), "{s}");
+        assert!(s.contains("recovery: 9 retried, 2 abandoned, 1 lane(s) retired"), "{s}");
     }
 
     #[test]
@@ -503,6 +580,7 @@ mod tests {
                 },
                 profile_mix: None,
                 federation: None,
+                faults: None,
             },
         };
         let off = render_campaign(&CampaignOutcome {

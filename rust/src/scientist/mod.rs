@@ -39,7 +39,7 @@ pub mod bootstrap;
 pub mod campaign;
 pub mod pipeline;
 
-use std::collections::HashSet;
+use std::collections::{HashSet, VecDeque};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -49,7 +49,10 @@ use pipeline::SchedCounters;
 use crate::agents::{AgentSuite, FindingsDoc, KernelWrite, Selection};
 use crate::analysis::{self, Diagnostic, Severity};
 use crate::config::RunConfig;
-use crate::eval::{EvalBackend, EvalPlatform, PlatformConfig, ScreenConfig, ScreenTier};
+use crate::eval::{
+    EvalBackend, EvalPlatform, FaultRecord, FaultSummary, FaultyBackend, PlatformConfig,
+    ScreenConfig, ScreenTier,
+};
 use crate::gpu::MI300;
 use crate::metrics::ConvergenceCurve;
 use crate::population::{EvalOutcome, Individual, Population};
@@ -97,6 +100,11 @@ pub struct RunOutcome {
     /// off, keeping off-run reports byte-identical to pre-federation
     /// builds.
     pub federation: Option<FederationStats>,
+    /// Fault-injection & recovery summary (DESIGN.md §14): the
+    /// platform's committed fault counters plus the schedulers' retry
+    /// decisions. `None` when `[faults]` is off, keeping off-run
+    /// reports byte-identical to pre-faults builds.
+    pub faults: Option<FaultSummary>,
 }
 
 /// A full scientist run: platform + population + agents + loop state.
@@ -149,7 +157,7 @@ const WARM_START_LABEL: &str = "federated warm-start elite";
 pub(crate) struct ResumeState {
     pub stalls: u32,
     pub planning_dead: bool,
-    pub pending: Vec<(PlannedExperiment, usize)>,
+    pub pending: Vec<PendingResume>,
     /// How many `pending` entries were in flight at the checkpoint:
     /// their depth samples are already in the restored counters, so the
     /// resumed feed skips re-sampling exactly that many dispatches.
@@ -159,6 +167,36 @@ pub(crate) struct ResumeState {
     /// them (the analytic model is pure, so scores recompute exactly)
     /// and refills the rung before planning anything new (DESIGN.md §10).
     pub screen_pending: Vec<(PlannedExperiment, usize)>,
+}
+
+/// One planned-but-uncommitted experiment carried across a resume,
+/// with its recovery-layer retry metadata (DESIGN.md §14). On a
+/// faults-off run `attempt`/`not_before_s` are always `0`/`0.0` and
+/// `ticket` is always `None` — the checkpoint omits them entirely, so
+/// off-store bytes stay identical to pre-faults output.
+pub(crate) struct PendingResume {
+    pub experiment: PlannedExperiment,
+    pub log_pos: usize,
+    /// Retry attempt the dispatch was (or will be) submitted as.
+    pub attempt: u32,
+    /// Earliest virtual start time (retry backoff), `0.0` = none.
+    pub not_before_s: f64,
+    /// Platform ticket, persisted only on faults-mode checkpoints for
+    /// entries that were in flight: the platform checkpoint carries
+    /// their pending evaluations as data, so a resume re-attaches by
+    /// ticket instead of re-submitting (DESIGN.md §14).
+    pub ticket: Option<u64>,
+}
+
+/// Borrowed checkpoint view of one pending experiment — what the
+/// schedulers hand [`ScientistRun::write_checkpoint`] (see
+/// [`PendingResume`] for the field semantics).
+pub(crate) struct PendingRef<'a> {
+    pub experiment: &'a PlannedExperiment,
+    pub log_pos: usize,
+    pub attempt: u32,
+    pub not_before_s: f64,
+    pub ticket: Option<u64>,
 }
 
 /// Evaluation provenance of one ledger entry, journaled alongside it
@@ -228,7 +266,16 @@ pub(crate) struct PlannedGroup {
 }
 
 /// Checkpoint form of one planned-but-uncommitted experiment.
-fn pending_plan(e: &PlannedExperiment, log_pos: usize) -> PendingPlan {
+/// `attempt`/`not_before_s`/`ticket` are the recovery layer's retry
+/// metadata (always `0`/`0.0`/`None` on a faults-off run — the store
+/// omits the zero values, keeping off-checkpoint bytes identical).
+fn pending_plan(
+    e: &PlannedExperiment,
+    log_pos: usize,
+    attempt: u32,
+    not_before_s: f64,
+    ticket: Option<u64>,
+) -> PendingPlan {
     PendingPlan {
         base_id: e.base_id.clone(),
         reference_id: e.reference_id.clone(),
@@ -241,14 +288,17 @@ fn pending_plan(e: &PlannedExperiment, log_pos: usize) -> PendingPlan {
         repairs: e.write.repairs.clone(),
         report: e.write.report.clone(),
         diff: e.write.diff.clone(),
+        attempt,
+        not_before_s,
+        ticket,
     }
 }
 
-/// Rebuild a planned experiment (and its planning-round position) from
-/// its checkpointed form.
-fn planned_from_pending(p: &PendingPlan) -> (PlannedExperiment, usize) {
-    (
-        PlannedExperiment {
+/// Rebuild a planned experiment (with its planning-round position and
+/// retry metadata) from its checkpointed form.
+fn planned_from_pending(p: &PendingPlan) -> PendingResume {
+    PendingResume {
+        experiment: PlannedExperiment {
             base_id: p.base_id.clone(),
             reference_id: p.reference_id.clone(),
             description: p.description.clone(),
@@ -262,11 +312,32 @@ fn planned_from_pending(p: &PendingPlan) -> (PlannedExperiment, usize) {
             },
             fingerprint: p.fingerprint,
         },
-        p.log_pos,
+        log_pos: p.log_pos,
+        attempt: p.attempt,
+        not_before_s: p.not_before_s,
+        ticket: p.ticket,
+    }
+}
+
+/// Build the simulator-backed evaluation backend for `config`: the
+/// MI300 simulator wrapped in the deterministic fault decorator
+/// (DESIGN.md §14). With `[faults]` off — the default — the wrapper is
+/// pure delegation (zero RNG draws, zero state), so every off-run is
+/// bit-identical to a build without the fault model.
+fn sim_backend(
+    config: &RunConfig,
+    workload: Arc<dyn Workload>,
+) -> FaultyBackend<SimBackend> {
+    FaultyBackend::new(
+        SimBackend::new(config.seed)
+            .with_noise(config.noise_sigma)
+            .with_workload(workload),
+        config.faults.clone(),
+        config.seed,
     )
 }
 
-impl ScientistRun<SimBackend> {
+impl ScientistRun<FaultyBackend<SimBackend>> {
     /// The paper's setup: simulated MI300 platform, surrogate agents,
     /// the configured workload's seed kernels (`config.workload`
     /// defaults to the paper's fp8 GEMM, reproducing §3 exactly).
@@ -287,9 +358,7 @@ impl ScientistRun<SimBackend> {
     ) -> Result<Self, String> {
         let workload = workload::lookup(&config.workload)
             .ok_or_else(|| format!("unknown workload '{}'", config.workload))?;
-        let backend = SimBackend::new(config.seed)
-            .with_noise(config.noise_sigma)
-            .with_workload(workload.clone());
+        let backend = sim_backend(&config, workload.clone());
         let platform = EvalPlatform::new(
             backend,
             PlatformConfig {
@@ -319,10 +388,8 @@ impl ScientistRun<SimBackend> {
         config.store_dir = Some(dir.display().to_string());
         let workload = workload::lookup(&config.workload)
             .ok_or_else(|| format!("unknown workload '{}'", config.workload))?;
-        let backend = SimBackend::new(config.seed)
-            .with_noise(config.noise_sigma)
-            .with_workload(workload.clone());
-        let platform = EvalPlatform::new(
+        let backend = sim_backend(&config, workload.clone());
+        let mut platform = EvalPlatform::new(
             backend,
             PlatformConfig {
                 reps_per_config: config.reps_per_config,
@@ -332,6 +399,12 @@ impl ScientistRun<SimBackend> {
             },
         )
         .with_feedback_suite(workload.feedback_suite());
+        // the recovery layer must be live BEFORE restore_checkpoint:
+        // a chaos checkpoint carries fault-model state the restore
+        // refuses to drop silently (DESIGN.md §14)
+        if config.faults.enabled {
+            platform.enable_faults(config.faults.clone());
+        }
         let agents = AgentSuite::paper(config.seed)
             .with_llm_config(config.llm.clone())
             .with_selection_policy(config.selection_policy)
@@ -371,7 +444,10 @@ impl ScientistRun<SimBackend> {
                 screen_pending: cp
                     .screen_pending
                     .iter()
-                    .map(planned_from_pending)
+                    .map(|p| {
+                        let r = planned_from_pending(p);
+                        (r.experiment, r.log_pos)
+                    })
                     .collect(),
             }),
             halted: false,
@@ -431,9 +507,17 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
     /// federation snapshot (see [`ScientistRun::new_with_snapshot`]).
     pub fn with_platform_snapshot(
         config: RunConfig,
-        platform: EvalPlatform<B>,
+        mut platform: EvalPlatform<B>,
         snapshot: Option<Arc<FederationSnapshot>>,
     ) -> Result<Self, String> {
+        // Switch on the recovery layer before ANY submission: per-lane
+        // health, quarantine, and the fault-event outbox (DESIGN.md
+        // §14). Injection itself only fires when the backend is an
+        // enabled [`FaultyBackend`]; over any other backend the layer
+        // just tracks health that never degrades.
+        if config.faults.enabled {
+            platform.enable_faults(config.faults.clone());
+        }
         // the backend is the single source of truth for what is being
         // evaluated; a config naming a different workload would submit
         // one family's seeds to another family's cost model
@@ -921,23 +1005,127 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         }));
     }
 
+    /// Drain the platform's typed fault/recovery events, journal each
+    /// (`"t":"fault"` records, DESIGN.md §14), and hand them back so
+    /// the scheduler can read the committed fault kind. Empty — and a
+    /// no-op — while the fault model is off.
+    fn drain_fault_events(&mut self) -> Vec<FaultRecord> {
+        let events = self.platform.take_fault_events();
+        if let Some(store) = self.store.as_mut() {
+            for ev in &events {
+                store.append(&JournalRecord::Fault(ev.clone()));
+            }
+        }
+        events
+    }
+
+    /// Journal one scheduler-side fault record (retry/abandon).
+    fn journal_fault_record(&mut self, rec: FaultRecord) {
+        if let Some(store) = self.store.as_mut() {
+            store.append(&JournalRecord::Fault(rec));
+        }
+    }
+
+    /// Decide one fault-class completion's fate (DESIGN.md §14):
+    /// `Some(backoff_s)` means retry — the caller requeues the
+    /// experiment as `attempt + 1`, starting no earlier than the
+    /// completion time plus the backoff; `None` means abandon.
+    /// `committed` is the submission budget already spoken for
+    /// (committed + in flight + queued) — a retry needs room.
+    fn fault_retry_decision(
+        &self,
+        events: &[FaultRecord],
+        done: &crate::eval::CompletedEval,
+        attempt: u32,
+        committed: u64,
+    ) -> Option<f64> {
+        let fcfg = &self.config.faults;
+        if !fcfg.recovery || attempt >= fcfg.max_retries {
+            return None;
+        }
+        if committed >= self.config.max_submissions {
+            return None;
+        }
+        // transient service errors back off exponentially; straggler
+        // timeouts, lane deaths, and suspect timings requeue with no
+        // delay (the fault is not load-related, so waiting buys nothing)
+        let kind = events
+            .iter()
+            .find(|ev| ev.submission_index == done.submission_index && ev.submission_index.is_some())
+            .map(|ev| ev.kind.as_str());
+        Some(match kind {
+            Some("transient") => fcfg.backoff_s(attempt),
+            _ => 0.0,
+        })
+    }
+
+    /// Ledger one faulted-but-retried attempt: the fault outcome joins
+    /// the population (designers see the failure, and the journal can
+    /// rebuild the platform log line the attempt consumed) while the
+    /// experiment itself stays alive for its retry.
+    fn record_fault_attempt(
+        &mut self,
+        e: &PlannedExperiment,
+        outcome: EvalOutcome,
+        prov: Provenance,
+    ) -> String {
+        self.record_individual(
+            vec![e.base_id.clone(), e.reference_id.clone()],
+            e.write.genome.clone(),
+            e.description.clone(),
+            e.write.report.clone(),
+            outcome,
+            prov,
+        )
+    }
+
+    /// Count + journal one retry decision. `next_attempt` is the
+    /// attempt number the requeued dispatch will carry.
+    fn note_fault_retry(&mut self, submission_index: Option<u64>, next_attempt: u32, at_s: f64) {
+        self.sched.fault_retries += 1;
+        self.journal_fault_record(FaultRecord {
+            kind: "retry".into(),
+            lane: None,
+            submission_index,
+            attempt: next_attempt,
+            at_s,
+        });
+    }
+
+    /// Count + journal one abandonment (policy, retry cap, or budget).
+    fn note_fault_abandon(&mut self, submission_index: Option<u64>, attempt: u32, at_s: f64) {
+        self.sched.fault_abandoned += 1;
+        self.journal_fault_record(FaultRecord {
+            kind: "abandon".into(),
+            lane: None,
+            submission_index,
+            attempt,
+            at_s,
+        });
+    }
+
     /// Snapshot everything a resume needs and write it to the store
     /// (no-op without one). `pending` lists planned-but-uncommitted
-    /// experiments in dispatch order; `skip_depth` of them were in
-    /// flight; `screen_pending` lists the screen tier's partial rung in
+    /// experiments in dispatch order (with their retry metadata — all
+    /// zero on a faults-off run); `skip_depth` of them were in flight;
+    /// `screen_pending` lists the screen tier's partial rung in
     /// submission order (always empty in lockstep, whose rungs are
-    /// batch-scoped). See DESIGN.md §9/§10 for what goes where.
+    /// batch-scoped). See DESIGN.md §9/§10/§14 for what goes where.
     fn write_checkpoint(
         &mut self,
         stalls: u32,
         planning_dead: bool,
-        pending: &[(&PlannedExperiment, usize)],
+        pending: &[PendingRef<'_>],
         skip_depth: usize,
         screen_pending: &[(&PlannedExperiment, usize)],
     ) -> Result<(), String> {
         if self.store.is_none() {
             return Ok(());
         }
+        debug_assert!(
+            self.platform.fault_state().map_or(true, |fs| fs.events.is_empty()),
+            "fault events must be journaled before a checkpoint"
+        );
         let platform = self.platform.checkpoint_state()?;
         let best = self.population.best();
         let cp = Checkpoint {
@@ -954,12 +1142,14 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
             platform,
             pending: pending
                 .iter()
-                .map(|(e, log_pos)| pending_plan(e, *log_pos))
+                .map(|p| {
+                    pending_plan(p.experiment, p.log_pos, p.attempt, p.not_before_s, p.ticket)
+                })
                 .collect(),
             skip_depth,
             screen_pending: screen_pending
                 .iter()
-                .map(|(e, log_pos)| pending_plan(e, *log_pos))
+                .map(|(e, log_pos)| pending_plan(e, *log_pos, 0, 0.0, None))
                 .collect(),
             best_id: best.map(|b| b.id.clone()),
             best_geomean_us: self.population.best().and_then(|b| b.score()),
@@ -971,11 +1161,117 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         Ok(())
     }
 
+    /// Current outcome snapshot.
+    pub fn outcome(&mut self) -> Result<RunOutcome, String> {
+        let best = self
+            .population
+            .best()
+            .ok_or("no successful kernel in population")?
+            .clone();
+        let leaderboard_us = self
+            .platform
+            .leaderboard_score(&best.genome, &self.workload.leaderboard_suite())
+            .ok();
+        let profile_mix = if self.config.profile_guided {
+            let mut mix = crate::sim::ProfileMix::default();
+            for rec in self.platform.log() {
+                if let Some(p) = &rec.profile {
+                    mix.add(p.bottleneck);
+                }
+            }
+            Some(mix)
+        } else {
+            None
+        };
+        Ok(RunOutcome {
+            workload: self.workload.name().to_string(),
+            best_geomean_us: best.score().unwrap(),
+            best_id: best.id,
+            submissions: self.platform.submissions(),
+            wall_clock_s: self.platform.wall_clock_s(),
+            curve: self.curve.clone(),
+            leaderboard_us,
+            pipeline: self.sched.stats(
+                self.config.pipeline,
+                self.config.eval_parallelism,
+                self.platform.lane_occupancy(),
+            ),
+            profile_mix,
+            federation: self.federation.as_ref().map(|ctx| FederationStats {
+                hits: self.platform.federated_hits(),
+                warm_start_injected: ctx.warm_injected,
+            }),
+            faults: self.platform.fault_state().map(|fs| FaultSummary {
+                stats: fs.stats.clone(),
+                retries: self.sched.fault_retries,
+                abandoned: self.sched.fault_abandoned,
+                retired_lanes: fs.lanes.iter().filter(|l| l.retired).count() as u64,
+            }),
+        })
+    }
+
+    /// Publish this run's distinct evaluated genomes to the federated
+    /// store (DESIGN.md §12). Called only on a successful, non-halted
+    /// completion: a partial run never writes a partial archive file.
+    /// The per-run filename is a pure function of (workload, seed,
+    /// digest), so re-running the identical config overwrites the file
+    /// with identical contents — publication is idempotent.
+    fn publish_federation(&self) -> Result<(), String> {
+        let Some(ctx) = &self.federation else {
+            return Ok(());
+        };
+        if self.config.federation_read_only {
+            return Ok(());
+        }
+        let dir = self
+            .config
+            .federation_dir
+            .as_ref()
+            .expect("federation ctx implies a configured dir");
+        // first occurrence per fingerprint wins, matching the reader's
+        // merge order; failures are published too — a sibling run
+        // learning "this genome does not compile" is as valuable as a
+        // timing
+        let mut seen = HashSet::new();
+        let mut entries = Vec::new();
+        for m in self.population.members() {
+            // fault-class outcomes are this run's service weather, not
+            // knowledge about the genome — a sibling run must never
+            // inherit a transient as if it were a result (DESIGN.md §14)
+            if m.outcome.is_fault() {
+                continue;
+            }
+            let fp = m.genome.fingerprint_hash();
+            if !seen.insert(fp) {
+                continue;
+            }
+            entries.push(FedEntry {
+                workload: self.workload.name().to_string(),
+                digest: ctx.digest,
+                fingerprint: fp,
+                genome: m.genome.clone(),
+                outcome: m.outcome.clone(),
+            });
+        }
+        federation::write_run_results(
+            Path::new(dir),
+            self.workload.name(),
+            self.config.seed,
+            ctx.digest,
+            &entries,
+        )?;
+        Ok(())
+    }
+}
+
+impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
     /// Run one full **lockstep** loop iteration (select -> design ->
     /// 3x write -> one batched submit through the multi-lane
     /// executor, then a barrier: the next iteration plans only after
     /// the whole batch completes). Returns `None` when out of budget
-    /// or when selection is impossible.
+    /// or when selection is impossible. (`B: 'static` because the
+    /// fault-model dispatch path streams the batch through per-lane
+    /// worker threads; faults off, the batch path never spawns.)
     pub fn run_iteration(&mut self) -> Option<&IterationLog> {
         if self.budget_left() == 0 {
             return None;
@@ -1027,29 +1323,41 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         }
         let lint_rejected_now = submitted_ids.len() as u64;
 
-        let batch: Vec<crate::genome::KernelGenome> = group
-            .experiments
-            .iter()
-            .map(|e| e.write.genome.clone())
-            .collect();
-        let results = self.platform.submit_batch(&batch);
-        self.sched.sample_submissions(
-            results.iter().filter(|r| !r.cached).count() as u64,
-            self.config.eval_parallelism,
-        );
-        for (experiment, result) in group.experiments.into_iter().zip(results) {
-            let prov = Provenance {
-                submitted_at: result
-                    .submission_index
-                    .map(|i| i + 1)
-                    .unwrap_or_else(|| self.platform.submissions()),
-                cached: result.cached,
-                submission_index: result.submission_index,
-                plan: Some(log_pos),
-                screened: self.config.screen_enabled,
-                lint: Vec::new(),
-            };
-            submitted_ids.push(self.record_experiment(experiment, result.outcome, prov));
+        if self.platform.fault_state().is_some() {
+            // Fault-model lockstep (DESIGN.md §14): the round's batch
+            // runs through the stream path one dispatch at a time so
+            // each fault-class completion can be retried (or abandoned)
+            // before the barrier. Completions still drain in virtual-
+            // clock order, so the round stays a pure function of
+            // (seed, config).
+            let ids =
+                self.pump_faulty_group(std::mem::take(&mut group.experiments), log_pos);
+            submitted_ids.extend(ids);
+        } else {
+            let batch: Vec<crate::genome::KernelGenome> = group
+                .experiments
+                .iter()
+                .map(|e| e.write.genome.clone())
+                .collect();
+            let results = self.platform.submit_batch(&batch);
+            self.sched.sample_submissions(
+                results.iter().filter(|r| !r.cached).count() as u64,
+                self.config.eval_parallelism,
+            );
+            for (experiment, result) in group.experiments.into_iter().zip(results) {
+                let prov = Provenance {
+                    submitted_at: result
+                        .submission_index
+                        .map(|i| i + 1)
+                        .unwrap_or_else(|| self.platform.submissions()),
+                    cached: result.cached,
+                    submission_index: result.submission_index,
+                    plan: Some(log_pos),
+                    screened: self.config.screen_enabled,
+                    lint: Vec::new(),
+                };
+                submitted_ids.push(self.record_experiment(experiment, result.outcome, prov));
+            }
         }
         // the lockstep barrier: every lane waits for the slowest
         // before the next planning round (a no-op at one lane)
@@ -1071,94 +1379,113 @@ impl<B: EvalBackend + Send> ScientistRun<B> {
         self.logs.last()
     }
 
-    /// Current outcome snapshot.
-    pub fn outcome(&mut self) -> Result<RunOutcome, String> {
-        let best = self
-            .population
-            .best()
-            .ok_or("no successful kernel in population")?
-            .clone();
-        let leaderboard_us = self
-            .platform
-            .leaderboard_score(&best.genome, &self.workload.leaderboard_suite())
-            .ok();
-        let profile_mix = if self.config.profile_guided {
-            let mut mix = crate::sim::ProfileMix::default();
-            for rec in self.platform.log() {
-                if let Some(p) = &rec.profile {
-                    mix.add(p.bottleneck);
+    /// Stream one lockstep batch through the recovery layer
+    /// (DESIGN.md §14): feed dispatches while the quota has room,
+    /// drain completions in virtual-clock order, and on a fault-class
+    /// completion either requeue the experiment (backoff charged to
+    /// the lane clock via `not_before_s`) or abandon it into the
+    /// ledger. Every attempt is its own submission — quota charge,
+    /// ledger entry and journal record included — so a journal
+    /// rebuild reconstructs the platform log line for line.
+    fn pump_faulty_group(
+        &mut self,
+        experiments: Vec<PlannedExperiment>,
+        log_pos: usize,
+    ) -> Vec<String> {
+        let mut ids = Vec::new();
+        let mut queue: VecDeque<(PlannedExperiment, u32, f64)> =
+            experiments.into_iter().map(|e| (e, 0, 0.0)).collect();
+        let mut in_flight: Vec<(u64, PlannedExperiment, u32)> = Vec::new();
+        let mut counted = 0u64;
+        loop {
+            // feed while the quota can cover another counted miss
+            // (in-flight misses count as already spent)
+            while !queue.is_empty()
+                && self.platform.submissions() + self.platform.in_flight() as u64
+                    < self.config.max_submissions
+            {
+                let (e, attempt, not_before_s) = queue.pop_front().expect("checked non-empty");
+                let ticket =
+                    self.platform
+                        .submit_stream_retry(&e.write.genome, not_before_s, attempt);
+                in_flight.push((ticket, e, attempt));
+            }
+            let Some(done) = self.platform.poll_completed() else {
+                break;
+            };
+            // journal the dispatch's fault events before anything can
+            // checkpoint past them (also feeds the retry decision)
+            let events = self.drain_fault_events();
+            let pos = in_flight
+                .iter()
+                .position(|(t, _, _)| *t == done.ticket)
+                .expect("completion matches an in-flight dispatch");
+            let (_, experiment, attempt) = in_flight.remove(pos);
+            if !done.cached {
+                counted += 1;
+            }
+            let prov = Provenance {
+                submitted_at: done
+                    .submission_index
+                    .map(|i| i + 1)
+                    .unwrap_or_else(|| self.platform.submissions()),
+                cached: done.cached,
+                submission_index: done.submission_index,
+                plan: Some(log_pos),
+                screened: self.config.screen_enabled,
+                lint: Vec::new(),
+            };
+            if done.outcome.is_fault() {
+                let committed = self.platform.submissions()
+                    + self.platform.in_flight() as u64
+                    + queue.len() as u64;
+                match self.fault_retry_decision(&events, &done, attempt, committed) {
+                    Some(backoff) => {
+                        // the failed attempt still joins the ledger:
+                        // its journal record is what lets a rebuild
+                        // replay this platform log line
+                        ids.push(self.record_fault_attempt(
+                            &experiment,
+                            done.outcome.clone(),
+                            prov,
+                        ));
+                        self.note_fault_retry(
+                            done.submission_index,
+                            attempt + 1,
+                            done.completed_at_s,
+                        );
+                        queue.push_back((
+                            experiment,
+                            attempt + 1,
+                            done.completed_at_s + backoff,
+                        ));
+                    }
+                    None => {
+                        self.note_fault_abandon(
+                            done.submission_index,
+                            attempt,
+                            done.completed_at_s,
+                        );
+                        ids.push(self.record_experiment(experiment, done.outcome, prov));
+                    }
                 }
+            } else {
+                ids.push(self.record_experiment(experiment, done.outcome, prov));
             }
-            Some(mix)
-        } else {
-            None
-        };
-        Ok(RunOutcome {
-            workload: self.workload.name().to_string(),
-            best_geomean_us: best.score().unwrap(),
-            best_id: best.id,
-            submissions: self.platform.submissions(),
-            wall_clock_s: self.platform.wall_clock_s(),
-            curve: self.curve.clone(),
-            leaderboard_us,
-            pipeline: self.sched.stats(
-                self.config.pipeline,
-                self.config.eval_parallelism,
-                self.platform.lane_occupancy(),
-            ),
-            profile_mix,
-            federation: self.federation.as_ref().map(|ctx| FederationStats {
-                hits: self.platform.federated_hits(),
-                warm_start_injected: ctx.warm_injected,
-            }),
-        })
-    }
-
-    /// Publish this run's distinct evaluated genomes to the federated
-    /// store (DESIGN.md §12). Called only on a successful, non-halted
-    /// completion: a partial run never writes a partial archive file.
-    /// The per-run filename is a pure function of (workload, seed,
-    /// digest), so re-running the identical config overwrites the file
-    /// with identical contents — publication is idempotent.
-    fn publish_federation(&self) -> Result<(), String> {
-        let Some(ctx) = &self.federation else {
-            return Ok(());
-        };
-        if self.config.federation_read_only {
-            return Ok(());
         }
-        let dir = self
-            .config
-            .federation_dir
-            .as_ref()
-            .expect("federation ctx implies a configured dir");
-        // first occurrence per fingerprint wins, matching the reader's
-        // merge order; failures are published too — a sibling run
-        // learning "this genome does not compile" is as valuable as a
-        // timing
-        let mut seen = HashSet::new();
-        let mut entries = Vec::new();
-        for m in self.population.members() {
-            let fp = m.genome.fingerprint_hash();
-            if !seen.insert(fp) {
-                continue;
+        self.sched
+            .sample_submissions(counted, self.config.eval_parallelism);
+        // quota exhausted with work still queued: requeued retries were
+        // already ledgered as their failed attempts — close them out
+        // loudly; fresh entries fall to the same quota truncation the
+        // batch path applies (planned > room never dispatches)
+        let at_s = self.platform.wall_clock_s();
+        for (_, attempt, _) in queue {
+            if attempt > 0 {
+                self.note_fault_abandon(None, attempt, at_s);
             }
-            entries.push(FedEntry {
-                workload: self.workload.name().to_string(),
-                digest: ctx.digest,
-                fingerprint: fp,
-                genome: m.genome.clone(),
-                outcome: m.outcome.clone(),
-            });
         }
-        federation::write_run_results(
-            Path::new(dir),
-            self.workload.name(),
-            self.config.seed,
-            ctx.digest,
-            &entries,
-        )?;
-        Ok(())
+        ids
     }
 }
 

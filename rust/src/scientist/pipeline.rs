@@ -84,6 +84,13 @@ pub struct PipelineStats {
     /// rejected before submission — they joined the ledger as compile
     /// failures but never occupied a lane or consumed quota.
     pub lint_rejected: u64,
+    /// Fault-class completions requeued by the recovery layer
+    /// (DESIGN.md §14); 0 while `[faults]` is disabled.
+    pub fault_retries: u64,
+    /// Fault-class completions the recovery layer gave up on (retry
+    /// budget, quota, or recovery disabled) — they joined the ledger
+    /// with their fault outcome.
+    pub fault_abandoned: u64,
 }
 
 /// Raw counters both schedulers accumulate on the run; snapshot into
@@ -97,6 +104,8 @@ pub(crate) struct SchedCounters {
     pub screen_rejected: u64,
     pub linted: u64,
     pub lint_rejected: u64,
+    pub fault_retries: u64,
+    pub fault_abandoned: u64,
     depth_total: u64,
     depth_samples: u64,
     max_in_flight: u64,
@@ -131,6 +140,8 @@ impl SchedCounters {
             screen_rejected: self.screen_rejected,
             linted: self.linted,
             lint_rejected: self.lint_rejected,
+            fault_retries: self.fault_retries,
+            fault_abandoned: self.fault_abandoned,
             depth_total: self.depth_total,
             depth_samples: self.depth_samples,
             max_in_flight: self.max_in_flight,
@@ -147,6 +158,8 @@ impl SchedCounters {
             screen_rejected: s.screen_rejected,
             linted: s.linted,
             lint_rejected: s.lint_rejected,
+            fault_retries: s.fault_retries,
+            fault_abandoned: s.fault_abandoned,
             depth_total: s.depth_total,
             depth_samples: s.depth_samples,
             max_in_flight: s.max_in_flight,
@@ -171,6 +184,8 @@ impl SchedCounters {
             screen_rejected: self.screen_rejected,
             linted: self.linted,
             lint_rejected: self.lint_rejected,
+            fault_retries: self.fault_retries,
+            fault_abandoned: self.fault_abandoned,
         }
     }
 }
@@ -181,19 +196,25 @@ impl SchedCounters {
 /// replanned-duplicate path, they never occupy a lane.
 fn absorb_screen_outcome(
     out: ScreenOutcome<(PlannedExperiment, usize)>,
-    queue: &mut VecDeque<(PlannedExperiment, usize)>,
+    queue: &mut VecDeque<QueuedChild>,
     reserved: &mut HashSet<u64>,
     sched: &mut SchedCounters,
 ) {
     sched.screen_promoted += out.promoted.len() as u64;
     sched.screen_rejected += out.rejected.len() as u64;
-    for item in out.promoted {
-        queue.push_back(item);
+    for (experiment, log_pos) in out.promoted {
+        queue.push_back((experiment, log_pos, 0, 0.0));
     }
     for (experiment, _) in out.rejected {
         reserved.remove(&experiment.fingerprint);
     }
 }
+
+/// A planned child waiting for a lane: `(experiment, log_pos,
+/// attempt, not_before_s)`. The last two are the recovery layer's
+/// retry metadata (DESIGN.md §14) — always `(0, 0.0)` on a faults-off
+/// run, so the dispatch call sequence is unchanged.
+type QueuedChild = (PlannedExperiment, usize, u32, f64);
 
 /// One child occupying an evaluation lane.
 struct InFlightChild {
@@ -202,6 +223,9 @@ struct InFlightChild {
     /// Position of the planning round's [`IterationLog`] in
     /// `run.logs`, so the id lands in the right transcript entry.
     log_pos: usize,
+    /// Which dispatch attempt this is (0 = first); salts the fault
+    /// model's per-dispatch stream on retries.
+    attempt: u32,
 }
 
 impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
@@ -211,7 +235,8 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
     pub(super) fn pump_pipeline(&mut self) -> Result<(), String> {
         let lanes = self.config.eval_parallelism.max(1) as usize;
         let cap = lanes * self.config.inflight_per_lane.max(1) as usize;
-        let mut queue: VecDeque<(PlannedExperiment, usize)> = VecDeque::new();
+        let faults_on = self.platform.fault_state().is_some();
+        let mut queue: VecDeque<QueuedChild> = VecDeque::new();
         // content hashes of queued + in-flight children — the replan
         // path's reservation set (the ledger itself is checked inside
         // plan_group)
@@ -245,9 +270,27 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
             stalls = resume.stalls;
             planning_dead = resume.planning_dead;
             skip_depth = resume.skip_depth;
-            for (experiment, log_pos) in resume.pending {
-                reserved.insert(experiment.fingerprint);
-                queue.push_back((experiment, log_pos));
+            for p in resume.pending {
+                reserved.insert(p.experiment.fingerprint);
+                match p.ticket {
+                    // a faults-on checkpoint persisted its in-flight
+                    // dispatches as live platform pending entries
+                    // (DESIGN.md §14): reattach by ticket instead of
+                    // re-dispatching — the completion will drain with
+                    // its original clock, lane, and outcome
+                    Some(ticket) if faults_on => in_flight.push(InFlightChild {
+                        ticket,
+                        experiment: p.experiment,
+                        log_pos: p.log_pos,
+                        attempt: p.attempt,
+                    }),
+                    _ => queue.push_back((
+                        p.experiment,
+                        p.log_pos,
+                        p.attempt,
+                        p.not_before_s,
+                    )),
+                }
             }
             // refill the partial screen rung exactly as checkpointed:
             // scores recompute identically (the cost model is pure) and
@@ -325,7 +368,7 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                 for experiment in group.experiments {
                     reserved.insert(experiment.fingerprint);
                     match screen.as_mut() {
-                        None => queue.push_back((experiment, log_pos)),
+                        None => queue.push_back((experiment, log_pos, 0, 0.0)),
                         Some(tier) => {
                             self.sched.screened += 1;
                             let score = tier.score(&experiment.write.genome);
@@ -352,14 +395,20 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
             }
             // feed: move planned experiments onto lanes up to the cap
             while in_flight.len() < cap {
-                let Some((experiment, log_pos)) = queue.pop_front() else {
+                let Some((experiment, log_pos, attempt, not_before_s)) = queue.pop_front()
+                else {
                     break;
                 };
-                let ticket = self.platform.submit_stream(&experiment.write.genome);
+                let ticket = self.platform.submit_stream_retry(
+                    &experiment.write.genome,
+                    not_before_s,
+                    attempt,
+                );
                 in_flight.push(InFlightChild {
                     ticket,
                     experiment,
                     log_pos,
+                    attempt,
                 });
                 if skip_depth > 0 {
                     skip_depth -= 1; // re-fed: sampled before the crash
@@ -372,12 +421,16 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
             let Some(done) = self.platform.poll_completed() else {
                 break;
             };
+            // journal this completion's fault events before anything
+            // can checkpoint past them (empty — and no store write —
+            // with the fault model off); they also carry the fault
+            // kind the retry decision keys on
+            let events = self.drain_fault_events();
             let pos = in_flight
                 .iter()
                 .position(|c| c.ticket == done.ticket)
                 .expect("completion for an unknown ticket");
             let child = in_flight.remove(pos);
-            reserved.remove(&child.experiment.fingerprint);
             let prov = super::Provenance {
                 submitted_at: done
                     .submission_index
@@ -389,8 +442,52 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
                 screened: screen.is_some(),
                 lint: Vec::new(),
             };
-            let id = self.record_experiment(child.experiment, done.outcome, prov);
-            self.logs[child.log_pos].submitted_ids.push(id);
+            if done.outcome.is_fault() {
+                let committed = self.platform.submissions()
+                    + in_flight.len() as u64
+                    + queue.len() as u64
+                    + screen.as_ref().map_or(0, |t| t.pending() as u64);
+                match self.fault_retry_decision(&events, &done, child.attempt, committed) {
+                    Some(backoff) => {
+                        // the failed attempt joins the ledger (its
+                        // journal record replays this platform log
+                        // line on rebuild); the fingerprint stays
+                        // reserved — the same child is going straight
+                        // back into the queue
+                        let id = self.record_fault_attempt(
+                            &child.experiment,
+                            done.outcome.clone(),
+                            prov,
+                        );
+                        self.logs[child.log_pos].submitted_ids.push(id);
+                        self.note_fault_retry(
+                            done.submission_index,
+                            child.attempt + 1,
+                            done.completed_at_s,
+                        );
+                        queue.push_back((
+                            child.experiment,
+                            child.log_pos,
+                            child.attempt + 1,
+                            done.completed_at_s + backoff,
+                        ));
+                    }
+                    None => {
+                        self.note_fault_abandon(
+                            done.submission_index,
+                            child.attempt,
+                            done.completed_at_s,
+                        );
+                        reserved.remove(&child.experiment.fingerprint);
+                        let id = self.record_experiment(child.experiment, done.outcome, prov);
+                        self.logs[child.log_pos].submitted_ids.push(id);
+                    }
+                }
+            } else {
+                reserved.remove(&child.experiment.fingerprint);
+                let id = self.record_experiment(child.experiment, done.outcome, prov);
+                self.logs[child.log_pos].submitted_ids.push(id);
+            }
             // the ledger just changed, so a duplicate streak is no
             // longer evidence that planning is exhausted — re-arm it.
             // (At one lane nothing is ever in flight while a dud
@@ -399,20 +496,39 @@ impl<B: EvalBackend + Send + 'static> ScientistRun<B> {
             stalls = 0;
             completions += 1;
             if completions % every == 0 {
-                let pending: Vec<(&PlannedExperiment, usize)> = in_flight
+                let pending: Vec<super::PendingRef<'_>> = in_flight
                     .iter()
-                    .map(|c| (&c.experiment, c.log_pos))
-                    .chain(queue.iter().map(|(e, p)| (e, *p)))
+                    .map(|c| super::PendingRef {
+                        experiment: &c.experiment,
+                        log_pos: c.log_pos,
+                        attempt: c.attempt,
+                        not_before_s: 0.0,
+                        // faults-on checkpoints persist in-flight work
+                        // as live platform entries keyed by ticket;
+                        // faults-off ones roll the platform back and
+                        // re-dispatch, so no ticket is recorded
+                        ticket: if faults_on { Some(c.ticket) } else { None },
+                    })
+                    .chain(queue.iter().map(|(e, p, a, nb)| super::PendingRef {
+                        experiment: e,
+                        log_pos: *p,
+                        attempt: *a,
+                        not_before_s: *nb,
+                        ticket: None,
+                    }))
                     .collect();
                 let screen_pending: Vec<(&PlannedExperiment, usize)> = screen
                     .as_ref()
                     .map(|t| t.pending_payloads().map(|(e, p)| (e, *p)).collect())
                     .unwrap_or_default();
+                // reattached in-flight children never re-feed on a
+                // faults-on resume, so no depth samples are skipped
+                let skip = if faults_on { 0 } else { in_flight.len() };
                 self.write_checkpoint(
                     stalls,
                     planning_dead,
                     &pending,
-                    in_flight.len(),
+                    skip,
                     &screen_pending,
                 )?;
             }

@@ -50,7 +50,11 @@ pub const CHECKPOINT_FILE: &str = "checkpoint.json";
 /// version-4 ones. The lint layer (DESIGN.md §13) follows the same
 /// no-bump pattern: `sched.linted`/`sched.lint_rejected`, the journal
 /// `linted`/`lint` fields, and the `[lint]` config knobs all emit only
-/// when set and parse tolerantly when absent.
+/// when set and parse tolerantly when absent. So does the fault model
+/// (DESIGN.md §14): `sched.fault_retries`/`sched.fault_abandoned`, the
+/// `platform.faults` state object, the pending entries' retry metadata
+/// (`attempt`/`not_before_s`/`ticket`), and the `[faults]` config knobs
+/// all emit only on enabled runs and parse tolerantly when absent.
 const VERSION: u64 = 4;
 
 /// Scheduler counters snapshot (mirrors the run's private
@@ -71,6 +75,12 @@ pub struct SchedSnapshot {
     /// Children the gate rejected pre-submission. Emitted only when
     /// nonzero.
     pub lint_rejected: u64,
+    /// Fault-class completions the recovery layer requeued (DESIGN.md
+    /// §14); 0 while `[faults]` is off. Emitted only when nonzero.
+    pub fault_retries: u64,
+    /// Fault-class completions abandoned to the ledger. Emitted only
+    /// when nonzero.
+    pub fault_abandoned: u64,
 }
 
 /// One planned-but-uncommitted experiment (queued or in flight at
@@ -91,6 +101,17 @@ pub struct PendingPlan {
     pub repairs: Vec<String>,
     pub report: String,
     pub diff: String,
+    /// Recovery-layer retry metadata (DESIGN.md §14) — which dispatch
+    /// attempt this is, and the earliest virtual time it may start.
+    /// Always `(0, 0.0)` on faults-off runs and emitted only when set,
+    /// so off-checkpoints stay byte-identical to pre-faults output.
+    pub attempt: u32,
+    pub not_before_s: f64,
+    /// For a faults-on checkpoint's in-flight entries: the platform
+    /// pending-entry ticket to reattach to on resume (the entry itself
+    /// is persisted as data inside `platform.faults`). `None` for
+    /// queued work and on every faults-off checkpoint.
+    pub ticket: Option<u64>,
 }
 
 /// The full snapshot (see module docs).
@@ -142,7 +163,7 @@ fn parse_rng_words(v: Option<&Json>, what: &str) -> Result<[u64; 4], String> {
 
 impl PendingPlan {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("base", Json::Str(self.base_id.clone())),
             ("reference", Json::Str(self.reference_id.clone())),
             ("description", Json::Str(self.description.clone())),
@@ -154,7 +175,19 @@ impl PendingPlan {
             ("repairs", str_arr(&self.repairs)),
             ("report", Json::Str(self.report.clone())),
             ("diff", Json::Str(self.diff.clone())),
-        ])
+        ];
+        // emitted only when set: faults-off checkpoints stay
+        // byte-identical to pre-faults ones
+        if self.attempt > 0 {
+            pairs.push(("attempt", Json::Num(self.attempt as f64)));
+        }
+        if self.not_before_s > 0.0 {
+            pairs.push(("not_before_s", Json::Num(self.not_before_s)));
+        }
+        if let Some(t) = self.ticket {
+            pairs.push(("ticket", Json::Num(t as f64)));
+        }
+        Json::obj(pairs)
     }
 
     fn from_json(v: &Json) -> Result<PendingPlan, String> {
@@ -176,6 +209,19 @@ impl PendingPlan {
             repairs: parse_str_arr(v.get("repairs"), "repairs")?,
             report: req_str(v, "report")?.to_string(),
             diff: req_str(v, "diff")?.to_string(),
+            // tolerant: pre-faults and faults-off checkpoints carry none
+            attempt: match v.get("attempt") {
+                None | Some(Json::Null) => 0,
+                Some(x) => x.as_u64().ok_or("checkpoint: bad pending attempt")? as u32,
+            },
+            not_before_s: match v.get("not_before_s") {
+                None | Some(Json::Null) => 0.0,
+                Some(x) => x.as_f64().ok_or("checkpoint: bad pending not_before_s")?,
+            },
+            ticket: match v.get("ticket") {
+                None | Some(Json::Null) => None,
+                Some(x) => Some(x.as_u64().ok_or("checkpoint: bad pending ticket")?),
+            },
         })
     }
 }
@@ -223,6 +269,19 @@ impl Checkpoint {
                         Json::Num(self.sched.lint_rejected as f64),
                     ));
                 }
+                // same rule for the recovery layer (DESIGN.md §14)
+                if self.sched.fault_retries > 0 {
+                    pairs.push((
+                        "fault_retries",
+                        Json::Num(self.sched.fault_retries as f64),
+                    ));
+                }
+                if self.sched.fault_abandoned > 0 {
+                    pairs.push((
+                        "fault_abandoned",
+                        Json::Num(self.sched.fault_abandoned as f64),
+                    ));
+                }
                 Json::obj(pairs)
             }),
             ("llm_rng", rng_words(&self.llm_rng)),
@@ -249,6 +308,12 @@ impl Checkpoint {
                 // stay byte-identical to pre-federation ones
                 if p.federated_hits > 0 {
                     pairs.push(("federated_hits", Json::Num(p.federated_hits as f64)));
+                }
+                // only on faults-enabled runs: lane health, fault
+                // counters, and in-flight pending persisted as data
+                // (DESIGN.md §14)
+                if let Some(f) = &p.faults {
+                    pairs.push(("faults", f.clone()));
                 }
                 Json::obj(pairs)
             }),
@@ -319,6 +384,15 @@ impl Checkpoint {
                     None | Some(Json::Null) => 0,
                     Some(x) => x.as_u64().ok_or("checkpoint: bad lint_rejected")?,
                 },
+                // tolerant: pre-faults checkpoints carry neither counter
+                fault_retries: match sched.get("fault_retries") {
+                    None | Some(Json::Null) => 0,
+                    Some(x) => x.as_u64().ok_or("checkpoint: bad fault_retries")?,
+                },
+                fault_abandoned: match sched.get("fault_abandoned") {
+                    None | Some(Json::Null) => 0,
+                    Some(x) => x.as_u64().ok_or("checkpoint: bad fault_abandoned")?,
+                },
             },
             llm_rng: parse_rng_words(v.get("llm_rng"), "llm_rng")?,
             findings: v
@@ -347,6 +421,11 @@ impl Checkpoint {
                         .as_f64()
                         .ok_or("checkpoint: bad federated_hits")?
                         as u64,
+                },
+                // tolerant: absent on pre-faults and faults-off runs
+                faults: match p.get("faults") {
+                    None | Some(Json::Null) => None,
+                    Some(f) => Some(f.clone()),
                 },
             },
             pending: v

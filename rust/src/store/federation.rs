@@ -144,7 +144,7 @@ fn fnv1a64(s: &str) -> u64 {
 /// (module docs list the inclusion rule). Versioned (`v1;`) so the
 /// canonical string itself can evolve without serving stale entries.
 pub fn config_digest(cfg: &RunConfig, cost_model_version: u32) -> u64 {
-    let canonical = format!(
+    let mut canonical = format!(
         "v1;workload={};cost_model={};reps={};noise={};cache={};screen={}/{}/{};profile={}",
         cfg.workload,
         cost_model_version,
@@ -156,6 +156,28 @@ pub fn config_digest(cfg: &RunConfig, cost_model_version: u32) -> u64 {
         cfg.screen_keep,
         cfg.profile_guided,
     );
+    // the fault model changes what a dispatch measures (an unconfirmed
+    // corrupted timing publishes as an ordinary result), so chaos runs
+    // must never share entries with clean runs — or with chaos runs at
+    // different rates. Appended only when enabled: faults-off digests
+    // stay byte-identical to pre-§14 archives.
+    if cfg.faults.enabled {
+        use std::fmt::Write;
+        let f = &cfg.faults;
+        let _ = write!(
+            canonical,
+            ";faults={}/{}/{}/{}/{}/{}/{}/{}/{}",
+            f.transient,
+            f.straggler,
+            f.straggler_factor,
+            f.straggler_timeout,
+            f.corrupt,
+            f.corrupt_factor,
+            f.lane_death,
+            f.confirm_outliers,
+            f.outlier_threshold,
+        );
+    }
     fnv1a64(&canonical)
 }
 
@@ -441,6 +463,26 @@ mod tests {
         let mut c = base.clone();
         c.workload = "bf16-gemm".into();
         assert_ne!(config_digest(&c, 1), d);
+        // a disabled [faults] section is inert whatever its rates; an
+        // enabled one separates (a chaos run's corrupted timings must
+        // never serve a clean run), and so do its measurement-relevant
+        // rates — while pure recovery-scheduling knobs still share
+        let mut c = base.clone();
+        c.faults.transient = 0.9;
+        c.faults.corrupt = 0.9;
+        assert_eq!(config_digest(&c, 1), d, "disabled faults must be inert");
+        let mut c = base.clone();
+        c.faults.enabled = true;
+        let chaos = config_digest(&c, 1);
+        assert_ne!(chaos, d);
+        let mut c2 = c.clone();
+        c2.faults.corrupt = 0.5;
+        assert_ne!(config_digest(&c2, 1), chaos);
+        let mut c2 = c.clone();
+        c2.faults.recovery = false;
+        c2.faults.max_retries = 9;
+        c2.faults.quarantine_after = 1;
+        assert_eq!(config_digest(&c2, 1), chaos, "recovery knobs schedule, not measure");
         // a bumped cost-model version invalidates everything
         assert_ne!(config_digest(&base, 2), d);
     }

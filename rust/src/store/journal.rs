@@ -13,13 +13,20 @@
 //!   and the chosen experiment descriptions. Together with the `exp`
 //!   records' `plan` back-references these reconstruct every
 //!   [`IterationLog`] transcript.
+//! * `"fault"` — one typed fault/recovery event from the fault model's
+//!   recovery layer (DESIGN.md §14): injected faults, retries,
+//!   abandons, lane quarantines/readmissions/retirements. Present only
+//!   on `[faults]`-enabled runs, so faults-off journal bytes are
+//!   identical to a build without the layer. Telemetry, not state:
+//!   [`rebuild`] skips them (the `exp` sequence already replays the
+//!   ledger) and `replay` renders them.
 //!
 //! Records are self-describing so `replay` can re-render a campaign
 //! without evaluating anything, and strict enough that `resume` can
 //! verify the rebuilt ledger against the checkpoint.
 
 use crate::agents::{ReferencePolicy, Selection};
-use crate::eval::SubmissionRecord;
+use crate::eval::{FaultRecord, SubmissionRecord};
 use crate::genome::KernelGenome;
 use crate::metrics::ConvergenceCurve;
 use crate::population::{EvalOutcome, Individual, Population};
@@ -33,6 +40,7 @@ use crate::workload::GemmConfig;
 pub enum JournalRecord {
     Plan(PlanRecord),
     Exp(ExperimentRecord),
+    Fault(FaultRecord),
 }
 
 /// One select → design → write round (`"t":"plan"`).
@@ -252,6 +260,7 @@ impl JournalRecord {
                 }
                 Json::obj(pairs)
             }
+            JournalRecord::Fault(f) => f.to_json(),
         }
     }
 
@@ -307,6 +316,7 @@ impl JournalRecord {
                 w.str("t", "exp");
                 w.finish();
             }
+            JournalRecord::Fault(f) => f.write_json(out),
         }
     }
 
@@ -390,6 +400,7 @@ impl JournalRecord {
                     some => parse_str_arr(some, "lint")?,
                 },
             })),
+            "fault" => Ok(JournalRecord::Fault(FaultRecord::from_json(v)?)),
             other => Err(format!("journal: unknown record tag '{other}'")),
         }
     }
@@ -475,10 +486,15 @@ pub fn rebuild(
                 profile: e.profile.clone(),
                 federated: e.federated,
             });
-            cache_entries.push((
-                e.individual.genome.fingerprint_hash(),
-                e.individual.outcome.clone(),
-            ));
+            // fault-class outcomes never entered the eval cache (the
+            // platform gates the insert, DESIGN.md §14) — mirroring
+            // that here keeps the rebuilt cache byte-faithful
+            if !e.individual.outcome.is_fault() {
+                cache_entries.push((
+                    e.individual.genome.fingerprint_hash(),
+                    e.individual.outcome.clone(),
+                ));
+            }
             committed_genomes.push(e.individual.genome.clone());
         }
         if let Some(plan) = e.plan {

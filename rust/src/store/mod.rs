@@ -198,7 +198,7 @@ impl RunStore {
         self.line.push('\n');
         self.journal
             .write_all(self.line.as_bytes())
-            .expect("run store: journal write failed (fail-stop)");
+            .expect("run store: journal write failed (fail-stop)"); // detlint: allow(DL004)
         self.journal_bytes += self.line.len() as u64;
         self.flush();
     }
@@ -209,7 +209,7 @@ impl RunStore {
     pub fn flush(&mut self) {
         self.journal
             .flush()
-            .expect("run store: journal flush failed (fail-stop)");
+            .expect("run store: journal flush failed (fail-stop)"); // detlint: allow(DL004)
     }
 
     /// Atomically persist a checkpoint stamped with the current journal
@@ -222,10 +222,10 @@ impl RunStore {
         self.journal
             .get_ref()
             .sync_all()
-            .expect("run store: journal fsync failed (fail-stop)");
+            .expect("run store: journal fsync failed (fail-stop)"); // detlint: allow(DL004)
         cp.journal_bytes = self.journal_bytes;
         cp.write_atomic(&self.dir)
-            .expect("run store: checkpoint write failed (fail-stop)");
+            .expect("run store: checkpoint write failed (fail-stop)"); // detlint: allow(DL004)
     }
 }
 
@@ -272,8 +272,8 @@ pub fn compact_run_store(dir: &Path) -> Result<bool, String> {
         .map(|(&line, rec)| {
             let fp = match rec {
                 JournalRecord::Exp(e) => e.individual.genome.fingerprint_hash(),
-                // plan records are not genome-addressed
-                JournalRecord::Plan(_) => 0,
+                // plan and fault records are not genome-addressed
+                JournalRecord::Plan(_) | JournalRecord::Fault(_) => 0,
             };
             (fp, line)
         })

@@ -10,6 +10,7 @@
 //! loop never calls into it.
 
 use crate::config::RunConfig;
+use crate::eval::FaultyBackend;
 use crate::genome::{edit, seeds, KernelGenome};
 use crate::rng::Rng;
 use crate::scientist::{RunOutcome, ScientistRun};
@@ -61,8 +62,11 @@ pub fn screened_pipeline_config(workload: &str, seed: u64, budget: u64, lanes: u
     pipeline_config(workload, seed, budget, lanes).with_screen(4, 0.5)
 }
 
-/// Construct + run a simulated scientist loop to completion.
-pub fn run_scientist(cfg: RunConfig) -> (ScientistRun<SimBackend>, RunOutcome) {
+/// Construct + run a simulated scientist loop to completion. The
+/// backend is [`ScientistRun::new`]'s always-wrapped
+/// `FaultyBackend<SimBackend>` — pure delegation (and zero fault RNG
+/// draws) unless the config enables `[faults]`.
+pub fn run_scientist(cfg: RunConfig) -> (ScientistRun<FaultyBackend<SimBackend>>, RunOutcome) {
     let mut run = ScientistRun::new(cfg).expect("scientist setup");
     let outcome = run.run_to_completion().expect("scientist run");
     (run, outcome)
@@ -70,7 +74,7 @@ pub fn run_scientist(cfg: RunConfig) -> (ScientistRun<SimBackend>, RunOutcome) {
 
 /// The run's full population trajectory as (fingerprint, outcome)
 /// pairs — the bit-identity witness used by the determinism tests.
-pub fn trajectory(run: &ScientistRun<SimBackend>) -> Vec<(String, String)> {
+pub fn trajectory(run: &ScientistRun<FaultyBackend<SimBackend>>) -> Vec<(String, String)> {
     run.population
         .members()
         .iter()

@@ -1,0 +1,156 @@
+//! The fault-injection test layer (DESIGN.md §14):
+//!
+//! 1. **Off means off.** With `[faults]` absent — or present but
+//!    disabled, every *other* knob cranked — every workload × both
+//!    schedulers must produce runs bit-identical to a build that never
+//!    had the fault model: the always-wrapped `FaultyBackend` is pure
+//!    delegation and draws zero fault RNG while disabled.
+//! 2. **Chaos is deterministic.** An enabled fault model is a pure
+//!    function of (seed, config): running twice is bit-identical,
+//!    under both schedulers, fault summary included.
+//! 3. **Recovery completes the quota.** A chaos run with the recovery
+//!    policy on reaches the same submission quota as the fault-free
+//!    control; with recovery off every fault is abandoned on the spot.
+//! 4. **Degradation has a floor.** When the fault model retires every
+//!    lane, the run aborts loudly rather than scheduling into a dead
+//!    platform.
+
+use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::test_support as ts;
+use gpu_kernel_scientist::workload;
+
+/// A chaos config hot enough to inject on tiny budgets while keeping
+/// lane churn survivable (all-retired is a deliberate panic — see the
+/// degradation test).
+fn chaos(mut cfg: RunConfig) -> RunConfig {
+    cfg.faults.enabled = true;
+    cfg.faults.transient = 0.20;
+    cfg.faults.straggler = 0.10;
+    cfg.faults.corrupt = 0.10;
+    cfg.faults.lane_death = 0.0;
+    cfg.faults.backoff_base_s = 5.0;
+    cfg.faults.quarantine_after = 10; // keep every lane in service
+    cfg
+}
+
+#[test]
+fn disabled_faults_are_bit_identical_for_every_workload_and_scheduler() {
+    // the control parses a `[faults]` TOML section with every rate
+    // cranked but `enabled = false`: the section must be inert
+    let toml = "[faults]\nenabled = false\ntransient = 0.9\nstraggler = 0.9\n\
+                corrupt = 0.9\nlane_death = 0.5\nrecovery = false\nmax_retries = 1\n";
+    for w in workload::registry() {
+        let name = w.name();
+        for pipeline in [false, true] {
+            let base = {
+                let mut cfg = ts::tiny_run_config(13, 22).with_workload(name);
+                cfg.eval_parallelism = if pipeline { 3 } else { 1 };
+                cfg.pipeline = pipeline;
+                cfg
+            };
+            let knobbed = {
+                let parsed = RunConfig::from_toml(toml).expect("faults section parses");
+                assert!(!parsed.faults.enabled && parsed.faults.transient == 0.9);
+                let mut cfg = parsed.with_seed(13).with_budget(22).with_workload(name);
+                cfg.eval_parallelism = base.eval_parallelism;
+                cfg.pipeline = pipeline;
+                cfg
+            };
+            let (run_a, out_a) = ts::run_scientist(base);
+            let (run_b, out_b) = ts::run_scientist(knobbed);
+            let tag = format!("{name} pipeline={pipeline}");
+            assert_eq!(ts::trajectory(&run_a), ts::trajectory(&run_b), "{tag}");
+            assert_eq!(out_a.best_id, out_b.best_id, "{tag}");
+            assert_eq!(out_a.best_geomean_us, out_b.best_geomean_us, "{tag}");
+            assert_eq!(out_a.submissions, out_b.submissions, "{tag}");
+            assert_eq!(out_a.wall_clock_s, out_b.wall_clock_s, "{tag}");
+            // the fault layer never came up: no state, no summary, no
+            // scheduler recovery counters
+            assert!(run_a.platform.fault_state().is_none(), "{tag}");
+            assert!(run_b.platform.fault_state().is_none(), "{tag}");
+            assert!(out_a.faults.is_none() && out_b.faults.is_none(), "{tag}");
+            assert_eq!(out_a.pipeline.fault_retries, 0, "{tag}");
+            assert_eq!(out_a.pipeline.fault_abandoned, 0, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn chaos_runs_are_reproducible_per_scheduler() {
+    for pipeline in [false, true] {
+        let run_once = || {
+            let mut cfg = chaos(ts::tiny_run_config(31, 28));
+            cfg.pipeline = pipeline;
+            cfg.eval_parallelism = if pipeline { 3 } else { 2 };
+            let (run, o) = ts::run_scientist(cfg);
+            (ts::trajectory(&run), o.best_id, o.best_geomean_us, o.faults)
+        };
+        let a = run_once();
+        assert_eq!(a, run_once(), "chaos pipeline={pipeline}");
+        let summary = a.3.expect("chaos run carries fault state");
+        assert!(
+            summary.stats.injected() > 0,
+            "pipeline={pipeline}: chaos never bit: {summary:?}"
+        );
+    }
+}
+
+#[test]
+fn recovery_completes_the_quota_despite_chaos() {
+    for pipeline in [false, true] {
+        let mk = |faulty: bool| {
+            let mut cfg = ts::tiny_run_config(47, 26);
+            if faulty {
+                cfg = chaos(cfg);
+            }
+            cfg.pipeline = pipeline;
+            cfg.eval_parallelism = if pipeline { 3 } else { 2 };
+            cfg
+        };
+        let (_, clean) = ts::run_scientist(mk(false));
+        let (run, out) = ts::run_scientist(mk(true));
+        let tag = format!("pipeline={pipeline}");
+        // chaos costs retries, not quota: the run still commits the
+        // full submission budget the fault-free control reaches
+        assert_eq!(out.submissions, clean.submissions, "{tag}");
+        let summary = out.faults.expect("chaos run carries fault state");
+        assert!(summary.retries > 0, "{tag}: recovery never retried");
+        assert_eq!(summary.retired_lanes, 0, "{tag}: no deaths configured");
+        // the ledger accounts for every attempt, fault-class included
+        assert_eq!(out.submissions as usize, run.population.len(), "{tag}");
+    }
+}
+
+#[test]
+fn no_recovery_abandons_every_fault_on_the_spot() {
+    let mut cfg = chaos(ts::tiny_run_config(53, 24));
+    cfg.faults.recovery = false;
+    let (_, out) = ts::run_scientist(cfg);
+    let summary = out.faults.expect("chaos run carries fault state");
+    assert!(summary.stats.injected() > 0, "chaos never bit: {summary:?}");
+    assert_eq!(summary.retries, 0, "recovery off must never retry");
+    assert_eq!(
+        summary.abandoned,
+        summary.stats.injected(),
+        "every injection abandons exactly once"
+    );
+    // and the recovery-side lane policy is off with it
+    assert_eq!(summary.stats.quarantines, 0);
+    assert_eq!(summary.stats.readmissions, 0);
+}
+
+#[test]
+#[should_panic(expected = "evaluation lanes retired")]
+fn retiring_every_lane_aborts_loudly() {
+    // certain death on every dispatch: the first two dispatches retire
+    // both lanes, and the next lane pick must abort the run rather
+    // than schedule into a dead platform
+    let mut cfg = ts::tiny_run_config(3, 20);
+    cfg.eval_parallelism = 2;
+    cfg.faults.enabled = true;
+    cfg.faults.transient = 0.0;
+    cfg.faults.straggler = 0.0;
+    cfg.faults.corrupt = 0.0;
+    cfg.faults.lane_death = 1.0;
+    let _ = ts::run_scientist(cfg);
+}

@@ -1080,3 +1080,109 @@ fn prop_screen_score_matches_the_cost_model_geomean() {
     }
     assert!(scored > CASES / 4, "too few scoreable cases: {scored}");
 }
+
+#[test]
+fn prop_fault_accounting_reconciles_journal_stats_and_summary() {
+    // DESIGN.md §14: a chaos run's books must balance three ways —
+    // the journal's typed fault records, the platform's committed
+    // FaultStats, and the scheduler's retry/abandon counters all
+    // describe the same events. Over several seeds x both schedulers:
+    //   * each telemetry kind's journal count equals its stats counter
+    //     ("suspect" also counts as corrupted: the corrupted timing IS
+    //     the suspect one, so corrupt + suspect records == corrupted);
+    //   * lane-health records (quarantine/readmit/retire) match;
+    //   * "retry" records == summary.retries, "abandon" == abandoned;
+    //   * every injected fault resolves to exactly one decision on its
+    //     own completion — a retry or an abandon that still carries
+    //     the completion's submission index (queue-drain abandons at
+    //     quota exhaustion carry none: their failed attempt already
+    //     resolved as a retry) — and ledgers exactly one fault-class
+    //     experiment entry.
+    use gpu_kernel_scientist::config::RunConfig;
+    use gpu_kernel_scientist::scientist::ScientistRun;
+    use gpu_kernel_scientist::store::{self, journal, JournalRecord};
+    use gpu_kernel_scientist::test_support::scratch_dir;
+
+    let mut injected_total = 0u64;
+    let mut lane_events_total = 0u64;
+    for pipeline in [false, true] {
+        for seed in 0..3u64 {
+            let dir = scratch_dir("prop-faults");
+            let mut cfg = RunConfig::default()
+                .with_seed(9100 + seed)
+                .with_budget(24)
+                .with_parallelism(3)
+                .with_pipeline(pipeline);
+            cfg.store_dir = Some(dir.display().to_string());
+            // hot enough to exercise retries and lane churn, cool
+            // enough that three lanes never all retire (all-retired
+            // is a deliberate panic, not an Err)
+            cfg.faults.enabled = true;
+            cfg.faults.transient = 0.15;
+            cfg.faults.straggler = 0.10;
+            cfg.faults.corrupt = 0.10;
+            cfg.faults.lane_death = 0.01;
+            cfg.faults.backoff_base_s = 5.0;
+            cfg.faults.quarantine_after = 3;
+            cfg.faults.probation_s = 60.0;
+            let mut run = ScientistRun::new(cfg).expect("setup");
+            let out = run.run_to_completion().expect("chaos run");
+            let summary = out.faults.expect("fault layer ran");
+
+            let text =
+                std::fs::read_to_string(dir.join(store::JOURNAL_FILE)).unwrap();
+            let (records, torn) = journal::parse_journal(&text).unwrap();
+            assert!(!torn);
+            let mut kinds: std::collections::HashMap<&str, u64> =
+                std::collections::HashMap::new();
+            let mut abandons_on_completion = 0u64;
+            let mut fault_exps = 0u64;
+            for r in &records {
+                match r {
+                    JournalRecord::Fault(f) => {
+                        *kinds.entry(f.kind.as_str()).or_insert(0) += 1;
+                        if f.kind == "abandon" && f.submission_index.is_some() {
+                            abandons_on_completion += 1;
+                        }
+                    }
+                    JournalRecord::Exp(e) => {
+                        if e.individual.outcome.is_fault() {
+                            fault_exps += 1;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let n = |k: &str| kinds.get(k).copied().unwrap_or(0);
+            let label = format!("pipeline={pipeline} seed={seed}");
+            let s = &summary.stats;
+            assert_eq!(n("transient"), s.transients, "{label}");
+            assert_eq!(n("lane_death"), s.lane_deaths, "{label}");
+            assert_eq!(n("straggler_timeout"), s.straggler_timeouts, "{label}");
+            assert_eq!(n("straggler"), s.stragglers, "{label}");
+            assert_eq!(n("suspect"), s.suspects, "{label}");
+            assert_eq!(n("corrupt") + n("suspect"), s.corrupted, "{label}");
+            assert_eq!(n("quarantine"), s.quarantines, "{label}");
+            assert_eq!(n("readmit"), s.readmissions, "{label}");
+            assert_eq!(n("retire"), s.retirements, "{label}");
+            assert_eq!(n("retry"), summary.retries, "{label}");
+            assert_eq!(n("abandon"), summary.abandoned, "{label}");
+            assert_eq!(
+                n("retry") + abandons_on_completion,
+                s.injected(),
+                "{label}: every injection resolves exactly once"
+            );
+            assert_eq!(
+                fault_exps,
+                s.injected(),
+                "{label}: every injection ledgers one fault-class entry"
+            );
+            injected_total += s.injected();
+            lane_events_total += s.quarantines + s.readmissions + s.retirements;
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    // the property is vacuous unless the chaos actually bites
+    assert!(injected_total > 0, "no faults injected across any case");
+    assert!(lane_events_total > 0, "no lane-health churn across any case");
+}

@@ -14,9 +14,9 @@
 use std::path::Path;
 
 use gpu_kernel_scientist::config::RunConfig;
+use gpu_kernel_scientist::eval::EvalBackend;
 use gpu_kernel_scientist::report;
 use gpu_kernel_scientist::scientist::{RunOutcome, ScientistRun};
-use gpu_kernel_scientist::sim::SimBackend;
 use gpu_kernel_scientist::test_support::scratch_dir;
 use gpu_kernel_scientist::workload::{registry, Workload};
 use gpu_kernel_scientist::{store, workloads};
@@ -41,11 +41,11 @@ fn store_config(
 
 /// The full bit-identity assertion: ledger, transcripts, curve,
 /// platform accounting, cache stats, scheduler stats.
-fn assert_bit_identical(
+fn assert_bit_identical<B: EvalBackend>(
     label: &str,
-    full: &ScientistRun<SimBackend>,
+    full: &ScientistRun<B>,
     full_out: &RunOutcome,
-    resumed: &ScientistRun<SimBackend>,
+    resumed: &ScientistRun<B>,
     resumed_out: &RunOutcome,
 ) {
     assert_eq!(
@@ -53,7 +53,7 @@ fn assert_bit_identical(
         resumed.population.members(),
         "{label}: full ledger (genomes, lineage, reports, outcomes)"
     );
-    let render = |run: &ScientistRun<SimBackend>| -> Vec<String> {
+    let render = |run: &ScientistRun<B>| -> Vec<String> {
         run.logs.iter().map(report::render_iteration).collect()
     };
     assert_eq!(render(full), render(resumed), "{label}: iteration transcripts");
@@ -546,6 +546,63 @@ fn resume_under_federation_is_bit_identical() {
     assert_eq!(
         full_out.federation, resumed_out.federation,
         "fed hit counters survive the crash/restore cycle"
+    );
+}
+
+#[test]
+fn chaos_resume_with_a_retry_in_flight_is_bit_identical() {
+    // The PR-10 referee (DESIGN.md §14): crash a fault-injected
+    // pipeline run while the recovery layer has work pending — a
+    // queued backoff retry and/or a reattachable in-flight dispatch —
+    // and the resumed run must still match the uninterrupted chaos run
+    // bit for bit: ledger (fault-class entries included), retry
+    // counters, fault stats, wall clock. Several halt points so at
+    // least one checkpoint catches a retry (attempt > 0) pending.
+    let mk = |dir: &Path| {
+        let mut cfg = store_config("fp8-gemm", 43, 26, 2, true, dir);
+        cfg.faults.enabled = true;
+        cfg.faults.transient = 0.30; // chaos hot enough to retry often
+        cfg.faults.backoff_base_s = 5.0; // requeues re-dispatch quickly
+        cfg.faults.quarantine_after = 10; // keep both lanes alive
+        cfg
+    };
+    let full_dir = scratch_dir("chaos-full");
+    let mut full = ScientistRun::new(mk(&full_dir)).unwrap();
+    let full_out = full.run_to_completion().unwrap();
+    let summary = full_out.faults.clone().expect("chaos run carries fault state");
+    assert!(
+        summary.retries > 0,
+        "the fault rate must actually trigger retries: {summary:?}"
+    );
+    let mut any_pending_retry = false;
+    for halt_after in [8u64, 10, 12, 14, 16] {
+        let crash_dir = scratch_dir("chaos-crash");
+        let mut crash_cfg = mk(&crash_dir);
+        crash_cfg.halt_after = Some(halt_after);
+        let mut crashed = ScientistRun::new(crash_cfg).unwrap();
+        let _ = crashed.run_to_completion().unwrap();
+        assert!(crashed.halted(), "halt={halt_after}");
+        drop(crashed);
+        let cp = store::Checkpoint::load(&crash_dir).unwrap();
+        any_pending_retry |= cp.pending.iter().any(|p| p.attempt > 0);
+        let mut resumed = ScientistRun::resume(&crash_dir).unwrap();
+        let resumed_out = resumed.run_to_completion().unwrap();
+        assert_bit_identical(
+            &format!("chaos halt={halt_after}"),
+            &full,
+            &full_out,
+            &resumed,
+            &resumed_out,
+        );
+        assert_eq!(
+            full_out.faults, resumed_out.faults,
+            "halt={halt_after}: fault stats and recovery counters survive resume"
+        );
+    }
+    assert!(
+        any_pending_retry,
+        "no halt point caught a backoff retry pending in a checkpoint — the \
+         resume-mid-retry path went untested; retune halt_after/fault rates"
     );
 }
 

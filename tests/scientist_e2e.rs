@@ -8,7 +8,7 @@ use gpu_kernel_scientist::prelude::*;
 use gpu_kernel_scientist::sim::calibration::leaderboard_geomean;
 use gpu_kernel_scientist::test_support::{run_scientist, tiny_run_config};
 
-fn run_with(seed: u64, budget: u64) -> (ScientistRun<SimBackend>, RunOutcome) {
+fn run_with(seed: u64, budget: u64) -> (ScientistRun<FaultyBackend<SimBackend>>, RunOutcome) {
     run_scientist(tiny_run_config(seed, budget))
 }
 

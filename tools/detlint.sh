@@ -18,6 +18,11 @@
 #          on the hasher and allocation history. Iterate an ordered
 #          collection instead, or sort the collected result and
 #          annotate the site.
+#   DL004  `.unwrap()`/`.expect()` on an I/O Result in the durability
+#          layers (store/, eval/, non-test code). A panic mid-write can
+#          tear the journal a resume depends on; either propagate the
+#          error or annotate the deliberate fail-stop sites so every
+#          crash-on-I/O-error decision is visible in review.
 #
 # A finding is suppressed by ending the offending line with:
 #     // detlint: allow(DLnnn)
@@ -124,6 +129,40 @@ INNER
     fi
 done <<EOF
 $(find "$SRC" -name '*.rs' | sort)
+EOF
+
+# ---- DL004: unwrap/expect on I/O Results in store/ and eval/ --------------
+# Statement-window scan: rustfmt splits `x.write_all(..).expect(..)`
+# across lines, so a `.unwrap()`/`.expect(` counts as an I/O unwrap when
+# the same line — or either of the two lines above it (one chained
+# receiver + one I/O call) — names a filesystem/stream operation.
+# Everything from `#[cfg(test)]` down is skipped: test code unwraps
+# scratch-dir I/O freely, and this codebase keeps test modules last.
+IO_RE='(std::)?fs::|File::|\.write_all\(|\.read_to_string\(|\.sync_all\(|\.flush\(|create_dir|remove_file|\.set_len\(|\.seek\(|\.rename\(|write_atomic'
+while IFS= read -r f; do
+    findings=$(awk -v FILE="$f" -v iore="$IO_RE" '
+        /#\[cfg\(test\)\]/ { intest = 1 }
+        {
+            line = $0
+            sub(/\/\/.*$/, "", line)
+            io = (line ~ iore) ? 1 : 0
+            if (!intest && line ~ /\.(unwrap|expect)\(/ && (io || prev_io || prev2_io)) {
+                if ($0 !~ /detlint: allow\(DL004\)/) {
+                    printf "%s:%d: unwrap/expect on an I/O Result in a durability layer; propagate the error or annotate the fail-stop\n", FILE, NR
+                }
+            }
+            prev2_io = prev_io; prev_io = io
+        }
+    ' "$f")
+    if [ -n "$findings" ]; then
+        while IFS= read -r finding; do
+            report DL004 "${finding%%: *}" "${finding#*: }"
+        done <<INNER
+$findings
+INNER
+    fi
+done <<EOF
+$(find "$SRC"/store "$SRC"/eval -name '*.rs' | sort)
 EOF
 
 if [ "$fail" -eq 0 ]; then
